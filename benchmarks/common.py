@@ -1,0 +1,84 @@
+"""Shared benchmark harness.
+
+Reproduces the paper's methodology (Section 6) at CPU scale: each of n
+threads executes OPS/n operations with a small random local workload
+between operations (max 512 dummy iterations, as in the paper), pinned
+counters from the simulated NVMM, and averaged runs.
+"""
+
+from __future__ import annotations
+
+import random
+import threading
+import time
+from typing import Any, Callable, Dict, List
+
+LOCAL_WORK_MAX = 64          # paper uses 512 on 96 HW threads; scaled down
+
+
+def run_threads(n_threads: int, total_ops: int, op: Callable,
+                seed: int = 0) -> float:
+    """op(p, i, seq) executed total_ops/n times per thread; returns
+    elapsed seconds."""
+    per = total_ops // n_threads
+    barrier = threading.Barrier(n_threads + 1)
+
+    def worker(p):
+        rng = random.Random(seed * 1000 + p)
+        barrier.wait()
+        seq = 0
+        for i in range(per):
+            seq += 1
+            op(p, i, seq)
+            for _ in range(rng.randint(0, LOCAL_WORK_MAX)):
+                pass
+
+    ts = [threading.Thread(target=worker, args=(p,))
+          for p in range(n_threads)]
+    for t in ts:
+        t.start()
+    barrier.wait()
+    t0 = time.perf_counter()
+    for t in ts:
+        t.join()
+    return time.perf_counter() - t0
+
+
+def bench(name: str, make: Callable, op_factory: Callable,
+          n_threads: int = 4, total_ops: int = 2000,
+          runs: int = 3) -> Dict[str, Any]:
+    """make() -> (obj, nvm); op_factory(obj) -> op(p, i, seq)."""
+    times, pwbs, psyncs, pfences = [], [], [], []
+    for r in range(runs):
+        obj, nvm = make()
+        elapsed = run_threads(n_threads, total_ops, op_factory(obj),
+                              seed=r)
+        times.append(elapsed)
+        pwbs.append(nvm.counters["pwb"])
+        psyncs.append(nvm.counters["psync"])
+        pfences.append(nvm.counters["pfence"])
+    avg_t = sum(times) / runs
+    return {
+        "name": name,
+        "ops_per_s": total_ops / avg_t,
+        "us_per_op": avg_t / total_ops * 1e6,
+        "pwb_per_op": sum(pwbs) / runs / total_ops,
+        "pfence_per_op": sum(pfences) / runs / total_ops,
+        "psync_per_op": sum(psyncs) / runs / total_ops,
+    }
+
+
+def print_rows(title: str, rows: List[Dict[str, Any]]) -> None:
+    print(f"\n## {title}")
+    print(f"{'impl':34s} {'ops/s':>10s} {'us/op':>8s} "
+          f"{'pwb/op':>8s} {'pfence/op':>10s} {'psync/op':>9s}")
+    for r in rows:
+        print(f"{r['name']:34s} {r['ops_per_s']:10.0f} "
+              f"{r['us_per_op']:8.2f} {r['pwb_per_op']:8.2f} "
+              f"{r['pfence_per_op']:10.2f} {r['psync_per_op']:9.2f}")
+
+
+def csv_rows(rows: List[Dict[str, Any]], table: str) -> List[str]:
+    return [f"{table}/{r['name']},{r['us_per_op']:.2f},"
+            f"pwb/op={r['pwb_per_op']:.2f};psync/op={r['psync_per_op']:.2f}"
+            for r in rows]

@@ -1,0 +1,137 @@
+"""Framework-level benchmarks: the paper's technique applied to the
+training/serving runtime (beyond the paper's own tables).
+
+* checkpoint_bench — ShardedCheckpointer (combining commit) vs the naive
+  per-host scheme: psyncs per round and wall time.
+* serving_bench — combining batcher vs a lock-per-request server on the
+  same toy model: throughput + persistence ops per request.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Dict, List
+
+import numpy as np
+
+from repro.persist.sharded import (NaiveShardedCheckpointer,
+                                   ShardedCheckpointer)
+from repro.persist.store import MemStore
+from repro.serving.engine import CombiningEngine
+
+
+FSYNC_LATENCY = 2e-3      # modeled storage fsync cost per psync
+
+
+def checkpoint_bench(n_hosts: int = 8, rounds: int = 20,
+                     shard_kb: int = 256) -> List[Dict[str, Any]]:
+    payload = {"w": np.zeros(shard_kb * 256, np.float32)}  # shard_kb KiB
+    tmpl = [payload] * n_hosts
+    out = []
+
+    store = MemStore(persist_latency=FSYNC_LATENCY)
+    ck = ShardedCheckpointer(store, n_hosts, tmpl)
+    t0 = time.perf_counter()
+    for step in range(1, rounds + 1):
+        for h in range(n_hosts):
+            ck.write_shard(h, payload, step)
+        assert ck.try_commit(step)
+    el = time.perf_counter() - t0
+    out.append({"name": f"PBComb-sharded({n_hosts} hosts)",
+                "us_per_op": el / rounds * 1e6,
+                "ops_per_s": rounds / el,
+                "pwb_per_op": store.counters["pwb"] / rounds,
+                "pfence_per_op": store.counters["pfence"] / rounds,
+                "psync_per_op": store.counters["psync"] / rounds})
+
+    store = MemStore(persist_latency=FSYNC_LATENCY)
+    nk = NaiveShardedCheckpointer(store, n_hosts, tmpl)
+    t0 = time.perf_counter()
+    for step in range(1, rounds + 1):
+        for h in range(n_hosts):
+            nk.write_shard(h, payload, step)
+    el = time.perf_counter() - t0
+    out.append({"name": f"naive-per-host({n_hosts} hosts)",
+                "us_per_op": el / rounds * 1e6,
+                "ops_per_s": rounds / el,
+                "pwb_per_op": store.counters["pwb"] / rounds,
+                "pfence_per_op": store.counters["pfence"] / rounds,
+                "psync_per_op": store.counters["psync"] / rounds})
+    return out
+
+
+class _LockServer:
+    """Baseline: one request at a time, per-request persist."""
+
+    def __init__(self, prefill, decode, store):
+        self.prefill = prefill
+        self.decode = decode
+        self.store = store
+        self.lock = threading.Lock()
+
+    def submit(self, client, prompt, max_tokens, seq):
+        with self.lock:
+            toks, kvs = self.prefill([prompt])
+            seqtoks = [toks[0]]
+            for _ in range(max_tokens - 1):
+                nxt = self.decode(kvs, [seqtoks[-1]])
+                seqtoks.append(nxt[0])
+            self.store.pwb(f"resp.{client}", repr(seqtoks).encode())
+            self.store.pfence()
+            self.store.psync()
+            return {"tokens": seqtoks}
+
+
+def serving_bench(n_clients: int = 8, reqs_per_client: int = 6,
+                  gen_len: int = 16) -> List[Dict[str, Any]]:
+    def prefill_batch(prompts):
+        time.sleep(0.0005 + 0.0001 * len(prompts))   # batched step cost
+        return [max(1, sum(p) % 97) for p in prompts], \
+            [list(p) for p in prompts]
+
+    def decode_batch(kvs, last):
+        time.sleep(0.0005 + 0.0001 * len(last))
+        return [(t + 1) % 97 or 1 for t in last]
+
+    out = []
+    total = n_clients * reqs_per_client
+
+    def drive(submit):
+        def client(c):
+            for r in range(reqs_per_client):
+                submit(c, (c, r), gen_len, r + 1)
+        ts = [threading.Thread(target=client, args=(c,))
+              for c in range(n_clients)]
+        t0 = time.perf_counter()
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        return time.perf_counter() - t0
+
+    store = MemStore()
+    eng = CombiningEngine(n_clients, prefill_batch_fn=prefill_batch,
+                          decode_batch_fn=decode_batch,
+                          n_kv_slots=n_clients, max_batch=n_clients,
+                          store=store, eos_token=-1)
+    eng.start()
+    el = drive(lambda c, p, m, s: eng.submit(c, p, m, s, timeout=120))
+    eng.stop()
+    out.append({"name": "CombiningEngine",
+                "us_per_op": el / total * 1e6,
+                "ops_per_s": total / el,
+                "pwb_per_op": store.counters["pwb"] / total,
+                "pfence_per_op": store.counters["pfence"] / total,
+                "psync_per_op": store.counters["psync"] / total})
+
+    store2 = MemStore()
+    srv = _LockServer(prefill_batch, decode_batch, store2)
+    el = drive(lambda c, p, m, s: srv.submit(c, p, m, s))
+    out.append({"name": "lock-per-request",
+                "us_per_op": el / total * 1e6,
+                "ops_per_s": total / el,
+                "pwb_per_op": store2.counters["pwb"] / total,
+                "pfence_per_op": store2.counters["pfence"] / total,
+                "psync_per_op": store2.counters["psync"] / total})
+    return out

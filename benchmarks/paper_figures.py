@@ -1,0 +1,181 @@
+"""Benchmarks reproducing each paper table/figure (CPU-scaled trends).
+
+Fig 1  AtomicFloat throughput (persistent)     -> fig1_atomicfloat
+Fig 2  AtomicFloat pwbs/op                     -> (same rows, pwb column)
+Fig 3  AtomicFloat throughput, psync->NOP      -> fig3_no_psync
+Fig 4  queue throughput                        -> fig4_queues
+Fig 5  queue pwbs/op                           -> (same rows, pwb column)
+Fig 6  queue throughput, pwb->NOP (sync cost)  -> fig6_queues_no_pwb
+Fig 7a stack throughput + elim/recycle ablations -> fig7a_stacks
+Fig 7b heap throughput vs size                 -> fig7b_heap
+Tab 1  shared-location traffic (volatile mode) -> table1_counters
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+from repro.core import (NVM, AtomicFloatObject, Counters, PBComb, PWFComb)
+from repro.structures import (DFCStack, DurableMSQueue, LockDirectObject,
+                              LockUndoLogObject, PBHeap, PBQueue, PBStack,
+                              PWFQueue, PWFStack)
+
+from .common import bench, csv_rows, print_rows
+
+N_THREADS = 6
+OPS = 2400
+# Persist latency: emulates NVMM write-back cost (~us-scale on Optane;
+# coarser here because of sleep granularity).  This is what makes the
+# paper's central trade visible on a CPU host: per-OP psync pays it every
+# operation, per-ROUND psync (combining) amortizes it across the round.
+PERSIST_LATENCY = 5e-5
+
+
+def _nvm(**kw):
+    kw.setdefault("persist_latency",
+                  0.0 if kw.get("psync_nop") else PERSIST_LATENCY)
+    return NVM(1 << 22, **kw)
+
+
+# ------------------------------------------------------------------ #
+def fig1_atomicfloat(**nvm_kw) -> List[Dict[str, Any]]:
+    rows = []
+
+    def mk(proto):
+        def make():
+            nvm = _nvm(**nvm_kw)
+            return proto(nvm, N_THREADS, AtomicFloatObject()), nvm
+        return make
+
+    rows.append(bench("PBComb", mk(PBComb),
+                      lambda o: lambda p, i, seq: o.op(p, "MUL", 1.000001, seq),
+                      N_THREADS, OPS))
+    rows.append(bench("PWFComb", mk(PWFComb),
+                      lambda o: lambda p, i, seq: o.op(p, "MUL", 1.000001, seq),
+                      N_THREADS, OPS))
+
+    def mk_base(cls):
+        def make():
+            nvm = _nvm(**nvm_kw)
+            return cls(nvm, N_THREADS, AtomicFloatObject()), nvm
+        return make
+
+    rows.append(bench("LockDirect (per-op persist)", mk_base(LockDirectObject),
+                      lambda o: lambda p, i, seq: o.op(p, "MUL", 1.000001, seq),
+                      N_THREADS, OPS))
+    rows.append(bench("LockUndoLog (PMDK-shape)", mk_base(LockUndoLogObject),
+                      lambda o: lambda p, i, seq: o.op(p, "MUL", 1.000001, seq),
+                      N_THREADS, OPS))
+    return rows
+
+
+def fig3_no_psync():
+    return fig1_atomicfloat(psync_nop=True)
+
+
+def fig4_queues(**nvm_kw) -> List[Dict[str, Any]]:
+    rows = []
+
+    def pairs(o):
+        def op(p, i, seq):
+            if i % 2 == 0:
+                o.enqueue(p, p * 10 ** 6 + i, seq)
+            else:
+                o.dequeue(p, seq)
+        return op
+
+    for name, cls, kw in [("PBQueue", PBQueue, {}),
+                          ("PBQueue-no-recycle", PBQueue, {"recycle": False}),
+                          ("PWFQueue", PWFQueue, {}),
+                          ("DurableMSQueue (FHMP-shape)", DurableMSQueue, {})]:
+        def make(cls=cls, kw=kw):
+            nvm = _nvm(**nvm_kw)
+            return cls(nvm, N_THREADS, **kw), nvm
+        rows.append(bench(name, make, pairs, N_THREADS, OPS))
+    return rows
+
+
+def fig6_queues_no_pwb():
+    return fig4_queues(pwb_nop=True, psync_nop=True)
+
+
+def fig7a_stacks() -> List[Dict[str, Any]]:
+    rows = []
+
+    def pairs(o):
+        if isinstance(o, DFCStack):
+            def op(p, i, seq):
+                if i % 2 == 0:
+                    o.op(p, "PUSH", i, seq)
+                else:
+                    o.op(p, "POP", None, seq)
+            return op
+
+        def op(p, i, seq):
+            if i % 2 == 0:
+                o.push(p, i, seq)
+            else:
+                o.pop(p, seq)
+        return op
+
+    for name, cls, kw in [
+            ("PBStack", PBStack, {}),
+            ("PBStack-no-elim", PBStack, {"elimination": False}),
+            ("PBStack-no-rec", PBStack, {"recycle": False}),
+            ("PWFStack", PWFStack, {}),
+            ("PWFStack-no-elim", PWFStack, {"elimination": False}),
+            ("DFCStack (flat-combining)", DFCStack, {})]:
+        def make(cls=cls, kw=kw):
+            nvm = _nvm()
+            return cls(nvm, N_THREADS, **kw), nvm
+        rows.append(bench(name, make, pairs, N_THREADS, OPS))
+    return rows
+
+
+def fig7b_heap() -> List[Dict[str, Any]]:
+    rows = []
+    for size in (64, 128, 256, 512, 1024):
+        def make(size=size):
+            nvm = _nvm()
+            h = PBHeap(nvm, N_THREADS, capacity=size)
+            seq = 10 ** 7
+            for k in range(size // 2):          # half-full start (paper)
+                seq += 1
+                h.insert(0, k, seq)
+            nvm.reset_counters()
+            return h, nvm
+
+        def op_factory(h):
+            def op(p, i, seq):
+                if i % 2 == 0:
+                    h.insert(p, (p * 31 + i) % 10 ** 6, seq)
+                else:
+                    h.delete_min(p, seq)
+            return op
+        rows.append(bench(f"PBHeap-{size}", make, op_factory,
+                          N_THREADS, OPS))
+    return rows
+
+
+def table1_counters() -> List[Dict[str, Any]]:
+    """Shared-location traffic per op (volatile mode, paper Table 1)."""
+    out = []
+    for name, mk in [
+        ("PBComb", lambda c: PBComb(_nvm(pwb_nop=True, psync_nop=True),
+                                    N_THREADS, AtomicFloatObject(),
+                                    counters=c)),
+        ("PWFComb", lambda c: PWFComb(_nvm(pwb_nop=True, psync_nop=True),
+                                      N_THREADS, AtomicFloatObject(),
+                                      counters=c)),
+    ]:
+        counters = Counters()
+        obj = mk(counters)
+        from .common import run_threads
+        run_threads(N_THREADS, OPS,
+                    lambda p, i, seq: obj.op(p, "MUL", 1.000001, seq))
+        snap = counters.snapshot()
+        out.append({"name": name,
+                    "reads_per_op": snap["shared_reads"] / OPS,
+                    "writes_per_op": snap["shared_writes"] / OPS,
+                    "cas_per_op": snap["cas_calls"] / OPS})
+    return out

@@ -1,0 +1,76 @@
+"""Render the roofline tables from the dry-run result JSONs
+(benchmarks/results/*.json) — EXPERIMENTS.md §Roofline reads this."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+
+
+def load(variant: str = "base", mesh: str = "16-16") -> List[Dict]:
+    recs = []
+    for p in sorted(RESULTS.glob(f"*_{mesh}_{variant}.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def fmt_table(recs: List[Dict]) -> str:
+    hdr = (f"{'arch':28s} {'shape':12s} {'mesh':8s} "
+           f"{'compute_s':>10s} {'memory_s':>10s} {'collect_s':>10s} "
+           f"{'dominant':>10s} {'peak GiB':>9s} {'useful':>7s} {'roofl%':>7s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in recs:
+        rf = r["roofline"]
+        lines.append(
+            f"{r['arch']:28s} {r['shape']:12s} {r['mesh']:8s} "
+            f"{rf['compute_s']:10.3e} {rf['memory_s']:10.3e} "
+            f"{rf['collective_s']:10.3e} {rf['dominant']:>10s} "
+            f"{r['memory']['peak_per_device']/2**30:9.2f} "
+            f"{rf['useful_ratio']:7.3f} "
+            f"{100*rf['roofline_fraction']:6.1f}%")
+    return "\n".join(lines)
+
+
+def csv(recs: List[Dict], table: str = "roofline") -> List[str]:
+    out = []
+    for r in recs:
+        rf = r["roofline"]
+        step_us = rf["step_time_s"] * 1e6
+        out.append(f"{table}/{r['arch']}/{r['shape']}/{r['mesh']},"
+                   f"{step_us:.1f},"
+                   f"dominant={rf['dominant']};"
+                   f"roofline_frac={rf['roofline_fraction']:.4f};"
+                   f"peak_gib={r['memory']['peak_per_device']/2**30:.2f}")
+    return out
+
+
+VARIANTS = ("moeep", "attnshard", "bf16attn", "opt")
+
+
+def main():
+    for mesh in ("16-16", "2-16-16"):
+        recs = load("base", mesh)
+        if recs:
+            print(f"\n### Roofline — mesh {mesh} (baseline)")
+            print(fmt_table(recs))
+    opt = []
+    for v in VARIANTS:
+        opt += load(v, "16-16")
+    if opt:
+        print("\n### Roofline — §Perf hillclimb variants "
+              "(compare row-by-row against baseline)")
+        hdr = fmt_table(opt).splitlines()
+        # annotate variant in the arch column
+        lines = hdr[:2]
+        for rec, line in zip(opt, hdr[2:]):
+            lines.append(line.replace(
+                rec["arch"].ljust(28),
+                f"{rec['arch']}[{rec['variant']}]".ljust(28)[:28]))
+        print("\n".join(lines))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Benchmark entry point: one function per paper table/figure plus the
+framework-level benches; prints ``name,us_per_call,derived`` CSV at the
+end (and human-readable tables as it goes).
+
+Run:  PYTHONPATH=src python -m benchmarks.run
+"""
+
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "src")                      # repo-root invocation
+
+from benchmarks import framework_benches, paper_figures, roofline_report
+from benchmarks.common import csv_rows, print_rows
+
+
+def main() -> None:
+    csv: list = []
+
+    rows = paper_figures.fig1_atomicfloat()
+    print_rows("Fig 1/2 — persistent AtomicFloat (throughput, pwbs/op)",
+               rows)
+    csv += csv_rows(rows, "fig1_atomicfloat")
+
+    rows = paper_figures.fig3_no_psync()
+    print_rows("Fig 3 — AtomicFloat with psync as NOP", rows)
+    csv += csv_rows(rows, "fig3_no_psync")
+
+    rows = paper_figures.fig4_queues()
+    print_rows("Fig 4/5 — persistent queues (throughput, pwbs/op)", rows)
+    csv += csv_rows(rows, "fig4_queues")
+
+    rows = paper_figures.fig6_queues_no_pwb()
+    print_rows("Fig 6 — queues with pwb as NOP (pure sync cost)", rows)
+    csv += csv_rows(rows, "fig6_queues_no_pwb")
+
+    rows = paper_figures.fig7a_stacks()
+    print_rows("Fig 7a — persistent stacks (+elim/recycle ablations)",
+               rows)
+    csv += csv_rows(rows, "fig7a_stacks")
+
+    rows = paper_figures.fig7b_heap()
+    print_rows("Fig 7b — PBHeap across sizes 64-1024", rows)
+    csv += csv_rows(rows, "fig7b_heap")
+
+    t1 = paper_figures.table1_counters()
+    print("\n## Table 1 — shared-location traffic per op (volatile mode)")
+    print(f"{'impl':12s} {'reads/op':>9s} {'writes/op':>10s} {'cas/op':>7s}")
+    for r in t1:
+        print(f"{r['name']:12s} {r['reads_per_op']:9.2f} "
+              f"{r['writes_per_op']:10.2f} {r['cas_per_op']:7.2f}")
+        csv.append(f"table1/{r['name']},0,"
+                   f"reads/op={r['reads_per_op']:.2f};"
+                   f"writes/op={r['writes_per_op']:.2f}")
+
+    rows = framework_benches.checkpoint_bench()
+    print_rows("Framework — sharded checkpoint commit (combining vs naive)",
+               rows)
+    csv += csv_rows(rows, "checkpoint")
+
+    rows = framework_benches.serving_bench()
+    print_rows("Framework — serving (combining batcher vs lock/request)",
+               rows)
+    csv += csv_rows(rows, "serving")
+
+    # roofline tables from dry-run artifacts (if present)
+    try:
+        roofline_report.main()
+        for mesh in ("16-16", "2-16-16"):
+            csv += roofline_report.csv(roofline_report.load("base", mesh))
+        for v in roofline_report.VARIANTS:
+            csv += roofline_report.csv(
+                roofline_report.load(v, "16-16"), table=f"roofline.{v}")
+    except Exception as e:                      # dry-run not executed yet
+        print(f"(roofline tables unavailable: {e})")
+
+    print("\n# CSV: name,us_per_call,derived")
+    for line in csv:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Multi-host sharded checkpointing with one combining commit point +
+elastic rescale after a host failure.
+
+Eight simulated hosts each write their own state shard (as under
+ZeRO/TP ownership); ONE index flip + psync commits the round for all of
+them (P1).  Then a host dies: the coordinator detects it, produces a
+rescale plan anchored at the committed step, and the survivors resume —
+no torn state, no lost or duplicated batches.
+
+Run:  PYTHONPATH=src python examples/multi_host_checkpoint.py
+"""
+
+import random
+import sys
+import threading
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.persist.sharded import ShardedCheckpointer
+from repro.persist.store import MemStore
+from repro.runtime.elastic import ElasticCoordinator
+
+N_HOSTS = 8
+
+
+def payload(host, step):
+    return {"shard": np.full((1024,), host * 1000 + step, np.float32)}
+
+
+def main():
+    store = MemStore()
+    tmpl = [payload(h, 0) for h in range(N_HOSTS)]
+    ck = ShardedCheckpointer(store, N_HOSTS, tmpl)
+    co = ElasticCoordinator(N_HOSTS, heartbeat_timeout=0.2)
+
+    # -- steps 1..3: all hosts write, coordinator commits ---------------
+    for step in (1, 2, 3):
+        ts = [threading.Thread(
+            target=lambda h=h: (ck.write_shard(h, payload(h, step), step),
+                                co.heartbeat(h, step)))
+            for h in range(N_HOSTS)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        assert ck.try_commit(step)
+        print(f"step {step}: {N_HOSTS} shards written, ONE commit "
+              f"psync (total psyncs: {store.counters['psync']})")
+
+    # -- step 4: host 5 dies mid-round ----------------------------------
+    for h in range(N_HOSTS):
+        if h == 5:
+            continue
+        ck.write_shard(h, payload(h, 4), 4)
+        co.heartbeat(h, 4)
+    assert not ck.try_commit(4)
+    print("\nstep 4: host 5 died mid-round -> commit refused "
+          "(no torn checkpoint possible)")
+
+    store.crash(random.Random(0))
+    shards, committed = ck.recover()
+    print(f"crash + recover: durable state is step {committed} "
+          f"(the torn round is invisible)")
+    assert committed == 3
+
+    time.sleep(0.25)
+    for h in range(N_HOSTS):          # survivors keep heartbeating
+        if h != 5:
+            co.heartbeat(h, 4)
+    failed = co.detect_failures()
+    plan = co.rescale(committed_step=committed, failed=failed)
+    print(f"elastic rescale: failed={failed}, new plan epoch "
+          f"{plan.epoch}: {plan.dp_size} hosts, resume from step "
+          f"{plan.restore_step}")
+    assert 5 not in plan.hosts
+    print("survivors replay the deterministic data stream from the "
+          "committed step — exactly-once at the job level")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Quickstart: the paper's recoverable combining in 60 seconds.
+
+Builds a recoverable FIFO queue (PBQueue) on simulated NVMM, runs
+concurrent producers/consumers, crashes the "machine" mid-flight, and
+recovers detectably — every in-flight operation is applied exactly once.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import random
+import sys
+import threading
+
+sys.path.insert(0, "src")
+
+from repro.core import NVM, SimulatedCrash
+from repro.core.pbcomb import RequestRec
+from repro.structures import PBQueue
+
+
+def main():
+    nvm = NVM(1 << 20)
+    q = PBQueue(nvm, n_threads=4)
+
+    # -- concurrent producers/consumers --------------------------------
+    def worker(p):
+        seq = 0
+        for i in range(50):
+            seq += 1
+            q.enqueue(p, f"item-{p}-{i}", seq)
+            seq += 1
+            q.dequeue(p, seq)
+
+    ts = [threading.Thread(target=worker, args=(p,)) for p in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    print(f"400 ops done; persistence cost: {nvm.counters['pwb']} pwbs, "
+          f"{nvm.counters['psync']} psyncs "
+          f"({nvm.counters['pwb'] / 400:.1f} pwbs/op)")
+
+    # -- crash mid-combining -------------------------------------------
+    for p in range(4):
+        q.enq.request[p] = RequestRec(
+            "ENQ", f"inflight-{p}", 1 - q.enq.request[p].activate, 1)
+    nvm.arm_crash(3, random.Random(42))      # die at the 3rd persist op
+    try:
+        q.enq._perform_request(0)
+    except SimulatedCrash:
+        print("CRASH mid-combining round (adversarial write-back drain)")
+
+    # -- detectable recovery --------------------------------------------
+    q.reset_volatile()                        # volatile state is gone
+    for p in range(4):
+        ret = q.recover(p, "ENQ", f"inflight-{p}", 1)
+        print(f"  recover(thread {p}) -> {ret}")
+    content = q.drain()
+    inflight = [v for v in content if str(v).startswith("inflight")]
+    assert sorted(inflight) == [f"inflight-{p}" for p in range(4)]
+    print(f"recovered queue has all 4 in-flight items exactly once: "
+          f"{inflight}")
+
+
+if __name__ == "__main__":
+    main()

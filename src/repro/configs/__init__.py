@@ -1,0 +1,33 @@
+"""Assigned architecture registry: ``get(name)`` / ``--arch <id>``."""
+
+from typing import Dict
+
+from .base import ArchConfig, ShapeConfig, SHAPES, cells_for, long_context_capable
+from .mamba2_2p7b import CONFIG as mamba2_2p7b
+from .qwen3_14b import CONFIG as qwen3_14b
+from .command_r_35b import CONFIG as command_r_35b
+from .qwen3_1p7b import CONFIG as qwen3_1p7b
+from .gemma2_9b import CONFIG as gemma2_9b
+from .llama4_maverick_400b import CONFIG as llama4_maverick_400b
+from .moonshot_v1_16b import CONFIG as moonshot_v1_16b
+from .llama32_vision_11b import CONFIG as llama32_vision_11b
+from .zamba2_2p7b import CONFIG as zamba2_2p7b
+from .whisper_medium import CONFIG as whisper_medium
+
+ARCHS: Dict[str, ArchConfig] = {
+    c.name: c for c in [
+        mamba2_2p7b, qwen3_14b, command_r_35b, qwen3_1p7b, gemma2_9b,
+        llama4_maverick_400b, moonshot_v1_16b, llama32_vision_11b,
+        zamba2_2p7b, whisper_medium,
+    ]
+}
+
+
+def get(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+__all__ = ["ArchConfig", "ShapeConfig", "SHAPES", "ARCHS", "get",
+           "cells_for", "long_context_capable"]

@@ -1,0 +1,25 @@
+"""llama-3.2-vision-11b — dense decoder with cross-attention image layers.
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified]
+40L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=128256.
+
+The vision frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed patch embeddings (n_image_tokens x d_model); every
+5th layer cross-attends to them."""
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama-3.2-vision-11b",
+    family="vlm",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=128256,
+    rope_theta=5e5,
+    cross_attn_every=5,
+    n_image_tokens=1601,   # 1 tile x (40x40 patches + cls), projected
+    notes="8 cross-attn layers (every 5th); patch embeddings stubbed",
+)

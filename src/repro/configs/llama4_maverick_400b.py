@@ -1,0 +1,32 @@
+"""llama4-maverick-400b-a17b — MoE 128e top-1, early fusion.
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]
+48L d_model=5120 40H (GQA kv=8) d_ff=8192 (per expert) vocab=202048.
+
+Literal config totals ~778B parameters (48 x 128 x 3 x 5120 x 8192 expert
+weights dominate).  Optimizer is Adafactor (momentum-free, factored second
+moment): full-state Adam at 778B needs >=6 bytes/param of optimizer state
+= 4.7TB > the 4TB aggregate HBM of a 256-chip v5e pod — it cannot fit at
+any sharding, so the realistic large-model choice (PaLM-style Adafactor)
+is part of the config.  Early fusion: the paper pool notes it; the text
+backbone here consumes token embeddings, so fused modalities enter as
+tokens (no separate frontend needed for the dry-run)."""
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=202048,
+    n_experts=128,
+    top_k=1,
+    capacity_factor=1.25,
+    optimizer="adafactor",
+    remat="full",
+    notes="778B literal params; EP over model axis; Adafactor (see docstring)",
+)

@@ -1,0 +1,22 @@
+"""moonshot-v1-16b-a3b — fine-grained MoE 64e top-6 (kimi/moonlight).
+[hf:moonshotai/Moonlight-16B-A3B; hf]
+48L d_model=2048 16H (kv=16 — full MHA) d_ff=1408 (per expert) vocab=163840."""
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="moonshot-v1-16b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=1408,
+    vocab_size=163840,
+    n_experts=64,
+    top_k=6,
+    capacity_factor=1.25,
+    notes="fine-grained experts; uniform 64e top-6 (shared-expert variant "
+          "of the HF release folded into the uniform expert pool)",
+)

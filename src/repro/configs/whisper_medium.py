@@ -1,0 +1,28 @@
+"""whisper-medium — encoder-decoder, conv frontend stubbed.
+[arXiv:2212.04356; unverified]
+24L d_model=1024 16H (kv=16) d_ff=4096 vocab=51865.
+
+``input_specs()`` provides precomputed frame embeddings (1500 x d_model)
+in place of the conv1d frontend (assignment: modality frontend is a
+STUB).  The decoder self-attends causally and cross-attends to the
+encoder output; decode shapes lower the decoder serve_step with both
+caches."""
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-medium",
+    family="audio",
+    n_layers=24,            # decoder layers
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=51865,
+    use_bias=True,
+    n_enc_layers=24,
+    n_audio_frames=1500,
+    rope_theta=1e4,         # (whisper uses learned abs pos; rope stands in)
+    notes="enc-dec; frame embeddings stubbed; full attention -> skip long_500k",
+)

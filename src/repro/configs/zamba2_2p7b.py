@@ -1,0 +1,27 @@
+"""zamba2-2.7b — hybrid: Mamba2 backbone + shared attention blocks.
+[arXiv:2411.15242; hf]  54L d_model=2560 32H (GQA kv=32) d_ff=10240
+vocab=32000 ssm_state=64.
+
+Every 6th backbone position applies a SHARED (single-weight) attention +
+MLP block, as in the Zamba2 design; the other positions are Mamba2
+mixers.  Sub-quadratic: runs the long_500k cell with recurrent state."""
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    n_layers=54,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=80,
+    d_ff=10240,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_conv_width=4,
+    attn_every=6,
+    notes="9 applications of one shared attn+MLP block; 45 mamba2 mixers",
+)

@@ -1,0 +1,21 @@
+"""Persistent software combining — the paper's core protocols.
+
+Exports the simulated NVMM (epoch persistency + crash semantics), the two
+recoverable combining protocols (PBComb: blocking, PWFComb: wait-free),
+and the sequential-object interface they transform into recoverable
+concurrent objects.
+"""
+
+from .atomics import AtomicInt, AtomicRef, Counters, GLOBAL_COUNTERS
+from .nvm import LINE, NVM, SimulatedCrash
+from .objects import (AtomicFloatObject, FetchAddObject, HeapObject,
+                      SeqObject)
+from .pbcomb import PBComb, RequestRec
+from .pwfcomb import PWFComb
+
+__all__ = [
+    "AtomicInt", "AtomicRef", "Counters", "GLOBAL_COUNTERS",
+    "LINE", "NVM", "SimulatedCrash",
+    "AtomicFloatObject", "FetchAddObject", "HeapObject", "SeqObject",
+    "PBComb", "PWFComb", "RequestRec",
+]

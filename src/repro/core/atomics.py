@@ -1,0 +1,119 @@
+"""Atomic single-word primitives (volatile) used by the combining protocols.
+
+The paper assumes atomic read/write/CAS and LL/VL/SC on single words
+(Section 2).  CPython's GIL makes individual loads/stores atomic; CAS and
+SC are implemented under a per-object mutex.  LL/SC is simulated exactly
+the way the paper's own evaluation does (Section 6): "we simulate an LL on
+an object O with a read, and an SC with a CAS on a timestamped version of
+O to avoid the ABA problem".
+
+Instrumentation: every object can be tagged ``shared=True`` so reads and
+writes on cache-shared locations are counted — this reproduces the
+Table 1 counters (stores/reads on cache lines in shared state).
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+
+class Counters:
+    """Process-wide counters for shared-location traffic (paper Table 1)."""
+
+    def __init__(self) -> None:
+        self.shared_reads = 0
+        self.shared_writes = 0
+        self.cas_calls = 0
+        self._lock = threading.Lock()
+
+    def snapshot(self) -> Dict[str, int]:
+        return {"shared_reads": self.shared_reads,
+                "shared_writes": self.shared_writes,
+                "cas_calls": self.cas_calls}
+
+    def reset(self) -> None:
+        self.shared_reads = 0
+        self.shared_writes = 0
+        self.cas_calls = 0
+
+
+GLOBAL_COUNTERS = Counters()
+
+
+class AtomicInt:
+    def __init__(self, value: int = 0, *, shared: bool = False,
+                 counters: Optional[Counters] = None) -> None:
+        self._value = value
+        self._mutex = threading.Lock()
+        self._shared = shared
+        self._counters = counters or GLOBAL_COUNTERS
+
+    def load(self) -> int:
+        if self._shared:
+            self._counters.shared_reads += 1
+        return self._value
+
+    def store(self, value: int) -> None:
+        if self._shared:
+            self._counters.shared_writes += 1
+        self._value = value
+
+    def cas(self, old: int, new: int) -> bool:
+        with self._mutex:
+            if self._shared:
+                self._counters.cas_calls += 1
+            if self._value == old:
+                self._value = new
+                if self._shared:
+                    self._counters.shared_writes += 1
+                return True
+            return False
+
+    def fetch_add(self, delta: int) -> int:
+        with self._mutex:
+            old = self._value
+            self._value = old + delta
+            if self._shared:
+                self._counters.shared_writes += 1
+            return old
+
+
+class AtomicRef:
+    """Versioned reference supporting LL/VL/SC (ABA-safe, as in paper §6)."""
+
+    def __init__(self, value: Any, *, shared: bool = False,
+                 counters: Optional[Counters] = None) -> None:
+        self._value: Tuple[Any, int] = (value, 0)
+        self._mutex = threading.Lock()
+        self._shared = shared
+        self._counters = counters or GLOBAL_COUNTERS
+
+    def ll(self) -> Tuple[Any, int]:
+        """Load-linked: returns (value, version); version feeds VL/SC."""
+        if self._shared:
+            self._counters.shared_reads += 1
+        return self._value
+
+    def vl(self, version: int) -> bool:
+        """Validate: has the reference changed since the LL?"""
+        if self._shared:
+            self._counters.shared_reads += 1
+        return self._value[1] == version
+
+    def sc(self, version: int, new_value: Any) -> bool:
+        """Store-conditional: succeeds iff no SC since the matching LL."""
+        with self._mutex:
+            if self._shared:
+                self._counters.cas_calls += 1
+            if self._value[1] == version:
+                self._value = (new_value, version + 1)
+                if self._shared:
+                    self._counters.shared_writes += 1
+                return True
+            return False
+
+    def load(self) -> Any:
+        if self._shared:
+            self._counters.shared_reads += 1
+        return self._value[0]

@@ -1,0 +1,225 @@
+"""Simulated Non-Volatile Main Memory with explicit epoch persistency.
+
+Faithful model of the paper's memory assumptions (Section 2):
+
+  * Memory is word-addressable; words are grouped into cache lines of
+    ``LINE`` words.  Writes go to the *volatile* image (cache).
+  * ``pwb(addr)`` queues a write-back of the cache line(s) covering
+    ``addr`` — it does NOT wait.  The written-back value is the line's
+    content at pwb-issue time (TSO: per-line program order preserved).
+  * ``pfence()`` orders: every pwb issued before the fence completes
+    before any pwb issued after it ("epochs").
+  * ``psync()`` blocks until all previously issued pwbs are durable.
+  * *Explicit* epoch persistency (Izraelevitz et al. [35], adopted by the
+    paper): a line reaches NVMM **only** via pwb — no spontaneous
+    evictions.
+
+Crash semantics (``crash()``): the adversary picks how far the write-back
+queue drained — all epochs before some cut are durable, plus an arbitrary
+per-line-prefix-respecting subset of the cut epoch.  Everything volatile
+is lost (reset to the persisted image).  Tests sweep/randomize the cut to
+exercise every reachable post-crash state.
+
+``crash_after_persist_ops`` arms a countdown so a ``SimulatedCrash`` is
+raised in the middle of protocol code — this is how the crash-recovery
+tests enumerate crash points *inside* the combiner.
+
+Counters expose the paper's performance metrics: pwbs (counted per cache
+line, so persistence principle P3 — contiguity — is visible in the
+numbers), pfences, psyncs.  ``pwb_nop``/``psync_nop`` reproduce the
+ablations of paper Figures 3 and 6.
+"""
+
+from __future__ import annotations
+
+import random
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+LINE = 8  # words per simulated cache line
+
+
+class SimulatedCrash(Exception):
+    """Raised when an armed crash countdown fires inside protocol code."""
+
+
+class NVM:
+    def __init__(self, n_words: int = 1 << 20, *, pwb_nop: bool = False,
+                 psync_nop: bool = False,
+                 persist_latency: float = 0.0) -> None:
+        """``persist_latency``: seconds a psync blocks the calling thread
+        (models NVMM write-back latency, ~1-3us on Optane DCPMM; the
+        benchmark harness sets it so the paper's cost trends — one psync
+        per combining ROUND vs one per op — are visible on a host where
+        memory writes are otherwise free).  The sleep happens OUTSIDE the
+        queue lock: other threads keep announcing while the combiner
+        waits, which is exactly the contention window combining exploits.
+        """
+        self.n_words = n_words
+        self._vol: List[Any] = [0] * n_words        # volatile (cache) image
+        self._dur: List[Any] = [0] * n_words        # durable (NVMM) image
+        # Write-back queue: list of epochs; each epoch is an ordered list of
+        # (line_index, snapshot_of_line_words) taken at pwb-issue time.
+        self._epochs: List[List[Tuple[int, List[Any]]]] = [[]]
+        # Line 0 is reserved: address 0 doubles as the NULL pointer for the
+        # linked structures, so no allocation may ever receive it.
+        self._alloc_ptr = LINE
+        self._lock = threading.Lock()
+        self.pwb_nop = pwb_nop
+        self.psync_nop = psync_nop
+        self.persist_latency = persist_latency
+        self.counters: Dict[str, int] = {
+            "pwb": 0, "pfence": 0, "psync": 0, "crashes": 0}
+        # Crash-point injection: countdown on persistence "events".
+        self._crash_countdown: Optional[int] = None
+        self._crash_rng: Optional[random.Random] = None
+
+    # ------------------------------------------------------------------ #
+    # Allocation                                                         #
+    # ------------------------------------------------------------------ #
+    def alloc(self, n_words: int, align_line: bool = True) -> int:
+        """Bump-allocate ``n_words``; line-aligned so P3 layouts are real."""
+        with self._lock:
+            if align_line and self._alloc_ptr % LINE:
+                self._alloc_ptr += LINE - self._alloc_ptr % LINE
+            base = self._alloc_ptr
+            self._alloc_ptr += n_words
+            if self._alloc_ptr > self.n_words:
+                raise MemoryError("simulated NVMM exhausted")
+            return base
+
+    # ------------------------------------------------------------------ #
+    # Volatile-image access (normal loads/stores)                        #
+    # ------------------------------------------------------------------ #
+    def read(self, addr: int) -> Any:
+        return self._vol[addr]
+
+    def write(self, addr: int, value: Any) -> None:
+        self._vol[addr] = value
+
+    def read_range(self, addr: int, n: int) -> List[Any]:
+        return self._vol[addr:addr + n]
+
+    def write_range(self, addr: int, values: List[Any]) -> None:
+        self._vol[addr:addr + len(values)] = values
+
+    # ------------------------------------------------------------------ #
+    # Persistence instructions                                           #
+    # ------------------------------------------------------------------ #
+    def _tick_crash_point(self) -> None:
+        if self._crash_countdown is not None:
+            self._crash_countdown -= 1
+            if self._crash_countdown < 0:
+                self._crash_countdown = None
+                self.crash(self._crash_rng)
+                raise SimulatedCrash()
+
+    def pwb(self, addr: int, n_words: int = 1) -> None:
+        """Queue write-back of every line covering [addr, addr+n_words)."""
+        first = addr // LINE
+        last = (addr + n_words - 1) // LINE
+        with self._lock:
+            for line in range(first, last + 1):
+                if not self.pwb_nop:
+                    snap = self._vol[line * LINE:(line + 1) * LINE]
+                    self._epochs[-1].append((line, snap))
+                self.counters["pwb"] += 1
+        self._tick_crash_point()
+
+    def pfence(self) -> None:
+        with self._lock:
+            self.counters["pfence"] += 1
+            if self._epochs[-1]:
+                self._epochs.append([])
+        self._tick_crash_point()
+
+    # One write-back engine per DIMM: concurrent psyncs serialize on the
+    # device (an infinite-bandwidth model would let per-op-persist
+    # baselines overlap all their syncs for free).
+    _device_lock = threading.Lock()
+    SEEK_COST = 4e-6     # per discontiguous run of lines (P3 visible!)
+    STREAM_COST = 5e-7   # per line within a contiguous run
+
+    def psync(self) -> None:
+        lines: List[int] = []
+        with self._lock:
+            self.counters["psync"] += 1
+            if not self.psync_nop:
+                for epoch in self._epochs:
+                    for line, snap in epoch:
+                        self._dur[line * LINE:(line + 1) * LINE] = snap
+                        lines.append(line)
+                self._epochs = [[]]
+        if lines and self.persist_latency:
+            # cost model: fixed sync latency + seek per discontiguous run
+            # + stream per line — contiguous layouts (persistence
+            # principle P3) drain in few runs, scattered ones pay seeks.
+            lines.sort()
+            runs = 1 + sum(1 for a, b in zip(lines, lines[1:])
+                           if b > a + 1)
+            cost = (self.persist_latency + runs * self.SEEK_COST
+                    + len(lines) * self.STREAM_COST)
+            with NVM._device_lock:
+                time.sleep(cost)
+        self._tick_crash_point()
+
+    # ------------------------------------------------------------------ #
+    # Crash / recovery                                                   #
+    # ------------------------------------------------------------------ #
+    def arm_crash(self, after_persist_ops: int,
+                  rng: Optional[random.Random] = None) -> None:
+        """Raise SimulatedCrash after ``after_persist_ops`` more pwb/pfence/
+        psync calls (the crash resolves the write-back queue adversarially
+        with ``rng``, or deterministically drains nothing if rng is None)."""
+        self._crash_countdown = after_persist_ops
+        self._crash_rng = rng
+
+    def disarm_crash(self) -> None:
+        self._crash_countdown = None
+
+    def crash(self, rng: Optional[random.Random] = None) -> None:
+        """System-wide crash.
+
+        Resolves the write-back queue: with ``rng``, a random cut epoch is
+        chosen; all earlier epochs drain fully, and a per-line prefix subset
+        of the cut epoch drains.  Without ``rng`` nothing pending drains
+        (the most adversarial *loss* outcome; note the dual adversarial
+        outcome — everything drained — is exercised by rng sweeps).
+        Afterwards the volatile image is reset to the durable image.
+        """
+        with self._lock:
+            self.counters["crashes"] += 1
+            epochs = self._epochs
+            if rng is not None and epochs:
+                cut = rng.randint(0, len(epochs) - 1)
+                for epoch in epochs[:cut]:
+                    for line, snap in epoch:
+                        self._dur[line * LINE:(line + 1) * LINE] = snap
+                # Partial drain of the cut epoch: keep a prefix per line so
+                # same-line program order is respected.
+                cut_epoch = epochs[cut]
+                taken_upto: Dict[int, int] = {}
+                for i, (line, _snap) in enumerate(cut_epoch):
+                    if rng.random() < 0.5:
+                        taken_upto[line] = i
+                for i, (line, snap) in enumerate(cut_epoch):
+                    if i <= taken_upto.get(line, -1):
+                        self._dur[line * LINE:(line + 1) * LINE] = snap
+            self._epochs = [[]]
+            self._vol = list(self._dur)
+            self._crash_countdown = None
+
+    # ------------------------------------------------------------------ #
+    # Introspection                                                      #
+    # ------------------------------------------------------------------ #
+    def durable_read(self, addr: int) -> Any:
+        return self._dur[addr]
+
+    def pending_lines(self) -> int:
+        with self._lock:
+            return sum(len(e) for e in self._epochs)
+
+    def reset_counters(self) -> None:
+        for k in self.counters:
+            self.counters[k] = 0

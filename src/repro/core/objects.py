@@ -1,0 +1,132 @@
+"""Sequential object interface used by the combining protocols.
+
+A combiner applies announced requests to the ``st`` field of a StateRec
+living inside simulated NVMM.  Objects define how many NVM words their
+state occupies and how to apply a request to it.  This is the paper's
+"derive a recoverable implementation of any data structure from its
+sequential implementation" interface (Section 8).
+"""
+
+from __future__ import annotations
+
+from typing import Any, List, Optional, Tuple
+
+from .nvm import NVM
+
+
+class SeqObject:
+    """A sequential object whose state lives in ``state_words`` NVM words."""
+
+    state_words: int = 1
+
+    def init_state(self, nvm: NVM, st_base: int) -> None:
+        raise NotImplementedError
+
+    def apply(self, nvm: NVM, st_base: int, func: str, args: Any,
+              ctx: Optional[Any] = None) -> Any:
+        """Apply request ``(func, args)`` to state at ``st_base``; return the
+        response.  ``ctx`` is the running combiner instance — structure
+        implementations use it to record extra NVM ranges to persist
+        (PBQueue's ``toPersist``)."""
+        raise NotImplementedError
+
+
+class AtomicFloatObject(SeqObject):
+    """The paper's synthetic benchmark object (Section 6, Figures 1-3):
+    ``AtomicFloat(O, k)`` reads v, stores v*k, returns v."""
+
+    state_words = 1
+
+    def init_state(self, nvm: NVM, st_base: int) -> None:
+        nvm.write(st_base, 1.0)
+
+    def apply(self, nvm, st_base, func, args, ctx=None):
+        v = nvm.read(st_base)
+        nvm.write(st_base, v * args)
+        return v
+
+
+class FetchAddObject(SeqObject):
+    """Fetch&Add counter — handy for linearizability checking (the multiset
+    of responses of k FAA(1) ops must be exactly {0..k-1})."""
+
+    state_words = 1
+
+    def init_state(self, nvm: NVM, st_base: int) -> None:
+        nvm.write(st_base, 0)
+
+    def apply(self, nvm, st_base, func, args, ctx=None):
+        v = nvm.read(st_base)
+        nvm.write(st_base, v + args)
+        return v
+
+
+class HeapObject(SeqObject):
+    """Bounded sequential min-heap (paper Section 5, PBHEAP).
+
+    State layout: word 0 = current size, words 1..capacity = the array.
+    Supports HINSERT / HDELETEMIN / HGETMIN.
+    """
+
+    def __init__(self, capacity: int) -> None:
+        self.capacity = capacity
+        self.state_words = capacity + 1
+
+    def init_state(self, nvm: NVM, st_base: int) -> None:
+        nvm.write(st_base, 0)
+        for i in range(1, self.capacity + 1):
+            nvm.write(st_base + i, 0)
+
+    # -- sequential helpers on NVM words ------------------------------- #
+    def _get(self, nvm, b, i):
+        return nvm.read(b + 1 + i)
+
+    def _set(self, nvm, b, i, v):
+        nvm.write(b + 1 + i, v)
+
+    def apply(self, nvm, st_base, func, args, ctx=None):
+        size = nvm.read(st_base)
+        if func == "HGETMIN":
+            return self._get(nvm, st_base, 0) if size > 0 else None
+        if func == "HINSERT":
+            if size >= self.capacity:
+                return False
+            i = size
+            self._set(nvm, st_base, i, args)
+            while i > 0:
+                parent = (i - 1) // 2
+                if self._get(nvm, st_base, parent) <= self._get(nvm, st_base, i):
+                    break
+                a = self._get(nvm, st_base, parent)
+                b_ = self._get(nvm, st_base, i)
+                self._set(nvm, st_base, parent, b_)
+                self._set(nvm, st_base, i, a)
+                i = parent
+            nvm.write(st_base, size + 1)
+            return True
+        if func == "HDELETEMIN":
+            if size == 0:
+                return None
+            top = self._get(nvm, st_base, 0)
+            last = self._get(nvm, st_base, size - 1)
+            size -= 1
+            nvm.write(st_base, size)
+            if size > 0:
+                self._set(nvm, st_base, 0, last)
+                i = 0
+                while True:
+                    l, r = 2 * i + 1, 2 * i + 2
+                    smallest = i
+                    if l < size and self._get(nvm, st_base, l) < self._get(nvm, st_base, smallest):
+                        smallest = l
+                    if r < size and self._get(nvm, st_base, r) < self._get(nvm, st_base, smallest):
+                        smallest = r
+                    if smallest == i:
+                        break
+                    a = self._get(nvm, st_base, i)
+                    b_ = self._get(nvm, st_base, smallest)
+                    self._set(nvm, st_base, i, b_)
+                    self._set(nvm, st_base, smallest, a)
+                    i = smallest
+            return top
+        raise ValueError(f"unknown heap op {func}")

@@ -1,0 +1,175 @@
+"""PBComb — the paper's blocking recoverable combining protocol.
+
+Faithful implementation of Algorithms 1 and 2.  Design decisions
+(paper Definition 1) and how each respects the persistence principles
+(Definition 2):
+
+  1. combiner election: CAS on a *volatile* integer ``Lock`` whose parity
+     encodes taken/free; a thread may leave the entry section without ever
+     CAS-ing if its request was served (P1: the lock is never persisted).
+  2. requests: flat volatile ``Request[0..n-1]`` array (P1 — never
+     persisted; ``valid`` bits are reset by a crash, which is exactly what
+     recovery needs).
+  3. updates applied to a *copy* of the state: 2-slot non-volatile
+     ``MemState[0..1]``; the combiner works on slot ``1 - MIndex`` (P3 —
+     one contiguous pwb covers state + responses + deactivate bits).
+  4. responses: ``ReturnVal[0..n-1]`` inside the StateRec (P3).
+  5. served-detection: per-thread ``activate`` (volatile, in Request) vs
+     ``Deactivate`` (inside the persisted StateRec).  Only deactivate is
+     persisted; the system-provided ``seq`` parity replaces activate at
+     recovery (P1).
+
+Per combining round of degree d: pwb(StateRec) + pfence + pwb(MIndex) +
+psync — i.e. O(1) persistence instructions for d requests.
+
+StateRec NVM layout (contiguous, line-aligned):
+    [ st : state_words | ReturnVal[0..n-1] | Deactivate[0..n-1] ]
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, List, Optional
+
+from .atomics import AtomicInt, Counters
+from .nvm import NVM
+from .objects import SeqObject
+
+
+@dataclass
+class RequestRec:
+    func: Optional[str] = None
+    args: Any = None
+    activate: int = 0
+    valid: int = 0
+
+
+class PBComb:
+    def __init__(self, nvm: NVM, n_threads: int, obj: SeqObject,
+                 counters: Optional[Counters] = None) -> None:
+        self.nvm = nvm
+        self.n = n_threads
+        self.obj = obj
+        sw = obj.state_words
+        self.state_words = sw
+        self.rec_words = sw + 2 * n_threads
+        # --- shared non-volatile variables --------------------------- #
+        self.mem_base = [nvm.alloc(self.rec_words) for _ in range(2)]
+        self.mindex_addr = nvm.alloc(1)
+        nvm.write(self.mindex_addr, 0)
+        for ind in range(2):
+            obj.init_state(nvm, self.mem_base[ind])
+            for q in range(n_threads):
+                nvm.write(self._retval_addr(ind, q), None)
+                nvm.write(self._deact_addr(ind, q), 0)
+        # Initial image must be durable (the paper assumes initialized NVMM).
+        nvm.pwb(self.mem_base[0], self.rec_words)
+        nvm.pwb(self.mem_base[1], self.rec_words)
+        nvm.pwb(self.mindex_addr, 1)
+        nvm.psync()
+        nvm.reset_counters()
+        # --- shared volatile variables -------------------------------- #
+        self.request: List[RequestRec] = [RequestRec() for _ in range(n_threads)]
+        self.lock = AtomicInt(0, shared=True, counters=counters)
+        self.lockval = 0  # written only by the combiner, read by waiters
+
+    # ---------------- field address helpers --------------------------- #
+    def _st_base(self, ind: int) -> int:
+        return self.mem_base[ind]
+
+    def _retval_addr(self, ind: int, q: int) -> int:
+        return self.mem_base[ind] + self.state_words + q
+
+    def _deact_addr(self, ind: int, q: int) -> int:
+        return self.mem_base[ind] + self.state_words + self.n + q
+
+    def _mindex(self) -> int:
+        return self.nvm.read(self.mindex_addr)
+
+    # ---------------- public API (Algorithm 1) ------------------------ #
+    def op(self, p: int, func: str, args: Any, seq: int) -> Any:
+        """PBCOMB(func, args, seq) executed by thread p."""
+        req = self.request[p]
+        self.request[p] = RequestRec(func, args, 1 - req.activate, 1)
+        return self._perform_request(p)
+
+    def recover(self, p: int, func: str, args: Any, seq: int) -> Any:
+        """Recovery function (Algorithm 1, lines 3-6).  Called by the
+        "system" for every thread that had an operation in flight at crash
+        time, with the same arguments (Section 2's system-support
+        assumption)."""
+        self.request[p] = RequestRec(func, args, seq % 2, 1)
+        if self.nvm.read(self._deact_addr(self._mindex(), p)) != seq % 2:
+            return self._perform_request(p)
+        return self.nvm.read(self._retval_addr(self._mindex(), p))
+
+    def reset_volatile(self) -> None:
+        """Re-initialize volatile protocol state after a crash (the crash
+        wiped registers/caches/DRAM — Request, Lock, LockVal are volatile)."""
+        self.request = [RequestRec() for _ in range(self.n)]
+        self.lock = AtomicInt(0, shared=True)
+        self.lockval = 0
+
+    # ---------------- Algorithm 2 ------------------------------------- #
+    def _perform_request(self, p: int) -> Any:
+        nvm = self.nvm
+        while True:
+            lval = self.lock.load()                          # line 6
+            if lval % 2 == 0:                                # line 7
+                if self.lock.cas(lval, lval + 1):            # line 8
+                    break                                    # p is combiner
+                lval += 1                                    # line 9
+            while self.lock.load() == lval:                  # line 10
+                time.sleep(0)
+            mindex = self._mindex()
+            if self.request[p].activate == nvm.read(self._deact_addr(mindex, p)):  # line 11
+                if self.lockval != lval:                     # line 12
+                    # Served by an in-flight round: wait for its psync.
+                    while self.lock.load() == lval + 2:
+                        time.sleep(0)
+                return nvm.read(self._retval_addr(self._mindex(), p))  # line 13
+        return self._combine(p)
+
+    def _combine(self, p: int) -> Any:
+        """Combiner code, Algorithm 2 lines 14-29."""
+        nvm = self.nvm
+        mindex = self._mindex()
+        ind = 1 - mindex                                     # line 14
+        nvm.write_range(self.mem_base[ind],
+                        nvm.read_range(self.mem_base[mindex], self.rec_words))  # line 15
+        self._begin_round(ind, p)
+        for q in range(self.n):                              # line 16
+            req = self.request[q]
+            if req.valid == 1 and req.activate != nvm.read(self._deact_addr(ind, q)):  # line 17
+                ret = self._apply(q, req.func, req.args, ind, p)       # lines 18-19
+                nvm.write(self._retval_addr(ind, q), ret)              # line 20
+                nvm.write(self._deact_addr(ind, q), req.activate)      # line 21
+        self._post_simulation(ind, p)
+        nvm.pwb(self.mem_base[ind], self.rec_words)          # line 22
+        nvm.pfence()                                         # line 23
+        self.lockval = self.lock.load()                      # line 24
+        nvm.write(self.mindex_addr, ind)                     # line 25
+        nvm.pwb(self.mindex_addr, 1)                         # line 26
+        nvm.psync()                                          # line 27
+        self._pre_unlock(ind, p)
+        self.lock.store(self.lock.load() + 1)               # line 28
+        return nvm.read(self._retval_addr(self._mindex(), p))  # line 29
+
+    # ---------------- structure hooks --------------------------------- #
+    def _apply(self, q: int, func: str, args: Any, ind: int,
+               combiner: int) -> Any:
+        return self.obj.apply(self.nvm, self._st_base(ind), func, args, ctx=self)
+
+    def _begin_round(self, ind: int, combiner: int) -> None:
+        """Called after the state copy, before the simulation loop.
+        PBStack's elimination pass lives here."""
+
+    def _post_simulation(self, ind: int, combiner: int) -> None:
+        """Called after the simulation loop, before pwb(StateRec).
+        PBQueue's enqueue instance persists its ``toPersist`` node set here
+        (Algorithm 5 line 24)."""
+
+    def _pre_unlock(self, ind: int, combiner: int) -> None:
+        """Called after psync, before the lock release.  PBQueue's enqueue
+        instance publishes ``oldTail`` here (Algorithm 5 line 31)."""

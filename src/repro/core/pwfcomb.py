@@ -1,0 +1,257 @@
+"""PWFComb — the paper's wait-free recoverable combining protocol.
+
+Faithful implementation of Algorithms 3 and 4.  Every thread *pretends*
+to be the combiner: it copies the StateRec pointed to by ``S`` into one of
+its two private NVM slots, applies all announced valid+active requests to
+the copy, persists the copy (one contiguous pwb + pfence), and tries to
+publish it with SC(S, ...).  After two failed attempts the thread's own
+request is guaranteed served (Herlihy-style helping argument), so it
+returns the response recorded in the current StateRec.
+
+Persistence-principle machinery (paper Section 4):
+  * ``Index[0..n-1]`` lives *inside* the StateRec so the slot-alternation
+    bookkeeping persists together with the state (P3) — without it a
+    recovered thread could reuse the slot currently published in S.
+  * ``Flush[]`` (volatile) parity tells whether the publishing round's
+    pwb(S)+psync already happened, so most threads skip persisting S (P1).
+  * ``CombRound[][]`` (volatile) tells a thread which publishing round
+    served it, so it only helps persist that round (P2).
+
+Deviations from the paper's pseudocode, documented per the repo's
+DESIGN.md:
+  * Algorithm 4 line 15 reads ``Flush[lsPtr->pid]`` (the *previous*
+    combiner's counter) to derive the round number.  We read the thread's
+    own ``Flush[p]`` — the textual description ("p changes Flush[p] to an
+    odd value") implies per-thread monotone round numbers, which the
+    cross-thread read would break (stale ``CombRound`` entries could alias
+    a later round).
+  * In the fallback path (lines 38-50) the paper skips persisting S
+    whenever ``CombRound`` does not match, even if ``Flush`` is odd.  We
+    persist whenever ``Flush`` of the current publisher is odd: there is a
+    narrow 3-round overlap window in which the skip could let a thread
+    return before any psync of an S value covering its request.  The
+    common-case saving (skip when even) is preserved.
+
+LL/VL/SC on S is simulated exactly as in the paper's own evaluation:
+a versioned CAS (Section 6).
+"""
+
+from __future__ import annotations
+
+import random
+import threading
+import time
+from typing import Any, List, Optional
+
+from .atomics import Counters
+from .nvm import NVM
+from .objects import SeqObject
+from .pbcomb import RequestRec
+
+
+class _SRef:
+    """Versioned LL/VL/SC reference whose value is mirrored into an NVM
+    word under the SC mutex (so pwb(&S) snapshots are never stale)."""
+
+    def __init__(self, nvm: NVM, addr: int, value: int,
+                 counters: Optional[Counters] = None) -> None:
+        self.nvm = nvm
+        self.addr = addr
+        self._value = (value, 0)
+        self._mutex = threading.Lock()
+        self._counters = counters
+        nvm.write(addr, value)
+
+    def ll(self):
+        if self._counters:
+            self._counters.shared_reads += 1
+        return self._value
+
+    def vl(self, version: int) -> bool:
+        return self._value[1] == version
+
+    def sc(self, version: int, new_value: int) -> bool:
+        with self._mutex:
+            if self._counters:
+                self._counters.cas_calls += 1
+            if self._value[1] == version:
+                self._value = (new_value, version + 1)
+                self.nvm.write(self.addr, new_value)
+                return True
+            return False
+
+    def load(self) -> int:
+        return self._value[0]
+
+
+class PWFComb:
+    MAX_BACKOFF = 64  # spin iterations; adaptive, tiny on a 1-core host
+
+    def __init__(self, nvm: NVM, n_threads: int, obj: SeqObject,
+                 counters: Optional[Counters] = None,
+                 backoff: bool = True) -> None:
+        self.nvm = nvm
+        self.n = n_threads
+        self.obj = obj
+        self.backoff_enabled = backoff
+        sw = obj.state_words
+        self.state_words = sw
+        # StateRec: st | ReturnVal[n] | Deactivate[n] | Index[n] | pid
+        self.rec_words = sw + 3 * n_threads + 1
+        # --- shared non-volatile: (n+1) owners x 2 slots + S ---------- #
+        self.slot_base = [nvm.alloc(self.rec_words)
+                          for _ in range((n_threads + 1) * 2)]
+        self.s_addr = nvm.alloc(1)
+        dummy = self._slot_id(n_threads, 0)
+        for s in range(len(self.slot_base)):
+            self._init_rec(s)
+        self.S = _SRef(nvm, self.s_addr, dummy, counters)
+        for s in range(len(self.slot_base)):
+            nvm.pwb(self.slot_base[s], self.rec_words)
+        nvm.pwb(self.s_addr, 1)
+        nvm.psync()
+        nvm.reset_counters()
+        # --- shared volatile ------------------------------------------ #
+        self.request: List[RequestRec] = [RequestRec() for _ in range(n_threads)]
+        self.flush: List[int] = [0] * (n_threads + 1)
+        self.comb_round = [[0] * n_threads for _ in range(n_threads + 1)]
+        self._rng = random.Random(0xC0FFEE)
+        self._backoff_window = [1] * n_threads
+
+    # ---------------- layout helpers ---------------------------------- #
+    def _slot_id(self, owner: int, ind: int) -> int:
+        return owner * 2 + ind
+
+    def _base(self, slot: int) -> int:
+        return self.slot_base[slot]
+
+    def _retval_addr(self, slot: int, q: int) -> int:
+        return self._base(slot) + self.state_words + q
+
+    def _deact_addr(self, slot: int, q: int) -> int:
+        return self._base(slot) + self.state_words + self.n + q
+
+    def _index_addr(self, slot: int, q: int) -> int:
+        return self._base(slot) + self.state_words + 2 * self.n + q
+
+    def _pid_addr(self, slot: int) -> int:
+        return self._base(slot) + self.state_words + 3 * self.n
+
+    def _init_rec(self, slot: int) -> None:
+        nvm = self.nvm
+        self.obj.init_state(nvm, self._base(slot))
+        for q in range(self.n):
+            nvm.write(self._retval_addr(slot, q), None)
+            nvm.write(self._deact_addr(slot, q), 0)
+            nvm.write(self._index_addr(slot, q), 0)
+        nvm.write(self._pid_addr(slot), self.n)
+
+    # ---------------- public API (Algorithm 3) ------------------------ #
+    def op(self, p: int, func: str, args: Any, seq: int) -> Any:
+        req = self.request[p]
+        self.request[p] = RequestRec(func, args, 1 - req.activate, 1)  # line 1
+        self._backoff(p)                                               # line 2
+        return self._perform_request(p)
+
+    def recover(self, p: int, func: str, args: Any, seq: int) -> Any:
+        self.request[p] = RequestRec(func, args, seq % 2, 1)
+        s = self.S.load()
+        if self.nvm.read(self._deact_addr(s, p)) != seq % 2:
+            return self._perform_request(p)
+        return self.nvm.read(self._retval_addr(s, p))
+
+    def reset_volatile(self) -> None:
+        """Post-crash volatile re-initialization.  S (non-volatile) is
+        rebuilt from its durable NVM word; Request/Flush/CombRound are
+        volatile and start fresh."""
+        self.S = _SRef(self.nvm, self.s_addr, self.nvm.read(self.s_addr))
+        self.request = [RequestRec() for _ in range(self.n)]
+        self.flush = [0] * (self.n + 1)
+        self.comb_round = [[0] * self.n for _ in range(self.n + 1)]
+
+    # ---------------- Algorithm 4 -------------------------------------- #
+    def _perform_request(self, p: int) -> Any:
+        nvm = self.nvm
+        my_slots = (self._slot_id(p, 0), self._slot_id(p, 1))
+        for _attempt in range(2):                                # line 5
+            ls, ver = self.S.ll()                                # line 9
+            ind = nvm.read(self._index_addr(ls, p))              # line 11
+            dst = my_slots[ind]
+            nvm.write_range(self._base(dst),
+                            nvm.read_range(self._base(ls), self.rec_words))  # line 13
+            nvm.write(self._pid_addr(dst), p)                    # line 14
+            lval = self.flush[p]                                 # line 15 (own, see module doc)
+            lval = lval + 1 if lval % 2 == 0 else lval + 2       # lines 16-17
+            if not self.S.vl(ver):                               # line 18
+                continue
+            self._begin_attempt(dst, p)
+            for q in range(self.n):                              # line 19
+                req = self.request[q]
+                if req.valid == 1 and req.activate != nvm.read(self._deact_addr(dst, q)):  # line 20
+                    ret = self._apply(q, req.func, req.args, dst, p)    # lines 21-22
+                    nvm.write(self._retval_addr(dst, q), ret)           # line 23
+                    nvm.write(self._deact_addr(dst, q), req.activate)   # line 24
+                    self.comb_round[p][q] = lval                        # line 25
+            if self.S.vl(ver):                                   # line 26
+                nvm.write(self._index_addr(dst, p),
+                          1 - nvm.read(self._index_addr(dst, p)))       # line 27
+                self._pre_publish(dst, p)
+                nvm.pwb(self._base(dst), self.rec_words)         # line 28
+                nvm.pfence()                                     # line 29
+                self.flush[p] = lval                             # line 30
+                if self.S.sc(ver, dst):                          # line 31
+                    nvm.pwb(self.s_addr, 1)                      # line 32
+                    nvm.psync()                                  # line 33
+                    self._cas_flush(p, lval, lval + 1)           # line 34
+                    # Hook runs after S is durable: safe point to recycle
+                    # nodes the published round removed.
+                    self._on_publish_success(dst, p)
+                    return nvm.read(self._retval_addr(self.S.load(), p))  # line 35
+            self._attempt_failed(dst, p)
+            self._backoff(p, grow=True)                          # line 36
+        # Fallback (lines 38-50): request guaranteed served by now.
+        ls = self.S.load()                                       # line 38
+        s_pid = nvm.read(self._pid_addr(ls))
+        lval = self.flush[s_pid]                                 # line 40
+        if lval % 2 == 1:                                        # line 42 (see module doc)
+            nvm.pwb(self.s_addr, 1)                              # line 44
+            nvm.psync()                                          # line 46
+            if lval == self.comb_round[s_pid][p]:
+                self._cas_flush(s_pid, lval, lval + 1)           # line 48
+        return nvm.read(self._retval_addr(self.S.load(), p))     # line 50
+
+    # ---------------- helpers ------------------------------------------ #
+    _flush_mutex = threading.Lock()
+
+    def _cas_flush(self, i: int, old: int, new: int) -> None:
+        with self._flush_mutex:
+            if self.flush[i] == old:
+                self.flush[i] = new
+
+    def _apply(self, q: int, func: str, args: Any, slot: int,
+               combiner: int) -> Any:
+        return self.obj.apply(self.nvm, self._base(slot), func, args, ctx=self)
+
+    # ---------------- structure hooks ---------------------------------- #
+    def _begin_attempt(self, slot: int, p: int) -> None:
+        """Called after a consistent copy, before the simulation loop."""
+
+    def _pre_publish(self, slot: int, p: int) -> None:
+        """Called before pwb(StateRec) — persist attempt-local node
+        allocations here (they must be durable before S can move)."""
+
+    def _on_publish_success(self, slot: int, p: int) -> None:
+        """Called right after a successful SC."""
+
+    def _attempt_failed(self, slot: int, p: int) -> None:
+        """Called when an attempt is abandoned (failed VL or SC) — return
+        attempt-local node allocations to the pool."""
+
+    def _backoff(self, p: int, grow: bool = False) -> None:
+        if not self.backoff_enabled:
+            return
+        if grow:
+            self._backoff_window[p] = min(self._backoff_window[p] * 2,
+                                          self.MAX_BACKOFF)
+        for _ in range(self._rng.randint(0, self._backoff_window[p])):
+            time.sleep(0)

@@ -1,0 +1,62 @@
+"""Deterministic, recoverable synthetic data pipeline.
+
+The iterator state is a single integer step: batch ``i`` is a pure
+function of ``(seed, i)`` via ``jax.random.fold_in``, so restoring the
+step counter from a checkpoint resumes the exact token stream — the data
+pipeline's contribution to detectable recovery (the step lives inside the
+checkpointer's StateRec).
+
+``input_specs`` produces ShapeDtypeStruct stand-ins for every model input
+of an (arch x shape) cell — the dry-run lowers against these without
+allocating anything.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeConfig
+
+
+def _extra_shapes(cfg: ArchConfig, batch: int) -> Dict[str, Tuple]:
+    extra = {}
+    if cfg.family == "vlm":
+        extra["image_embeds"] = (batch, cfg.n_image_tokens, cfg.d_model)
+    if cfg.family == "audio":
+        extra["frame_embeds"] = (batch, cfg.n_audio_frames, cfg.d_model)
+    return extra
+
+
+def make_batch(cfg: ArchConfig, shape: ShapeConfig, seed: int, step: int,
+               batch_override: Optional[int] = None) -> Dict[str, Any]:
+    """Materialize training batch ``step`` (CPU smoke / example drivers)."""
+    B = batch_override or shape.global_batch
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    k1, k2 = jax.random.split(key)
+    tokens = jax.random.randint(k1, (B, shape.seq_len), 0, cfg.vocab_size,
+                                dtype=jnp.int32)
+    labels = jnp.roll(tokens, -1, axis=1)
+    extra = {name: jax.random.normal(k2, shp, jnp.bfloat16) * 0.02
+             for name, shp in _extra_shapes(cfg, B).items()}
+    return {"tokens": tokens, "labels": labels, "extra": extra}
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                batch_override: Optional[int] = None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for a train/prefill batch."""
+    B = batch_override or shape.global_batch
+    sds = jax.ShapeDtypeStruct
+    extra = {name: sds(shp, jnp.bfloat16)
+             for name, shp in _extra_shapes(cfg, B).items()}
+    return {"tokens": sds((B, shape.seq_len), jnp.int32),
+            "labels": sds((B, shape.seq_len), jnp.int32),
+            "extra": extra}
+
+
+def decode_token_specs(shape: ShapeConfig,
+                       batch_override: Optional[int] = None):
+    B = batch_override or shape.global_batch
+    return jax.ShapeDtypeStruct((B,), jnp.int32)

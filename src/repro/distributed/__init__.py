@@ -1,0 +1,14 @@
+"""Distribution: sharding rules, pipeline parallelism, compression."""
+
+from .compression import compressed_psum, dequantize, ef_quantize, quantize
+from .pipeline import pipeline_apply
+from .sharding import (NOSHARD, Sharder, batch_pspec, decode_state_pspecs,
+                       param_pspecs, param_shardings, zero1_pspecs,
+                       zero1_spec)
+
+__all__ = [
+    "compressed_psum", "dequantize", "ef_quantize", "quantize",
+    "pipeline_apply", "NOSHARD", "Sharder", "batch_pspec",
+    "decode_state_pspecs", "param_pspecs", "param_shardings",
+    "zero1_pspecs", "zero1_spec",
+]

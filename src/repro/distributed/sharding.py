@@ -1,0 +1,260 @@
+"""Sharding rules: parameter PartitionSpecs, activation constraints, and
+ZeRO-1 optimizer-state sharding.
+
+Parallelism map (DESIGN.md §5):
+  * TP over 'model': attention heads (wq/wk/wv out-dim, wo in-dim), MLP
+    hidden (w_gate/w_up out, w_down in), expert dim E, mamba d_inner,
+    vocab dim of embedding/unembedding.
+  * DP over 'data' (+ 'pod' on the multi-pod mesh): batch dimension of
+    every activation; ZeRO-1 additionally shards AdamW/Adafactor state
+    over 'data'.
+  * EP: expert-parallel weights (E, D, F) put E on 'model'.
+  * SP: long_500k decode shards the KV-cache length over 'data'
+    (batch=1 leaves the data axis free).
+
+``param_pspecs`` walks the param pytree by key path; rules are name-based
+so they survive the stacked-layer layout (leading layer axis is always
+unsharded).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass
+class Sharder:
+    """Activation-constraint helper passed through the model code.
+
+    ``shard(x, spec)`` pins ``x`` to ``spec`` (axes absent from the mesh
+    are dropped, so model code can always mention ('pod','data')).
+    """
+
+    mesh: Optional[Mesh] = None
+    seq_shard_kv: bool = False   # long_500k: shard cache length over 'data'
+
+    def _filter(self, spec: P, shape) -> P:
+        """Drop axes absent from the mesh or not dividing the dimension
+        (e.g. batch=1 long-context decode cannot batch-shard)."""
+        names = self.mesh.axis_names
+        sizes = dict(self.mesh.shape)
+        out = []
+        for i, entry in enumerate(spec):
+            dim = shape[i] if i < len(shape) else 1
+            if entry is None:
+                out.append(None)
+                continue
+            entries = entry if isinstance(entry, (tuple, list)) else (entry,)
+            kept = []
+            prod = 1
+            for a in entries:
+                if a in names and dim % (prod * sizes[a]) == 0:
+                    kept.append(a)
+                    prod *= sizes[a]
+            out.append(tuple(kept) if kept else None)
+        return P(*out)
+
+    def __call__(self, x, spec: P):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self._filter(spec, x.shape)))
+
+
+NOSHARD = Sharder(None)
+
+
+# --------------------------------------------------------------------- #
+# Parameter specs
+# --------------------------------------------------------------------- #
+_MODEL_OUT = {"wq", "wk", "wv", "w_gate", "w_up", "wz", "wx",
+              "bq", "bk", "bv", "b_gate", "b_up"}
+_MODEL_IN = {"wo", "w_down", "out_proj"}
+_VOCAB = {"embed", "unembed"}
+_SSM_HEAD = {"A_log", "D", "dt_bias", "wdt"}
+_REPLICATED = {"ln1", "ln2", "lnx", "final_norm", "enc_norm", "q_norm",
+               "k_norm", "norm", "router", "bo", "b_down", "wB", "wC",
+               "conv_B", "conv_B_b", "conv_C", "conv_C_b", "dt_bias"}
+
+
+def _spec_for(path: Tuple[str, ...], shape: Tuple[int, ...],
+              model_size: int, data_axes: Tuple[str, ...] = (),
+              data_size: int = 1) -> P:
+    name = path[-1]
+    nd = len(shape)
+    n_elems = 1
+    for d in shape:
+        n_elems *= d
+
+    def last_axis_spec(axis_from_end: int) -> P:
+        out = [None] * nd
+        idx = nd - 1 - axis_from_end
+        if shape[idx] % model_size == 0 and shape[idx] >= model_size:
+            out[idx] = "model"
+        return P(*out)
+
+    if name in ("w_gate", "w_up", "w_down") and nd >= 3 \
+            and any(p in ("moe",) for p in path):
+        # expert weights [L?, E, D, F]: E on 'model' (expert parallelism).
+        # Huge expert stacks (llama4: 772B of experts = 97 GiB/device at
+        # TP-16 alone) additionally shard FSDP-style over the data axes
+        # on their last dim — each layer all-gathers its own experts at
+        # use, the standard large-MoE memory/bandwidth trade.
+        out = [None] * nd
+        e_idx = nd - 3
+        if shape[e_idx] % model_size == 0:
+            out[e_idx] = "model"
+        if n_elems >= (1 << 31) and data_axes and \
+                shape[-1] % data_size == 0 and shape[-1] >= data_size:
+            out[-1] = data_axes if len(data_axes) > 1 else data_axes[0]
+        return P(*out)
+    if name in _VOCAB:
+        # [V, D] or [D, V]: vocab axis on 'model'
+        out = [None] * nd
+        v_idx = nd - 2 if name == "embed" else nd - 1
+        if shape[v_idx] % model_size == 0:
+            out[v_idx] = "model"
+        return P(*out)
+    if name in _MODEL_OUT:
+        return last_axis_spec(0)
+    if name in _MODEL_IN:
+        # [..., F_in, D_out]: shard the in (hidden/head) axis
+        return last_axis_spec(1)
+    if name in ("conv_x", "conv_x_b"):
+        return last_axis_spec(0)     # d_inner channels
+    if name in _SSM_HEAD:
+        return last_axis_spec(0)     # per-ssm-head vectors
+    return P(*([None] * nd))
+
+
+def param_pspecs(params, mesh: Mesh):
+    """PartitionSpec pytree matching ``params``."""
+    model_size = mesh.shape.get("model", 1)
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    data_size = 1
+    for a in data_axes:
+        data_size *= mesh.shape[a]
+
+    def assign(path, leaf):
+        keys = tuple(getattr(p, "key", getattr(p, "name", str(p)))
+                     for p in path)
+        return _spec_for(keys, leaf.shape, model_size, data_axes,
+                         data_size)
+
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
+def param_shardings(params, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_pspecs(params, mesh))
+
+
+# --------------------------------------------------------------------- #
+# ZeRO-1: optimizer-state sharding
+# --------------------------------------------------------------------- #
+def zero1_spec(spec: P, shape: Tuple[int, ...], data_size: int,
+               axes=("data",)) -> P:
+    """Extend a param spec with 'data' on the first free divisible axis —
+    optimizer state m/v shards over the data axis in addition to the
+    param's own model-axis sharding (ZeRO stage 1).  No-op when the spec
+    already uses the data axes (e.g. FSDP-sharded expert stacks)."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    used = set()
+    for e in entries:
+        if e is None:
+            continue
+        for a in (e if isinstance(e, (tuple, list)) else (e,)):
+            used.add(a)
+    if any(a in used for a in axes):
+        return P(*entries)            # already data-sharded (FSDP)
+    for i, (e, dim) in enumerate(zip(entries, shape)):
+        if e is None and dim % data_size == 0 and dim >= data_size:
+            entries[i] = axes if len(axes) > 1 else axes[0]
+            return P(*entries)
+    return P(*entries)   # too small to shard further — replicate
+
+
+def zero1_pspecs(params, mesh: Mesh):
+    base = param_pspecs(params, mesh)
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp *= mesh.shape[a]
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def assign(spec, leaf):
+        return zero1_spec(spec, leaf.shape, dp, axes)
+
+    return jax.tree.map(assign, base, params)
+
+
+# --------------------------------------------------------------------- #
+# Batch / decode-state specs
+# --------------------------------------------------------------------- #
+def batch_pspec(mesh: Mesh) -> P:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return P(axes, None)
+
+
+def decode_state_pspecs(state, mesh: Mesh, *, seq_shard: bool = False):
+    """Specs for the DecodeState pytree.
+
+    KV caches [L, B, S, Hkv, hd]: batch on data, kv heads on model; with
+    ``seq_shard`` (long_500k, B=1) the length axis shards on 'data'
+    instead (sequence parallelism for the half-terabyte cache).  SSM
+    recurrent states [L, B, H, P, N]: ssm heads on 'model'.
+    """
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    model = mesh.shape.get("model", 1)
+    dp = 1
+    for a in axes:
+        dp *= mesh.shape[a]
+
+    def assign(path, leaf):
+        if leaf is None:
+            return P()
+        keys = tuple(str(getattr(p, "key", getattr(p, "name", p)))
+                     for p in path)
+        in_ssm = "ssm" in keys
+        is_memory = "memory" in keys
+        nd = leaf.ndim
+
+        def b(dim):   # batch axes only if the dim divides
+            return axes if (leaf.shape[dim] % dp == 0
+                            and leaf.shape[dim] >= dp) else None
+
+        def m_ok(dim):
+            return leaf.shape[dim] % model == 0 and leaf.shape[dim] >= model
+
+        if is_memory:                # [B, M, D] encoder/image memory
+            return P(b(0), None, None)
+        if nd == 5 and not in_ssm:   # stacked KV cache [L, B, S, H, hd]
+            # GQA often has Hkv < model_size (e.g. kv=8, TP=16): then the
+            # cache length shards over 'model' instead (flash-decoding
+            # style split-KV; the partial softmax reduces over 'model').
+            if seq_shard and m_ok(2):  # long-context, batch too small
+                if m_ok(3):
+                    return P(None, None, axes, "model", None)
+                return P(None, None, axes + ("model",), None, None)
+            if m_ok(3):
+                return P(None, b(1), None, "model", None)
+            if m_ok(2):
+                return P(None, b(1), "model", None, None)
+            return P(None, b(1), None, None, None)
+        if nd == 5 and in_ssm:       # recurrent state [L, B, H, P, N]
+            return P(None, b(1), "model" if m_ok(2) else None, None, None)
+        if nd == 4:                  # conv windows / cross-kv pieces
+            if in_ssm:               # conv windows [L, B, W-1, C]
+                return P(None, b(1), None, "model" if m_ok(3) else None)
+            return P(None, b(1), None, None)
+        if nd == 3:                  # stacked [L, B, *]
+            return P(None, b(1), None)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(assign, state)

@@ -1,0 +1,112 @@
+"""Flash-decode — single-token GQA attention against a KV cache.
+
+The §Perf decode analysis (EXPERIMENTS.md cell 3) shows decode is bound
+by cache streaming plus whatever the compiler materializes around it
+(layout copies, f32 casts).  This kernel is the TPU endgame for that
+term: it streams the heads-major cache [B, Hkv, S, hd] through VMEM in
+blocks with an online softmax, reading each cache byte exactly once in
+its storage dtype — no transposes, no f32 cache copies, no [S]-sized
+logits in HBM.
+
+Grid: (B * Hkv, S/block) — the cache-block axis is innermost, carrying
+the f32 accumulator / running max / running sum for all G=H/Hkv query
+heads of the group in VMEM scratch.  ``kv_len`` masks the padded tail.
+
+q: [B, H, hd]; k, v: [B, Hkv, S, hd]; kv_len: [] -> out: [B, H, hd].
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+LANES = 128
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, block_s: int, groups: int):
+    si = pl.program_id(1)
+    ns = pl.num_programs(1)
+
+    @pl.when(si == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    kv_len = len_ref[0]
+    s_start = si * block_s
+
+    @pl.when(s_start < kv_len)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)          # [G, hd]
+        k = k_ref[0].astype(jnp.float32)          # [block_s, hd]
+        v = v_ref[0].astype(jnp.float32)          # [block_s, hd]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        pos = s_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                 (groups, block_s), 1)
+        s = jnp.where(pos < kv_len, s, NEG_INF)   # mask padded tail
+        m_prev = m_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = (l_ref[...] * alpha[:, None] +
+                      jnp.sum(p, axis=1)[:, None])
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+
+    @pl.when(si == ns - 1)
+    def _finalize():
+        l = l_ref[:, 0]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, kv_len, *, scale: Optional[float] = None,
+                     block_s: int = 512, interpret: bool = False):
+    """q: [B, H, hd]; k, v: [B, Hkv, S, hd] (heads-major cache);
+    kv_len: [] int32 -> out: [B, H, hd]."""
+    B, H, hd = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    assert H % Hkv == 0
+    G = H // Hkv
+    block_s = min(block_s, S)
+    assert S % block_s == 0
+    scale = scale if scale is not None else hd ** -0.5
+
+    kernel = functools.partial(_kernel, scale=scale, block_s=block_s,
+                               groups=G)
+    grid = (B * Hkv, S // block_s)
+    kv_len_arr = jnp.asarray(kv_len, jnp.int32).reshape(1)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, G, hd), lambda bh, si: (bh, 0, 0)),
+            pl.BlockSpec((1, block_s, hd), lambda bh, si: (bh, si, 0)),
+            pl.BlockSpec((1, block_s, hd), lambda bh, si: (bh, si, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), lambda bh, si: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G, LANES), jnp.float32),
+            pltpu.VMEM((G, LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len_arr,
+      q.reshape(B, Hkv, G, hd).reshape(B * Hkv, G, hd),
+      k.reshape(B * Hkv, S, hd),
+      v.reshape(B * Hkv, S, hd))
+    return out.reshape(B, Hkv, G, hd).reshape(B, H, hd)

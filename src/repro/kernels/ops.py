@@ -1,0 +1,71 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Each op is differentiable via ``jax.custom_vjp``: the forward pass runs
+the Pallas kernel; the backward pass recomputes through the pure-jnp
+reference (flash-style recompute — no extra residuals beyond the inputs).
+``interpret=True`` is threaded through for CPU validation; on TPU leave
+it False.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention
+from .ssd_scan import ssd_scan
+
+
+# --------------------------------------------------------------------- #
+# attention
+# --------------------------------------------------------------------- #
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def attention_op(q, k, v, causal=True, window=None, softcap=None,
+                 interpret=False):
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           softcap=softcap, interpret=interpret)
+
+
+def _attn_fwd(q, k, v, causal, window, softcap, interpret):
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, interpret=interpret)
+    return out, (q, k, v)
+
+
+def _attn_bwd(causal, window, softcap, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: ref.attention_ref(
+            q_, k_, v_, causal=causal, window=window, softcap=softcap),
+        q, k, v)
+    return vjp(g)
+
+
+attention_op.defvjp(_attn_fwd, _attn_bwd)
+
+
+# --------------------------------------------------------------------- #
+# SSD scan
+# --------------------------------------------------------------------- #
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def ssd_op(x, dt, A, Bm, Cm, interpret=False):
+    return ssd_scan(x, dt, A, Bm, Cm, interpret=interpret)
+
+
+def _ssd_fwd(x, dt, A, Bm, Cm, interpret):
+    return ssd_scan(x, dt, A, Bm, Cm, interpret=interpret), \
+        (x, dt, A, Bm, Cm)
+
+
+def _ssd_bwd(interpret, res, g):
+    x, dt, A, Bm, Cm = res
+    _, vjp = jax.vjp(
+        lambda *args: ref.ssd_ref(*args)[0], x, dt, A, Bm, Cm)
+    return vjp(g)
+
+
+ssd_op.defvjp(_ssd_fwd, _ssd_bwd)

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Deliberately *different algorithms* from the kernels where possible, so a
+match is meaningful:
+  * ``attention_ref`` — materialized-logits softmax attention (the kernel
+    streams kv blocks with an online softmax).
+  * ``ssd_ref`` — token-by-token sequential recurrence (the kernel runs
+    the chunked SSD formulation).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: Optional[int] = None,
+                  softcap: Optional[float] = None,
+                  scale: Optional[float] = None):
+    """q: [B, H, Sq, d]; k, v: [B, Hkv, Sk, d] -> [B, H, Sq, d]."""
+    B, H, Sq, d = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(B, Hkv, G, Sq, d).astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)   # right-aligned positions
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= qpos < kpos + window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, d).astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, Bm, Cm, init_state=None):
+    """Sequential SSD recurrence (oracle for the chunked kernel).
+
+    x: [B, L, H, P]; dt: [B, L, H] (already softplus'ed); A: [H] (negative);
+    Bm, Cm: [B, L, N].  Returns (y [B, L, H, P], state [B, H, P, N])."""
+    Bsz, L, H, P = x.shape
+    N = Bm.shape[-1]
+    f32 = jnp.float32
+    s = jnp.zeros((Bsz, H, P, N), f32) if init_state is None \
+        else init_state.astype(f32)
+
+    def step(s, inp):
+        x_t, dt_t, B_t, C_t = inp                 # [B,H,P], [B,H], [B,N] x2
+        a = jnp.exp(dt_t.astype(f32) * A.astype(f32))           # [B,H]
+        dx = x_t.astype(f32) * dt_t[..., None].astype(f32)      # [B,H,P]
+        s = s * a[..., None, None] + jnp.einsum("bn,bhp->bhpn",
+                                                B_t.astype(f32), dx)
+        y = jnp.einsum("bn,bhpn->bhp", C_t.astype(f32), s)
+        return s, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0))
+    s, ys = jax.lax.scan(step, s, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), s

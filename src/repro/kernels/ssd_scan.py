@@ -1,0 +1,102 @@
+"""Mamba2 SSD chunked scan — Pallas TPU kernel.
+
+Grid: (B*H, L/chunk).  The chunk axis is innermost/sequential, so the
+inter-chunk recurrent state [P, N] lives in f32 VMEM scratch across grid
+steps (the standard TPU sequential-grid carry pattern).  Per chunk:
+
+  intra-chunk  : (C B^T ⊙ L) X — two [cl x cl] / [cl x N] matmuls on the
+                 MXU (cl = 128, N = ssm_state, hardware-aligned),
+  inter-chunk  : C (decay ⊙ state) + state update via one outer-product
+                 matmul.
+
+VMEM per step (cl=128, P=64, N=128): x + B + C + L + att + state
+≈ 200 KiB f32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, *,
+            chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)          # [cl, P]
+    dt = dt_ref[0].astype(jnp.float32)        # [cl, 1] (lane-collapsed)
+    a = a_ref[0, 0]                           # scalar A_h (negative)
+    Bm = b_ref[0].astype(jnp.float32)         # [cl, N]
+    Cm = c_ref[0].astype(jnp.float32)         # [cl, N]
+
+    dA = dt[:, 0] * a                         # [cl]
+    dA_cs = jnp.cumsum(dA)                    # [cl]
+    xs = x * dt                               # input scaling by dt
+
+    # ---- intra-chunk quadratic term ----
+    seg = dA_cs[:, None] - dA_cs[None, :]     # [cl, cl]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(ii >= jj, jnp.exp(seg), 0.0)
+    att = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    y = jax.lax.dot_general(att * L, xs, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # ---- inter-chunk contribution from the carried state ----
+    state = state_ref[...]                    # [P, N]
+    y_inter = jax.lax.dot_general(Cm, state, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    y = y + y_inter * jnp.exp(dA_cs)[:, None]
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # ---- state update ----
+    decay_end = jnp.exp(dA_cs[-1] - dA_cs)    # [cl]
+    new_contrib = jax.lax.dot_general(
+        xs * decay_end[:, None], Bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)   # [P, N]
+    state_ref[...] = state * jnp.exp(dA_cs[-1]) + new_contrib
+
+
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 128,
+             interpret: bool = False):
+    """Chunked SSD scan.
+
+    x: [B, L, H, P]; dt: [B, L, H] (softplus'ed); A: [H] (negative);
+    Bm, Cm: [B, L, N] -> y: [B, L, H, P]."""
+    Bsz, Ln, H, P = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, Ln)
+    assert Ln % chunk == 0
+    nc = Ln // chunk
+
+    xt = jnp.moveaxis(x, 2, 1).reshape(Bsz * H, Ln, P)
+    dtt = jnp.moveaxis(dt, 2, 1).reshape(Bsz * H, Ln, 1)
+    a2 = jnp.broadcast_to(A[None, :], (Bsz, H)).reshape(Bsz * H, 1)
+    a2 = a2.astype(jnp.float32)
+
+    kernel = functools.partial(_kernel, chunk=chunk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(Bsz * H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, 1), lambda bh, ci: (bh, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bh, ci, H=H: (bh // H, ci, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bh, ci, H=H: (bh // H, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, P), lambda bh, ci: (bh, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bsz * H, Ln, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, a2, Bm, Cm)
+    return jnp.moveaxis(out.reshape(Bsz, H, Ln, P), 1, 2)

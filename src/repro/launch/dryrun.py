@@ -1,0 +1,199 @@
+import os
+# Device-count flag MUST precede any jax import (jax locks device count at
+# first init).  LICM is disabled because the CPU backend hoists the
+# bf16->f32 convert of the remat-saved activation stack out of the
+# backward while-loop, materializing a full f32 copy (+9 GiB/device on a
+# 1.7B train step) that a memory-aware TPU compilation does not exhibit —
+# with LICM on, memory_analysis() reports the artifact, not the program
+# (see EXPERIMENTS.md §Dry-run notes).
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    "--xla_disable_hlo_passes=while-loop-invariant-code-motion")
+
+"""Multi-pod dry-run launcher.
+
+Lowers + compiles every (architecture x input-shape) cell against
+ShapeDtypeStructs on the production meshes — (16,16) single-pod and
+(2,16,16) multi-pod — and records memory analysis, cost analysis and
+collective traffic for the roofline tables (EXPERIMENTS.md).
+
+The two lines above MUST precede any jax import: jax locks the device
+count at first initialization.  Smoke tests / benchmarks never import
+this module, so they see the real single CPU device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--skip-done]
+"""
+
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCHS, SHAPES, cells_for, get
+from ..models import active_param_count, init_params, param_count
+from .hlo_analysis import (collective_stats, model_flops, roofline_terms)
+from .hlo_cost import HloCost
+from .mesh import make_production_mesh
+from .steps import lower_prefill_step, lower_serve_step, lower_train_step
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / \
+    "benchmarks" / "results"
+
+
+VARIANTS = {
+    "base": {},
+    # §Perf hillclimb variants (EXPERIMENTS.md logs hypothesis->measure):
+    "opt": {"attn_explicit_shard": True, "moe_ep_shard_map": True,
+            "attn_bf16_math": True},
+    "attnshard": {"attn_explicit_shard": True},
+    "moeep": {"moe_ep_shard_map": True},
+    "bf16attn": {"attn_bf16_math": True},
+}
+
+
+def lower_cell(cfg, shape, mesh, variant: str = "base"):
+    import dataclasses
+    overrides = VARIANTS.get(variant, {})
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    if shape.kind == "train":
+        return lower_train_step(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return lower_prefill_step(cfg, shape, mesh)
+    return lower_serve_step(cfg, shape, mesh)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             variant: str = "base") -> dict:
+    cfg = get(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    t0 = time.time()
+    lowered = lower_cell(cfg, shape, mesh, variant)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    mem = compiled.memory_analysis()
+    cost_raw = compiled.cost_analysis()
+    cost_raw = cost_raw[0] if isinstance(cost_raw, (list, tuple)) \
+        else cost_raw
+    hlo_txt = compiled.as_text()
+    coll = collective_stats(hlo_txt)      # un-folded counts (reference)
+    # Loop-folded costs: XLA cost_analysis counts while bodies ONCE
+    # (verified in tests/test_hlo_cost.py), so scanned-layer models are
+    # undercounted by ~n_layers.  HloCost re-derives flops/bytes/
+    # collective traffic from the compiled HLO with trip counts folded.
+    parsed = HloCost(hlo_txt).totals()
+    coll.bytes_per_device = parsed["collective_bytes"]
+    coll.counts = {**coll.counts,
+                   **{f"folded_{k}": v
+                      for k, v in parsed["collective_counts"].items()}}
+
+    params_shape = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    n_total = param_count(params_shape)
+    n_active = active_param_count(params_shape, cfg)
+    mf = model_flops(cfg, shape, n_active)
+    cost = {"flops": parsed["flops"], "bytes accessed": parsed["bytes"]}
+    rf = roofline_terms(cost, coll, n_chips, mf)
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "variant": variant,
+        "n_chips": n_chips,
+        "params_total": n_total, "params_active": n_active,
+        "lower_s": round(t1 - t0, 1), "compile_s": round(t2 - t1, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_per_device": mem.argument_size_in_bytes
+            + mem.temp_size_in_bytes - mem.alias_size_in_bytes,
+        },
+        "cost": {k: cost.get(k) for k in
+                 ("flops", "bytes accessed") if k in cost},
+        "cost_raw": {k: cost_raw.get(k) for k in
+                     ("flops", "bytes accessed") if k in cost_raw},
+        "collectives": coll.as_dict(),
+        "roofline": rf.as_dict(),
+    }
+    return rec
+
+
+def save(rec: dict) -> pathlib.Path:
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    name = (f"{rec['arch']}_{rec['shape']}_{rec['mesh'].replace('x', '-')}"
+            f"_{rec['variant']}.json")
+    path = RESULTS_DIR / name
+    path.write_text(json.dumps(rec, indent=1))
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+
+    jobs = []
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    if args.all:
+        for arch, cfg in ARCHS.items():
+            for shape, runnable, reason in cells_for(cfg):
+                for mp in meshes:
+                    jobs.append((arch, shape.name, mp, runnable, reason))
+    else:
+        cfg = get(args.arch)
+        for mp in meshes:
+            runnable = True
+            reason = ""
+            for shape, r, why in cells_for(cfg):
+                if shape.name == args.shape:
+                    runnable, reason = r, why
+            jobs.append((args.arch, args.shape, mp, runnable, reason))
+
+    failures = 0
+    for arch, shape, mp, runnable, reason in jobs:
+        mesh_tag = "2x16x16" if mp else "16x16"
+        tag = f"{arch:28s} {shape:12s} {mesh_tag:8s}"
+        if not runnable:
+            print(f"SKIP {tag} — {reason}", flush=True)
+            continue
+        out = (RESULTS_DIR /
+               f"{arch}_{shape}_{mesh_tag.replace('x', '-')}"
+               f"_{args.variant}.json")
+        if args.skip_done and out.exists():
+            print(f"DONE {tag} (cached)", flush=True)
+            continue
+        try:
+            rec = run_cell(arch, shape, mp, args.variant)
+            path = save(rec)
+            r = rec["roofline"]
+            print(f"OK   {tag} compile={rec['compile_s']}s "
+                  f"peak/dev={rec['memory']['peak_per_device']/2**30:.2f}GiB "
+                  f"dominant={r['dominant']} "
+                  f"terms(c/m/x)={r['compute_s']:.3e}/{r['memory_s']:.3e}/"
+                  f"{r['collective_s']:.3e} -> {path.name}", flush=True)
+        except Exception:
+            failures += 1
+            print(f"FAIL {tag}\n{traceback.format_exc()}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,179 @@
+"""Post-SPMD HLO analysis: collective traffic + roofline terms.
+
+``compiled.as_text()`` after SPMD partitioning has *per-device* shapes.
+For every collective op we extract the buffer size and the replica-group
+size, and model per-device link traffic with standard ring factors:
+
+  all-reduce         2 (g-1)/g x bytes      (reduce-scatter + all-gather)
+  all-gather         (g-1)/g x output bytes
+  reduce-scatter     (g-1)/g x input bytes ~= (g-1)/g x output x g
+  all-to-all         (g-1)/g x bytes
+  collective-permute 1 x bytes
+
+``collective_bytes`` reported to the roofline is per-device traffic
+summed over chips (so dividing by chips in the roofline formula recovers
+per-chip traffic).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (per the assignment).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per chip (ICI)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUP_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Sum byte sizes of every array shape in an HLO type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUP_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUP_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return 2
+
+
+@dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    bytes_per_device: float          # modeled link traffic, one device
+    raw_buffer_bytes: Dict[str, int]  # summed result-buffer sizes
+
+    def as_dict(self):
+        return {"counts": self.counts,
+                "bytes_per_device": self.bytes_per_device,
+                "raw_buffer_bytes": self.raw_buffer_bytes}
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    counts = {op: 0 for op in COLLECTIVE_OPS}
+    raw = {op: 0 for op in COLLECTIVE_OPS}
+    traffic = 0.0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\]{},\d]+)\s+"
+                     r"([a-z\-]+)", stripped)
+        if not m:
+            continue
+        op = m.group(2)
+        if op.endswith("-start"):
+            op = op[:-6]
+        if op not in COLLECTIVE_OPS:
+            continue
+        size = _shape_bytes(m.group(1))
+        g = _group_size(stripped)
+        counts[op] += 1
+        raw[op] += size
+        if op == "all-reduce":
+            traffic += 2.0 * (g - 1) / g * size
+        elif op == "all-gather":
+            traffic += (g - 1) / g * size
+        elif op == "reduce-scatter":
+            traffic += (g - 1) * size        # input = g x output shards
+        elif op == "all-to-all":
+            traffic += (g - 1) / g * size
+        else:                                # collective-permute
+            traffic += size
+    return CollectiveStats(counts, traffic, raw)
+
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    model_flops: float
+    useful_ratio: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Simple max-of-terms bound (no overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-model-FLOPs utilization at the bound: how close the
+        step is to pure-compute roofline on its useful work."""
+        ideal = self.model_flops / PEAK_FLOPS
+        return ideal / self.step_time_s if self.step_time_s else 0.0
+
+    def as_dict(self):
+        return {"compute_s": self.compute_s, "memory_s": self.memory_s,
+                "collective_s": self.collective_s,
+                "dominant": self.dominant,
+                "flops_per_device": self.flops_per_device,
+                "bytes_per_device": self.bytes_per_device,
+                "coll_bytes_per_device": self.coll_bytes_per_device,
+                "model_flops": self.model_flops,
+                "useful_ratio": self.useful_ratio,
+                "step_time_s": self.step_time_s,
+                "roofline_fraction": self.roofline_fraction}
+
+
+def roofline_terms(cost: Dict[str, float], coll: CollectiveStats,
+                   n_chips: int, model_flops_global: float) -> Roofline:
+    """All inputs per-device except model_flops_global (whole step)."""
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    collective_s = coll.bytes_per_device / LINK_BW
+    model_flops_dev = model_flops_global / n_chips
+    useful = model_flops_dev / flops if flops else 0.0
+    return Roofline(compute_s, memory_s, collective_s, flops, byts,
+                    coll.bytes_per_device, model_flops_dev, useful)
+
+
+def model_flops(cfg, shape, n_params_active: int) -> float:
+    """6 N D for training, 2 N D for inference forward passes."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_params_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_params_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_params_active * shape.global_batch

@@ -1,0 +1,189 @@
+"""Step builders: train_step / prefill_step / serve_step with full
+sharding annotations, ready for jit + AOT lowering (dry-run) or real
+execution (smoke / examples).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..distributed.sharding import (Sharder, batch_pspec, decode_state_pspecs,
+                                    param_pspecs, zero1_pspecs)
+from ..models import (decode_step, init_decode_state, init_params, loss_fn,
+                      prefill)
+from ..optim import make_optimizer
+
+
+# --------------------------------------------------------------------- #
+# Train
+# --------------------------------------------------------------------- #
+def make_train_step(cfg: ArchConfig, mesh: Optional[Mesh] = None,
+                    lr: float = 3e-4):
+    """Returns ``train_step(params, opt_state, step, batch) ->
+    (params, opt_state, step, loss)``."""
+    _, update_fn = make_optimizer(cfg, lr=lr)
+    shard = Sharder(mesh) if mesh is not None else Sharder(None)
+
+    def train_step(params, opt_state, step, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, shard=shard))(params)
+        new_params, new_opt = update_fn(grads, opt_state, params, step)
+        return new_params, new_opt, step + 1, loss
+
+    return train_step
+
+
+def train_state_shardings(cfg: ArchConfig, params_shape, mesh: Mesh):
+    """(params, opt_state, step) shardings.
+
+    Optimizer state gets ZeRO-1: AdamW m/v mirror the param tree, so they
+    take the param's TP spec *plus* 'data' on the first free divisible
+    axis; Adafactor's factored row/col vectors are small and shard over
+    'data' by shape."""
+    from ..distributed.sharding import zero1_spec
+    pspec = param_pspecs(params_shape, mesh)
+    pz = zero1_pspecs(params_shape, mesh)
+    opt_shape = jax.eval_shape(make_optimizer(cfg)[0], params_shape)
+    if "m" in opt_shape:                       # AdamW
+        opt_pspec = {"m": pz, "v": pz}
+    else:                                      # Adafactor
+        dp = 1
+        for a in ("pod", "data"):
+            if a in mesh.axis_names:
+                dp *= mesh.shape[a]
+        axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        opt_pspec = jax.tree.map(
+            lambda leaf: zero1_spec(P(), leaf.shape, dp, axes), opt_shape)
+    ns = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree)
+    return ns(pspec), ns(opt_pspec), NamedSharding(mesh, P())
+
+
+def lower_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                     donate: bool = True):
+    """AOT-lower the train step against ShapeDtypeStructs (no allocation)."""
+    from ..data.pipeline import input_specs
+
+    params_shape = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    opt_shape = jax.eval_shape(make_optimizer(cfg)[0], params_shape)
+    step_shape = jax.ShapeDtypeStruct((), jnp.int32)
+    batch_shape = input_specs(cfg, shape)
+
+    p_sh, o_sh, s_sh = train_state_shardings(cfg, params_shape, mesh)
+    bspec = batch_pspec(mesh)
+    b_sh = {
+        "tokens": NamedSharding(mesh, bspec),
+        "labels": NamedSharding(mesh, bspec),
+        "extra": jax.tree.map(
+            lambda l: NamedSharding(mesh, P(bspec[0], None, None)),
+            batch_shape["extra"]),
+    }
+
+    train_step = make_train_step(cfg, mesh)
+    jitted = jax.jit(
+        train_step,
+        in_shardings=(p_sh, o_sh, s_sh, b_sh),
+        out_shardings=(p_sh, o_sh, s_sh, NamedSharding(mesh, P())),
+        donate_argnums=(0, 1) if donate else ())
+    with mesh:
+        lowered = jitted.lower(params_shape, opt_shape, step_shape,
+                               batch_shape)
+    return lowered
+
+
+# --------------------------------------------------------------------- #
+# Serve
+# --------------------------------------------------------------------- #
+def make_prefill_step(cfg: ArchConfig, mesh: Optional[Mesh] = None,
+                      max_len: Optional[int] = None):
+    shard = Sharder(mesh)
+
+    def prefill_step(params, batch):
+        logits, state = prefill(params, cfg, batch["tokens"],
+                                batch.get("extra"), shard=shard,
+                                max_len=max_len)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, state
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, mesh: Optional[Mesh] = None):
+    shard = Sharder(mesh)
+
+    def serve_step(params, state, tokens):
+        logits, new_state = decode_step(params, cfg, state, tokens,
+                                        shard=shard)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, new_state
+
+    return serve_step
+
+
+def lower_serve_step(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                     seq_shard: Optional[bool] = None):
+    """AOT-lower one decode step with a seq_len KV cache/state."""
+    B = shape.global_batch
+    if seq_shard is None:
+        # long-context single-sequence decode: shard the cache length
+        seq_shard = B < mesh.shape.get("data", 1)
+    params_shape = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    state_shape = jax.eval_shape(
+        functools.partial(init_decode_state, cfg, B, shape.seq_len))
+    # state.pos starts at seq_len - 1 in real serving; shape is identical.
+    tok_shape = jax.ShapeDtypeStruct((B,), jnp.int32)
+
+    p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_pspecs(params_shape, mesh))
+    st_spec = decode_state_pspecs(state_shape, mesh, seq_shard=seq_shard)
+    st_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), st_spec)
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    tok_sh = NamedSharding(mesh, P(baxes if not seq_shard else None))
+
+    serve_step = make_serve_step(cfg, mesh)
+    jitted = jax.jit(
+        serve_step,
+        in_shardings=(p_sh, st_sh, tok_sh),
+        out_shardings=(tok_sh, st_sh),
+        donate_argnums=(1,))
+    with mesh:
+        lowered = jitted.lower(params_shape, state_shape, tok_shape)
+    return lowered
+
+
+def lower_prefill_step(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh):
+    from ..data.pipeline import input_specs
+    params_shape = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    batch_shape = input_specs(cfg, shape)
+    p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_pspecs(params_shape, mesh))
+    bspec = batch_pspec(mesh)
+    b_sh = {
+        "tokens": NamedSharding(mesh, bspec),
+        "labels": NamedSharding(mesh, bspec),
+        "extra": jax.tree.map(
+            lambda l: NamedSharding(mesh, P(bspec[0], None, None)),
+            batch_shape["extra"]),
+    }
+    prefill_step = make_prefill_step(cfg, mesh)
+    state_shape = jax.eval_shape(
+        lambda p, b: prefill_step(p, b)[1], params_shape, batch_shape)
+    st_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                         decode_state_pspecs(state_shape, mesh))
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    jitted = jax.jit(
+        prefill_step,
+        in_shardings=(p_sh, b_sh),
+        out_shardings=(NamedSharding(mesh, P(baxes)), st_sh))
+    with mesh:
+        lowered = jitted.lower(params_shape, batch_shape)
+    return lowered

@@ -1,0 +1,108 @@
+"""Production training launcher.
+
+On a real TPU cluster this process runs per host (jax.distributed
+handles process groups); here ``--smoke`` runs the same code path on CPU
+with a reduced config, and ``--dry-run`` just lowers/compiles for the
+production mesh (see dryrun.py for the full sweep).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --smoke \
+      --steps 20 --ckpt-dir /tmp/ckpt
+
+Features wired in: sharded train step (DP/TP/SP + ZeRO-1), deterministic
+recoverable data pipeline, PBComb checkpointer (double-buffered,
+detectable, one psync per round), elastic coordinator heartbeats.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import SHAPES, get
+from ..configs.base import ShapeConfig
+from ..data.pipeline import make_batch
+from ..models import init_params, param_count
+from ..optim import make_optimizer
+from ..persist.checkpoint import PBCombCheckpointer
+from ..persist.store import DirStore, MemStore
+from ..runtime.elastic import ElasticCoordinator
+from .mesh import make_local_mesh, make_production_mesh
+from .steps import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--ckpt-every", type=int, default=5)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config + tiny batch on local devices")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+        shape = ShapeConfig("smoke", 64, 4, "train")
+        mesh = None
+    else:
+        shape = SHAPES[args.shape]
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+
+    train_step = jax.jit(make_train_step(cfg, mesh, lr=args.lr))
+    params = init_params(cfg, jax.random.PRNGKey(0),
+                         dtype=jnp.float32 if args.smoke else jnp.bfloat16)
+    init_fn, _ = make_optimizer(cfg, lr=args.lr)
+    opt = init_fn(params)
+    print(f"arch={cfg.name} params={param_count(params):,} "
+          f"mesh={'local' if mesh is None else mesh.shape}")
+
+    store = DirStore(args.ckpt_dir) if args.ckpt_dir else MemStore()
+    pack = lambda p, o, s: {"params": p, "opt": o,
+                            "step": np.asarray(s, np.int32)}
+    tmpl = jax.tree.map(np.asarray, pack(params, opt, 0))
+    ck = PBCombCheckpointer(store, 1, tmpl)
+
+    # detectable resume: if a committed checkpoint exists, restore it
+    start = 0
+    if store.read("mindex") is not None:
+        payload = ck.recover()
+        start = int(payload["step"])
+        if start:
+            params = jax.tree.map(jnp.asarray, payload["params"])
+            opt = jax.tree.map(jnp.asarray, payload["opt"])
+            print(f"resumed from committed step {start} "
+                  f"(response={ck.response(0)})")
+    else:
+        ck.initialize(tmpl)
+    ck.start()                                 # async combiner thread
+
+    co = ElasticCoordinator(1)
+    step = jnp.asarray(start, jnp.int32)
+    ann = start // args.ckpt_every
+    t0 = time.time()
+    for i in range(start, args.steps):
+        batch = make_batch(cfg, shape, seed=0, step=i)
+        params, opt, step, loss = train_step(params, opt, step, batch)
+        co.heartbeat(0, i)
+        if (i + 1) % args.ckpt_every == 0:
+            ann += 1
+            ck.announce(0, jax.tree.map(np.asarray,
+                                        pack(params, opt, i + 1)),
+                        seq=ann, response=i + 1)
+        print(f"step {i:4d} loss {float(loss):.4f} "
+              f"({(time.time() - t0) / max(1, i - start + 1):.2f}s/step)")
+    ck.stop()
+    print(f"done; checkpoint stats: {ck.stats}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Composable model substrate for the assigned architectures."""
+
+from .attention import KVCache, layer_window
+from .model import (DecodeState, active_param_count, decode_step, forward,
+                    init_decode_state, init_params, loss_fn, param_count,
+                    prefill)
+from .ssm import SSMState
+
+__all__ = [
+    "KVCache", "layer_window", "DecodeState", "active_param_count",
+    "decode_step", "forward", "init_decode_state", "init_params", "loss_fn",
+    "param_count", "prefill", "SSMState",
+]

@@ -1,0 +1,263 @@
+"""GQA attention: training (full-sequence causal), prefill (returns KV),
+decode (one token against a cache), cross-attention; sliding-window and
+attn-logit softcap (gemma2), per-head qk-norm (qwen3).
+
+The jnp path here is the reference/XLA implementation used by train and
+dry-run lowering; ``repro.kernels.flash_attention`` is the TPU Pallas
+drop-in for the same math (validated against this path in tests).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, rms_norm, softcap
+
+NEG_INF = -2.0 ** 30  # large-negative instead of -inf (avoids NaN in padded rows)
+
+
+class KVCache(NamedTuple):
+    """Decode KV cache in [B, n_kv, S_max, hd] layout — heads-major so
+    the decode attention dot reads the cache WITHOUT a transpose copy
+    (§Perf: the [B, S, H, d] layout materialized two transposed copies
+    of the per-layer cache every step — the dominant decode traffic)."""
+    k: jnp.ndarray       # [B, n_kv, S_max, hd]
+    v: jnp.ndarray       # [B, n_kv, S_max, hd]
+    length: jnp.ndarray  # [] int32 — tokens currently valid
+
+
+def _qkv(params: Dict[str, Any], x: jnp.ndarray, cfg, positions,
+         rope: bool = True, shard=None):
+    """Project x -> (q [B,S,H,hd], k,v [B,S,Hkv,hd]) with optional qk-norm.
+
+    With ``cfg.attn_explicit_shard`` (§Perf variant): q is pinned to
+    head-sharding over 'model' and k/v are replicated — with Hkv < TP the
+    partitioner otherwise invents expensive reshards around the 4D
+    reshapes (observed: GiB-scale all-gathers per layer on command-r).
+    The out-projection contracts the sharded head axis, so the only
+    collective left is its natural psum.
+    """
+    from jax.sharding import PartitionSpec as P
+    B, S, _ = x.shape
+    q = (x @ params["wq"]).reshape(B, S, cfg.n_heads, cfg.hd)
+    k = (x @ params["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    v = (x @ params["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    if cfg.attn_explicit_shard and shard is not None:
+        q = shard(q, P(("pod", "data"), None, "model", None))
+        k = shard(k, P(("pod", "data"), None, None, None))
+        v = shard(v, P(("pod", "data"), None, None, None))
+    if cfg.use_bias:
+        q = q + params["bq"].reshape(cfg.n_heads, cfg.hd)
+        k = k + params["bk"].reshape(cfg.n_kv_heads, cfg.hd)
+        v = v + params["bv"].reshape(cfg.n_kv_heads, cfg.hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+Q_CHUNK = 512  # q rows per attention chunk for long sequences
+
+
+def _sdpa_block(qg, k, v, *, scale, q_start, causal, window,
+                attn_softcap, kv_len, bf16_math=False,
+                kv_heads_major=False):
+    """One q-chunk of attention.  qg: [B, cq, Hkv, G, hd];
+    k, v: [B, Sk, Hkv, hd]; q_start: absolute position of row 0.
+
+    ``bf16_math`` (§Perf variant): bf16 matmul inputs with f32 MXU
+    accumulation — never materializes an f32 copy of K/V (for decode
+    that copy is the entire KV cache: 2x the cache read traffic,
+    observed as the dominant memory term in the baseline)."""
+    cq = qg.shape[1]
+    Sk = k.shape[2] if kv_heads_major else k.shape[1]
+    if not bf16_math:
+        qg = qg.astype(jnp.float32)
+        k = k.astype(jnp.float32)
+        v = v.astype(jnp.float32)
+    eq_k = "bqhgd,bhkd->bhgqk" if kv_heads_major else "bqhgd,bkhd->bhgqk"
+    logits = jnp.einsum(eq_k, qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = softcap(logits, attn_softcap)
+    q_pos = jnp.arange(cq)[:, None] + q_start
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((cq, Sk), dtype=bool)
+    if causal:
+        mask &= q_pos >= k_pos
+        if window is not None:
+            mask &= q_pos < (k_pos + window)
+    if kv_len is not None:
+        mask &= k_pos < kv_len
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    eq_v = "bhgqk,bhkd->bqhgd" if kv_heads_major else "bhgqk,bkhd->bqhgd"
+    return jnp.einsum(eq_v, probs, v,
+                      preferred_element_type=jnp.float32)
+
+
+def _sdpa(q, k, v, *, scale, causal_offset=None, window=None,
+          attn_softcap=None, kv_len=None, q_chunk: int = Q_CHUNK,
+          bf16_math: bool = False, kv_heads_major: bool = False):
+    """Scaled dot-product attention with GQA head-group broadcasting.
+
+    q: [B, Sq, H, hd];  k, v: [B, Sk, Hkv, hd].
+    causal_offset: absolute position of q row 0 (None = not causal).
+    kv_len: number of valid kv entries (decode caches are padded).
+
+    Long sequences are processed in q-chunks (lax.scan) so the logits
+    transient is [B, Hkv, G, q_chunk, Sk] instead of the full quadratic
+    [.., Sq, Sk] — the XLA-level counterpart of the Pallas flash kernel
+    (repro.kernels.flash_attention), which replaces this on real TPU.
+    """
+    B, Sq, H, hd = q.shape
+    if kv_heads_major:
+        Hkv, Sk = k.shape[1], k.shape[2]
+    else:
+        Sk, Hkv = k.shape[1], k.shape[2]
+    groups = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, groups, hd)
+    causal = causal_offset is not None
+    base = causal_offset if causal else 0
+
+    if Sq > q_chunk and Sq % q_chunk == 0:
+        nq = Sq // q_chunk
+        qs = jnp.moveaxis(qg.reshape(B, nq, q_chunk, Hkv, groups, hd), 1, 0)
+
+        def body(_, inp):
+            q_c, i = inp
+            out = _sdpa_block(q_c, k, v, scale=scale,
+                              q_start=base + i * q_chunk, causal=causal,
+                              window=window, attn_softcap=attn_softcap,
+                              kv_len=kv_len, bf16_math=bf16_math,
+                              kv_heads_major=kv_heads_major)
+            return 0, out
+
+        _, outs = jax.lax.scan(body, 0, (qs, jnp.arange(nq)))
+        # outs: [nq, B, cq, Hkv, G, hd] -> [B, Sq, H, hd]
+        out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, Hkv, groups, hd)
+        return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+    out = _sdpa_block(qg, k, v, scale=scale, q_start=base, causal=causal,
+                      window=window, attn_softcap=attn_softcap,
+                      kv_len=kv_len, bf16_math=bf16_math,
+                      kv_heads_major=kv_heads_major)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def layer_window(cfg, layer_idx):
+    """Effective sliding window for a layer.  ``layer_idx`` may be a traced
+    scan index: local/global alternation is expressed with jnp.where so a
+    single homogeneous layer scan lowers for gemma2."""
+    if cfg.sliding_window is None:
+        return None
+    if not cfg.local_global_pattern:
+        return cfg.sliding_window
+    return jnp.where(layer_idx % 2 == 0, cfg.sliding_window, 1 << 30)
+
+
+def self_attention(params, x, cfg, *, window=None,
+                   positions: Optional[jnp.ndarray] = None,
+                   cache: Optional[KVCache] = None,
+                   return_cache: bool = False, shard=None):
+    """Causal self-attention.
+
+    * train / prefill: full sequence; if ``return_cache`` also returns a
+      KVCache primed with the sequence (prefill path).
+    * decode: ``cache`` given, x is [B, 1, D]; appends to the cache.
+    """
+    B, S, _ = x.shape
+    scale = cfg.hd ** -0.5
+    if cache is None:
+        if positions is None:
+            positions = jnp.arange(S)[None, :]
+        q, k, v = _qkv(params, x, cfg, positions, shard=shard)
+        out = _sdpa(q, k, v, scale=scale, causal_offset=0, window=window,
+                    attn_softcap=cfg.attn_softcap,
+                    bf16_math=cfg.attn_bf16_math)
+        new_cache = KVCache(k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3),
+                            jnp.asarray(S, jnp.int32)) \
+            if return_cache else None
+    else:
+        pos = cache.length
+        positions = pos[None, None] + jnp.zeros((B, S), jnp.int32)
+        q, k, v = _qkv(params, x, cfg, positions)
+        # cache layout [B, Hkv, S, hd]: the new token transposes (cheap,
+        # S=1); the big cache is never transposed.
+        k_all = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k.transpose(0, 2, 1, 3), pos, axis=2)
+        v_all = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v.transpose(0, 2, 1, 3), pos, axis=2)
+        out = _sdpa(q, k_all, v_all, scale=scale,
+                    causal_offset=pos, window=window,
+                    attn_softcap=cfg.attn_softcap, kv_len=pos + S,
+                    bf16_math=cfg.attn_bf16_math, kv_heads_major=True)
+        new_cache = KVCache(k_all, v_all, pos + S)
+    out = out.reshape(B, S, cfg.n_heads * cfg.hd) @ params["wo"]
+    if cfg.use_bias:
+        out = out + params["bo"]
+    return (out, new_cache) if (return_cache or cache is not None) else out
+
+
+def cross_attention(params, x, memory, cfg,
+                    mem_cache: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None):
+    """Cross-attention: q from x [B,S,D], kv from memory [B,M,Dm].
+
+    ``mem_cache``: precomputed (k, v) of the memory (decode reuses it).
+    Returns (out, (k, v)).
+    """
+    B, S, _ = x.shape
+    q = (x @ params["wq"]).reshape(B, S, cfg.n_heads, cfg.hd)
+    if cfg.use_bias:
+        q = q + params["bq"].reshape(cfg.n_heads, cfg.hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+    if mem_cache is None:
+        M = memory.shape[1]
+        k = (memory @ params["wk"]).reshape(B, M, cfg.n_kv_heads, cfg.hd)
+        v = (memory @ params["wv"]).reshape(B, M, cfg.n_kv_heads, cfg.hd)
+        if cfg.use_bias:
+            k = k + params["bk"].reshape(cfg.n_kv_heads, cfg.hd)
+            v = v + params["bv"].reshape(cfg.n_kv_heads, cfg.hd)
+        if cfg.qk_norm:
+            k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    else:
+        k, v = mem_cache
+    out = _sdpa(q, k, v, scale=cfg.hd ** -0.5,
+                attn_softcap=cfg.attn_softcap,
+                bf16_math=cfg.attn_bf16_math)
+    out = out.reshape(B, S, cfg.n_heads * cfg.hd) @ params["wo"]
+    if cfg.use_bias:
+        out = out + params["bo"]
+    return out, (k, v)
+
+
+# --------------------------------------------------------------------- #
+# Parameter init
+# --------------------------------------------------------------------- #
+def init_attn_params(key, cfg, cross: bool = False,
+                     dtype=jnp.bfloat16) -> Dict[str, Any]:
+    from .layers import dense_init
+    D, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (D, H * hd), dtype=dtype),
+        "wk": dense_init(ks[1], (D, Hkv * hd), dtype=dtype),
+        "wv": dense_init(ks[2], (D, Hkv * hd), dtype=dtype),
+        "wo": dense_init(ks[3], (H * hd, D), dtype=dtype),
+    }
+    if cfg.use_bias:
+        p.update(bq=jnp.zeros((H * hd,), dtype),
+                 bk=jnp.zeros((Hkv * hd,), dtype),
+                 bv=jnp.zeros((Hkv * hd,), dtype),
+                 bo=jnp.zeros((D,), dtype))
+    if cfg.qk_norm:
+        p.update(q_norm=jnp.zeros((hd,), dtype),
+                 k_norm=jnp.zeros((hd,), dtype))
+    return p

@@ -1,0 +1,100 @@
+"""Shared model layers: RMSNorm, rotary embeddings, SwiGLU MLP, softcap,
+embeddings.  Pure-functional JAX; parameters are plain dict pytrees."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray,
+             eps: float = 1e-6) -> jnp.ndarray:
+    """RMSNorm with f32 accumulation for the variance only.
+
+    The input is deliberately NOT upcast wholesale: an f32 copy of the
+    residual stream is exactly the tensor XLA would hoist into the
+    remat-saved layer stack (observed: a 14 GiB f32[L,B,S,D] buffer on
+    the train dry-run).  Keeping x in its storage dtype and folding the
+    f32 rsqrt back down keeps the saved stack in bf16.
+    """
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1,
+                   keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    w = (1.0 + weight.astype(jnp.float32)).astype(x.dtype)
+    return x * inv * w
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    """Gemma2-style logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    angles = angles[..., :, None, :]                    # [..., S, 1, hd/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+           w_down: jnp.ndarray,
+           b_gate=None, b_up=None, b_down=None) -> jnp.ndarray:
+    g = x @ w_gate
+    u = x @ w_up
+    if b_gate is not None:
+        g = g + b_gate
+        u = u + b_up
+    h = jax.nn.silu(g) * u
+    out = h @ w_down
+    if b_down is not None:
+        out = out + b_down
+    return out
+
+
+def embed(tokens: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x: jnp.ndarray, table: jnp.ndarray,
+            cap: Optional[float] = None,
+            valid: Optional[int] = None) -> jnp.ndarray:
+    """x: [..., D]; table: [Vp, D] (tied) -> logits [..., Vp].
+
+    ``valid``: real vocabulary size — embedding tables are padded to a
+    multiple of 256 so the vocab axis shards evenly over the model axis;
+    padded logit columns are masked to a large negative."""
+    logits = x @ table.T
+    logits = softcap(logits, cap)
+    Vp = logits.shape[-1]
+    if valid is not None and Vp > valid:
+        ids = jax.lax.broadcasted_iota(jnp.int32, (Vp,), 0)
+        logits = jnp.where(ids < valid, logits, -2.0 ** 30)
+    return logits
+
+
+# --------------------------------------------------------------------- #
+# Parameter initialization helpers
+# --------------------------------------------------------------------- #
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.bfloat16):
+    fan_in = shape[in_axis]
+    std = fan_in ** -0.5
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * std).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype=jnp.bfloat16):
+    return jnp.zeros(shape, dtype=dtype)

@@ -1,0 +1,727 @@
+"""Model assembly for all assigned families.
+
+Layers are *scanned* (weights stacked on a leading layer axis and run via
+``jax.lax.scan``), which keeps HLO size and compile time independent of
+depth — essential for 48-layer 778B dry-runs.  Heterogeneous depth
+patterns become grouped scans:
+
+  dense / moe / ssm : one homogeneous scan over all layers
+  hybrid (zamba2)   : scan over groups of ``attn_every`` mamba layers,
+                      one SHARED attn+MLP block applied per group
+  vlm (llama3.2-v)  : scan over groups of ``cross_attn_every`` layers,
+                      the last layer of each group cross-attends to the
+                      stubbed image embeddings
+  audio (whisper)   : encoder scan (non-causal) + decoder scan with
+                      cross-attention to the encoder output
+
+Entry points:
+  init_params(cfg, key)                  (run under eval_shape for dry-run)
+  forward(params, cfg, tokens, extra)    -> logits           (train/prefill)
+  loss_fn(params, cfg, batch)            -> scalar
+  init_decode_state(cfg, batch, max_len) -> state pytree
+  prefill(params, cfg, tokens, extra)    -> (last_logits, state)
+  decode_step(params, cfg, state, token) -> (logits, state)
+
+``shard`` is an optional callable ``shard(x, PartitionSpec) -> x`` used to
+pin activation/cache shardings (see repro.distributed.sharding).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from .attention import (KVCache, cross_attention, init_attn_params,
+                        layer_window, self_attention)
+from .layers import dense_init, embed, rms_norm, softcap, swiglu, unembed
+from .moe import init_moe_params, moe_ffn, moe_ffn_ep
+from .ssm import (SSMState, init_ssm_params, init_ssm_state,
+                  ssm_block_decode, ssm_block_train)
+
+
+def _noshard(x, spec):
+    return x
+
+
+# ===================================================================== #
+# Parameter initialization                                              #
+# ===================================================================== #
+def _init_mlp(key, cfg, dtype=jnp.bfloat16):
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w_gate": dense_init(ks[0], (D, F), dtype=dtype),
+         "w_up": dense_init(ks[1], (D, F), dtype=dtype),
+         "w_down": dense_init(ks[2], (F, D), dtype=dtype)}
+    if cfg.use_bias:
+        p.update(b_gate=jnp.zeros((F,), dtype), b_up=jnp.zeros((F,), dtype),
+                 b_down=jnp.zeros((cfg.d_model,), dtype))
+    return p
+
+
+def _init_attn_block(key, cfg, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 2)
+    return {"ln1": jnp.zeros((cfg.d_model,), dtype),
+            "attn": init_attn_params(ks[0], cfg, dtype=dtype),
+            "ln2": jnp.zeros((cfg.d_model,), dtype),
+            "mlp": _init_mlp(ks[1], cfg, dtype)}
+
+
+def _init_moe_block(key, cfg, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 2)
+    return {"ln1": jnp.zeros((cfg.d_model,), dtype),
+            "attn": init_attn_params(ks[0], cfg, dtype=dtype),
+            "ln2": jnp.zeros((cfg.d_model,), dtype),
+            "moe": init_moe_params(ks[1], cfg, dtype)}
+
+
+def _init_ssm_block(key, cfg, dtype=jnp.bfloat16):
+    return {"ln1": jnp.zeros((cfg.d_model,), dtype),
+            "ssm": init_ssm_params(key, cfg, dtype)}
+
+
+def _init_cross_block(key, cfg, dtype=jnp.bfloat16):
+    """VLM cross layer: self-attn + cross-attn + mlp."""
+    ks = jax.random.split(key, 3)
+    return {"ln1": jnp.zeros((cfg.d_model,), dtype),
+            "attn": init_attn_params(ks[0], cfg, dtype=dtype),
+            "lnx": jnp.zeros((cfg.d_model,), dtype),
+            "xattn": init_attn_params(ks[1], cfg, dtype=dtype),
+            "ln2": jnp.zeros((cfg.d_model,), dtype),
+            "mlp": _init_mlp(ks[2], cfg, dtype)}
+
+
+def _stack(fn, key, n: int):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(keys[0], (cfg.padded_vocab, cfg.d_model),
+                                    jnp.float32) * 0.01).astype(dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(keys[1], (cfg.d_model, cfg.padded_vocab),
+                                       dtype=dtype)
+    fam = cfg.family
+    if fam == "dense":
+        params["blocks"] = _stack(lambda k: _init_attn_block(k, cfg, dtype),
+                                  keys[2], cfg.n_layers)
+    elif fam == "moe":
+        params["blocks"] = _stack(lambda k: _init_moe_block(k, cfg, dtype),
+                                  keys[2], cfg.n_layers)
+    elif fam == "ssm":
+        params["blocks"] = _stack(lambda k: _init_ssm_block(k, cfg, dtype),
+                                  keys[2], cfg.n_layers)
+    elif fam == "hybrid":
+        n_groups = cfg.n_layers // cfg.attn_every
+        params["blocks"] = _stack(lambda k: _init_ssm_block(k, cfg, dtype),
+                                  keys[2], cfg.n_layers)
+        params["shared"] = _init_attn_block(keys[3], cfg, dtype)  # ONE block
+        del n_groups
+    elif fam == "vlm":
+        g = cfg.cross_attn_every
+        n_groups = cfg.n_layers // g
+        params["plain"] = _stack(lambda k: _init_attn_block(k, cfg, dtype),
+                                 keys[2], n_groups * (g - 1))
+        params["cross"] = _stack(lambda k: _init_cross_block(k, cfg, dtype),
+                                 keys[3], n_groups)
+        # reshape plain to [G, g-1, ...]
+        params["plain"] = jax.tree.map(
+            lambda a: a.reshape(n_groups, g - 1, *a.shape[1:]),
+            params["plain"])
+    elif fam == "audio":
+        params["enc_blocks"] = _stack(
+            lambda k: _init_attn_block(k, cfg, dtype), keys[2],
+            cfg.n_enc_layers)
+        params["enc_norm"] = jnp.zeros((cfg.d_model,), dtype)
+        params["blocks"] = _stack(lambda k: _init_cross_block(k, cfg, dtype),
+                                  keys[3], cfg.n_layers)
+    else:
+        raise ValueError(fam)
+    return params
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def active_param_count(params, cfg: ArchConfig) -> int:
+    """Active parameters per token (MoE counts top_k of n_experts)."""
+    total = param_count(params)
+    if not cfg.n_experts:
+        return total
+    expert = sum(int(x.size) for name in ("w_gate", "w_up", "w_down")
+                 for x in jax.tree.leaves(
+                     jax.tree.map(lambda a: a,
+                                  params["blocks"]["moe"][name])))
+    return total - expert + int(expert * cfg.top_k / cfg.n_experts)
+
+
+# ===================================================================== #
+# Blocks (training / full-sequence)                                     #
+# ===================================================================== #
+def _moe_apply(p, h, cfg, shard):
+    """MoE FFN dispatch: shard_map expert-parallel path when the §Perf
+    variant is on and a mesh is available (and the batch divides the
+    data axes); otherwise the GSPMD baseline."""
+    mesh = getattr(shard, "mesh", None)
+    if cfg.moe_ep_shard_map and mesh is not None:
+        axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        dp = 1
+        for a in axes:
+            dp *= mesh.shape[a]
+        if h.shape[0] % dp == 0 and cfg.n_experts % mesh.shape.get(
+                "model", 1) == 0:
+            return moe_ffn_ep(p, h, cfg, mesh)
+    return moe_ffn(p, h, cfg, constrain=shard)
+
+
+def _mlp_apply(p, x, cfg):
+    return swiglu(x, p["w_gate"], p["w_up"], p["w_down"],
+                  p.get("b_gate"), p.get("b_up"), p.get("b_down"))
+
+
+def _attn_block(p, x, cfg, layer_idx, shard, memory=None):
+    w = layer_window(cfg, layer_idx)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    x = x + self_attention(p["attn"], h, cfg, window=w, shard=shard)
+    if memory is not None and "xattn" in p:
+        h = rms_norm(x, p["lnx"], cfg.norm_eps)
+        out, _ = cross_attention(p["xattn"], h, memory, cfg)
+        x = x + out
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        x = x + _moe_apply(p["moe"], h, cfg, shard)
+    else:
+        x = x + _mlp_apply(p["mlp"], h, cfg)
+    return shard(x, P(("pod", "data"), "model", None))
+
+
+def _enc_block(p, x, cfg, shard):
+    """Non-causal encoder block (whisper)."""
+    from .attention import _sdpa, _qkv
+    B, S, _ = x.shape
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    positions = jnp.arange(S)[None, :]
+    q, k, v = _qkv(p["attn"], h, cfg, positions)
+    out = _sdpa(q, k, v, scale=cfg.hd ** -0.5,
+                attn_softcap=cfg.attn_softcap,
+                bf16_math=cfg.attn_bf16_math)
+    out = out.reshape(B, S, cfg.n_heads * cfg.hd) @ p["attn"]["wo"]
+    if cfg.use_bias:
+        out = out + p["attn"]["bo"]
+    x = x + out
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + _mlp_apply(p["mlp"], h, cfg)
+    return shard(x, P(("pod", "data"), "model", None))
+
+
+def _ssm_block(p, x, cfg, shard):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    x = x + ssm_block_train(p["ssm"], h, cfg)
+    return shard(x, P(("pod", "data"), "model", None))
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+
+def _scan_blocks(stack, x, body, cfg, n: int):
+    idxs = jnp.arange(n)
+
+    def wrapped(carry, inp):
+        lp, idx = inp
+        return body(lp, carry, idx), None
+
+    wrapped = _remat(wrapped, cfg)
+    x, _ = jax.lax.scan(wrapped, x, (stack, idxs))
+    return x
+
+
+# ===================================================================== #
+# Forward (train / prefill logits)                                      #
+# ===================================================================== #
+def _hidden(params, cfg: ArchConfig, tokens, extra: Optional[Dict] = None,
+            shard=_noshard):
+    """tokens: [B, S] int32 -> final-norm hidden states [B, S, D]."""
+    extra = extra or {}
+    x = embed(tokens, params["embed"])
+    x = shard(x, P(("pod", "data"), "model", None))
+    fam = cfg.family
+
+    if fam in ("dense", "moe"):
+        x = _scan_blocks(params["blocks"], x,
+                         lambda p, h, i: _attn_block(p, h, cfg, i, shard),
+                         cfg, cfg.n_layers)
+    elif fam == "ssm":
+        x = _scan_blocks(params["blocks"], x,
+                         lambda p, h, i: _ssm_block(p, h, cfg, shard),
+                         cfg, cfg.n_layers)
+    elif fam == "hybrid":
+        g = cfg.attn_every
+        n_groups = cfg.n_layers // g
+        grouped = jax.tree.map(
+            lambda a: a.reshape(n_groups, g, *a.shape[1:]), params["blocks"])
+        shared = params["shared"]
+
+        def group_body(gp, h, gi):
+            def inner(h2, lp):
+                return _ssm_block(lp, h2, cfg, shard), None
+            h, _ = jax.lax.scan(inner, h, gp)
+            return _attn_block(shared, h, cfg, gi, shard)
+
+        x = _scan_blocks(grouped, x, group_body, cfg, n_groups)
+    elif fam == "vlm":
+        memory = extra["image_embeds"]
+        g = cfg.cross_attn_every
+        n_groups = cfg.n_layers // g
+
+        def group_body(gp, h, gi):
+            def inner(h2, lp):
+                return _attn_block(lp, h2, cfg, gi, shard), None
+            h, _ = jax.lax.scan(inner, h, gp["plain"])
+            return _attn_block(gp["cross"], h, cfg, gi, shard, memory=memory)
+
+        stack = {"plain": params["plain"], "cross": params["cross"]}
+        x = _scan_blocks(stack, x, group_body, cfg, n_groups)
+    elif fam == "audio":
+        frames = extra["frame_embeds"]
+        mem = frames
+
+        def enc_body(h, lp):
+            return _enc_block(lp, h, cfg, shard), None
+        mem, _ = jax.lax.scan(enc_body, mem, params["enc_blocks"])
+        mem = rms_norm(mem, params["enc_norm"], cfg.norm_eps)
+        x = _scan_blocks(params["blocks"], x,
+                         lambda p, h, i: _attn_block(p, h, cfg, i, shard,
+                                                     memory=mem),
+                         cfg, cfg.n_layers)
+    else:
+        raise ValueError(fam)
+
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def forward(params, cfg: ArchConfig, tokens, extra: Optional[Dict] = None,
+            shard=_noshard):
+    """tokens: [B, S] int32 -> logits [B, S, V]."""
+    x = _hidden(params, cfg, tokens, extra, shard)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"].T
+    logits = unembed(x, table, cfg.logit_softcap, cfg.vocab_size)
+    return shard(logits, P(("pod", "data"), None, "model"))
+
+
+LOSS_CHUNK = 2048  # sequence positions per cross-entropy chunk
+
+
+def _ce_chunk(table, h, labels, cfg):
+    """Cross entropy for one sequence chunk.  h: [B, c, D] -> [B, c].
+
+    GSPMD-friendly vocab-parallel form: the max is stop-gradient'ed
+    (exact — a constant shift) and the gold logit is a one-hot
+    contraction rather than take_along_axis, so with logits sharded
+    P(batch, None, 'model') the partitioner emits only [B, c]-sized
+    all-reduces over the model axis — never a logits all-gather."""
+    logits = unembed(h, table, cfg.logit_softcap,
+                     cfg.vocab_size).astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    return lse - gold
+
+
+def loss_fn(params, cfg: ArchConfig, batch: Dict[str, Any], shard=_noshard):
+    """Next-token cross entropy, chunked over the sequence.
+
+    The [B, S, V] f32 logits (and their cotangent) never materialize:
+    the unembed + logsumexp run per LOSS_CHUNK positions under
+    jax.checkpoint, so peak loss-head memory is [B, chunk, V/TP] instead
+    of [B, S, V/TP] — at 152k-256k vocabularies this is the difference
+    between fitting a v5e and not.
+    """
+    h = _hidden(params, cfg, batch["tokens"], batch.get("extra"), shard)
+    labels = batch["labels"]
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"].T
+    B, S, _ = h.shape
+    chunk = LOSS_CHUNK if (S % LOSS_CHUNK == 0 and S > LOSS_CHUNK) else S
+
+    if chunk == S:
+        return jnp.mean(_ce_chunk(table, h, labels, cfg))
+
+    nc = S // chunk
+    hs = jnp.moveaxis(h.reshape(B, nc, chunk, -1), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(B, nc, chunk), 1, 0)
+
+    @jax.checkpoint
+    def body(acc, inp):
+        h_c, l_c = inp
+        return acc + jnp.sum(_ce_chunk(table, h_c, l_c, cfg)), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ls))
+    return total / (B * S)
+
+
+# ===================================================================== #
+# Prefill                                                               #
+# ===================================================================== #
+def _pad_kv(kv_stack, max_len: int):
+    """kv_stack: [L, B, Hkv, S, hd] -> padded to max_len on axis 3."""
+    S = kv_stack.shape[3]
+    if S == max_len:
+        return kv_stack
+    pad = [(0, 0)] * kv_stack.ndim
+    pad[3] = (0, max_len - S)
+    return jnp.pad(kv_stack, pad)
+
+
+def prefill(params, cfg: ArchConfig, tokens, extra: Optional[Dict] = None,
+            shard=_noshard, max_len: Optional[int] = None):
+    """Process a full prompt; return (last-position logits [B, V], state).
+
+    ``max_len`` sizes the KV caches for subsequent decoding (default:
+    prompt length — the dry-run prefill cell)."""
+    extra = extra or {}
+    B, S = tokens.shape
+    max_len = max_len or S
+    x = embed(tokens, params["embed"])
+    x = shard(x, P(("pod", "data"), "model", None))
+    fam = cfg.family
+    st: Dict[str, Any] = {}
+    pos = jnp.asarray(S, jnp.int32)
+
+    def attn_prefill_body(p, h, i, memory=None):
+        w = layer_window(cfg, i)
+        hn = rms_norm(h, p["ln1"], cfg.norm_eps)
+        out, kvc = self_attention(p["attn"], hn, cfg, window=w,
+                                  return_cache=True, shard=shard)
+        h = h + out
+        cross = None
+        if memory is not None and "xattn" in p:
+            hn = rms_norm(h, p["lnx"], cfg.norm_eps)
+            out, cross = cross_attention(p["xattn"], hn, memory, cfg)
+            h = h + out
+        hn = rms_norm(h, p["ln2"], cfg.norm_eps)
+        if "moe" in p:
+            h = h + _moe_apply(p["moe"], hn, cfg, shard)
+        else:
+            h = h + _mlp_apply(p["mlp"], hn, cfg)
+        return shard(h, P(("pod", "data"), "model", None)), kvc, cross
+
+    if fam in ("dense", "moe"):
+        idxs = jnp.arange(cfg.n_layers)
+
+        def body(h, inp):
+            lp, i = inp
+            h, kvc, _ = attn_prefill_body(lp, h, i)
+            return h, (kvc.k, kvc.v)
+
+        x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], idxs))
+        st["kv"] = KVCache(_pad_kv(ks, max_len), _pad_kv(vs, max_len), pos)
+    elif fam == "ssm":
+        from .ssm import ssm_block_prefill
+
+        def body(h, lp):
+            hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+            out, s = ssm_block_prefill(lp["ssm"], hn, cfg)
+            return shard(h + out, P(("pod", "data"), "model", None)), s
+
+        x, states = jax.lax.scan(body, x, params["blocks"])
+        st["ssm"] = states
+    elif fam == "hybrid":
+        from .ssm import ssm_block_prefill
+        g = cfg.attn_every
+        n_groups = cfg.n_layers // g
+        grouped = jax.tree.map(
+            lambda a: a.reshape(n_groups, g, *a.shape[1:]), params["blocks"])
+        shared = params["shared"]
+        gidx = jnp.arange(n_groups)
+
+        def gbody(h, inp):
+            gp, gi = inp
+
+            def inner(h2, lp):
+                hn = rms_norm(h2, lp["ln1"], cfg.norm_eps)
+                out, s = ssm_block_prefill(lp["ssm"], hn, cfg)
+                return shard(h2 + out, P(("pod", "data"), "model", None)), s
+
+            h, states_g = jax.lax.scan(inner, h, gp)
+            h, kvc, _ = attn_prefill_body(shared, h, gi)
+            return h, (states_g, kvc.k, kvc.v)
+
+        x, (states, ks, vs) = jax.lax.scan(gbody, x, (grouped, gidx))
+        st["ssm"] = jax.tree.map(
+            lambda a: a.reshape(cfg.n_layers, *a.shape[2:]), states)
+        st["kv"] = KVCache(_pad_kv(ks, max_len), _pad_kv(vs, max_len), pos)
+    elif fam == "vlm":
+        memory = extra["image_embeds"]
+        g = cfg.cross_attn_every
+        n_groups = cfg.n_layers // g
+        gidx = jnp.arange(n_groups)
+
+        def gbody(h, inp):
+            gp_plain, gp_cross, gi = inp
+
+            def inner(h2, lp):
+                h2, kvc, _ = attn_prefill_body(lp, h2, gi)
+                return h2, (kvc.k, kvc.v)
+
+            h, (ks_p, vs_p) = jax.lax.scan(inner, h, gp_plain)
+            h, kvc, cross = attn_prefill_body(gp_cross, h, gi, memory=memory)
+            ks = jnp.concatenate([ks_p, kvc.k[None]], axis=0)
+            vs = jnp.concatenate([vs_p, kvc.v[None]], axis=0)
+            return h, (ks, vs, cross[0], cross[1])
+
+        x, (ks, vs, cks, cvs) = jax.lax.scan(
+            gbody, x, (params["plain"], params["cross"], gidx))
+        ks = ks.reshape(cfg.n_layers, *ks.shape[2:])
+        vs = vs.reshape(cfg.n_layers, *vs.shape[2:])
+        st["kv"] = KVCache(_pad_kv(ks, max_len), _pad_kv(vs, max_len), pos)
+        st["cross_kv"] = (cks, cvs)
+        st["memory"] = memory
+    elif fam == "audio":
+        mem = extra["frame_embeds"]
+
+        def enc_body(h, lp):
+            return _enc_block(lp, h, cfg, shard), None
+
+        mem, _ = jax.lax.scan(enc_body, mem, params["enc_blocks"])
+        mem = rms_norm(mem, params["enc_norm"], cfg.norm_eps)
+        idxs = jnp.arange(cfg.n_layers)
+
+        def body(h, inp):
+            lp, i = inp
+            h, kvc, cross = attn_prefill_body(lp, h, i, memory=mem)
+            return h, (kvc.k, kvc.v, cross[0], cross[1])
+
+        x, (ks, vs, cks, cvs) = jax.lax.scan(body, x,
+                                             (params["blocks"], idxs))
+        st["kv"] = KVCache(_pad_kv(ks, max_len), _pad_kv(vs, max_len), pos)
+        st["cross_kv"] = (cks, cvs)
+        st["memory"] = mem
+    else:
+        raise ValueError(fam)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"].T
+    logits = unembed(x[:, -1, :], table, cfg.logit_softcap, cfg.vocab_size)
+    state = DecodeState(kv=st.get("kv"), ssm=st.get("ssm"),
+                        cross_kv=st.get("cross_kv"),
+                        memory=st.get("memory"), pos=pos)
+    return logits, state
+
+
+# ===================================================================== #
+# Decode                                                                #
+# ===================================================================== #
+class DecodeState(NamedTuple):
+    """Family-generic decode state; unused fields are empty pytrees."""
+    kv: Any = None        # stacked KVCache arrays
+    ssm: Any = None       # stacked SSMState
+    cross_kv: Any = None  # stacked cross-attn (k, v)
+    memory: Any = None    # encoder output / image embeddings
+    pos: Any = None       # current position, int32 scalar
+
+
+def _empty_kv(cfg, n: int, batch: int, max_len: int, dtype=jnp.bfloat16):
+    # heads-major cache layout [L, B, Hkv, S, hd] (see attention.KVCache)
+    return KVCache(
+        k=jnp.zeros((n, batch, cfg.n_kv_heads, max_len, cfg.hd), dtype),
+        v=jnp.zeros((n, batch, cfg.n_kv_heads, max_len, cfg.hd), dtype),
+        length=jnp.zeros((), jnp.int32))
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16) -> DecodeState:
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        return DecodeState(kv=_empty_kv(cfg, cfg.n_layers, batch, max_len,
+                                        dtype),
+                           pos=jnp.zeros((), jnp.int32))
+    if fam == "ssm":
+        states = jax.vmap(lambda _: init_ssm_state(cfg, batch, dtype))(
+            jnp.arange(cfg.n_layers))
+        return DecodeState(ssm=states, pos=jnp.zeros((), jnp.int32))
+    if fam == "hybrid":
+        states = jax.vmap(lambda _: init_ssm_state(cfg, batch, dtype))(
+            jnp.arange(cfg.n_layers))
+        n_groups = cfg.n_layers // cfg.attn_every
+        return DecodeState(ssm=states,
+                           kv=_empty_kv(cfg, n_groups, batch, max_len, dtype),
+                           pos=jnp.zeros((), jnp.int32))
+    if fam == "vlm":
+        n_groups = cfg.n_layers // cfg.cross_attn_every
+        M = cfg.n_image_tokens
+        cross = (jnp.zeros((n_groups, batch, M, cfg.n_kv_heads, cfg.hd), dtype),
+                 jnp.zeros((n_groups, batch, M, cfg.n_kv_heads, cfg.hd), dtype))
+        return DecodeState(kv=_empty_kv(cfg, cfg.n_layers, batch, max_len,
+                                        dtype),
+                           cross_kv=cross, pos=jnp.zeros((), jnp.int32))
+    if fam == "audio":
+        M = cfg.n_audio_frames
+        cross = (jnp.zeros((cfg.n_layers, batch, M, cfg.n_kv_heads, cfg.hd),
+                           dtype),
+                 jnp.zeros((cfg.n_layers, batch, M, cfg.n_kv_heads, cfg.hd),
+                           dtype))
+        return DecodeState(kv=_empty_kv(cfg, cfg.n_layers, batch, max_len,
+                                        dtype),
+                           cross_kv=cross, pos=jnp.zeros((), jnp.int32))
+    raise ValueError(fam)
+
+
+def _attn_block_decode(p, x, cfg, layer_idx, cache: KVCache, shard,
+                       cross_kv=None):
+    w = layer_window(cfg, layer_idx)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    out, new_cache = self_attention(p["attn"], h, cfg, window=w, cache=cache)
+    x = x + out
+    if cross_kv is not None:
+        h = rms_norm(x, p["lnx"], cfg.norm_eps)
+        out, _ = cross_attention(p["xattn"], h, None, cfg, mem_cache=cross_kv)
+        x = x + out
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        x = x + _moe_apply(p["moe"], h, cfg, shard)
+    else:
+        x = x + _mlp_apply(p["mlp"], h, cfg)
+    return x, new_cache
+
+
+def _ssm_block_decode(p, x, cfg, state: SSMState, shard):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    out, new_state = ssm_block_decode(p["ssm"], h, cfg, state)
+    return x + out, new_state
+
+
+def decode_step(params, cfg: ArchConfig, state: DecodeState, tokens,
+                shard=_noshard):
+    """tokens: [B] int32 -> (logits [B, V], new state)."""
+    x = embed(tokens[:, None], params["embed"])
+    x = shard(x, P(("pod", "data"), "model", None))
+    fam = cfg.family
+    new = {}
+
+    if fam in ("dense", "moe"):
+        idxs = jnp.arange(cfg.n_layers)
+
+        def body(h, inp):
+            lp, k_l, v_l, i = inp
+            cache = KVCache(k_l, v_l, state.pos)
+            h, nc = _attn_block_decode(lp, h, cfg, i, cache, shard)
+            return h, (nc.k, nc.v)
+
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["blocks"], state.kv.k, state.kv.v, idxs))
+        new["kv"] = KVCache(ks, vs, state.pos + 1)
+    elif fam == "ssm":
+        def body(h, inp):
+            lp, st_l = inp
+            h, ns = _ssm_block_decode(lp, h, cfg, st_l, shard)
+            return h, ns
+
+        x, states = jax.lax.scan(body, x, (params["blocks"], state.ssm))
+        new["ssm"] = states
+    elif fam == "hybrid":
+        g = cfg.attn_every
+        n_groups = cfg.n_layers // g
+        grouped = jax.tree.map(
+            lambda a: a.reshape(n_groups, g, *a.shape[1:]), params["blocks"])
+        sstates = jax.tree.map(
+            lambda a: a.reshape(n_groups, g, *a.shape[1:]), state.ssm)
+        shared = params["shared"]
+        gidx = jnp.arange(n_groups)
+
+        def gbody(h, inp):
+            gp, st_g, k_g, v_g, gi = inp
+
+            def inner(h2, inp2):
+                lp, st_l = inp2
+                h2, ns = _ssm_block_decode(lp, h2, cfg, st_l, shard)
+                return h2, ns
+
+            h, states_g = jax.lax.scan(inner, h, (gp, st_g))
+            cache = KVCache(k_g, v_g, state.pos)
+            h, nc = _attn_block_decode(shared, h, cfg, gi, cache, shard)
+            return h, (states_g, nc.k, nc.v)
+
+        x, (states, ks, vs) = jax.lax.scan(
+            gbody, x, (grouped, sstates, state.kv.k, state.kv.v, gidx))
+        new["ssm"] = jax.tree.map(
+            lambda a: a.reshape(cfg.n_layers, *a.shape[2:]), states)
+        new["kv"] = KVCache(ks, vs, state.pos + 1)
+    elif fam == "vlm":
+        g = cfg.cross_attn_every
+        n_groups = cfg.n_layers // g
+        kv = state.kv
+        kv_g = jax.tree.map(
+            lambda a: a.reshape(n_groups, g, *a.shape[1:]), (kv.k, kv.v))
+        gidx = jnp.arange(n_groups)
+
+        def gbody(h, inp):
+            gp_plain, gp_cross, k_g, v_g, ck, cv, gi = inp
+            # k_g, v_g: [g, B, S, Hkv, hd] — first g-1 for the plain layers,
+            # last one for the cross layer's self-attention.
+
+            def inner(h2, inp2):
+                lp, k_l, v_l = inp2
+                cache = KVCache(k_l, v_l, state.pos)
+                h2, nc = _attn_block_decode(lp, h2, cfg, gi, cache, shard)
+                return h2, (nc.k, nc.v)
+
+            h, (ks_p, vs_p) = jax.lax.scan(
+                inner, h, (gp_plain, k_g[:g - 1], v_g[:g - 1]))
+            cache = KVCache(k_g[g - 1], v_g[g - 1], state.pos)
+            h, nc = _attn_block_decode(gp_cross, h, cfg, gi, cache, shard,
+                                       cross_kv=(ck, cv))
+            ks = jnp.concatenate([ks_p, nc.k[None]], axis=0)
+            vs = jnp.concatenate([vs_p, nc.v[None]], axis=0)
+            return h, (ks, vs)
+
+        x, (ks, vs) = jax.lax.scan(
+            gbody, x, (params["plain"], params["cross"],
+                       kv_g[0], kv_g[1],
+                       state.cross_kv[0], state.cross_kv[1], gidx))
+        new["kv"] = KVCache(ks.reshape(cfg.n_layers, *ks.shape[2:]),
+                            vs.reshape(cfg.n_layers, *vs.shape[2:]),
+                            state.pos + 1)
+        new["cross_kv"] = state.cross_kv
+        new["memory"] = state.memory
+    elif fam == "audio":
+        idxs = jnp.arange(cfg.n_layers)
+
+        def body(h, inp):
+            lp, k_l, v_l, ck, cv, i = inp
+            cache = KVCache(k_l, v_l, state.pos)
+            h, nc = _attn_block_decode(lp, h, cfg, i, cache, shard,
+                                       cross_kv=(ck, cv))
+            return h, (nc.k, nc.v)
+
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["blocks"], state.kv.k, state.kv.v,
+                      state.cross_kv[0], state.cross_kv[1], idxs))
+        new["kv"] = KVCache(ks, vs, state.pos + 1)
+        new["cross_kv"] = state.cross_kv
+        new["memory"] = state.memory
+    else:
+        raise ValueError(fam)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"].T
+    logits = unembed(x[:, 0, :], table, cfg.logit_softcap, cfg.vocab_size)
+    return logits, DecodeState(kv=new.get("kv"), ssm=new.get("ssm"),
+                               cross_kv=new.get("cross_kv"),
+                               memory=new.get("memory"),
+                               pos=(new["kv"].length if "kv" in new
+                                    else state.pos + 1))

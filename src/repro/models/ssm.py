@@ -1,0 +1,237 @@
+"""Mamba2 mixer — SSD (state-space duality) chunked scan, arXiv:2405.21060.
+
+Training/prefill use the chunked SSD algorithm: within a chunk the
+quadratic "attention-like" term runs on the MXU; across chunks a
+recurrence carries the (heads, head_dim, state) tensor via ``lax.scan``.
+Decode performs the O(1) per-token recurrence.
+
+This jnp implementation is the reference semantics; the Pallas TPU kernel
+in ``repro.kernels.ssd_scan`` computes the same chunked scan with VMEM
+tiling and is validated against it.
+
+Projections are kept SEPARATE (z, x, B, C, dt) rather than fused as in
+the reference CUDA implementation: under tensor parallelism the inner
+dimension (d_inner, sharded over 'model') and the small B/C/dt heads
+(replicated) live on different shardings, and a fused out-dim would put
+segment boundaries mid-shard.  This is a deliberate TPU adaptation
+(DESIGN.md §2).
+
+Layout conventions (ngroups = 1):
+  x_ssm: [B, L, H, P]   (H ssm heads, P = ssm_head_dim)
+  B_ssm, C_ssm: [B, L, N]  (N = ssm_state)
+  dt: [B, L, H]  (softplus-activated step size)
+  A: [H]  (negative reals: A = -exp(A_log))
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rms_norm
+
+
+class SSMState(NamedTuple):
+    conv_x: jnp.ndarray  # [B, W-1, d_inner] rolling conv windows (raw)
+    conv_b: jnp.ndarray  # [B, W-1, N]
+    conv_c: jnp.ndarray  # [B, W-1, N]
+    ssm: jnp.ndarray     # [B, H, P, N] recurrent state
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads
+
+
+def init_ssm_params(key, cfg, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    D = cfg.d_model
+    d_inner, H = _dims(cfg)
+    N, W = cfg.ssm_state, cfg.ssm_conv_width
+    ks = jax.random.split(key, 8)
+    return {
+        "wz": dense_init(ks[0], (D, d_inner), dtype=dtype),
+        "wx": dense_init(ks[1], (D, d_inner), dtype=dtype),
+        "wB": dense_init(ks[2], (D, N), dtype=dtype),
+        "wC": dense_init(ks[3], (D, N), dtype=dtype),
+        "wdt": dense_init(ks[4], (D, H), dtype=dtype),
+        "conv_x": dense_init(ks[5], (W, d_inner), dtype=dtype),
+        "conv_x_b": jnp.zeros((d_inner,), dtype),
+        "conv_B": dense_init(ks[6], (W, N), dtype=dtype),
+        "conv_B_b": jnp.zeros((N,), dtype),
+        "conv_C": dense_init(ks[7], (W, N), dtype=dtype),
+        "conv_C_b": jnp.zeros((N,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.zeros((d_inner,), dtype),
+        "out_proj": dense_init(ks[0], (d_inner, D), dtype=dtype),
+    }
+
+
+def _conv_train(xs, w, b):
+    """Causal depthwise conv over time; xs: [B, L, C], w: [W, C]."""
+    W = w.shape[0]
+    pad = jnp.pad(xs, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xs.shape[1], :] * w[i] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def _segsum(a):
+    """log-space segment sums: out[i, j] = sum_{k=j+1..i} a[k] for i >= j,
+    -inf above the diagonal.  a: [..., L] -> [..., L, L]."""
+    L = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked_ref(x, dt, A, Bm, Cm, chunk: int,
+                    init_state: Optional[jnp.ndarray] = None):
+    """Chunked SSD scan.  Returns (y [B,L,H,P], final_state [B,H,P,N]).
+
+    x: [B,L,H,P]; dt: [B,L,H]; A: [H]; Bm, Cm: [B,L,N].
+    """
+    Bsz, L, H, P = x.shape
+    N = Bm.shape[-1]
+    if L % chunk:
+        chunk = L          # degenerate single chunk (short smoke inputs)
+    nc = L // chunk
+    f32 = jnp.float32
+    xc = (x * dt[..., None]).astype(f32).reshape(Bsz, nc, chunk, H, P)
+    dA = (dt.astype(f32) * A.astype(f32)).reshape(Bsz, nc, chunk, H)
+    Bc = Bm.astype(f32).reshape(Bsz, nc, chunk, N)
+    Cc = Cm.astype(f32).reshape(Bsz, nc, chunk, N)
+    dA_cs = jnp.cumsum(dA, axis=2)                       # [B,nc,cl,H]
+    # --- intra-chunk (quadratic, MXU-friendly) ---
+    Lmat = jnp.exp(_segsum(jnp.moveaxis(dA, 3, 2)))      # [B,nc,H,cl,cl]
+    att = jnp.einsum("bzin,bzjn->bzij", Cc, Bc)          # [B,nc,cl,cl]
+    y_intra = jnp.einsum("bzij,bzhij,bzjhp->bzihp", att, Lmat, xc)
+    # --- chunk summaries ---
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)  # [B,nc,cl,H]
+    S_chunk = jnp.einsum("bzjn,bzjh,bzjhp->bzhpn",
+                         Bc, decay_to_end, xc)           # [B,nc,H,P,N]
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])            # [B,nc,H]
+    # --- inter-chunk recurrence ---
+    s0 = jnp.zeros((Bsz, H, P, N), f32) if init_state is None \
+        else init_state.astype(f32)
+
+    def step(s, inp):
+        s_c, decay_c = inp
+        out_prev = s
+        s = s * decay_c[..., None, None] + s_c
+        return s, out_prev
+
+    s_final, s_prevs = jax.lax.scan(
+        step, s0,
+        (jnp.moveaxis(S_chunk, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)                # [B,nc,H,P,N]
+    in_decay = jnp.exp(dA_cs)
+    y_inter = jnp.einsum("bzin,bzih,bzhpn->bzihp", Cc, in_decay, s_prevs)
+    y = (y_intra + y_inter).reshape(Bsz, L, H, P)
+    return y, s_final
+
+
+def _project(params, x, cfg):
+    """x: [B, L, D] -> z, xs_raw, B_raw, C_raw, dt_raw (pre-conv)."""
+    z = x @ params["wz"]
+    xs = x @ params["wx"]
+    Bm = x @ params["wB"]
+    Cm = x @ params["wC"]
+    dt = x @ params["wdt"]
+    return z, xs, Bm, Cm, dt
+
+
+def _mix_out(params, y, xs, z, cfg, Bsz, L):
+    d_inner, H = _dims(cfg)
+    y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(Bsz, L, d_inner).astype(z.dtype)
+    y = rms_norm(y, params["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return y @ params["out_proj"]
+
+
+def _ssd_inputs(params, xs_c, Bm_c, Cm_c, dt, cfg, Bsz, L):
+    d_inner, H = _dims(cfg)
+    xs = xs_c.reshape(Bsz, L, H, cfg.ssm_head_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    return xs, dt, A
+
+
+def ssm_block_train(params, x, cfg, chunk: int = 128):
+    """Full Mamba2 mixer over a sequence.  x: [B, L, D] -> [B, L, D]."""
+    Bsz, L, _ = x.shape
+    z, xs_raw, B_raw, C_raw, dt_raw = _project(params, x, cfg)
+    xs_c = _conv_train(xs_raw, params["conv_x"], params["conv_x_b"])
+    Bm = _conv_train(B_raw, params["conv_B"], params["conv_B_b"])
+    Cm = _conv_train(C_raw, params["conv_C"], params["conv_C_b"])
+    xs, dt, A = _ssd_inputs(params, xs_c, Bm, Cm, dt_raw, cfg, Bsz, L)
+    y, _ = ssd_chunked_ref(xs, dt, A, Bm, Cm, chunk)
+    return _mix_out(params, y, xs, z, cfg, Bsz, L)
+
+
+def ssm_block_prefill(params, x, cfg, chunk: int = 128):
+    """Like train but also returns the decode SSMState."""
+    Bsz, L, _ = x.shape
+    W = cfg.ssm_conv_width
+    z, xs_raw, B_raw, C_raw, dt_raw = _project(params, x, cfg)
+    xs_c = _conv_train(xs_raw, params["conv_x"], params["conv_x_b"])
+    Bm = _conv_train(B_raw, params["conv_B"], params["conv_B_b"])
+    Cm = _conv_train(C_raw, params["conv_C"], params["conv_C_b"])
+    xs, dt, A = _ssd_inputs(params, xs_c, Bm, Cm, dt_raw, cfg, Bsz, L)
+    y, s_final = ssd_chunked_ref(xs, dt, A, Bm, Cm, chunk)
+    out = _mix_out(params, y, xs, z, cfg, Bsz, L)
+    state = SSMState(conv_x=xs_raw[:, L - (W - 1):, :],
+                     conv_b=B_raw[:, L - (W - 1):, :],
+                     conv_c=C_raw[:, L - (W - 1):, :],
+                     ssm=s_final)
+    return out, state
+
+
+def init_ssm_state(cfg, batch: int, dtype=jnp.bfloat16) -> SSMState:
+    d_inner, H = _dims(cfg)
+    W, N = cfg.ssm_conv_width, cfg.ssm_state
+    return SSMState(
+        conv_x=jnp.zeros((batch, W - 1, d_inner), dtype),
+        conv_b=jnp.zeros((batch, W - 1, N), dtype),
+        conv_c=jnp.zeros((batch, W - 1, N), dtype),
+        ssm=jnp.zeros((batch, H, cfg.ssm_head_dim, cfg.ssm_state),
+                      jnp.float32),
+    )
+
+
+def _conv_step(window, w, b):
+    """window: [B, W, C] (raw inputs incl. current) -> [B, C]."""
+    out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    return jax.nn.silu(out + b.astype(jnp.float32))
+
+
+def ssm_block_decode(params, x, cfg, state: SSMState):
+    """One-token recurrence.  x: [B, 1, D] -> ([B, 1, D], new state)."""
+    d_inner, H = _dims(cfg)
+    Bsz = x.shape[0]
+    z, xs_raw, B_raw, C_raw, dt_raw = _project(params, x, cfg)
+    win_x = jnp.concatenate([state.conv_x, xs_raw], axis=1)
+    win_b = jnp.concatenate([state.conv_b, B_raw], axis=1)
+    win_c = jnp.concatenate([state.conv_c, C_raw], axis=1)
+    xs = _conv_step(win_x, params["conv_x"], params["conv_x_b"])
+    Bm = _conv_step(win_b, params["conv_B"], params["conv_B_b"])
+    Cm = _conv_step(win_c, params["conv_C"], params["conv_C_b"])
+    xs = xs.reshape(Bsz, H, cfg.ssm_head_dim)
+    dt1 = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                          + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dt1 * A)                                 # [B,H]
+    dx = xs * dt1[..., None]
+    s = state.ssm * a[..., None, None] + jnp.einsum("bn,bhp->bhpn", Bm, dx)
+    y = jnp.einsum("bn,bhpn->bhp", Cm, s)
+    y = y + params["D"][None, :, None] * xs
+    y = y.reshape(Bsz, 1, d_inner).astype(x.dtype)
+    y = rms_norm(y, params["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    new_state = SSMState(conv_x=win_x[:, 1:], conv_b=win_b[:, 1:],
+                         conv_c=win_c[:, 1:], ssm=s)
+    return y @ params["out_proj"], new_state

@@ -1,0 +1,23 @@
+"""Optimizers (pure JAX, pytree-functional).
+
+``make_optimizer(cfg)`` returns ``(init_fn, update_fn)``:
+  init_fn(params)                         -> opt_state
+  update_fn(grads, opt_state, params, step) -> (new_params, new_opt_state)
+
+AdamW keeps f32 m/v (ZeRO-1 shards them over the data axis — see
+repro.distributed.sharding.zero1_pspecs).  Adafactor keeps a factored
+second moment and no momentum: the only optimizer-state choice that fits
+a 778B model on a 256-chip v5e pod (see configs/llama4_maverick_400b.py).
+"""
+
+from .adafactor import adafactor
+from .adamw import adamw
+
+
+def make_optimizer(arch_cfg, lr: float = 3e-4, weight_decay: float = 0.01):
+    if arch_cfg.optimizer == "adafactor":
+        return adafactor(lr=lr)
+    return adamw(lr=lr, weight_decay=weight_decay)
+
+
+__all__ = ["adamw", "adafactor", "make_optimizer"]

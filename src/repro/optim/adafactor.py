@@ -1,0 +1,65 @@
+"""Adafactor (Shazeer & Stern, 2018) — factored second moment, no
+momentum.  State per [.., R, C] matrix: row/col running means of g²
+(shape [.., R] and [.., C]) — ~R+C instead of R*C floats, which is what
+lets a 778B-parameter MoE train on 4TB of pod HBM."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adafactor(lr: float = 1e-2, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0):
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init_fn(params):
+        def zeros(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(zeros, params)}
+
+    def update_fn(grads, state, params, step):
+        step = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - step ** (-decay)        # increasing-decay schedule
+        rel_lr = lr * jnp.minimum(1.0, step ** -0.5) * 100.0
+
+        def upd(g, st, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(p):
+                vr = beta * st["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * st["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rfac = vr / jnp.maximum(
+                    jnp.mean(vr, axis=-1, keepdims=True), eps)
+                precond = (rfac[..., None] * vc[..., None, :])
+                delta = g * jax.lax.rsqrt(jnp.maximum(precond, eps))
+                new_st = {"vr": vr, "vc": vc}
+            else:
+                v = beta * st["v"] + (1 - beta) * g2
+                delta = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+                new_st = {"v": v}
+            # update clipping by RMS
+            rms = jnp.sqrt(jnp.mean(jnp.square(delta)) + eps)
+            delta = delta / jnp.maximum(1.0, rms / clip_threshold)
+            scale = rel_lr * jnp.maximum(
+                jnp.sqrt(jnp.mean(jnp.square(p.astype(jnp.float32)))), 1e-3)
+            new_p = p.astype(jnp.float32) - scale * delta
+            return new_p.astype(p.dtype), new_st
+
+        flat = jax.tree_util.tree_structure(params)
+        del flat
+        out = jax.tree.map(upd, grads, state["f"], params,
+                           is_leaf=lambda t: isinstance(t, dict)
+                           and ("v" in t or "vr" in t))
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_f = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"f": new_f}
+
+    return init_fn, update_fn

@@ -1,0 +1,41 @@
+"""AdamW with decoupled weight decay; f32 moments."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.01):
+    def init_fn(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update_fn(grads, state, params, step):
+        step = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - b1 ** step
+        bc2 = 1.0 - b2 ** step
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            new_p = (p.astype(jnp.float32)
+                     - lr * (delta + weight_decay * p.astype(jnp.float32)))
+            return new_p.astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"m": new_m, "v": new_v}
+
+    return init_fn, update_fn

@@ -1,0 +1,148 @@
+"""Multi-host sharded checkpointing with a single combining commit point.
+
+Every host persists its OWN state shard (params/optimizer shards live
+only on their owners under ZeRO/TP), but durability is committed by ONE
+index flip — the PBComb structure lifted to the cluster:
+
+  * host h announces "shard of step N written" after pwb+pfence of its
+    slot file ``staterec.h<h>.<ind>``;
+  * the coordinator (combiner) waits for all announcements of round
+    ``ind``, then flips + psyncs the global index file.  One psync per
+    round commits every host's shard (P1: persistence instructions per
+    round O(1), not O(hosts));
+  * recovery reads the index and loads every host's committed slot; a
+    torn round (some shards written, index not flipped) is invisible;
+  * if the coordinator misses its lease, any host performs the
+    versioned takeover (PWFComb's SC) and commits the round itself.
+
+The ``NaiveShardedCheckpointer`` is the non-combining baseline: every
+host fsyncs its own shard AND its own index marker per round (O(hosts)
+psyncs, scattered files) — benchmarked in
+``benchmarks/checkpoint_bench.py``.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+from . import staterec
+from .store import Store
+
+INDEX_FILE = "shard_index"
+
+
+class ShardedCheckpointer:
+    def __init__(self, store: Store, n_hosts: int,
+                 shard_templates: List[Any], *, lease_s: float = 5.0):
+        self.store = store
+        self.n = n_hosts
+        self.templates = shard_templates
+        self.lease_s = lease_s
+        self._ready: Dict[int, Dict[int, int]] = {0: {}, 1: {}}  # ind->host->step
+        self._lock = threading.Lock()
+        self._mindex = 0
+        self._committed_step = -1
+        self._last_commit = time.monotonic()
+        self._commit_version = 0      # the LL/SC version for takeover
+
+    # ------------- per-host write path -------------------------------- #
+    def slot_name(self, host: int, ind: int) -> str:
+        return f"staterec.h{host}.{ind}"
+
+    def write_shard(self, host: int, payload: Any, step: int) -> int:
+        """pwb + pfence this host's shard into the non-current slot and
+        announce readiness.  Returns the round index written."""
+        with self._lock:
+            ind = 1 - self._mindex
+        buf = staterec.pack(payload, [step], [step % 2])
+        self.store.pwb(self.slot_name(host, ind), buf)
+        self.store.pfence()
+        with self._lock:
+            self._ready[ind][host] = step
+        return ind
+
+    # ------------- combining commit ------------------------------------ #
+    def try_commit(self, step: int) -> bool:
+        """Coordinator path: flip the index iff every host announced its
+        step-``step`` shard for the pending round."""
+        with self._lock:
+            ind = 1 - self._mindex
+            ready = self._ready[ind]
+            if len(ready) < self.n or any(s != step for s in ready.values()):
+                return False
+            version = self._commit_version
+        # one psync commits all n shards (P1)
+        self.store.pwb(INDEX_FILE, f"{ind},{step}".encode())
+        self.store.psync()
+        with self._lock:
+            if self._commit_version != version:   # lost the SC race
+                return True
+            self._commit_version += 1
+            self._mindex = ind
+            self._committed_step = step
+            self._ready[1 - ind] = {}
+            self._last_commit = time.monotonic()
+        return True
+
+    def lease_expired(self) -> bool:
+        return time.monotonic() - self._last_commit > self.lease_s
+
+    def takeover_commit(self, step: int) -> bool:
+        """Any host may commit when the coordinator's lease lapses
+        (PWFComb: everyone pretends to be the combiner; the version
+        check arbitrates)."""
+        return self.try_commit(step)
+
+    # ------------- recovery -------------------------------------------- #
+    def recover(self):
+        raw = self.store.read(INDEX_FILE)
+        if raw is None:
+            return None, -1
+        ind, step = (int(x) for x in raw.decode().split(","))
+        shards = []
+        for h in range(self.n):
+            data = self.store.read(self.slot_name(h, ind))
+            payload, _, _ = staterec.unpack(data, self.templates[h])
+            shards.append(payload)
+        with self._lock:
+            self._mindex = ind
+            self._committed_step = step
+            self._ready = {0: {}, 1: {}}
+        return shards, step
+
+    @property
+    def committed_step(self) -> int:
+        return self._committed_step
+
+
+class NaiveShardedCheckpointer:
+    """Baseline: no combining — per-host index markers, one psync per
+    host per round (the cost shape the paper argues against)."""
+
+    def __init__(self, store: Store, n_hosts: int,
+                 shard_templates: List[Any]):
+        self.store = store
+        self.n = n_hosts
+        self.templates = shard_templates
+
+    def write_shard(self, host: int, payload: Any, step: int) -> None:
+        buf = staterec.pack(payload, [step], [step % 2])
+        self.store.pwb(f"naive.h{host}.data", buf)
+        self.store.pfence()
+        self.store.pwb(f"naive.h{host}.idx", str(step).encode())
+        self.store.psync()                 # every host syncs itself
+
+    def recover(self):
+        shards, steps = [], []
+        for h in range(self.n):
+            raw = self.store.read(f"naive.h{h}.idx")
+            if raw is None:
+                return None, -1
+            steps.append(int(raw.decode()))
+            data = self.store.read(f"naive.h{h}.data")
+            payload, _, _ = staterec.unpack(data, self.templates[h])
+            shards.append(payload)
+        # hosts may have torn across steps — the caller detects mismatch
+        return shards, min(steps) if len(set(steps)) == 1 else -abs(max(steps))

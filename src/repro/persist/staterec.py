@@ -1,0 +1,87 @@
+"""StateRec serialization — persistence principle P3 made literal.
+
+A checkpoint "StateRec" mirrors the paper's record layout:
+
+    [ st (the payload pytree) | ReturnVal[0..n-1] | Deactivate[0..n-1] ]
+
+``pack`` flattens the payload pytree into ONE contiguous byte buffer
+(header + leaf data back-to-back), so the combiner persists a slot with a
+single sequential write + one fsync — the paper's "place data to be
+persisted in consecutive memory addresses so they are persisted all
+together".  Responses and deactivate bits ride in the same buffer.
+
+No framework dependencies: leaves are numpy-convertible arrays or
+scalars.
+"""
+
+from __future__ import annotations
+
+import io
+import json
+import struct
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import numpy as np
+
+_MAGIC = b"PSCR1\n"
+
+
+def _tree_spec(tree) -> Tuple[Any, List[np.ndarray]]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    arrs = [np.asarray(l) for l in leaves]
+    return treedef, arrs
+
+
+def pack(payload, return_val: Sequence[Any], deactivate: Sequence[int]) -> bytes:
+    """Serialize (payload pytree, ReturnVal, Deactivate) contiguously."""
+    treedef, arrs = _tree_spec(payload)
+    meta = {
+        "treedef": str(treedef),
+        "leaves": [{"shape": a.shape, "dtype": str(a.dtype)} for a in arrs],
+        "return_val": list(return_val),
+        "deactivate": list(int(d) for d in deactivate),
+    }
+    mbytes = json.dumps(meta).encode()
+    out = io.BytesIO()
+    out.write(_MAGIC)
+    out.write(struct.pack("<Q", len(mbytes)))
+    out.write(mbytes)
+    for a in arrs:
+        out.write(np.ascontiguousarray(a).tobytes())
+    return out.getvalue()
+
+
+def unpack(data: bytes, payload_template) -> Tuple[Any, List[Any], List[int]]:
+    """Deserialize against a template pytree (for structure + dtypes)."""
+    assert data[:len(_MAGIC)] == _MAGIC, "corrupt or torn StateRec"
+    off = len(_MAGIC)
+    (mlen,) = struct.unpack_from("<Q", data, off)
+    off += 8
+    meta = json.loads(data[off:off + mlen].decode())
+    off += mlen
+    leaves, treedef = jax.tree_util.tree_flatten(payload_template)
+    arrs = []
+    for spec in meta["leaves"]:
+        dt = np.dtype(spec["dtype"]) if spec["dtype"] != "bfloat16" \
+            else np.dtype("uint16")
+        n = int(np.prod(spec["shape"])) if spec["shape"] else 1
+        raw = np.frombuffer(data, dtype=dt, count=n, offset=off)
+        off += n * dt.itemsize
+        arrs.append(raw.reshape(spec["shape"]))
+    if len(arrs) != len(leaves):
+        raise ValueError("template/record leaf mismatch")
+    restored = []
+    for tmpl, arr in zip(leaves, arrs):
+        tmpl_np = np.asarray(tmpl)
+        if tmpl_np.dtype != arr.dtype:       # bf16 round-trip via uint16
+            arr = arr.view(tmpl_np.dtype) if arr.itemsize == tmpl_np.itemsize \
+                else arr.astype(tmpl_np.dtype)
+        restored.append(arr.reshape(tmpl_np.shape))
+    payload = jax.tree_util.tree_unflatten(treedef, restored)
+    return payload, meta["return_val"], meta["deactivate"]
+
+
+def payload_nbytes(payload) -> int:
+    _, arrs = _tree_spec(payload)
+    return sum(a.nbytes for a in arrs)

@@ -1,0 +1,133 @@
+"""Elastic training runtime: heartbeats, straggler detection, rescale.
+
+The coordinator runs the same combining pattern as everything else in
+this framework: hosts *announce* liveness/progress into a flat slot
+array; one coordinator (combiner) reads all announcements and produces a
+single decision — a ``RescalePlan`` — instead of hosts negotiating
+pairwise.  If the coordinator itself dies, any host notices the stale
+lease and takes over (PWFComb).
+
+A rescale never loses work: the plan's restore point is the PBComb
+checkpointer's committed step (durable by construction), and the data
+pipeline is a pure function of (seed, step), so the new data-axis
+layout replays from exactly the committed step with no duplicate or
+skipped batches (detectable recovery at the job level).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclass
+class HostStatus:
+    host: int
+    step: int = -1
+    last_seen: float = 0.0
+    alive: bool = True
+
+
+@dataclass(frozen=True)
+class RescalePlan:
+    """A new data-parallel layout after failures/joins."""
+    epoch: int                    # plan version (SC-style monotonic)
+    hosts: Tuple[int, ...]        # surviving host ids, sorted
+    data_shards: Dict[int, int]   # host -> data-shard index
+    restore_step: int             # committed checkpoint step to resume
+
+    @property
+    def dp_size(self) -> int:
+        return len(self.hosts)
+
+
+class ElasticCoordinator:
+    def __init__(self, n_hosts: int, *, heartbeat_timeout: float = 1.0,
+                 lease_s: float = 2.0) -> None:
+        self.n = n_hosts
+        self.timeout = heartbeat_timeout
+        self.lease_s = lease_s
+        self.status: Dict[int, HostStatus] = {
+            h: HostStatus(h, last_seen=time.monotonic())
+            for h in range(n_hosts)}
+        self.plan = RescalePlan(0, tuple(range(n_hosts)),
+                                {h: h for h in range(n_hosts)}, -1)
+        self.coordinator_host = 0
+        self._last_coord_beat = time.monotonic()
+        self._lock = threading.Lock()
+
+    # ------------- announce path (any host) --------------------------- #
+    def heartbeat(self, host: int, step: int) -> RescalePlan:
+        """Host announces liveness + progress; returns the current plan
+        (hosts notice rescales by the plan epoch changing)."""
+        with self._lock:
+            st = self.status.setdefault(host, HostStatus(host))
+            st.step = step
+            st.last_seen = time.monotonic()
+            st.alive = True
+            if host == self.coordinator_host:
+                self._last_coord_beat = st.last_seen
+            return self.plan
+
+    def join(self, host: int) -> None:
+        with self._lock:
+            self.status[host] = HostStatus(host,
+                                           last_seen=time.monotonic())
+
+    # ------------- combiner path --------------------------------------- #
+    def stragglers(self) -> List[int]:
+        now = time.monotonic()
+        with self._lock:
+            steps = [s.step for s in self.status.values() if s.alive]
+            if not steps:
+                return []
+            lead = max(steps)
+            out = []
+            for s in self.status.values():
+                stale = now - s.last_seen > self.timeout
+                behind = s.step < lead - 2
+                if s.alive and (stale or behind):
+                    out.append(s.host)
+            return out
+
+    def detect_failures(self) -> List[int]:
+        now = time.monotonic()
+        with self._lock:
+            return [s.host for s in self.status.values()
+                    if s.alive and now - s.last_seen > self.timeout]
+
+    def rescale(self, committed_step: int,
+                failed: Optional[Sequence[int]] = None) -> RescalePlan:
+        """Combine all announcements into ONE new plan."""
+        with self._lock:
+            failed = set(failed if failed is not None else [])
+            now = time.monotonic()
+            for s in self.status.values():
+                if s.host in failed or now - s.last_seen > self.timeout:
+                    s.alive = False
+            alive = sorted(h for h, s in self.status.items() if s.alive)
+            if not alive:
+                raise RuntimeError("no hosts alive")
+            plan = RescalePlan(
+                epoch=self.plan.epoch + 1,
+                hosts=tuple(alive),
+                data_shards={h: i for i, h in enumerate(alive)},
+                restore_step=committed_step)
+            self.plan = plan
+            return plan
+
+    # ------------- coordinator takeover (PWFComb) ----------------------- #
+    def coordinator_lease_expired(self) -> bool:
+        return time.monotonic() - self._last_coord_beat > self.lease_s
+
+    def take_over_coordination(self, host: int) -> bool:
+        """Any live host may claim coordination when the lease lapses;
+        the lock + epoch check arbitrate like an SC."""
+        with self._lock:
+            if time.monotonic() - self._last_coord_beat <= self.lease_s:
+                return False
+            self.coordinator_host = host
+            self._last_coord_beat = time.monotonic()
+            return True

@@ -1,0 +1,304 @@
+"""Combining batch-serving engine.
+
+Continuous batching IS software combining (DESIGN.md §2): clients
+announce generate/cancel requests into a flat slot array and wait; two
+combiner instances — mirroring PBQueue's enqueue/dequeue split — do all
+the work:
+
+  * the PREFILL combiner batches every active prefill announcement, runs
+    one batched prefill, allocates KV slots, and appends the sequences to
+    the shared sequence table;
+  * the DECODE combiner batches every *committed* live sequence and runs
+    one decode step for all of them per round.
+
+The ``oldTail`` rule: the decode combiner only adopts sequences whose
+prefill round has been committed (response-log StateRec persisted) —
+PBQueue's "never dequeue past the durable tail", here "never generate
+from (or complete) state that a crash would un-happen".
+
+Detectability: client requests carry (client_id, seq).  Completed
+responses are recorded in the engine's StateRec (responses +
+deactivate bits, persisted contiguously by a PBComb round).  After a
+crash, a client re-announcing (client_id, seq) receives its cached
+response instead of recomputing — exactly the paper's Recover path.
+
+Elimination: a CANCEL announcement is paired with its target GENERATE
+announcement inside the combiner *before* touching engine state — both
+complete in one pass (the paper's push/pop elimination).
+
+The model is pluggable: ``prefill_batch_fn(prompts) -> (first_tok, kv)``
+and ``decode_batch_fn(kv_list, last_toks) -> next_toks`` — a real JAX
+model adapter lives in examples/serve_combining.py; tests use a toy LM.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from ..core.atomics import AtomicInt
+from ..persist.checkpoint import PBCombCheckpointer
+from ..persist.store import MemStore, Store
+from .kv_cache import SlotAllocator
+from .scheduler import RequestHeap
+
+
+@dataclass
+class GenRequest:
+    client: int
+    seq: int
+    prompt: Tuple[int, ...]
+    max_tokens: int
+    priority: float = 0.0
+    cancel_target: Optional[Tuple[int, int]] = None  # (client, seq) to cancel
+    activate: int = 0
+    valid: int = 0
+    done: threading.Event = field(default_factory=threading.Event)
+    response: Any = None
+
+
+@dataclass
+class LiveSeq:
+    client: int
+    seq: int
+    slot: int
+    tokens: List[int]
+    max_tokens: int
+    committed: bool = False   # oldTail rule: decode may not touch until True
+
+
+class CombiningEngine:
+    def __init__(self, n_clients: int, *,
+                 prefill_batch_fn: Callable,
+                 decode_batch_fn: Callable,
+                 n_kv_slots: int = 64,
+                 max_batch: int = 32,
+                 store: Optional[Store] = None,
+                 eos_token: int = 0) -> None:
+        self.n = n_clients
+        self.prefill_batch_fn = prefill_batch_fn
+        self.decode_batch_fn = decode_batch_fn
+        self.max_batch = max_batch
+        self.eos = eos_token
+        # announce array (volatile — valid bits die with the process)
+        self.requests: List[Optional[GenRequest]] = [None] * n_clients
+        # engine StateRec: response log + per-client deactivate bits,
+        # persisted via the PBComb checkpointer (double-buffered slots).
+        self.store = store or MemStore()
+        # The engine's durable state is exactly the response log, which
+        # lives in the StateRec's ReturnVal/Deactivate fields — the
+        # payload pytree is empty.
+        self.ckpt = PBCombCheckpointer(self.store, n_clients,
+                                       payload_template={})
+        self.ckpt.initialize({})
+        self._responses: List[Any] = [None] * n_clients
+        self._deactivate: List[int] = [0] * n_clients
+        self._resp_seq: List[int] = [-1] * n_clients
+        # sequence table (the shared linked structure)
+        self.live: Dict[int, LiveSeq] = {}
+        self.kv: Dict[int, Any] = {}
+        self.slots = SlotAllocator(n_kv_slots)
+        self.heap = RequestHeap()
+        self.prefill_lock = AtomicInt(0)
+        self.decode_lock = AtomicInt(0)
+        self._table_lock = threading.Lock()
+        self._stop = threading.Event()
+        self._threads: List[threading.Thread] = []
+        self.stats = {"prefill_rounds": 0, "decode_rounds": 0,
+                      "prefill_batched": 0, "decode_batched": 0,
+                      "eliminated": 0, "persists": 0}
+
+    # ------------------ client API ------------------------------------ #
+    def submit(self, client: int, prompt: Sequence[int], max_tokens: int,
+               seq: int, priority: float = 0.0,
+               timeout: float = 30.0) -> Any:
+        prev = self.requests[client]
+        req = GenRequest(client, seq, tuple(prompt), max_tokens, priority,
+                         activate=1 - (prev.activate if prev else 0),
+                         valid=1)
+        self.requests[client] = req
+        if not req.done.wait(timeout):
+            raise TimeoutError(f"client {client} seq {seq}")
+        return req.response
+
+    def cancel(self, client: int, target: Tuple[int, int], seq: int,
+               timeout: float = 30.0) -> Any:
+        """Cancel the pending request ``target = (client, seq)``."""
+        prev = self.requests[client]
+        req = GenRequest(client, seq, (), 0, cancel_target=tuple(target),
+                         activate=1 - (prev.activate if prev else 0),
+                         valid=1)
+        self.requests[client] = req
+        if not req.done.wait(timeout):
+            raise TimeoutError(f"cancel {client}/{seq}")
+        return req.response
+
+    def recover_request(self, client: int, prompt: Sequence[int],
+                        max_tokens: int, seq: int,
+                        timeout: float = 30.0) -> Any:
+        """The paper's Recover: if (client, seq) completed before the
+        crash, return the logged response; else re-execute."""
+        if self.ckpt.was_applied(client, seq):
+            return self.ckpt.response(client)
+        return self.submit(client, prompt, max_tokens, seq,
+                           timeout=timeout)
+
+    # ------------------ lifecycle -------------------------------------- #
+    def start(self) -> None:
+        for fn in (self._prefill_loop, self._decode_loop):
+            t = threading.Thread(target=fn, daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def stop(self) -> None:
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=5)
+
+    def restart_after_crash(self) -> None:
+        """Simulated process restart: volatile state (announce array,
+        sequence table, KV) is lost; the durable response log survives."""
+        self.requests = [None] * self.n
+        with self._table_lock:
+            for s in self.live.values():
+                self.slots.free(s.slot)
+            self.live.clear()
+            self.kv.clear()
+        self.ckpt.recover()
+
+    # ------------------ combiner loops --------------------------------- #
+    def _prefill_loop(self) -> None:
+        while not self._stop.is_set():
+            if not self._combine_prefill():
+                time.sleep(0.001)
+
+    def _decode_loop(self) -> None:
+        while not self._stop.is_set():
+            if not self._combine_decode():
+                time.sleep(0.001)
+
+    def _active(self, want_cancel: bool) -> List[GenRequest]:
+        out = []
+        for c in range(self.n):
+            req = self.requests[c]
+            if req is None or req.valid != 1:
+                continue
+            if req.done.is_set():
+                continue
+            if (req.cancel_target is not None) != want_cancel:
+                continue
+            out.append(req)
+        return out
+
+    def _combine_prefill(self) -> int:
+        lval = self.prefill_lock.load()
+        if lval % 2 == 1 or not self.prefill_lock.cas(lval, lval + 1):
+            return 0
+        try:
+            served = 0
+            gens = self._active(False)
+            cancels = self._active(True)
+            # --- elimination: pair cancels with waiting generates ------ #
+            by_seq = {(r.client, r.seq): r for r in gens}
+            for c in cancels:
+                tgt = by_seq.get(c.cancel_target)
+                if tgt is not None and not tgt.done.is_set():
+                    tgt.response = {"cancelled": True, "tokens": []}
+                    c.response = {"cancelled_ok": True}
+                    self.stats["eliminated"] += 1
+                    tgt.done.set()
+                    c.done.set()
+                    served += 2
+                else:
+                    c.response = {"cancelled_ok": False}
+                    c.done.set()
+                    served += 1
+            # --- admission by priority (PBHeap) ------------------------ #
+            gens = [g for g in gens if not g.done.is_set()]
+            for g in gens:
+                self.heap.insert(g.priority, g)
+            batch: List[GenRequest] = []
+            while len(batch) < self.max_batch and len(self.heap):
+                if self.slots.available() == 0:
+                    break
+                g = self.heap.delete_min()
+                if g.done.is_set():
+                    continue
+                slot = self.slots.alloc()
+                if slot is None:
+                    break
+                g._slot = slot          # stash for this round
+                batch.append(g)
+            if not batch:
+                return served
+            # --- one batched prefill for the whole round --------------- #
+            toks, kvs = self.prefill_batch_fn([g.prompt for g in batch])
+            with self._table_lock:
+                for g, t0, kv in zip(batch, toks, kvs):
+                    ls = LiveSeq(g.client, g.seq, g._slot, [t0],
+                                 g.max_tokens)
+                    self.live[(g.client << 32) | (g.seq & 0xffffffff)] = ls
+                    self.kv[ls.slot] = kv
+                    g._liveseq = ls
+            # commit marker (oldTail): decode may now adopt these
+            with self._table_lock:
+                for g in batch:
+                    g._liveseq.committed = True
+            self.stats["prefill_rounds"] += 1
+            self.stats["prefill_batched"] += len(batch)
+            return served + len(batch)
+        finally:
+            self.prefill_lock.store(self.prefill_lock.load() + 1)
+
+    def _combine_decode(self) -> int:
+        lval = self.decode_lock.load()
+        if lval % 2 == 1 or not self.decode_lock.cas(lval, lval + 1):
+            return 0
+        try:
+            with self._table_lock:
+                batch = [s for s in self.live.values() if s.committed]
+            if not batch:
+                return 0
+            kvs = [self.kv[s.slot] for s in batch]
+            last = [s.tokens[-1] for s in batch]
+            nxt = self.decode_batch_fn(kvs, last)
+            finished: List[LiveSeq] = []
+            for s, t in zip(batch, nxt):
+                s.tokens.append(int(t))
+                if int(t) == self.eos or len(s.tokens) >= s.max_tokens:
+                    finished.append(s)
+            if finished:
+                self._complete(finished)
+            self.stats["decode_rounds"] += 1
+            self.stats["decode_batched"] += len(batch)
+            return len(batch)
+        finally:
+            self.decode_lock.store(self.decode_lock.load() + 1)
+
+    def _complete(self, finished: List[LiveSeq]) -> None:
+        """Persist ALL completions of the round with one PBComb round
+        (one contiguous StateRec write), then release waiters and recycle
+        slots — the paper's 'respond only after psync' rule."""
+        for s in finished:
+            self._responses[s.client] = {"tokens": list(s.tokens),
+                                         "seq": s.seq}
+            self._resp_seq[s.client] = s.seq
+        for s in finished:
+            self.ckpt.announce(s.client, {}, s.seq,
+                               response={"tokens": list(s.tokens),
+                                         "seq": s.seq})
+        self.ckpt.combine_once()                   # one round, one psync
+        self.stats["persists"] += 1
+        with self._table_lock:
+            for s in finished:
+                key = (s.client << 32) | (s.seq & 0xffffffff)
+                self.live.pop(key, None)
+                self.kv.pop(s.slot, None)
+                self.slots.free(s.slot)            # recycling stack
+        for s in finished:
+            req = self.requests[s.client]
+            if req is not None and req.seq == s.seq:
+                req.response = {"tokens": list(s.tokens), "seq": s.seq}
+                req.done.set()

@@ -1,0 +1,39 @@
+"""Priority scheduler — PBHeap applied to request admission.
+
+Requests carry a deadline/priority; the combiner admits the most urgent
+first when the batch or KV pool is contended.  The heap is the paper's
+PBHeap shape: a bounded sequential min-heap mutated only by the combiner
+(so no internal locking is needed beyond the combiner's own mutual
+exclusion), and its state can ride inside the engine's persisted
+StateRec if admission order must survive crashes.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Any, List, Optional, Tuple
+
+
+class RequestHeap:
+    def __init__(self, capacity: int = 4096) -> None:
+        self.capacity = capacity
+        self._heap: List[Tuple[float, int, Any]] = []
+        self._tie = itertools.count()
+
+    def insert(self, priority: float, item: Any) -> bool:
+        if len(self._heap) >= self.capacity:
+            return False
+        heapq.heappush(self._heap, (priority, next(self._tie), item))
+        return True
+
+    def delete_min(self) -> Optional[Any]:
+        if not self._heap:
+            return None
+        return heapq.heappop(self._heap)[2]
+
+    def get_min(self) -> Optional[Any]:
+        return self._heap[0][2] if self._heap else None
+
+    def __len__(self) -> int:
+        return len(self._heap)

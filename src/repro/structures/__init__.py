@@ -1,0 +1,18 @@
+"""Recoverable data structures built on the combining protocols
+(paper Section 5) plus the baseline competitors used in Section 6."""
+
+from .baselines import (DFCStack, DurableMSQueue, LockDirectObject,
+                        LockUndoLogObject)
+from .nodes import (NODE_WORDS, NULL, ChunkAllocator, NodePool,
+                    PerThreadFreeList, RecyclingStack)
+from .pbheap import PBHeap
+from .pbqueue import PBQueue
+from .pbstack import PBStack
+from .pwfqueue import PWFQueue
+from .pwfstack import PWFStack
+
+__all__ = [
+    "DFCStack", "DurableMSQueue", "LockDirectObject", "LockUndoLogObject",
+    "NODE_WORDS", "NULL", "ChunkAllocator", "NodePool", "PerThreadFreeList",
+    "RecyclingStack", "PBHeap", "PBQueue", "PBStack", "PWFQueue", "PWFStack",
+]

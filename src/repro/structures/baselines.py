@@ -1,0 +1,245 @@
+"""Baseline persistent algorithms the paper compares against (Section 6).
+
+These are simplified but mechanism-faithful stand-ins for the published
+competitors, reproducing their *persistence-cost shape* (where pwbs land,
+how many per op, contention on persisted lines):
+
+  * ``LockDirectObject`` — coarse lock, updates applied **directly** on
+    the shared NVMM state, per-op pwb + pfence + psync (the design
+    decision the paper argues against: scattered per-op persists).
+  * ``LockUndoLogObject`` — PMDK-style: persist an undo-log entry, then
+    the in-place update (2 rounds of pwb+pfence per op + psync) —
+    log-based PTM cost shape (Romulus/PMDK class).
+  * ``DurableMSQueue`` — FHMP-class durable Michael-Scott queue: per-op
+    CAS on head/tail + pwbs of the touched node, next pointer, and the
+    head/tail word; every thread persists its own operation.
+  * ``DFCStack`` — detectable flat-combining stack (Rusanovsky et al.):
+    combining, but (a) each thread persists its own announcement, (b) the
+    combiner updates the shared state directly, and (c) each return value
+    is persisted separately — all three decisions the paper's Section 6
+    identifies as DFC's overhead sources.
+
+All operate on the same simulated NVM so pwb/pfence/psync counters are
+directly comparable; with ``pwb_nop``/``psync_nop`` they reproduce the
+"no-pwb"/"no-psync" ablations (paper Figures 3/6).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, List, Optional
+
+from ..core.atomics import AtomicInt, AtomicRef
+from ..core.nvm import NVM
+from ..core.objects import SeqObject
+from .nodes import NODE_WORDS, NULL, NodePool
+
+
+class LockDirectObject:
+    """Global lock + direct in-place NVMM updates + per-op persistence."""
+
+    def __init__(self, nvm: NVM, n_threads: int, obj: SeqObject) -> None:
+        self.nvm = nvm
+        self.obj = obj
+        self.st_base = nvm.alloc(obj.state_words)
+        obj.init_state(nvm, self.st_base)
+        nvm.pwb(self.st_base, obj.state_words)
+        nvm.psync()
+        nvm.reset_counters()
+        self._lock = threading.Lock()
+
+    def op(self, p: int, func: str, args: Any, seq: int) -> Any:
+        with self._lock:
+            ret = self.obj.apply(self.nvm, self.st_base, func, args)
+            self.nvm.pwb(self.st_base, self.obj.state_words)
+            self.nvm.pfence()
+            self.nvm.psync()
+            return ret
+
+
+class LockUndoLogObject:
+    """Lock + undo log persisted before each in-place update (PMDK shape)."""
+
+    def __init__(self, nvm: NVM, n_threads: int, obj: SeqObject) -> None:
+        self.nvm = nvm
+        self.obj = obj
+        self.st_base = nvm.alloc(obj.state_words)
+        self.log_base = nvm.alloc(obj.state_words + 1)  # snapshot + valid
+        obj.init_state(nvm, self.st_base)
+        nvm.pwb(self.st_base, obj.state_words)
+        nvm.psync()
+        nvm.reset_counters()
+        self._lock = threading.Lock()
+
+    def op(self, p: int, func: str, args: Any, seq: int) -> Any:
+        nvm = self.nvm
+        with self._lock:
+            # 1. persist undo record
+            nvm.write_range(self.log_base,
+                            nvm.read_range(self.st_base, self.obj.state_words))
+            nvm.write(self.log_base + self.obj.state_words, 1)  # valid
+            nvm.pwb(self.log_base, self.obj.state_words + 1)
+            nvm.pfence()
+            # 2. in-place update + persist
+            ret = self.obj.apply(nvm, self.st_base, func, args)
+            nvm.pwb(self.st_base, self.obj.state_words)
+            nvm.pfence()
+            # 3. invalidate log
+            nvm.write(self.log_base + self.obj.state_words, 0)
+            nvm.pwb(self.log_base + self.obj.state_words, 1)
+            nvm.psync()
+            return ret
+
+
+class DurableMSQueue:
+    """Durable Michael-Scott queue (FHMP-style persistence placement).
+
+    Lock-free CAS loop; each operation persists the node it created, the
+    predecessor's next pointer, and the head/tail word it swung — every
+    thread runs its own persistence instructions (vs. one combiner),
+    which is exactly the contrast the paper's Figures 4-5 measure.
+    """
+
+    def __init__(self, nvm: NVM, n_threads: int, chunk_nodes: int = 256) -> None:
+        self.nvm = nvm
+        self.pool = NodePool(nvm, n_threads, None, chunk_nodes)
+        dummy = self.pool.alloc(0)
+        nvm.write(dummy, None)
+        nvm.write(dummy + 1, NULL)
+        nvm.pwb(dummy, NODE_WORDS)
+        nvm.psync()
+        nvm.reset_counters()
+        self.head = AtomicRef(dummy, shared=True)
+        self.tail = AtomicRef(dummy, shared=True)
+        # head/tail words also mirrored in NVM for recovery
+        self.head_addr = nvm.alloc(1)
+        self.tail_addr = nvm.alloc(1)
+        nvm.write(self.head_addr, dummy)
+        nvm.write(self.tail_addr, dummy)
+
+    def enqueue(self, p: int, value: Any, seq: int) -> Any:
+        nvm = self.nvm
+        node = self.pool.alloc(p)
+        nvm.write(node, value)
+        nvm.write(node + 1, NULL)
+        nvm.pwb(node, NODE_WORDS)
+        nvm.pfence()
+        while True:
+            last, ver = self.tail.ll()
+            nxt = nvm.read(last + 1)
+            if nxt == NULL:
+                nvm.write(last + 1, node)      # link (racy CAS-free under GIL
+                nvm.pwb(last + 1, 1)           #  — adequate for cost shape)
+                nvm.pfence()
+                if self.tail.sc(ver, node):
+                    nvm.write(self.tail_addr, node)
+                    nvm.pwb(self.tail_addr, 1)
+                    nvm.psync()
+                    return "ACK"
+                nvm.write(last + 1, NULL)      # undo failed link
+            else:
+                self.tail.sc(ver, nxt)         # help swing tail
+            time.sleep(0)
+
+    def dequeue(self, p: int, seq: int) -> Any:
+        nvm = self.nvm
+        while True:
+            first, ver = self.head.ll()
+            nxt = nvm.read(first + 1)
+            if nxt == NULL:
+                return None
+            if self.head.sc(ver, nxt):
+                nvm.write(self.head_addr, nxt)
+                nvm.pwb(self.head_addr, 1)
+                nvm.psync()
+                return nvm.read(nxt)
+            time.sleep(0)
+
+    def drain(self) -> List[Any]:
+        out, addr = [], self.head.load()
+        addr = self.nvm.read(addr + 1)
+        while addr != NULL:
+            out.append(self.nvm.read(addr))
+            addr = self.nvm.read(addr + 1)
+        return out
+
+
+class DFCStack:
+    """Detectable flat-combining stack, DFC-style cost shape.
+
+    Differences from PBStack that the paper calls out:
+      * announcements live in NVMM and each thread persists its own
+        (pwb+pfence per announce, before the combiner may serve it);
+      * the combiner applies updates directly to the shared top pointer
+        and nodes (scattered per-op pwbs);
+      * each response is persisted separately (one pwb per served op).
+    """
+
+    def __init__(self, nvm: NVM, n_threads: int, chunk_nodes: int = 256) -> None:
+        self.nvm = nvm
+        self.n = n_threads
+        self.pool = NodePool(nvm, n_threads, None, chunk_nodes)
+        self.top_addr = nvm.alloc(1)
+        nvm.write(self.top_addr, NULL)
+        # announce array in NVMM: per thread [func, arg, seq, resp, done_seq]
+        self.ann_base = [nvm.alloc(5) for _ in range(n_threads)]
+        nvm.pwb(self.top_addr, 1)
+        nvm.psync()
+        nvm.reset_counters()
+        self.lock = AtomicInt(0, shared=True)
+
+    def op(self, p: int, func: str, args: Any, seq: int) -> Any:
+        nvm = self.nvm
+        a = self.ann_base[p]
+        nvm.write(a, func)
+        nvm.write(a + 1, args)
+        nvm.write(a + 2, seq)
+        nvm.pwb(a, 3)                       # persist own announcement
+        nvm.pfence()
+        while True:
+            if nvm.read(a + 4) == seq:      # served?
+                return nvm.read(a + 3)
+            lval = self.lock.load()
+            if lval % 2 == 0 and self.lock.cas(lval, lval + 1):
+                self._combine()
+                self.lock.store(self.lock.load() + 1)
+                if nvm.read(a + 4) == seq:
+                    return nvm.read(a + 3)
+            time.sleep(0)
+
+    def _combine(self) -> None:
+        nvm = self.nvm
+        for q in range(self.n):
+            a = self.ann_base[q]
+            seq = nvm.read(a + 2)
+            if seq and nvm.read(a + 4) != seq:
+                func, args = nvm.read(a), nvm.read(a + 1)
+                if func == "PUSH":
+                    node = self.pool.alloc(q)
+                    nvm.write(node, args)
+                    nvm.write(node + 1, nvm.read(self.top_addr))
+                    nvm.write(self.top_addr, node)
+                    nvm.pwb(node, NODE_WORDS)       # scattered per-op pwbs
+                    nvm.pwb(self.top_addr, 1)
+                    ret = "ACK"
+                else:
+                    top = nvm.read(self.top_addr)
+                    if top == NULL:
+                        ret = None
+                    else:
+                        nvm.write(self.top_addr, nvm.read(top + 1))
+                        nvm.pwb(self.top_addr, 1)
+                        ret = nvm.read(top)
+                nvm.write(a + 3, ret)
+                nvm.write(a + 4, seq)
+                nvm.pwb(a + 3, 2)                   # persist response alone
+                nvm.pfence()
+        nvm.psync()
+
+    def drain(self) -> List[Any]:
+        out, addr = [], self.nvm.read(self.top_addr)
+        while addr != NULL:
+            out.append(self.nvm.read(addr))
+            addr = self.nvm.read(addr + 1)
+        return out

@@ -1,0 +1,110 @@
+"""NVM node allocation for the linked-list structures (paper Section 5,
+"Memory Management").
+
+Each thread pre-allocates fixed-size *chunks* of nodes in NVMM and
+reserves nodes from its chunk, so a combiner's freshly allocated nodes sit
+in consecutive memory addresses (persistence principle P3 — one pwb covers
+several nodes).
+
+Recycling:
+  * ``RecyclingStack`` — the PBStack scheme: one shared LIFO free list for
+    all threads, so recycled nodes re-enter the structure in the same
+    order they originally left their chunk (preserves P3).
+  * ``PerThreadFreeList`` — the PBQueue scheme: each thread keeps its own
+    free list of nodes it removed while combining (the paper notes this
+    does NOT preserve P3, and measures the cost).
+
+A node occupies NODE_WORDS consecutive NVM words: [data, next].
+``next`` is an NVM word address, 0 = null.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional
+
+from ..core.nvm import NVM
+
+NODE_WORDS = 2
+NULL = 0  # address 0 is reserved (never allocated to a node)
+
+
+class ChunkAllocator:
+    """Per-thread bump allocation from contiguous NVM chunks."""
+
+    def __init__(self, nvm: NVM, n_threads: int,
+                 chunk_nodes: int = 256) -> None:
+        self.nvm = nvm
+        self.chunk_nodes = chunk_nodes
+        self._cursor: List[int] = [0] * n_threads
+        self._limit: List[int] = [0] * n_threads
+
+    def alloc(self, p: int) -> int:
+        if self._cursor[p] >= self._limit[p]:
+            base = self.nvm.alloc(self.chunk_nodes * NODE_WORDS)
+            self._cursor[p] = base
+            self._limit[p] = base + self.chunk_nodes * NODE_WORDS
+        addr = self._cursor[p]
+        self._cursor[p] += NODE_WORDS
+        return addr
+
+
+class RecyclingStack:
+    """Shared volatile LIFO free list (PBStack GC scheme)."""
+
+    def __init__(self) -> None:
+        self._stack: List[int] = []
+        self._lock = threading.Lock()
+
+    def push(self, addr: int) -> None:
+        with self._lock:
+            self._stack.append(addr)
+
+    def pop(self) -> Optional[int]:
+        with self._lock:
+            return self._stack.pop() if self._stack else None
+
+    def __len__(self) -> int:
+        return len(self._stack)
+
+
+class PerThreadFreeList:
+    """Per-thread volatile free lists (PBQueue GC scheme)."""
+
+    def __init__(self, n_threads: int) -> None:
+        self._free: Dict[int, List[int]] = {p: [] for p in range(n_threads)}
+
+    def push(self, p: int, addr: int) -> None:
+        self._free[p].append(addr)
+
+    def pop(self, p: int) -> Optional[int]:
+        lst = self._free[p]
+        return lst.pop() if lst else None
+
+
+class NodePool:
+    """Chunk allocator + optional recycler, the paper's full scheme."""
+
+    def __init__(self, nvm: NVM, n_threads: int, recycler=None,
+                 chunk_nodes: int = 256) -> None:
+        self.nvm = nvm
+        self.chunks = ChunkAllocator(nvm, n_threads, chunk_nodes)
+        self.recycler = recycler
+
+    def alloc(self, p: int) -> int:
+        if self.recycler is not None:
+            if isinstance(self.recycler, PerThreadFreeList):
+                addr = self.recycler.pop(p)
+            else:
+                addr = self.recycler.pop()
+            if addr is not None:
+                return addr
+        return self.chunks.alloc(p)
+
+    def free(self, p: int, addr: int) -> None:
+        if self.recycler is None:
+            return
+        if isinstance(self.recycler, PerThreadFreeList):
+            self.recycler.push(p, addr)
+        else:
+            self.recycler.push(addr)

@@ -1,0 +1,36 @@
+"""PBHeap — the first recoverable concurrent heap (paper Section 5).
+
+A single PBComb instance over a sequential bounded min-heap whose entire
+array lives in the StateRec ``st`` field: the combiner's one contiguous
+pwb covers the whole heap + responses + deactivate bits (P3).  The paper
+measures good performance for small/medium heaps (64-1024 keys) — the
+state-copy cost grows with capacity, which our heap benchmark reproduces.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+from ..core.nvm import NVM
+from ..core.objects import HeapObject
+from ..core.pbcomb import PBComb
+
+
+class PBHeap(PBComb):
+    def __init__(self, nvm: NVM, n_threads: int, capacity: int = 256,
+                 counters=None) -> None:
+        super().__init__(nvm, n_threads, HeapObject(capacity),
+                         counters=counters)
+        self.capacity = capacity
+
+    def insert(self, p: int, key: Any, seq: int) -> Any:
+        return self.op(p, "HINSERT", key, seq)
+
+    def delete_min(self, p: int, seq: int) -> Any:
+        return self.op(p, "HDELETEMIN", None, seq)
+
+    def get_min(self, p: int, seq: int) -> Any:
+        return self.op(p, "HGETMIN", None, seq)
+
+    def size(self) -> int:
+        return self.nvm.read(self._st_base(self._mindex()))

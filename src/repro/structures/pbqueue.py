@@ -1,0 +1,174 @@
+"""PBQueue — recoverable FIFO queue over two PBComb instances
+(paper Section 5 + Appendix A, Algorithms 5-7).
+
+Parallelism trick: enqueuers synchronize through instance ``I_E`` (whose
+combined state is just the ``Tail`` pointer) and dequeuers through
+``I_D`` (just ``Head``), so an enqueue combiner and a dequeue combiner
+run concurrently.  The first list node is a dummy.
+
+Persistence subtleties implemented exactly as the appendix:
+  * an enqueue combiner collects modified/created nodes in ``toPersist``
+    (Alg 5 lines 19/23) and pwbs them *before* pwb(EStateRec) (line 24);
+  * the volatile ``oldTail`` pointer is advanced only after the enqueue
+    round's psync (line 31), and a dequeue combiner never removes nodes
+    past ``oldTail`` (lines 57-59) — so a dequeuer can never hand out a
+    value whose enqueue is not yet durable (that would break
+    detectability, as analyzed in the appendix);
+  * on recovery, ``oldTail`` is re-seeded from the durable tail
+    (Alg 7 lines 73-74).
+
+GC: per-thread free lists — a dequeue combiner banks removed nodes after
+its round took effect; enqueuing threads draw from their own bank first
+(the paper measures that this scheme does *not* preserve P3 and costs a
+bit of performance — reproduced in benchmarks).
+"""
+
+from __future__ import annotations
+
+from typing import Any, List, Optional
+
+from ..core.nvm import NVM
+from ..core.objects import SeqObject
+from ..core.pbcomb import PBComb
+from .nodes import NODE_WORDS, NULL, NodePool, PerThreadFreeList
+
+
+class _EnqState(SeqObject):
+    """st = [Tail]."""
+
+    state_words = 1
+
+    def __init__(self, dummy: int) -> None:
+        self.dummy = dummy
+
+    def init_state(self, nvm: NVM, st_base: int) -> None:
+        nvm.write(st_base, self.dummy)
+
+    def apply(self, nvm, st_base, func, args, ctx=None):
+        # Alg 5 lines 19-23 (sequential Enqueue, lines 35-39)
+        tail = nvm.read(st_base)
+        ctx.to_persist.append(tail)          # node whose .next changes
+        node = ctx.pool.alloc(ctx.current_combiner)
+        nvm.write(node, args)                # data
+        nvm.write(node + 1, NULL)            # next
+        nvm.write(tail + 1, node)            # (*Tail).next := node
+        nvm.write(st_base, node)             # Tail := node
+        return "ACK"
+
+
+class _DeqState(SeqObject):
+    """st = [Head]."""
+
+    state_words = 1
+
+    def __init__(self, dummy: int) -> None:
+        self.dummy = dummy
+
+    def init_state(self, nvm: NVM, st_base: int) -> None:
+        nvm.write(st_base, self.dummy)
+
+    def apply(self, nvm, st_base, func, args, ctx=None):
+        # Alg 6 lines 56-61 with the oldTail guard.
+        head = nvm.read(st_base)
+        if ctx.queue.old_tail == head:       # line 57: nothing durable left
+            return None
+        nxt = nvm.read(head + 1)             # sequential Dequeue, lines 70-72
+        if nxt == NULL:
+            return None
+        nvm.write(st_base, nxt)              # Head := head.next
+        ctx.removed.append(head)             # old dummy becomes free
+        return nvm.read(nxt)                 # data of the new dummy
+
+
+class _EnqInstance(PBComb):
+    def __init__(self, nvm, n, obj, queue, counters=None):
+        super().__init__(nvm, n, obj, counters=counters)
+        self.queue = queue
+        self.pool = queue.pool
+        self.current_combiner = 0
+        self.to_persist: List[int] = []
+
+    def _begin_round(self, ind: int, combiner: int) -> None:
+        self.current_combiner = combiner
+        self.to_persist = []
+
+    def _post_simulation(self, ind: int, combiner: int) -> None:
+        tail = self.nvm.read(self._st_base(ind))
+        self.to_persist.append(tail)                  # Alg 5 line 23
+        for node in self.to_persist:                  # Alg 5 line 24
+            self.nvm.pwb(node, NODE_WORDS)
+
+    def _pre_unlock(self, ind: int, combiner: int) -> None:
+        self.queue.old_tail = self.nvm.read(self._st_base(ind))  # line 31
+        self.to_persist = []                                     # line 32
+
+
+class _DeqInstance(PBComb):
+    def __init__(self, nvm, n, obj, queue, counters=None):
+        super().__init__(nvm, n, obj, counters=counters)
+        self.queue = queue
+        self.removed: List[int] = []
+
+    def _begin_round(self, ind: int, combiner: int) -> None:
+        self.removed = []
+
+    def _pre_unlock(self, ind: int, combiner: int) -> None:
+        # Removal took effect (psync done): bank nodes for reuse.
+        for node in self.removed:
+            self.queue.pool.free(combiner, node)
+        self.removed = []
+
+
+class PBQueue:
+    def __init__(self, nvm: NVM, n_threads: int, *, recycle: bool = True,
+                 chunk_nodes: int = 256, counters=None) -> None:
+        self.nvm = nvm
+        self.n = n_threads
+        # Shared non-volatile dummy node.
+        self.dummy = nvm.alloc(NODE_WORDS)
+        nvm.write(self.dummy, None)
+        nvm.write(self.dummy + 1, NULL)
+        nvm.pwb(self.dummy, NODE_WORDS)
+        nvm.psync()
+        self.pool = NodePool(nvm, n_threads,
+                             PerThreadFreeList(n_threads) if recycle else None,
+                             chunk_nodes)
+        # Shared volatile variable (Alg 7 re-seeds it on recovery).
+        self.old_tail = self.dummy
+        self.enq = _EnqInstance(nvm, n_threads, _EnqState(self.dummy), self,
+                                counters=counters)
+        self.deq = _DeqInstance(nvm, n_threads, _DeqState(self.dummy), self,
+                                counters=counters)
+        nvm.reset_counters()
+
+    # -------------------- public API ------------------------------------ #
+    def enqueue(self, p: int, value: Any, seq: int) -> Any:
+        return self.enq.op(p, "ENQ", value, seq)
+
+    def dequeue(self, p: int, seq: int) -> Any:
+        return self.deq.op(p, "DEQ", None, seq)
+
+    # -------------------- recovery (Algorithm 7) ------------------------ #
+    def reset_volatile(self) -> None:
+        self.enq.reset_volatile()
+        self.deq.reset_volatile()
+        # lines 73-74: conservatively re-seed oldTail from the durable tail
+        # (everything reachable in the durable state is, by construction,
+        # persisted).
+        self.old_tail = self.nvm.read(self.enq._st_base(self.enq._mindex()))
+
+    def recover(self, p: int, func: str, args: Any, seq: int) -> Any:
+        if func == "ENQ":
+            return self.enq.recover(p, func, args, seq)
+        return self.deq.recover(p, func, args, seq)
+
+    # -------------------- introspection --------------------------------- #
+    def drain(self) -> List[Any]:
+        """Queue contents head-to-tail (excluding the dummy) — test helper."""
+        out = []
+        addr = self.nvm.read(self.deq._st_base(self.deq._mindex()))
+        addr = self.nvm.read(addr + 1)
+        while addr != NULL:
+            out.append(self.nvm.read(addr))
+            addr = self.nvm.read(addr + 1)
+        return out

@@ -1,0 +1,118 @@
+"""PBStack — recoverable stack over PBComb (paper Section 5).
+
+The stack is a linked list of NVM nodes; the combined state is just the
+``top`` pointer (one word), so StateRec stays tiny and one contiguous pwb
+persists top + all responses + all deactivate bits.
+
+Extras from the paper:
+  * the combiner persists the fields of all newly allocated nodes before
+    persisting the StateRec (``toPersist``, flushed in one pass — nodes
+    come from per-thread contiguous chunks, P3);
+  * **elimination** [32]: concurrent Push/Pop pairs are served against
+    each other without touching the state — fewer allocated nodes to
+    persist (paper Figure 7a);
+  * **recycling stack** GC: one shared LIFO free list so recycled nodes
+    re-enter the stack in original reservation order (P3).
+"""
+
+from __future__ import annotations
+
+from typing import Any, List, Optional
+
+from ..core.nvm import NVM
+from ..core.objects import SeqObject
+from ..core.pbcomb import PBComb
+from .nodes import NODE_WORDS, NULL, NodePool, RecyclingStack
+
+
+class _StackState(SeqObject):
+    """st = [top] (node address, NULL = empty)."""
+
+    state_words = 1
+
+    def init_state(self, nvm: NVM, st_base: int) -> None:
+        nvm.write(st_base, NULL)
+
+    def apply(self, nvm, st_base, func, args, ctx=None):
+        if func == "PUSH":
+            node = ctx.pool.alloc(ctx.current_combiner)
+            nvm.write(node, args)                    # data
+            nvm.write(node + 1, nvm.read(st_base))   # next := top
+            nvm.write(st_base, node)                 # top := node
+            ctx.to_persist.append(node)
+            return "ACK"
+        if func == "POP":
+            top = nvm.read(st_base)
+            if top == NULL:
+                return None
+            nvm.write(st_base, nvm.read(top + 1))    # top := top.next
+            ctx.popped.append(top)
+            return nvm.read(top)                     # data
+        raise ValueError(func)
+
+
+class PBStack(PBComb):
+    def __init__(self, nvm: NVM, n_threads: int, *, elimination: bool = True,
+                 recycle: bool = True, chunk_nodes: int = 256,
+                 counters=None) -> None:
+        super().__init__(nvm, n_threads, _StackState(), counters=counters)
+        self.pool = NodePool(nvm, n_threads,
+                             RecyclingStack() if recycle else None,
+                             chunk_nodes)
+        self.elimination = elimination
+        self.current_combiner = 0
+        self.to_persist: List[int] = []
+        self.popped: List[int] = []
+
+    # -------------------- public API ----------------------------------- #
+    def push(self, p: int, value: Any, seq: int) -> Any:
+        return self.op(p, "PUSH", value, seq)
+
+    def pop(self, p: int, seq: int) -> Any:
+        return self.op(p, "POP", None, seq)
+
+    # -------------------- combiner hooks -------------------------------- #
+    def _begin_round(self, ind: int, combiner: int) -> None:
+        self.current_combiner = combiner
+        self.to_persist = []
+        self.popped = []
+        if not self.elimination:
+            return
+        # Elimination: pair each active PUSH with an active POP and serve
+        # both without touching the state (the pop linearizes immediately
+        # after the push).  Responses/deactivate bits are recorded in the
+        # working StateRec, so they persist with the round as usual.
+        nvm = self.nvm
+        pushes, pops = [], []
+        for q in range(self.n):
+            req = self.request[q]
+            if req.valid == 1 and req.activate != nvm.read(self._deact_addr(ind, q)):
+                (pushes if req.func == "PUSH" else pops).append(q)
+        for qp, qo in zip(pushes, pops):
+            req_push, req_pop = self.request[qp], self.request[qo]
+            nvm.write(self._retval_addr(ind, qp), "ACK")
+            nvm.write(self._deact_addr(ind, qp), req_push.activate)
+            nvm.write(self._retval_addr(ind, qo), req_push.args)
+            nvm.write(self._deact_addr(ind, qo), req_pop.activate)
+
+    def _post_simulation(self, ind: int, combiner: int) -> None:
+        # Persist new nodes before the StateRec (one pwb per node range;
+        # chunk allocation keeps them contiguous so lines coalesce).
+        for node in self.to_persist:
+            self.nvm.pwb(node, NODE_WORDS)
+
+    def _pre_unlock(self, ind: int, combiner: int) -> None:
+        # Recycle popped nodes only after the round took effect (psync).
+        for node in self.popped:
+            self.pool.free(combiner, node)
+        self.to_persist = []
+        self.popped = []
+
+    # -------------------- introspection --------------------------------- #
+    def drain(self) -> List[Any]:
+        """Read out the stack contents (top first) — test helper."""
+        out, addr = [], self.nvm.read(self._st_base(self._mindex()))
+        while addr != NULL:
+            out.append(self.nvm.read(addr))
+            addr = self.nvm.read(addr + 1)
+        return out

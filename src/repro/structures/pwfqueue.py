@@ -1,0 +1,240 @@
+"""PWFQueue — wait-free recoverable queue over two PWFComb instances
+(paper Section 5, combining PBQueue's split with SimQueue's two-part list).
+
+An enqueuing pretend-combiner builds a *local* list of new nodes for all
+active enqueues and publishes EState = (tail = last new node,
+link_from = previous tail, link_to = first new node).  The real linked
+list temporarily consists of two parts; **every** thread applies the
+pending link (an idempotent same-value write) before serving requests,
+and persists the node it updated (paper: "an enqueuer that connects the
+linked list has to persist the new values of the node it updated").
+
+Persistence order on the enqueue side (paper's analysis):
+  1. new nodes pwb'd (``_pre_publish``) — before S_E can move;
+  2. the EStateRec (tail/link_from/link_to + responses) pwb'd + pfence —
+     so after a crash the pending link can always be *redone* from the
+     durable record (``recover_links``);
+  3. SC, pwb(S_E), psync.
+
+Dequeue side: before serving, a dequeue round (a) helps the pending
+link, and (b) if the current E-publication is not yet flushed
+(Flush parity odd), helps persist S_E — the wait-free analogue of
+PBQueue's ``oldTail`` guard: no value is handed out whose enqueue could
+fail to survive a crash.  Dequeued values are read through the durable
+boundary ``tail_e`` captured at that point.
+
+GC: none — the paper explicitly leaves PWFQueue node recycling for future
+work ("a solution would be more complicated, due to the two parts"), and
+recycling here would expose helped-link writes to reused nodes.  Nodes
+come from per-thread contiguous chunks and are never reused.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, List
+
+from ..core.nvm import NVM
+from ..core.objects import SeqObject
+from ..core.pwfcomb import PWFComb
+from .nodes import NODE_WORDS, NULL, NodePool
+
+
+class _EnqState(SeqObject):
+    """st = [tail, link_from, link_to]."""
+
+    state_words = 3
+
+    def __init__(self, dummy: int) -> None:
+        self.dummy = dummy
+
+    def init_state(self, nvm: NVM, st_base: int) -> None:
+        nvm.write(st_base, self.dummy)
+        nvm.write(st_base + 1, NULL)
+        nvm.write(st_base + 2, NULL)
+
+    def apply(self, nvm, st_base, func, args, ctx=None):
+        p = ctx.current_combiner
+        node = ctx.pool.alloc(p)
+        nvm.write(node, args)
+        nvm.write(node + 1, NULL)
+        ctx.attempt_alloc(p).append(node)
+        local = ctx.attempt_local(p)
+        if local["first"] == NULL:
+            # First enqueue of this round: the previous tail becomes
+            # link_from, this node link_to.
+            local["first"] = node
+            nvm.write(st_base + 1, nvm.read(st_base))   # link_from := tail
+            nvm.write(st_base + 2, node)                # link_to := first new
+        else:
+            nvm.write(local["last"] + 1, node)          # chain locally
+        local["last"] = node
+        nvm.write(st_base, node)                        # tail := node
+        return "ACK"
+
+
+class _DeqState(SeqObject):
+    """st = [head]."""
+
+    state_words = 1
+
+    def __init__(self, dummy: int) -> None:
+        self.dummy = dummy
+
+    def init_state(self, nvm: NVM, st_base: int) -> None:
+        nvm.write(st_base, self.dummy)
+
+    def apply(self, nvm, st_base, func, args, ctx=None):
+        head = nvm.read(st_base)
+        if head == ctx.boundary(ctx.current_combiner):  # durable frontier
+            return None
+        nxt = nvm.read(head + 1)
+        if nxt == NULL:
+            return None
+        nvm.write(st_base, nxt)
+        return nvm.read(nxt)
+
+
+class _EnqInstance(PWFComb):
+    def __init__(self, nvm, n, obj, queue, counters=None, backoff=True):
+        super().__init__(nvm, n, obj, counters=counters, backoff=backoff)
+        self.queue = queue
+        self.pool = queue.pool
+        self._tls = threading.local()
+        self._allocs: Dict[int, List[int]] = {p: [] for p in range(n)}
+        self._local: Dict[int, Dict[str, int]] = {
+            p: {"first": NULL, "last": NULL} for p in range(n)}
+
+    # context accessors used by _EnqState.apply
+    @property
+    def current_combiner(self):
+        return self._tls.combiner
+
+    def attempt_alloc(self, p):
+        return self._allocs[p]
+
+    def attempt_local(self, p):
+        return self._local[p]
+
+    def _apply(self, q, func, args, slot, combiner):
+        self._tls.combiner = combiner
+        return self.obj.apply(self.nvm, self._base(slot), func, args, ctx=self)
+
+    def _begin_attempt(self, slot: int, p: int) -> None:
+        self._allocs[p] = []
+        self._local[p] = {"first": NULL, "last": NULL}
+        self.queue.help_link()  # apply the previous round's pending link
+
+    def _pre_publish(self, slot: int, p: int) -> None:
+        for node in self._allocs[p]:
+            self.nvm.pwb(node, NODE_WORDS)
+
+    def _attempt_failed(self, slot: int, p: int) -> None:
+        # No recycling (see module doc); just drop the bookkeeping.
+        self._allocs[p] = []
+        self._local[p] = {"first": NULL, "last": NULL}
+
+
+class _DeqInstance(PWFComb):
+    def __init__(self, nvm, n, obj, queue, counters=None, backoff=True):
+        super().__init__(nvm, n, obj, counters=counters, backoff=backoff)
+        self.queue = queue
+        self._tls = threading.local()
+        self._boundary: Dict[int, int] = {p: queue.dummy for p in range(n)}
+
+    @property
+    def current_combiner(self):
+        return self._tls.combiner
+
+    def boundary(self, p):
+        return self._boundary[p]
+
+    def _apply(self, q, func, args, slot, combiner):
+        self._tls.combiner = combiner
+        return self.obj.apply(self.nvm, self._base(slot), func, args, ctx=self)
+
+    def _begin_attempt(self, slot: int, p: int) -> None:
+        # Help the pending link, then make the current enqueue publication
+        # durable before adopting its tail as the dequeue frontier.
+        self.queue.help_link()
+        self._boundary[p] = self.queue.durable_tail()
+
+
+class PWFQueue:
+    def __init__(self, nvm: NVM, n_threads: int, *, chunk_nodes: int = 256,
+                 counters=None, backoff: bool = True) -> None:
+        self.nvm = nvm
+        self.n = n_threads
+        self.dummy = nvm.alloc(NODE_WORDS)
+        nvm.write(self.dummy, None)
+        nvm.write(self.dummy + 1, NULL)
+        nvm.pwb(self.dummy, NODE_WORDS)
+        nvm.psync()
+        self.pool = NodePool(nvm, n_threads, None, chunk_nodes)
+        self.enq = _EnqInstance(nvm, n_threads, _EnqState(self.dummy), self,
+                                counters=counters, backoff=backoff)
+        self.deq = _DeqInstance(nvm, n_threads, _DeqState(self.dummy), self,
+                                counters=counters, backoff=backoff)
+        nvm.reset_counters()
+
+    # ------------------ linking helpers --------------------------------- #
+    def help_link(self) -> None:
+        """Apply the currently pending two-part link (idempotent: all
+        helpers write the same value) and persist the updated node."""
+        nvm = self.nvm
+        slot = self.enq.S.load()
+        st = self.enq._base(slot)
+        lf, lt = nvm.read(st + 1), nvm.read(st + 2)
+        if lf != NULL and lt != NULL and nvm.read(lf + 1) != lt:
+            nvm.write(lf + 1, lt)
+            nvm.pwb(lf, NODE_WORDS)
+            nvm.pfence()
+
+    def durable_tail(self) -> int:
+        """Make the current E-publication durable if needed, then return
+        its tail — every node up to it is crash-safe to hand out."""
+        nvm = self.nvm
+        slot = self.enq.S.load()
+        s_pid = nvm.read(self.enq._pid_addr(slot))
+        lval = self.enq.flush[s_pid]
+        if lval % 2 == 1:                       # publication not yet flushed
+            nvm.pwb(self.enq.s_addr, 1)
+            nvm.psync()
+            self.enq._cas_flush(s_pid, lval, lval + 1)
+        return nvm.read(self.enq._base(slot))
+
+    # ------------------ public API --------------------------------------- #
+    def enqueue(self, p: int, value: Any, seq: int) -> Any:
+        return self.enq.op(p, "ENQ", value, seq)
+
+    def dequeue(self, p: int, seq: int) -> Any:
+        return self.deq.op(p, "DEQ", None, seq)
+
+    # ------------------ recovery ----------------------------------------- #
+    def reset_volatile(self) -> None:
+        self.enq.reset_volatile()
+        self.deq.reset_volatile()
+        self.enq._local = {p: {"first": NULL, "last": NULL}
+                           for p in range(self.n)}
+        self.enq._allocs = {p: [] for p in range(self.n)}
+        self.deq._boundary = {p: self.dummy for p in range(self.n)}
+        # Redo the pending link from the durable EState record, then
+        # persist it (paper: links must be redoable after a crash).
+        self.help_link()
+        self.nvm.psync()
+
+    def recover(self, p: int, func: str, args: Any, seq: int) -> Any:
+        if func == "ENQ":
+            return self.enq.recover(p, func, args, seq)
+        return self.deq.recover(p, func, args, seq)
+
+    # ------------------ introspection ------------------------------------ #
+    def drain(self) -> List[Any]:
+        self.help_link()
+        out = []
+        addr = self.nvm.read(self.deq._base(self.deq.S.load()))
+        addr = self.nvm.read(addr + 1)
+        while addr != NULL:
+            out.append(self.nvm.read(addr))
+            addr = self.nvm.read(addr + 1)
+        return out

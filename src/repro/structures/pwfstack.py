@@ -1,0 +1,108 @@
+"""PWFStack — wait-free recoverable stack over PWFComb (paper Section 5).
+
+Same linked-list representation and elimination as PBStack, but every
+thread pretends to be the combiner on its private StateRec copy.  Node
+management differs because losing pretend-combiners must roll back:
+
+  * allocations are attempt-local: on a failed VL/SC the freshly
+    allocated nodes return to the thread's own free list;
+  * new nodes are persisted *before* the SC (``_pre_publish``) — S must
+    never point to a StateRec whose reachable nodes are not durable;
+  * popped nodes are recycled only after the winning round's S value is
+    durable (``_on_publish_success`` fires post-psync), which is the
+    simplified stand-in for the validation scheme of [11] cited by the
+    paper: threads never *reuse* a node while it can still be reached
+    from the durable S.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, List
+
+from ..core.nvm import NVM
+from ..core.pwfcomb import PWFComb
+from .nodes import NODE_WORDS, NULL, NodePool, PerThreadFreeList
+from .pbstack import _StackState
+
+
+class PWFStack(PWFComb):
+    def __init__(self, nvm: NVM, n_threads: int, *, elimination: bool = True,
+                 recycle: bool = True, chunk_nodes: int = 256,
+                 counters=None, backoff: bool = True) -> None:
+        super().__init__(nvm, n_threads, _StackState(), counters=counters,
+                         backoff=backoff)
+        self.pool = NodePool(nvm, n_threads,
+                             PerThreadFreeList(n_threads) if recycle else None,
+                             chunk_nodes)
+        self.elimination = elimination
+        # attempt-local bookkeeping, keyed by thread id
+        self._alloc: Dict[int, List[int]] = {p: [] for p in range(n_threads)}
+        self._popped: Dict[int, List[int]] = {p: [] for p in range(n_threads)}
+        self._tls = threading.local()  # which logical thread runs here
+
+    # -------------------- public API ----------------------------------- #
+    def push(self, p: int, value: Any, seq: int) -> Any:
+        return self.op(p, "PUSH", value, seq)
+
+    def pop(self, p: int, seq: int) -> Any:
+        return self.op(p, "POP", None, seq)
+
+    # -------------------- combining hooks ------------------------------- #
+    def _apply(self, q, func, args, slot, combiner):
+        self._tls.combiner = combiner
+        return self.obj.apply(self.nvm, self._base(slot), func, args, ctx=self)
+
+    @property
+    def current_combiner(self) -> int:  # _StackState allocates under this id
+        return self._tls.combiner
+
+    @property
+    def to_persist(self):  # _StackState records allocations here
+        return self._alloc[self._tls.combiner]
+
+    @property
+    def popped(self):
+        return self._popped[self._tls.combiner]
+
+    def _begin_attempt(self, slot: int, p: int) -> None:
+        self._alloc[p] = []
+        self._popped[p] = []
+        if not self.elimination:
+            return
+        nvm = self.nvm
+        pushes, pops = [], []
+        for q in range(self.n):
+            req = self.request[q]
+            if req.valid == 1 and req.activate != nvm.read(self._deact_addr(slot, q)):
+                (pushes if req.func == "PUSH" else pops).append(q)
+        for qp, qo in zip(pushes, pops):
+            req_push, req_pop = self.request[qp], self.request[qo]
+            nvm.write(self._retval_addr(slot, qp), "ACK")
+            nvm.write(self._deact_addr(slot, qp), req_push.activate)
+            nvm.write(self._retval_addr(slot, qo), req_push.args)
+            nvm.write(self._deact_addr(slot, qo), req_pop.activate)
+
+    def _pre_publish(self, slot: int, p: int) -> None:
+        for node in self._alloc[p]:
+            self.nvm.pwb(node, NODE_WORDS)
+
+    def _on_publish_success(self, slot: int, p: int) -> None:
+        for node in self._popped[p]:
+            self.pool.free(p, node)
+        self._alloc[p] = []
+        self._popped[p] = []
+
+    def _attempt_failed(self, slot: int, p: int) -> None:
+        for node in self._alloc[p]:
+            self.pool.free(p, node)
+        self._alloc[p] = []
+        self._popped[p] = []
+
+    # -------------------- introspection --------------------------------- #
+    def drain(self) -> List[Any]:
+        out, addr = [], self.nvm.read(self._base(self.S.load()))
+        while addr != NULL:
+            out.append(self.nvm.read(addr))
+            addr = self.nvm.read(addr + 1)
+        return out

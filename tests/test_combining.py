@@ -1,0 +1,154 @@
+"""PBComb / PWFComb: linearizability under threads, detectable recovery
+under exhaustive crash-point sweeps (paper Sections 3-4)."""
+
+import random
+import threading
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (NVM, AtomicFloatObject, FetchAddObject, PBComb,
+                        PWFComb, SimulatedCrash)
+from repro.core.pbcomb import RequestRec
+
+N = 6
+OPS = 150
+
+
+def _run_threads(obj, op):
+    results = [[] for _ in range(N)]
+
+    def worker(p):
+        seq = 0
+        rng = random.Random(p)
+        for _ in range(OPS):
+            seq += 1
+            results[p].append(op(p, seq))
+            for _ in range(rng.randint(0, 30)):   # paper's local work
+                pass
+    ts = [threading.Thread(target=worker, args=(p,)) for p in range(N)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    return results
+
+
+@pytest.mark.parametrize("proto", [PBComb, PWFComb])
+def test_faa_linearizable(proto):
+    """k FAA(1) ops must return exactly {0..k-1} (each value once) and
+    leave the counter at k — any interleaving violating atomicity breaks
+    this."""
+    nvm = NVM()
+    c = proto(nvm, N, FetchAddObject())
+    results = _run_threads(c, lambda p, seq: c.op(p, "FAA", 1, seq))
+    flat = sorted(v for vs in results for v in vs)
+    assert flat == list(range(N * OPS))
+
+
+@pytest.mark.parametrize("proto", [PBComb, PWFComb])
+def test_atomicfloat(proto):
+    nvm = NVM()
+    c = proto(nvm, N, AtomicFloatObject())
+    _run_threads(c, lambda p, seq: c.op(p, "MUL", 1.0000001, seq))
+    # state survived and is the product of all multiplications
+    if proto is PBComb:
+        final = nvm.read(c._st_base(c._mindex()))
+    else:
+        final = nvm.read(c._base(c.S.load()))
+    assert abs(final - 1.0000001 ** (N * OPS)) < 1e-6
+
+
+@pytest.mark.parametrize("proto", [PBComb, PWFComb])
+def test_combining_persistence_cost(proto):
+    """P1: persistence instructions per combining ROUND, not per request
+    — with 1 thread issuing k ops, pwbs/op is a small constant; psyncs
+    equal rounds."""
+    nvm = NVM()
+    c = proto(nvm, 2, FetchAddObject())
+    for seq in range(1, 51):
+        c.op(0, "FAA", 1, seq)
+    assert nvm.counters["psync"] == 50            # one per round here
+    assert nvm.counters["pwb"] <= 50 * 6
+
+
+@pytest.mark.parametrize("proto", [PBComb, PWFComb])
+@pytest.mark.parametrize("crash_at", range(8))
+@pytest.mark.parametrize("drain_seed", [None, 1, 2, 3])
+def test_detectable_recovery_crash_sweep(proto, crash_at, drain_seed):
+    """Crash at every persistence instruction inside a combining round
+    serving 4 requests; after recovery every request must have been
+    applied EXACTLY once with the right response (detectability)."""
+    nvm = NVM()
+    c = proto(nvm, 4, FetchAddObject(), **(
+        {} if proto is PBComb else {"backoff": False}))
+    seqs = [0] * 4
+    seqs[0] += 1
+    assert c.op(0, "FAA", 1, seqs[0]) == 0
+    for p in range(4):
+        seqs[p] += 1
+        c.request[p] = RequestRec("FAA", 1, 1 - c.request[p].activate, 1)
+    rng = random.Random(drain_seed) if drain_seed else None
+    nvm.arm_crash(crash_at, rng)
+    try:
+        c._perform_request(1)
+    except SimulatedCrash:
+        pass
+    nvm.disarm_crash()
+    c.reset_volatile()
+    rets = {p: c.recover(p, "FAA", 1, seqs[p]) for p in range(4)}
+    if proto is PBComb:
+        final = nvm.read(c._st_base(c._mindex()))
+    else:
+        final = nvm.read(c._base(c.S.load()))
+    assert final == 5                              # 1 + 4, exactly once each
+    assert sorted(rets.values()) == [1, 2, 3, 4]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 12), st.integers(0, 2 ** 31 - 1),
+       st.integers(2, 5))
+def test_property_pbcomb_crash_anywhere(crash_at, seed, n_active):
+    """Randomized crash points/drains: post-recovery state is always the
+    initial value plus each announced request applied exactly once."""
+    nvm = NVM()
+    c = PBComb(nvm, n_active, FetchAddObject())
+    seqs = [1] * n_active
+    for p in range(n_active):
+        c.request[p] = RequestRec("FAA", 1, 1, 1)
+    nvm.arm_crash(crash_at, random.Random(seed))
+    try:
+        c._perform_request(0)
+    except SimulatedCrash:
+        pass
+    nvm.disarm_crash()
+    c.reset_volatile()
+    rets = {p: c.recover(p, "FAA", 1, seqs[p]) for p in range(n_active)}
+    final = nvm.read(c._st_base(c._mindex()))
+    assert final == n_active
+    assert sorted(rets.values()) == list(range(n_active))
+
+
+def test_pbcomb_combiner_crash_then_repeat_crash_in_recovery():
+    """Recovery functions must themselves be re-invocable after a crash
+    during recovery (paper Section 2)."""
+    nvm = NVM()
+    c = PBComb(nvm, 2, FetchAddObject())
+    c.request[0] = RequestRec("FAA", 1, 1, 1)
+    nvm.arm_crash(1, random.Random(7))
+    try:
+        c._perform_request(0)
+    except SimulatedCrash:
+        pass
+    c.reset_volatile()
+    # crash again during the recovery's re-execution
+    nvm.arm_crash(2, random.Random(8))
+    try:
+        c.recover(0, "FAA", 1, 1)
+    except SimulatedCrash:
+        pass
+    nvm.disarm_crash()
+    c.reset_volatile()
+    ret = c.recover(0, "FAA", 1, 1)
+    assert ret == 0
+    assert nvm.read(c._st_base(c._mindex())) == 1

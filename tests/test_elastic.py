@@ -1,0 +1,65 @@
+"""Elastic coordinator: heartbeats, failure detection, rescale plans,
+coordinator takeover (PWFComb lease)."""
+
+import time
+
+from repro.runtime.elastic import ElasticCoordinator
+
+
+def test_heartbeat_and_plan():
+    co = ElasticCoordinator(4, heartbeat_timeout=0.5)
+    plan = co.heartbeat(1, step=10)
+    assert plan.dp_size == 4
+    assert plan.data_shards[1] == 1
+
+
+def test_failure_detection_and_rescale():
+    co = ElasticCoordinator(4, heartbeat_timeout=0.05)
+    for h in (0, 1, 2):
+        co.heartbeat(h, step=5)
+    time.sleep(0.08)
+    for h in (0, 1, 2):
+        co.heartbeat(h, step=6)
+    failed = co.detect_failures()
+    assert failed == [3]
+    plan = co.rescale(committed_step=5, failed=failed)
+    assert plan.hosts == (0, 1, 2)
+    assert plan.dp_size == 3
+    assert plan.restore_step == 5
+    assert plan.epoch == 1
+    # shard indices are dense 0..n-1
+    assert sorted(plan.data_shards.values()) == [0, 1, 2]
+
+
+def test_straggler_detection_by_progress():
+    co = ElasticCoordinator(3, heartbeat_timeout=10.0)
+    co.heartbeat(0, step=20)
+    co.heartbeat(1, step=20)
+    co.heartbeat(2, step=3)        # alive but far behind
+    assert co.stragglers() == [2]
+
+
+def test_join_after_rescale():
+    co = ElasticCoordinator(2, heartbeat_timeout=0.05)
+    co.heartbeat(0, 1)
+    time.sleep(0.08)
+    co.heartbeat(0, 2)
+    plan = co.rescale(committed_step=1)
+    assert plan.hosts == (0,)
+    co.join(1)                     # host comes back
+    co.heartbeat(1, 0)
+    plan = co.rescale(committed_step=2)
+    assert plan.hosts == (0, 1)
+    assert plan.epoch == 2
+
+
+def test_coordinator_takeover_lease():
+    co = ElasticCoordinator(3, heartbeat_timeout=10.0, lease_s=0.05)
+    co.heartbeat(0, 1)             # coordinator alive
+    assert not co.take_over_coordination(2)
+    time.sleep(0.08)               # lease lapses
+    assert co.coordinator_lease_expired()
+    assert co.take_over_coordination(2)
+    assert co.coordinator_host == 2
+    # second takeover attempt immediately fails (SC semantics)
+    assert not co.take_over_coordination(1)

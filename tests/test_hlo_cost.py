@@ -1,0 +1,83 @@
+"""HLO cost parser: loop folding must recover analytic flop counts
+(the raw cost_analysis counts while bodies once — the bug this module
+exists to fix)."""
+
+import subprocess
+import sys
+import textwrap
+
+
+def _run_sub(body: str) -> str:
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys
+        sys.path.insert(0, "src")
+        import jax, jax.numpy as jnp
+        import numpy as np
+        from repro.launch.hlo_cost import HloCost
+    """) + textwrap.dedent(body)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=600)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    return out.stdout
+
+
+def test_scan_flops_folded_exactly():
+    out = _run_sub("""
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        W = jnp.zeros((10, 64, 64)); x = jnp.zeros((4, 64))
+        def scanned(x, W):
+            return jax.lax.scan(body, x, W)[0]
+        comp = jax.jit(scanned).lower(x, W).compile()
+        t = HloCost(comp.as_text()).totals()
+        expected = 10 * 2 * 4 * 64 * 64
+        assert t["flops"] == expected, (t["flops"], expected)
+        # raw cost_analysis undercounts by the trip count
+        raw = comp.cost_analysis()["flops"]
+        assert raw < expected / 5, raw
+        print("OK folded", t["flops"], "raw", raw)
+    """)
+    assert "OK folded" in out
+
+
+def test_grad_of_scan_is_three_matmuls_per_layer():
+    out = _run_sub("""
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        W = jnp.zeros((10, 64, 64)); x = jnp.zeros((4, 64))
+        def loss(x, W):
+            return jnp.sum(jax.lax.scan(body, x, W)[0] ** 2)
+        comp = jax.jit(jax.grad(loss, argnums=1)).lower(x, W).compile()
+        t = HloCost(comp.as_text()).totals()
+        expected = 3 * 10 * 2 * 4 * 64 * 64   # fwd + 2 bwd matmuls/layer
+        assert t["flops"] == expected, (t["flops"], expected)
+        print("OK grad", t["flops"])
+    """)
+    assert "OK grad" in out
+
+
+def test_collectives_folded_in_loops():
+    out = _run_sub("""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        mesh = jax.make_mesh((8,), ("data",))
+        def body(c, w):
+            h = jnp.tanh(c @ w)
+            return jax.lax.with_sharding_constraint(
+                h, NamedSharding(mesh, P())), None
+        W = jnp.zeros((10, 64, 64)); x = jnp.zeros((8, 64))
+        def loss(x, W):
+            return jnp.sum(jax.lax.scan(body, x, W)[0] ** 2)
+        xs = NamedSharding(mesh, P("data", None))
+        with mesh:
+            comp = jax.jit(jax.grad(loss, argnums=1),
+                           in_shardings=(xs, None)).lower(x, W).compile()
+        t = HloCost(comp.as_text()).totals()
+        counts = t["collective_counts"]
+        total = sum(counts.values())
+        assert total >= 10, counts     # loop-folded, not counted once
+        assert t["collective_bytes"] > 0
+        print("OK collectives", counts)
+    """)
+    assert "OK collectives" in out

@@ -1,0 +1,203 @@
+"""Per-architecture smoke tests (reduced same-family configs, CPU):
+one forward + one train step, shape + finiteness assertions; prefill vs
+full-forward consistency; feature-specific checks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, cells_for
+from repro.models import (decode_step, forward, init_decode_state,
+                          init_params, loss_fn, param_count, prefill)
+from repro.optim import make_optimizer
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 32
+
+
+def _extra(cfg):
+    extra = {}
+    if cfg.family == "vlm":
+        extra["image_embeds"] = jnp.full(
+            (B, cfg.n_image_tokens, cfg.d_model), 0.01, jnp.bfloat16)
+    if cfg.family == "audio":
+        extra["frame_embeds"] = jnp.full(
+            (B, cfg.n_audio_frames, cfg.d_model), 0.01, jnp.bfloat16)
+    return extra
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_smoke_forward_and_train_step(arch):
+    cfg = ARCHS[arch].smoke()
+    params = init_params(cfg, KEY)
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    extra = _extra(cfg)
+    logits = forward(params, cfg, tokens, extra)
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    # one full train step: loss + grads + optimizer update
+    batch = {"tokens": tokens, "labels": tokens, "extra": extra}
+    init_fn, update_fn = make_optimizer(cfg)
+    opt = init_fn(params)
+    loss, grads = jax.value_and_grad(
+        lambda p: loss_fn(p, cfg, batch))(params)
+    assert np.isfinite(float(loss))
+    new_params, _ = update_fn(grads, opt, params, jnp.zeros((), jnp.int32))
+    moved = sum(float(jnp.sum(jnp.abs(x.astype(jnp.float32)
+                                      - y.astype(jnp.float32))))
+                for x, y in zip(jax.tree.leaves(new_params),
+                                jax.tree.leaves(params)))
+    assert moved > 0.0                            # the update did something
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_smoke_prefill_decode(arch):
+    cfg = ARCHS[arch].smoke()
+    params = init_params(cfg, KEY)
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    extra = _extra(cfg)
+    lg, state = prefill(params, cfg, tokens, extra, max_len=S + 8)
+    assert lg.shape == (B, cfg.padded_vocab)
+    lg2, state2 = decode_step(params, cfg, state, tokens[:, 0])
+    assert lg2.shape == (B, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(lg2.astype(jnp.float32))))
+    assert int(state2.pos) == S + 1
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "mamba2-2.7b",
+                                  "zamba2-2.7b", "whisper-medium"])
+def test_prefill_then_decode_matches_full_forward(arch):
+    """Teacher-forced decode continuation must agree with the full
+    forward pass at the same positions (cache correctness)."""
+    cfg = ARCHS[arch].smoke()
+    params = init_params(cfg, KEY)
+    T = 16
+    tokens = jax.random.randint(KEY, (1, T), 0, cfg.vocab_size)
+    extra = {k: v[:1] for k, v in _extra(cfg).items()}
+    full = forward(params, cfg, tokens, extra).astype(jnp.float32)
+    # bf16 params: the decode recurrence accumulates in a different order
+    # than the chunked train path, so agreement is at bf16 resolution
+    # (~0.05-0.1 at logit magnitude ~5) — exact-math agreement is covered
+    # by the f32 kernel/oracle tests in test_kernels.py.
+    tol = dict(atol=1.5e-1, rtol=1.5e-1)
+    lg, state = prefill(params, cfg, tokens[:, :T - 2], extra,
+                        max_len=T + 2)
+    np.testing.assert_allclose(np.asarray(lg, np.float32),
+                               np.asarray(full[:, T - 3]), **tol)
+    lg, state = decode_step(params, cfg, state, tokens[:, T - 2])
+    np.testing.assert_allclose(np.asarray(lg, np.float32),
+                               np.asarray(full[:, T - 2]), **tol)
+    lg, state = decode_step(params, cfg, state, tokens[:, T - 1])
+    np.testing.assert_allclose(np.asarray(lg, np.float32),
+                               np.asarray(full[:, T - 1]), **tol)
+
+
+def test_gemma2_local_global_alternation():
+    """Local (sliding-window) layers must mask distant context; check
+    that truncating distant context changes nothing when ALL layers are
+    local with a tiny window."""
+    import dataclasses
+    cfg = ARCHS["gemma2-9b"].smoke()
+    cfg_local = dataclasses.replace(cfg, local_global_pattern=False,
+                                    sliding_window=4, n_layers=2)
+    params = init_params(cfg_local, KEY)
+    T = 24
+    tokens = jax.random.randint(KEY, (1, T), 0, cfg_local.vocab_size)
+    out_full = forward(params, cfg_local, tokens)
+    # perturb tokens far outside every window of the last position
+    tokens2 = tokens.at[0, :4].set((tokens[0, :4] + 1) % cfg_local.vocab_size)
+    out_pert = forward(params, cfg_local, tokens2)
+    np.testing.assert_allclose(
+        np.asarray(out_full[0, -1], np.float32),
+        np.asarray(out_pert[0, -1], np.float32), atol=1e-3, rtol=1e-3)
+
+
+def test_logit_softcap_bounds_logits():
+    cfg = ARCHS["gemma2-9b"].smoke()
+    params = init_params(cfg, KEY)
+    tokens = jax.random.randint(KEY, (1, 8), 0, cfg.vocab_size)
+    logits = forward(params, cfg, tokens).astype(jnp.float32)
+    real = logits[..., :cfg.vocab_size]
+    assert float(jnp.max(jnp.abs(real))) <= cfg.logit_softcap + 1e-3
+
+
+def test_padded_vocab_never_wins():
+    cfg = ARCHS["mamba2-2.7b"].smoke()   # vocab 256 -> already padded OK
+    import dataclasses
+    cfg = dataclasses.replace(cfg, vocab_size=250)   # force padding
+    params = init_params(cfg, KEY)
+    tokens = jax.random.randint(KEY, (1, 8), 0, cfg.vocab_size)
+    logits = forward(params, cfg, tokens)
+    assert logits.shape[-1] == 256
+    assert int(jnp.max(jnp.argmax(logits, -1))) < cfg.vocab_size
+
+
+def test_moe_capacity_and_gates():
+    """MoE: outputs finite, gradients flow to every expert weight kind,
+    and with huge capacity no tokens are dropped (output differs from
+    zero everywhere)."""
+    cfg = ARCHS["moonshot-v1-16b-a3b"].smoke()
+    params = init_params(cfg, KEY)
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens, "extra": {}}
+    loss, grads = jax.value_and_grad(
+        lambda p: loss_fn(p, cfg, batch))(params)
+    assert np.isfinite(float(loss))
+    g = grads["blocks"]["moe"]
+    for name in ("w_gate", "w_up", "w_down", "router"):
+        assert float(jnp.sum(jnp.abs(g[name].astype(jnp.float32)))) > 0
+
+
+def test_loss_chunking_equivalence():
+    """Chunked CE == unchunked CE."""
+    import repro.models.model as M
+    cfg = ARCHS["qwen3-1.7b"].smoke()
+    params = init_params(cfg, KEY)
+    tokens = jax.random.randint(KEY, (2, 64), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens, "extra": {}}
+    old = M.LOSS_CHUNK
+    try:
+        M.LOSS_CHUNK = 16
+        l_chunked = float(loss_fn(params, cfg, batch))
+        M.LOSS_CHUNK = 10 ** 9
+        l_full = float(loss_fn(params, cfg, batch))
+    finally:
+        M.LOSS_CHUNK = old
+    assert abs(l_chunked - l_full) < 1e-4
+
+
+def test_param_counts_full_configs():
+    """Full (unreduced) configs hit their published parameter scale
+    (eval_shape only — nothing is materialized)."""
+    expect = {
+        "qwen3-14b": (13e9, 18e9),
+        "command-r-35b": (28e9, 40e9),   # tied embeddings save ~2.1B
+        "qwen3-1.7b": (1.5e9, 2.4e9),
+        "gemma2-9b": (8e9, 11e9),
+        "llama4-maverick-400b-a17b": (7.0e11, 8.5e11),
+        # literal 64e x 1408ff x 48L config = 28B total (the HF "16B"
+        # label reflects a shared-expert split we fold into the pool)
+        "moonshot-v1-16b-a3b": (24e9, 32e9),
+        "llama-3.2-vision-11b": (8e9, 12e9),
+        "mamba2-2.7b": (2.2e9, 3.2e9),
+        "zamba2-2.7b": (2.2e9, 3.4e9),
+        "whisper-medium": (2.8e8, 1.2e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        cfg = ARCHS[arch]
+        shape = jax.eval_shape(lambda c=cfg: init_params(c, KEY))
+        n = param_count(shape)
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_cells_for_long_context_policy():
+    runnable = {a: [s.name for s, r, _ in cells_for(c) if r]
+                for a, c in ARCHS.items()}
+    assert "long_500k" in runnable["mamba2-2.7b"]
+    assert "long_500k" in runnable["zamba2-2.7b"]
+    assert "long_500k" in runnable["gemma2-9b"]
+    assert "long_500k" not in runnable["qwen3-14b"]
+    assert "long_500k" not in runnable["whisper-medium"]
+    total = sum(len(v) for v in runnable.values())
+    assert total == 33                      # 40 cells - 7 principled skips

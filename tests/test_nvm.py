@@ -1,0 +1,113 @@
+"""Simulated NVMM semantics: epoch persistency + adversarial crashes."""
+
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import LINE, NVM
+
+
+def test_write_read_volatile():
+    nvm = NVM()
+    a = nvm.alloc(4)
+    nvm.write(a, 42)
+    assert nvm.read(a) == 42
+    assert nvm.durable_read(a) == 0           # not persisted yet
+
+
+def test_psync_makes_durable():
+    nvm = NVM()
+    a = nvm.alloc(1)
+    nvm.write(a, 7)
+    nvm.pwb(a)
+    nvm.psync()
+    assert nvm.durable_read(a) == 7
+
+
+def test_unsynced_pwb_may_be_lost():
+    nvm = NVM()
+    a = nvm.alloc(1)
+    nvm.write(a, 7)
+    nvm.pwb(a)
+    nvm.crash(rng=None)                       # adversarial: nothing drains
+    assert nvm.read(a) == 0
+
+
+def test_pfence_orders_epochs():
+    """A later epoch can never be durable while an earlier one is not."""
+    for seed in range(50):
+        nvm = NVM()
+        a = nvm.alloc(LINE, align_line=True)
+        b = nvm.alloc(LINE, align_line=True)
+        nvm.write(a, 1)
+        nvm.pwb(a)
+        nvm.pfence()
+        nvm.write(b, 2)
+        nvm.pwb(b)
+        nvm.crash(rng=random.Random(seed))
+        if nvm.durable_read(b) == 2:          # later epoch drained =>
+            assert nvm.durable_read(a) == 1   # earlier one drained too
+
+
+def test_pwb_counts_lines():
+    nvm = NVM()
+    a = nvm.alloc(3 * LINE)
+    nvm.pwb(a, 3 * LINE)                      # contiguous: 3 line flushes
+    assert nvm.counters["pwb"] == 3
+
+
+def test_crash_resets_volatile_to_durable():
+    nvm = NVM()
+    a = nvm.alloc(1)
+    nvm.write(a, 5)
+    nvm.pwb(a)
+    nvm.psync()
+    nvm.write(a, 9)                           # dirty, never pwb'd
+    nvm.crash()
+    assert nvm.read(a) == 5
+
+
+def test_nop_flags():
+    nvm = NVM(pwb_nop=True)
+    a = nvm.alloc(1)
+    nvm.write(a, 3)
+    nvm.pwb(a)
+    nvm.psync()
+    assert nvm.durable_read(a) == 0           # pwbs were no-ops
+    nvm2 = NVM(psync_nop=True)
+    b = nvm2.alloc(1)
+    nvm2.write(b, 3)
+    nvm2.pwb(b)
+    nvm2.psync()
+    assert nvm2.durable_read(b) == 0
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.sampled_from(["w", "pwb", "fence", "sync"]),
+                min_size=1, max_size=40),
+       st.integers(0, 2 ** 31 - 1))
+def test_property_durable_is_epoch_prefix(ops, seed):
+    """After a crash, the durable value of a cell is some value it held
+    at a pwb point, and psync'd values always survive."""
+    nvm = NVM()
+    a = nvm.alloc(1)
+    val = 0
+    pwbed_values = [0]
+    synced_value = 0
+    for op in ops:
+        if op == "w":
+            val += 1
+            nvm.write(a, val)
+        elif op == "pwb":
+            nvm.pwb(a)
+            pwbed_values.append(val)
+        elif op == "fence":
+            nvm.pfence()
+        else:
+            nvm.psync()
+            synced_value = pwbed_values[-1]
+    nvm.crash(rng=random.Random(seed))
+    got = nvm.durable_read(a)
+    assert got in pwbed_values
+    assert got >= synced_value                # psync'd writes survive

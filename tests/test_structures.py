@@ -1,0 +1,186 @@
+"""Recoverable stacks/queues/heap + baselines (paper Section 5)."""
+
+import random
+import threading
+
+import pytest
+
+from repro.core import NVM
+from repro.structures import (DFCStack, DurableMSQueue, PBHeap, PBQueue,
+                              PBStack, PWFQueue, PWFStack)
+
+N = 5
+OPS = 80
+
+
+def _pairs_workload(push, pop, drain):
+    pushed, popped = [[] for _ in range(N)], [[] for _ in range(N)]
+
+    def worker(p):
+        seq = 0
+        rng = random.Random(p)
+        for i in range(OPS):
+            v = p * 100000 + i
+            seq += 1
+            push(p, v, seq)
+            pushed[p].append(v)
+            for _ in range(rng.randint(0, 25)):
+                pass
+            seq += 1
+            r = pop(p, seq)
+            if r is not None:
+                popped[p].append(r)
+    ts = [threading.Thread(target=worker, args=(p,)) for p in range(N)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    all_pushed = sorted(v for vs in pushed for v in vs)
+    all_popped = [v for vs in popped for v in vs]
+    rest = list(drain())
+    assert sorted(all_popped + rest) == all_pushed      # no loss, no dup
+
+
+@pytest.mark.parametrize("cls,kwargs", [
+    (PBStack, {}), (PBStack, {"elimination": False}),
+    (PBStack, {"recycle": False}), (PWFStack, {}),
+    (PWFStack, {"elimination": False}),
+])
+def test_stack_no_loss_no_dup(cls, kwargs):
+    nvm = NVM(1 << 21)
+    s = cls(nvm, N, **kwargs)
+    _pairs_workload(s.push, s.pop, s.drain)
+
+
+@pytest.mark.parametrize("cls,kwargs", [
+    (PBQueue, {}), (PBQueue, {"recycle": False}), (PWFQueue, {}),
+])
+def test_queue_no_loss_no_dup(cls, kwargs):
+    nvm = NVM(1 << 21)
+    q = cls(nvm, N, **kwargs)
+    _pairs_workload(q.enqueue, q.dequeue, q.drain)
+
+
+@pytest.mark.parametrize("cls", [PBQueue, PWFQueue, DurableMSQueue])
+def test_queue_fifo(cls):
+    nvm = NVM()
+    q = cls(nvm, 2)
+    seq = 0
+    for i in range(20):
+        seq += 1
+        q.enqueue(0, i, seq)
+    outs = []
+    for _ in range(20):
+        seq += 1
+        outs.append(q.dequeue(0, seq))
+    assert outs == list(range(20))
+
+
+@pytest.mark.parametrize("cls", [PBStack, PWFStack, DFCStack])
+def test_stack_lifo(cls):
+    nvm = NVM()
+    s = cls(nvm, 2)
+    seq = 0
+    for i in range(10):
+        seq += 1
+        if cls is DFCStack:
+            s.op(0, "PUSH", i, seq)
+        else:
+            s.push(0, i, seq)
+    outs = []
+    for _ in range(10):
+        seq += 1
+        outs.append(s.op(0, "POP", None, seq) if cls is DFCStack
+                    else s.pop(0, seq))
+    assert outs == list(range(9, -1, -1))
+
+
+def test_pop_empty_returns_none():
+    nvm = NVM()
+    s = PBStack(nvm, 2)
+    assert s.pop(0, 1) is None
+    q = PBQueue(nvm, 2)
+    assert q.dequeue(0, 1) is None
+
+
+def test_heap_sorts():
+    nvm = NVM()
+    h = PBHeap(nvm, 2, capacity=128)
+    keys = random.Random(0).sample(range(1000), 60)
+    seq = 0
+    for k in keys:
+        seq += 1
+        h.insert(0, k, seq)
+    seq += 1
+    assert h.get_min(0, seq) == min(keys)
+    outs = []
+    for _ in keys:
+        seq += 1
+        outs.append(h.delete_min(0, seq))
+    assert outs == sorted(keys)
+
+
+def test_heap_threaded():
+    nvm = NVM()
+    h = PBHeap(nvm, N, capacity=N * OPS + 1)
+    inserted = [[] for _ in range(N)]
+    removed = [[] for _ in range(N)]
+
+    def worker(p):
+        seq = 0
+        rng = random.Random(p)
+        for i in range(40):
+            k = rng.randint(0, 10 ** 6)
+            seq += 1
+            if h.insert(p, k, seq):
+                inserted[p].append(k)
+            seq += 1
+            r = h.delete_min(p, seq)
+            if r is not None:
+                removed[p].append(r)
+    ts = [threading.Thread(target=worker, args=(p,)) for p in range(N)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    all_in = sorted(k for ks in inserted for k in ks)
+    all_out = [k for ks in removed for k in ks]
+    rest = []
+    seq = 10 ** 6
+    while True:
+        seq += 1
+        r = h.delete_min(0, seq)
+        if r is None:
+            break
+        rest.append(r)
+    assert sorted(all_out + rest) == all_in
+
+
+def test_stack_recycling_reuses_nodes():
+    nvm = NVM()
+    s = PBStack(nvm, 2, recycle=True, chunk_nodes=4)
+    seq = 1
+    s.push(0, 0, seq)
+    first_chunk_limit = s.pool.chunks._limit[0]
+    seq += 1
+    s.pop(0, seq)
+    for i in range(50):                      # push/pop far beyond a chunk
+        seq += 1
+        s.push(0, i, seq)
+        seq += 1
+        s.pop(0, seq)
+    # recycling kept allocation inside the FIRST chunk
+    assert s.pool.chunks._limit[0] == first_chunk_limit
+    assert len(s.pool.recycler) >= 1
+
+
+def test_queue_oldtail_guard():
+    """A dequeuer never observes a value whose enqueue round has not yet
+    published oldTail (single-threaded: oldTail always caught up, so
+    values flow; the guard logic is exercised under threads in
+    test_queue_no_loss_no_dup)."""
+    nvm = NVM()
+    q = PBQueue(nvm, 2)
+    q.enqueue(0, "a", 1)
+    assert q.old_tail != q.dummy
+    assert q.dequeue(0, 2) == "a"
