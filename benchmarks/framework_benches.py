@@ -5,6 +5,9 @@ training/serving runtime (beyond the paper's own tables).
   per-host scheme: psyncs per round and wall time.
 * serving_bench — combining batcher vs a lock-per-request server on the
   same toy model: throughput + persistence ops per request.
+* structure_matrix_bench — every (kind, protocol) registry entry under
+  the same threaded workload via the unified runtime/handle API:
+  throughput + persistence ops per op, protocols iterated generically.
 """
 
 from __future__ import annotations
@@ -15,6 +18,7 @@ from typing import Any, Dict, List
 
 import numpy as np
 
+from repro.api import CombiningRuntime, entries
 from repro.persist.sharded import (NaiveShardedCheckpointer,
                                    ShardedCheckpointer)
 from repro.persist.store import MemStore
@@ -22,6 +26,43 @@ from repro.serving.engine import CombiningEngine
 
 
 FSYNC_LATENCY = 2e-3      # modeled storage fsync cost per psync
+
+
+def structure_matrix_bench(kinds=("queue", "stack"), n_threads: int = 4,
+                           ops_per_thread: int = 300) -> List[Dict[str, Any]]:
+    """One workload, every protocol: the registry makes the paper's
+    Section 6 comparison a loop instead of a class list."""
+    out = []
+    for kind in kinds:
+        for k, proto in entries(kind):
+            rt = CombiningRuntime(n_threads=n_threads)
+            obj = rt.make(kind, proto)
+
+            def worker(p):
+                b = rt.attach(p).bind(obj)
+                add = b.enqueue if kind == "queue" else b.push
+                rem = b.dequeue if kind == "queue" else b.pop
+                for i in range(ops_per_thread):
+                    add(p * 1000000 + i)
+                    rem()
+
+            ts = [threading.Thread(target=worker, args=(p,))
+                  for p in range(n_threads)]
+            t0 = time.perf_counter()
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join()
+            el = time.perf_counter() - t0
+            total = 2 * n_threads * ops_per_thread
+            c = rt.nvm.counters
+            out.append({"name": f"{kind}/{proto}",
+                        "us_per_op": el / total * 1e6,
+                        "ops_per_s": total / el,
+                        "pwb_per_op": c["pwb"] / total,
+                        "pfence_per_op": c["pfence"] / total,
+                        "psync_per_op": c["psync"] / total})
+    return out
 
 
 def checkpoint_bench(n_hosts: int = 8, rounds: int = 20,

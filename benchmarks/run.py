@@ -54,6 +54,11 @@ def main() -> None:
                    f"reads/op={r['reads_per_op']:.2f};"
                    f"writes/op={r['writes_per_op']:.2f}")
 
+    rows = framework_benches.structure_matrix_bench()
+    print_rows("Framework — protocol matrix via the unified runtime API",
+               rows)
+    csv += csv_rows(rows, "matrix")
+
     rows = framework_benches.checkpoint_bench()
     print_rows("Framework — sharded checkpoint commit (combining vs naive)",
                rows)

@@ -1,8 +1,14 @@
 """Quickstart: the paper's recoverable combining in 60 seconds.
 
-Builds a recoverable FIFO queue (PBQueue) on simulated NVMM, runs
-concurrent producers/consumers, crashes the "machine" mid-flight, and
-recovers detectably — every in-flight operation is applied exactly once.
+Builds a recoverable FIFO queue on simulated NVMM through the unified
+``CombiningRuntime`` + handle API, runs concurrent producers/consumers,
+crashes the "machine" mid-combining, and recovers detectably — every
+in-flight operation is applied exactly once.
+
+Then the headline: the SAME four-line workload script (attach -> ops ->
+crash -> recover -> verify) runs unmodified over every queue/stack
+protocol in the registry — PBcomb, PWFcomb, the lock/undo-log baselines,
+DFC, and the durable MS queue.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,53 +19,64 @@ import threading
 
 sys.path.insert(0, "src")
 
-from repro.core import NVM, SimulatedCrash
-from repro.core.pbcomb import RequestRec
-from repro.structures import PBQueue
+from repro.api import CombiningRuntime, entries
+from repro.core import SimulatedCrash
 
 
 def main():
-    nvm = NVM(1 << 20)
-    q = PBQueue(nvm, n_threads=4)
+    rt = CombiningRuntime(n_threads=4)
+    q = rt.make("queue", "pbcomb")
 
     # -- concurrent producers/consumers --------------------------------
     def worker(p):
-        seq = 0
+        bq = rt.attach(p).bind(q)          # handle owns thread id + seqs
         for i in range(50):
-            seq += 1
-            q.enqueue(p, f"item-{p}-{i}", seq)
-            seq += 1
-            q.dequeue(p, seq)
+            bq.enqueue(f"item-{p}-{i}")
+            bq.dequeue()
 
     ts = [threading.Thread(target=worker, args=(p,)) for p in range(4)]
     for t in ts:
         t.start()
     for t in ts:
         t.join()
+    nvm = rt.nvm
     print(f"400 ops done; persistence cost: {nvm.counters['pwb']} pwbs, "
           f"{nvm.counters['psync']} psyncs "
           f"({nvm.counters['pwb'] / 400:.1f} pwbs/op)")
 
     # -- crash mid-combining -------------------------------------------
     for p in range(4):
-        q.enq.request[p] = RequestRec(
-            "ENQ", f"inflight-{p}", 1 - q.enq.request[p].activate, 1)
-    nvm.arm_crash(3, random.Random(42))      # die at the 3rd persist op
+        rt.attach(p).announce(q, "enqueue", f"inflight-{p}")
+    rt.arm_crash(3, random.Random(42))       # die at the 3rd persist op
     try:
-        q.enq._perform_request(0)
+        rt.attach(0).perform(q)
     except SimulatedCrash:
         print("CRASH mid-combining round (adversarial write-back drain)")
 
-    # -- detectable recovery --------------------------------------------
-    q.reset_volatile()                        # volatile state is gone
-    for p in range(4):
-        ret = q.recover(p, "ENQ", f"inflight-{p}", 1)
-        print(f"  recover(thread {p}) -> {ret}")
-    content = q.drain()
+    # -- detectable recovery: ONE call for the whole machine ------------
+    replies = rt.recover()
+    for (name, p), ret in sorted(replies.items()):
+        print(f"  recover({name}, thread {p}) -> {ret}")
+    content = q.snapshot()
     inflight = [v for v in content if str(v).startswith("inflight")]
     assert sorted(inflight) == [f"inflight-{p}" for p in range(4)]
     print(f"recovered queue has all 4 in-flight items exactly once: "
-          f"{inflight}")
+          f"{inflight}\n")
+
+    # -- the universal 4-line script, every queue/stack protocol --------
+    for kind, proto in entries("queue") + entries("stack"):
+        rt2 = CombiningRuntime(n_threads=2)
+        obj = rt2.make(kind, proto)
+        b = rt2.attach(0).bind(obj)
+        add = b.enqueue if kind == "queue" else b.push
+        for i in range(3):                                   # 1: ops
+            add(i)
+        pre = obj.snapshot()
+        rt2.crash(random.Random(1))                          # 2: crash
+        rt2.recover()                                        # 3: recover
+        assert obj.snapshot() == pre                         # 4: verify
+        print(f"  {kind:6s} x {proto:12s}: state intact across "
+              f"crash+recover ({pre})")
 
 
 if __name__ == "__main__":

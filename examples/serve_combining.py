@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import CombiningRuntime
 from repro.configs import ARCHS
 from repro.models import decode_step, init_params, prefill
 from repro.serving.engine import CombiningEngine
@@ -48,10 +49,13 @@ def main():
         nxt = np.asarray(jnp.argmax(logits, -1))
         return [int(t) for t in nxt[:len(last)]]
 
+    # The engine announces through a shared CombiningRuntime: the same
+    # board/recovery plumbing every recoverable structure uses.
+    rt = CombiningRuntime(n_threads=FIXED_B)
     eng = CombiningEngine(FIXED_B, prefill_batch_fn=prefill_batch,
                           decode_batch_fn=decode_batch,
                           n_kv_slots=FIXED_B, max_batch=FIXED_B,
-                          eos_token=-1)
+                          eos_token=-1, runtime=rt)
     eng.start()
 
     results = {}

@@ -1,0 +1,34 @@
+"""repro.api — the unified runtime/handle surface over every recoverable
+structure (the paper's "any data structure from its sequential
+implementation", as one API instead of one calling convention per
+class).
+
+    from repro.api import CombiningRuntime, make_recoverable
+
+    rt = CombiningRuntime(n_threads=4)
+    q = rt.make("queue", "pwfcomb")      # any (kind, protocol) pair
+    h = rt.attach(0)                     # per-thread handle: owns seqs
+    bq = h.bind(q)
+    bq.enqueue(1); bq.dequeue()
+    rt.crash(); rt.recover()             # machine-wide, one call each
+
+The old per-structure conventions (``PBComb.op(p, func, args, seq)``,
+``PBQueue.enqueue(p, value, seq)``, manual ``reset_volatile`` +
+``recover`` dances) remain as thin deprecated shims for one PR cycle —
+see DESIGN.md for the migration table.
+"""
+
+from .adapters import OpSpec, StructureAdapter
+from .board import AnnounceBoard, Announcement
+from .handle import (Bound, BoundCounter, BoundHeap, BoundQueue,
+                     BoundStack, Handle)
+from .registry import entries, get_adapter, kinds, protocols_for
+from .runtime import CombiningRuntime, RecoverableObject, make_recoverable
+
+__all__ = [
+    "AnnounceBoard", "Announcement",
+    "Bound", "BoundCounter", "BoundHeap", "BoundQueue", "BoundStack",
+    "CombiningRuntime", "Handle", "OpSpec", "RecoverableObject",
+    "StructureAdapter", "entries", "get_adapter", "kinds",
+    "make_recoverable", "protocols_for",
+]

@@ -1,0 +1,312 @@
+"""Structure adapters: one calling convention over every recoverable
+structure and baseline.
+
+The paper's claim is a *universal* recipe — any sequential data
+structure becomes a recoverable concurrent one — but the seed exposed
+each implementation through an ad-hoc convention (``PBComb.op(p, func,
+args, seq)``, ``PBQueue.enqueue(p, value, seq)``, per-class recovery
+dances).  An adapter normalizes exactly four things per structure:
+
+  * **ops** — sugar-name -> (protocol func tag, seq group, default arg),
+    e.g. ``enqueue -> ("ENQ", "enq", None)``.  The *seq group* matters
+    for the split-instance queues: detectability parity is per combining
+    instance, so the runtime keeps one seq counter per (object, group).
+  * **invoke / recover** — the normal path and the paper's Recover path
+    with identical signatures.
+  * **reset_volatile / snapshot** — post-crash volatile rebuild and a
+    comparable view of the logical state (for crash/recovery checks).
+  * **announce / perform** — optional (detectable combining protocols
+    only): split an op into its announcement and the combining phase so
+    crash-point tests can enumerate crashes *inside* a round that is
+    serving many announced requests.
+
+Adapters are stateless; all state lives in the wrapped core object.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+from ..core.atomics import Counters
+from ..core.nvm import NVM
+from ..core.objects import (FetchAddObject, HeapObject, SeqQueueObject,
+                            SeqStackObject)
+from ..core.pbcomb import PBComb, RequestRec
+from ..core.pwfcomb import PWFComb
+from ..structures import (DFCStack, DurableMSQueue, LockDirectObject,
+                          LockUndoLogObject, PBHeap, PBQueue, PBStack,
+                          PWFQueue, PWFStack)
+
+
+class OpSpec(NamedTuple):
+    func: str               # protocol func tag ("ENQ", "PUSH", "FAA", ...)
+    group: str              # seq-counter group (parity is per instance)
+    default: Any = None     # args value for zero-arg sugar ("read" -> 0)
+
+
+QUEUE_OPS = {"enqueue": OpSpec("ENQ", "enq"),
+             "dequeue": OpSpec("DEQ", "deq")}
+STACK_OPS = {"push": OpSpec("PUSH", "main"),
+             "pop": OpSpec("POP", "main")}
+HEAP_OPS = {"insert": OpSpec("HINSERT", "main"),
+            "delete_min": OpSpec("HDELETEMIN", "main"),
+            "get_min": OpSpec("HGETMIN", "main")}
+COUNTER_OPS = {"fetch_add": OpSpec("FAA", "main"),
+               "read": OpSpec("FAA", "main", 0)}
+
+
+class StructureAdapter:
+    """Base adapter: subclasses set ``kind``/``protocol``/``OPS`` and
+    implement the structure-specific pieces."""
+
+    kind: str = ""
+    protocol: str = ""
+    detectable: bool = False     # exactly-once recovery of in-flight ops
+    can_announce: bool = False   # announce/perform split available
+    OPS: Dict[str, OpSpec] = {}
+
+    # ---------------- construction ------------------------------------ #
+    def create(self, nvm: NVM, n_threads: int,
+               counters: Optional[Counters] = None, **kw) -> Any:
+        raise NotImplementedError
+
+    # ---------------- normal + recovery paths ------------------------- #
+    def _spec(self, op: str) -> OpSpec:
+        try:
+            return self.OPS[op]
+        except KeyError:
+            raise ValueError(
+                f"{self.kind}/{self.protocol} has no op {op!r}; "
+                f"supported: {sorted(self.OPS)}") from None
+
+    def _args(self, op: str, args: Any) -> Any:
+        return self._spec(op).default if args is None else args
+
+    def invoke(self, core: Any, p: int, op: str, args: Any,
+               seq: int) -> Any:
+        raise NotImplementedError
+
+    def recover(self, core: Any, p: int, op: str, args: Any,
+                seq: int) -> Any:
+        spec = self._spec(op)
+        return core.recover(p, spec.func, self._args(op, args), seq)
+
+    def recover_batch(self, core: Any, p: int,
+                      calls: List[Tuple[str, Any, int]]) -> List[Any]:
+        return [self.recover(core, p, op, args, seq)
+                for op, args, seq in calls]
+
+    # ---------------- optional paths ----------------------------------- #
+    invoke_batch = None   # type: Optional[Any]  # set by batching adapters
+
+    def announce(self, core: Any, p: int, op: str, args: Any,
+                 seq: int) -> None:
+        raise NotImplementedError(f"{self.protocol} cannot pre-announce")
+
+    def perform(self, core: Any, p: int, op: str) -> Any:
+        raise NotImplementedError(f"{self.protocol} cannot pre-announce")
+
+    # ---------------- crash plumbing ----------------------------------- #
+    def reset_volatile(self, core: Any) -> None:
+        core.reset_volatile()
+
+    def snapshot(self, core: Any) -> Any:
+        raise NotImplementedError
+
+
+# --------------------------------------------------------------------- #
+# Combining-protocol adapters (PBComb / PWFComb families)               #
+# --------------------------------------------------------------------- #
+class _CombiningAdapter(StructureAdapter):
+    """Shared logic for cores built from PBComb/PWFComb instances."""
+
+    detectable = True
+    can_announce = True
+
+    def _instance(self, core: Any, op: str) -> Any:
+        """The combining instance serving ``op`` (split queues override)."""
+        return core
+
+    def invoke(self, core, p, op, args, seq):
+        spec = self._spec(op)
+        return self._instance(core, op).op(p, spec.func,
+                                           self._args(op, args), seq)
+
+    def announce(self, core, p, op, args, seq):
+        spec = self._spec(op)
+        inst = self._instance(core, op)
+        inst.request[p] = RequestRec(spec.func, self._args(op, args),
+                                     1 - inst.request[p].activate, 1)
+
+    def perform(self, core, p, op):
+        return self._instance(core, op)._perform_request(p)
+
+
+def _pb_st(core: PBComb) -> int:
+    return core._st_base(core._mindex())
+
+
+def _pwf_st(core: PWFComb) -> int:
+    return core._base(core.S.load())
+
+
+class PBQueueAdapter(_CombiningAdapter):
+    kind, protocol, OPS = "queue", "pbcomb", QUEUE_OPS
+
+    def create(self, nvm, n_threads, counters=None, **kw):
+        return PBQueue(nvm, n_threads, counters=counters, **kw)
+
+    def _instance(self, core, op):
+        return core.enq if op == "enqueue" else core.deq
+
+    def snapshot(self, core):
+        return core.drain()
+
+
+class PWFQueueAdapter(PBQueueAdapter):
+    protocol = "pwfcomb"
+
+    def create(self, nvm, n_threads, counters=None, **kw):
+        return PWFQueue(nvm, n_threads, counters=counters, **kw)
+
+
+class PBStackAdapter(_CombiningAdapter):
+    kind, protocol, OPS = "stack", "pbcomb", STACK_OPS
+
+    def create(self, nvm, n_threads, counters=None, **kw):
+        return PBStack(nvm, n_threads, counters=counters, **kw)
+
+    def snapshot(self, core):
+        return core.drain()
+
+
+class PWFStackAdapter(PBStackAdapter):
+    protocol = "pwfcomb"
+
+    def create(self, nvm, n_threads, counters=None, **kw):
+        return PWFStack(nvm, n_threads, counters=counters, **kw)
+
+
+class PBHeapAdapter(_CombiningAdapter):
+    kind, protocol, OPS = "heap", "pbcomb", HEAP_OPS
+
+    def create(self, nvm, n_threads, counters=None, capacity=256, **kw):
+        return PBHeap(nvm, n_threads, capacity=capacity, counters=counters)
+
+    def snapshot(self, core):
+        base = _pb_st(core)
+        size = core.nvm.read(base)
+        return sorted(core.nvm.read(base + 1 + i) for i in range(size))
+
+
+class PWFHeapAdapter(_CombiningAdapter):
+    """The wait-free heap the paper leaves implicit: HeapObject is a
+    SeqObject, so PWFComb transforms it exactly like PBComb does."""
+
+    kind, protocol, OPS = "heap", "pwfcomb", HEAP_OPS
+
+    def create(self, nvm, n_threads, counters=None, capacity=256, **kw):
+        return PWFComb(nvm, n_threads, HeapObject(capacity),
+                       counters=counters, **kw)
+
+    def snapshot(self, core):
+        base = _pwf_st(core)
+        size = core.nvm.read(base)
+        return sorted(core.nvm.read(base + 1 + i) for i in range(size))
+
+
+class PBCounterAdapter(_CombiningAdapter):
+    kind, protocol, OPS = "counter", "pbcomb", COUNTER_OPS
+
+    def create(self, nvm, n_threads, counters=None, **kw):
+        return PBComb(nvm, n_threads, FetchAddObject(), counters=counters)
+
+    def snapshot(self, core):
+        return core.nvm.read(_pb_st(core))
+
+
+class PWFCounterAdapter(_CombiningAdapter):
+    kind, protocol, OPS = "counter", "pwfcomb", COUNTER_OPS
+
+    def create(self, nvm, n_threads, counters=None, **kw):
+        return PWFComb(nvm, n_threads, FetchAddObject(),
+                       counters=counters, **kw)
+
+    def snapshot(self, core):
+        return core.nvm.read(_pwf_st(core))
+
+
+# --------------------------------------------------------------------- #
+# Baseline adapters (Section 6 competitors)                             #
+# --------------------------------------------------------------------- #
+_SEQ_OBJ = {"queue": SeqQueueObject, "stack": SeqStackObject,
+            "heap": HeapObject, "counter": FetchAddObject}
+_KIND_OPS = {"queue": QUEUE_OPS, "stack": STACK_OPS,
+             "heap": HEAP_OPS, "counter": COUNTER_OPS}
+
+
+class LockAdapter(StructureAdapter):
+    """Coarse-lock baselines over any SeqObject (direct or undo-log)."""
+
+    detectable = False
+
+    def __init__(self, kind: str, undo: bool) -> None:
+        self.kind = kind
+        self.protocol = "lock-undo" if undo else "lock-direct"
+        self.OPS = _KIND_OPS[kind]
+        self._cls = LockUndoLogObject if undo else LockDirectObject
+        self._obj_cls = _SEQ_OBJ[kind]
+
+    def create(self, nvm, n_threads, counters=None, capacity=1024, **kw):
+        obj = self._obj_cls() if self._obj_cls is FetchAddObject \
+            else self._obj_cls(capacity)
+        return self._cls(nvm, n_threads, obj)
+
+    def invoke(self, core, p, op, args, seq):
+        spec = self._spec(op)
+        return core.op(p, spec.func, self._args(op, args), seq)
+
+    def snapshot(self, core):
+        nvm, base, obj = core.nvm, core.st_base, core.obj
+        if hasattr(obj, "snapshot"):
+            return obj.snapshot(nvm, base)
+        if self.kind == "counter":
+            return nvm.read(base)
+        size = nvm.read(base)                    # HeapObject layout
+        return sorted(nvm.read(base + 1 + i) for i in range(size))
+
+
+class DurableMSQueueAdapter(StructureAdapter):
+    kind, protocol, OPS = "queue", "durable-ms", QUEUE_OPS
+    detectable = False
+
+    def create(self, nvm, n_threads, counters=None, **kw):
+        return DurableMSQueue(nvm, n_threads, **kw)
+
+    def invoke(self, core, p, op, args, seq):
+        if op == "enqueue":
+            return core.enqueue(p, self._args(op, args), seq)
+        return core.dequeue(p, seq)
+
+    def snapshot(self, core):
+        return core.drain()
+
+
+class DFCStackAdapter(StructureAdapter):
+    kind, protocol, OPS = "stack", "dfc", STACK_OPS
+    # DFC persists announcements and done-marks, and recover() uses them
+    # as a fast path — but the combiner psyncs once per ROUND, so under
+    # the explicit-epoch model a mid-round crash can drain the structural
+    # update while dropping the done-mark (or vice versa).  Exactly-once
+    # replay of in-flight ops is therefore not guaranteed; don't claim it.
+    detectable = False
+
+    def create(self, nvm, n_threads, counters=None, **kw):
+        return DFCStack(nvm, n_threads, **kw)
+
+    def invoke(self, core, p, op, args, seq):
+        spec = self._spec(op)
+        return core.op(p, spec.func, self._args(op, args), seq)
+
+    def snapshot(self, core):
+        return core.drain()

@@ -1,0 +1,182 @@
+"""Per-thread handles: the paper's "system support" made explicit.
+
+Section 2 of the paper assumes the system hands every operation a
+per-thread *consecutive* sequence number and re-supplies the in-flight
+(func, args, seq) to the recovery function after a crash.  A ``Handle``
+is that system: it owns the seq counters (one per (object, seq-group) —
+parity is per combining instance, so the split queues get independent
+enqueue/dequeue counters), records every in-flight call with the runtime
+so ``CombiningRuntime.recover`` can replay it, and exposes the typed
+sugar (``q.enqueue(x)``, ``stack.pop()``, ``heap.insert(k)``) so callers
+stop hand-threading thread ids and seq numbers.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Sequence, Tuple
+
+from ..core.nvm import SimulatedCrash
+
+BATCH = "__batch__"   # runtime in-flight marker for invoke_many records
+
+
+class Handle:
+    """One logical thread attached to a CombiningRuntime."""
+
+    def __init__(self, runtime: Any, tid: int) -> None:
+        self.runtime = runtime
+        self.tid = tid
+        self._seq: Dict[Tuple[str, str], int] = {}
+
+    # ------------------ seq management -------------------------------- #
+    def _next_seq(self, obj: Any, op: str) -> int:
+        group = obj.adapter._spec(op).group
+        key = (obj.name, group)
+        self._seq[key] = self._seq.get(key, 0) + 1
+        return self._seq[key]
+
+    @staticmethod
+    def _norm(args: tuple) -> Any:
+        if not args:
+            return None
+        if len(args) == 1:
+            return args[0]
+        return tuple(args)
+
+    # ------------------ invocation ------------------------------------ #
+    def invoke(self, obj: Any, op: str, *args: Any) -> Any:
+        """Run one operation; the runtime replays it on recovery if a
+        crash lands mid-call."""
+        a = self._norm(args)
+        seq = self._next_seq(obj, op)
+        key = (obj.name, self.tid)
+        self.runtime._inflight[key] = (op, a, seq)
+        try:
+            ret = obj.adapter.invoke(obj.core, self.tid, op, a, seq)
+        except SimulatedCrash:
+            raise                       # stays in-flight -> replayed
+        except BaseException:
+            self.runtime._inflight.pop(key, None)
+            raise
+        self.runtime._inflight.pop(key, None)
+        return ret
+
+    def invoke_many(self, calls: Sequence[Sequence[Any]]) -> List[Any]:
+        """Batched invocation: ``calls`` is ``[(obj, op, *args), ...]``.
+
+        When every call targets the same object and its adapter supports
+        a batch path (``invoke_batch``), all calls are announced together
+        and served by ONE combining round (one contiguous persist, one
+        psync) — this is the path the serving engine's completion log
+        rides on.  Otherwise the calls run sequentially; batching then
+        comes from cross-thread combining, as in the paper.
+        """
+        calls = [tuple(c) for c in calls]
+        if not calls:
+            return []
+        first = calls[0][0]
+        same = all(c[0] is first for c in calls)
+        if same and first.adapter.invoke_batch is not None:
+            batch = [(c[1], self._norm(c[2:]), self._next_seq(first, c[1]))
+                     for c in calls]
+            key = (first.name, self.tid)
+            self.runtime._inflight[key] = (BATCH, batch, 0)
+            try:
+                rets = first.adapter.invoke_batch(first.core, self.tid,
+                                                  batch)
+            except SimulatedCrash:
+                raise
+            except BaseException:
+                self.runtime._inflight.pop(key, None)
+                raise
+            self.runtime._inflight.pop(key, None)
+            return rets
+        return [self.invoke(c[0], c[1], *c[2:]) for c in calls]
+
+    # ------------------ announce / perform ---------------------------- #
+    def announce(self, obj: Any, op: str, *args: Any) -> int:
+        """Publish the request without serving it (detectable combining
+        protocols only).  Used by crash tests to stage a round serving
+        many announced requests; returns the seq the runtime will replay
+        with."""
+        a = self._norm(args)
+        seq = self._next_seq(obj, op)
+        obj.adapter.announce(obj.core, self.tid, op, a, seq)
+        self.runtime._inflight[(obj.name, self.tid)] = (op, a, seq)
+        return seq
+
+    def perform(self, obj: Any) -> Any:
+        """Serve this handle's announced request (possibly combining
+        every other announced request along the way)."""
+        key = (obj.name, self.tid)
+        if key not in self.runtime._inflight:
+            raise RuntimeError(f"nothing announced on {obj.name} "
+                               f"by thread {self.tid}")
+        op, _a, _seq = self.runtime._inflight[key]
+        ret = obj.adapter.perform(obj.core, self.tid, op)
+        self.runtime._inflight.pop(key, None)
+        return ret
+
+    # ------------------ typed sugar ----------------------------------- #
+    def bind(self, obj: Any) -> "Bound":
+        return bind(self, obj)
+
+
+class Bound:
+    """Base typed proxy: an object + the handle operating on it."""
+
+    def __init__(self, handle: Handle, obj: Any) -> None:
+        self._h = handle
+        self._obj = obj
+
+    def snapshot(self) -> Any:
+        return self._obj.snapshot()
+
+
+class BoundQueue(Bound):
+    def enqueue(self, value: Any) -> Any:
+        return self._h.invoke(self._obj, "enqueue", value)
+
+    def dequeue(self) -> Any:
+        return self._h.invoke(self._obj, "dequeue")
+
+    def drain(self) -> List[Any]:
+        return self._obj.snapshot()
+
+
+class BoundStack(Bound):
+    def push(self, value: Any) -> Any:
+        return self._h.invoke(self._obj, "push", value)
+
+    def pop(self) -> Any:
+        return self._h.invoke(self._obj, "pop")
+
+    def drain(self) -> List[Any]:
+        return self._obj.snapshot()
+
+
+class BoundHeap(Bound):
+    def insert(self, key: Any) -> Any:
+        return self._h.invoke(self._obj, "insert", key)
+
+    def delete_min(self) -> Any:
+        return self._h.invoke(self._obj, "delete_min")
+
+    def get_min(self) -> Any:
+        return self._h.invoke(self._obj, "get_min")
+
+
+class BoundCounter(Bound):
+    def fetch_add(self, delta: int = 1) -> Any:
+        return self._h.invoke(self._obj, "fetch_add", delta)
+
+    def read(self) -> Any:
+        return self._h.invoke(self._obj, "read")
+
+
+_BOUND_BY_KIND = {"queue": BoundQueue, "stack": BoundStack,
+                  "heap": BoundHeap, "counter": BoundCounter}
+
+
+def bind(handle: Handle, obj: Any) -> Bound:
+    return _BOUND_BY_KIND.get(obj.kind, Bound)(handle, obj)

@@ -1,0 +1,64 @@
+"""Protocol registry: the (kind x protocol) matrix behind
+``make_recoverable``.
+
+Kinds:      queue | stack | heap | counter
+Protocols:  pbcomb | pwfcomb | lock-direct | lock-undo | dfc | durable-ms
+
+Not every cell exists (DFC is a stack algorithm, the durable MS queue is
+a queue); ``entries()`` enumerates the supported pairs so benchmarks and
+tests iterate protocols generically instead of hard-coding class lists.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Tuple
+
+from .adapters import (DFCStackAdapter, DurableMSQueueAdapter, LockAdapter,
+                       PBCounterAdapter, PBHeapAdapter, PBQueueAdapter,
+                       PBStackAdapter, PWFCounterAdapter, PWFHeapAdapter,
+                       PWFQueueAdapter, PWFStackAdapter, StructureAdapter)
+
+# (kind, protocol) -> zero-arg adapter factory
+REGISTRY: Dict[Tuple[str, str], Callable[[], StructureAdapter]] = {
+    ("queue", "pbcomb"): PBQueueAdapter,
+    ("queue", "pwfcomb"): PWFQueueAdapter,
+    ("queue", "durable-ms"): DurableMSQueueAdapter,
+    ("queue", "lock-direct"): lambda: LockAdapter("queue", undo=False),
+    ("queue", "lock-undo"): lambda: LockAdapter("queue", undo=True),
+    ("stack", "pbcomb"): PBStackAdapter,
+    ("stack", "pwfcomb"): PWFStackAdapter,
+    ("stack", "dfc"): DFCStackAdapter,
+    ("stack", "lock-direct"): lambda: LockAdapter("stack", undo=False),
+    ("stack", "lock-undo"): lambda: LockAdapter("stack", undo=True),
+    ("heap", "pbcomb"): PBHeapAdapter,
+    ("heap", "pwfcomb"): PWFHeapAdapter,
+    ("heap", "lock-direct"): lambda: LockAdapter("heap", undo=False),
+    ("heap", "lock-undo"): lambda: LockAdapter("heap", undo=True),
+    ("counter", "pbcomb"): PBCounterAdapter,
+    ("counter", "pwfcomb"): PWFCounterAdapter,
+    ("counter", "lock-direct"): lambda: LockAdapter("counter", undo=False),
+    ("counter", "lock-undo"): lambda: LockAdapter("counter", undo=True),
+}
+
+
+def entries(kind: str = None) -> List[Tuple[str, str]]:
+    """All supported (kind, protocol) pairs, optionally filtered."""
+    return sorted(k for k in REGISTRY if kind is None or k[0] == kind)
+
+
+def kinds() -> List[str]:
+    return sorted({k for k, _ in REGISTRY})
+
+
+def protocols_for(kind: str) -> List[str]:
+    return sorted(p for k, p in REGISTRY if k == kind)
+
+
+def get_adapter(kind: str, protocol: str) -> StructureAdapter:
+    try:
+        factory = REGISTRY[(kind, protocol)]
+    except KeyError:
+        raise ValueError(
+            f"no recoverable implementation for kind={kind!r} "
+            f"protocol={protocol!r}; supported: {entries()}") from None
+    return factory()

@@ -1,0 +1,181 @@
+"""CombiningRuntime — one owner for NVM, structures, announcement
+boards, and crash/recovery.
+
+The runtime is the "machine": it owns the simulated NVMM, every
+recoverable structure living in it (registered via ``make`` /
+``register``), every announcement board handed to combiner-style
+components, and the per-thread handles.  Crashing the machine and
+recovering it is then ONE call each, for *all* registered structures at
+once:
+
+    rt = CombiningRuntime(n_threads=4)
+    q = rt.make("queue", "pbcomb")
+    s = rt.make("stack", "pwfcomb")
+    h = rt.attach(0)
+    h.bind(q).enqueue(1); h.bind(s).push(2)
+    rt.crash()            # adversarial write-back drain, volatile wiped
+    rt.recover()          # every structure reset + in-flight replayed
+
+``recover`` performs, in order: (1) disarm any pending crash countdown,
+(2) wipe every announcement board (volatile, P1), (3) rebuild each
+structure's volatile protocol state (locks, request arrays, S refs,
+pending-link redo...), (4) replay every in-flight operation recorded by
+the handles — the paper's system-support contract — returning the
+responses keyed by (object name, thread id).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+from ..core.atomics import Counters
+from ..core.nvm import NVM
+from .board import AnnounceBoard
+from .handle import BATCH, Handle, bind
+from .registry import get_adapter
+
+
+class RecoverableObject:
+    """A registered structure: core implementation + its adapter."""
+
+    def __init__(self, name: str, core: Any, adapter: Any,
+                 runtime: "CombiningRuntime") -> None:
+        self.name = name
+        self.core = core
+        self.adapter = adapter
+        self.runtime = runtime
+
+    @property
+    def kind(self) -> str:
+        return self.adapter.kind
+
+    @property
+    def protocol(self) -> str:
+        return self.adapter.protocol
+
+    @property
+    def detectable(self) -> bool:
+        return self.adapter.detectable
+
+    def snapshot(self) -> Any:
+        """Comparable view of the logical state (drain order for linked
+        structures, sorted keys for heaps, the value for counters)."""
+        return self.adapter.snapshot(self.core)
+
+    def bind(self, handle: Handle):
+        return bind(handle, self)
+
+    def __repr__(self) -> str:
+        return f"<RecoverableObject {self.name}>"
+
+
+class CombiningRuntime:
+    def __init__(self, nvm: Optional[NVM] = None, n_threads: int = 8,
+                 counters: Optional[Counters] = None,
+                 nvm_words: int = 1 << 21) -> None:
+        self.nvm = nvm
+        self.n_threads = n_threads
+        self.counters = counters
+        self._nvm_words = nvm_words
+        self.objects: Dict[str, RecoverableObject] = {}
+        self.boards: Dict[str, AnnounceBoard] = {}
+        self._handles: Dict[int, Handle] = {}
+        # (object name, tid) -> (op, args, seq) | (BATCH, calls, 0)
+        self._inflight: Dict[Tuple[str, int], Tuple[str, Any, int]] = {}
+
+    # ------------------ construction ----------------------------------- #
+    def _ensure_nvm(self) -> NVM:
+        """The NVM is created lazily: runtimes that only hand out boards
+        (e.g. the serving engine's) never allocate a memory image."""
+        if self.nvm is None:
+            self.nvm = NVM(self._nvm_words)
+        return self.nvm
+
+    def make(self, kind: str, protocol: str = "pbcomb",
+             name: Optional[str] = None, **kw) -> RecoverableObject:
+        """Create + register a recoverable structure from the registry."""
+        adapter = get_adapter(kind, protocol)
+        core = adapter.create(self._ensure_nvm(), self.n_threads,
+                              counters=self.counters, **kw)
+        if name is None:
+            base = f"{kind}/{protocol}"
+            name, i = base, 1
+            while name in self.objects:
+                i += 1
+                name = f"{base}#{i}"
+        return self.register(name, core, adapter)
+
+    def register(self, name: str, core: Any,
+                 adapter: Any) -> RecoverableObject:
+        """Register an externally built core under this runtime's crash/
+        recovery umbrella (the registry path uses this too)."""
+        if name in self.objects:
+            raise ValueError(f"object name {name!r} already registered")
+        obj = RecoverableObject(name, core, adapter, self)
+        self.objects[name] = obj
+        return obj
+
+    def board(self, name: str, n_slots: int,
+              on_announce=None) -> AnnounceBoard:
+        """A shared announcement board, reset by ``recover`` like every
+        other piece of volatile state."""
+        if name in self.boards:
+            raise ValueError(f"board name {name!r} already registered")
+        b = AnnounceBoard(n_slots, on_announce)
+        self.boards[name] = b
+        return b
+
+    def attach(self, thread_id: int) -> Handle:
+        """Per-thread handle; re-attaching returns the same handle (its
+        seq counters must survive crashes — they are the paper's
+        system-maintained consecutive sequence numbers)."""
+        if thread_id not in self._handles:
+            self._handles[thread_id] = Handle(self, thread_id)
+        return self._handles[thread_id]
+
+    # ------------------ crash simulation ------------------------------- #
+    def arm_crash(self, after_persist_ops: int, rng=None) -> None:
+        """Arm a SimulatedCrash inside protocol code (crash-point
+        enumeration); pair with ``recover``."""
+        self._ensure_nvm().arm_crash(after_persist_ops, rng)
+
+    def crash(self, rng=None) -> None:
+        """Full-machine crash: adversarial write-back drain, volatile
+        image reset to the durable one."""
+        if self.nvm is not None:
+            self.nvm.crash(rng)
+
+    def recover(self) -> Dict[Tuple[str, int], Any]:
+        """One-call recovery for everything the runtime owns.  Returns
+        the replayed in-flight responses keyed (object name, tid)."""
+        if self.nvm is not None:
+            self.nvm.disarm_crash()
+        for b in self.boards.values():
+            b.reset()
+        for obj in self.objects.values():
+            obj.adapter.reset_volatile(obj.core)
+        inflight, self._inflight = dict(self._inflight), {}
+        responses: Dict[Tuple[str, int], Any] = {}
+        for (name, tid), (op, a, seq) in inflight.items():
+            obj = self.objects.get(name)
+            if obj is None:
+                continue
+            if op == BATCH:
+                responses[(name, tid)] = obj.adapter.recover_batch(
+                    obj.core, tid, a)
+            else:
+                responses[(name, tid)] = obj.adapter.recover(
+                    obj.core, tid, op, a, seq)
+        return responses
+
+
+def make_recoverable(kind: str, protocol: str = "pbcomb", *,
+                     runtime: Optional[CombiningRuntime] = None,
+                     n_threads: int = 8, **kw) -> RecoverableObject:
+    """Factory shortcut: a recoverable ``kind`` under ``protocol``.
+
+    Without an explicit runtime a fresh one is created and reachable as
+    ``obj.runtime`` — so one-liners still get crash()/recover()/attach().
+    """
+    rt = runtime or CombiningRuntime(n_threads=n_threads)
+    return rt.make(kind, protocol, **kw)

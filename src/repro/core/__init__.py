@@ -9,7 +9,7 @@ concurrent objects.
 from .atomics import AtomicInt, AtomicRef, Counters, GLOBAL_COUNTERS
 from .nvm import LINE, NVM, SimulatedCrash
 from .objects import (AtomicFloatObject, FetchAddObject, HeapObject,
-                      SeqObject)
+                      SeqObject, SeqQueueObject, SeqStackObject)
 from .pbcomb import PBComb, RequestRec
 from .pwfcomb import PWFComb
 
@@ -17,5 +17,6 @@ __all__ = [
     "AtomicInt", "AtomicRef", "Counters", "GLOBAL_COUNTERS",
     "LINE", "NVM", "SimulatedCrash",
     "AtomicFloatObject", "FetchAddObject", "HeapObject", "SeqObject",
+    "SeqQueueObject", "SeqStackObject",
     "PBComb", "PWFComb", "RequestRec",
 ]

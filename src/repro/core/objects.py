@@ -61,6 +61,110 @@ class FetchAddObject(SeqObject):
         return v
 
 
+class SeqQueueObject(SeqObject):
+    """Bounded sequential FIFO entirely inside the StateRec.
+
+    State layout: word 0 = head index, word 1 = tail index, words
+    2..capacity+1 = ring buffer (indices grow monotonically; the slot is
+    ``index % capacity``).  Used by the lock/undo-log baselines so the
+    protocol matrix covers ``queue`` for every protocol — the linked
+    PBQueue/PWFQueue keep their node-based representation.
+    """
+
+    def __init__(self, capacity: int = 1024) -> None:
+        self.capacity = capacity
+        self.state_words = capacity + 2
+
+    def init_state(self, nvm: NVM, st_base: int) -> None:
+        nvm.write(st_base, 0)
+        nvm.write(st_base + 1, 0)
+        for i in range(self.capacity):
+            nvm.write(st_base + 2 + i, 0)
+
+    def apply(self, nvm, st_base, func, args, ctx=None):
+        head, tail = nvm.read(st_base), nvm.read(st_base + 1)
+        if func == "ENQ":
+            if tail - head >= self.capacity:
+                return False                      # full
+            nvm.write(st_base + 2 + tail % self.capacity, args)
+            nvm.write(st_base + 1, tail + 1)
+            return "ACK"
+        if func == "DEQ":
+            if head == tail:
+                return None                       # empty
+            v = nvm.read(st_base + 2 + head % self.capacity)
+            nvm.write(st_base, head + 1)
+            return v
+        raise ValueError(f"unknown queue op {func}")
+
+    def touch_plan(self, nvm: NVM, st_base: int, func: str,
+                   args: Any) -> List[Tuple[int, int]]:
+        """(offset, n_words) ranges the next ``apply`` will modify —
+        lets the lock baselines persist/log only the touched lines
+        (their documented scattered-per-op cost shape) instead of the
+        whole bounded buffer."""
+        head, tail = nvm.read(st_base), nvm.read(st_base + 1)
+        if func == "ENQ":
+            if tail - head >= self.capacity:
+                return []
+            return [(1, 1), (2 + tail % self.capacity, 1)]
+        return [] if head == tail else [(0, 1)]
+
+    def snapshot(self, nvm: NVM, st_base: int) -> List[Any]:
+        head, tail = nvm.read(st_base), nvm.read(st_base + 1)
+        return [nvm.read(st_base + 2 + i % self.capacity)
+                for i in range(head, tail)]
+
+
+class SeqStackObject(SeqObject):
+    """Bounded sequential LIFO entirely inside the StateRec.
+
+    State layout: word 0 = size, words 1..capacity = the array.  Used by
+    the lock/undo-log baselines so the protocol matrix covers ``stack``
+    for every protocol.
+    """
+
+    def __init__(self, capacity: int = 1024) -> None:
+        self.capacity = capacity
+        self.state_words = capacity + 1
+
+    def init_state(self, nvm: NVM, st_base: int) -> None:
+        nvm.write(st_base, 0)
+        for i in range(self.capacity):
+            nvm.write(st_base + 1 + i, 0)
+
+    def apply(self, nvm, st_base, func, args, ctx=None):
+        size = nvm.read(st_base)
+        if func == "PUSH":
+            if size >= self.capacity:
+                return False                      # full
+            nvm.write(st_base + 1 + size, args)
+            nvm.write(st_base, size + 1)
+            return "ACK"
+        if func == "POP":
+            if size == 0:
+                return None                       # empty
+            v = nvm.read(st_base + size)
+            nvm.write(st_base, size - 1)
+            return v
+        raise ValueError(f"unknown stack op {func}")
+
+    def touch_plan(self, nvm: NVM, st_base: int, func: str,
+                   args: Any) -> List[Tuple[int, int]]:
+        """See ``SeqQueueObject.touch_plan``."""
+        size = nvm.read(st_base)
+        if func == "PUSH":
+            if size >= self.capacity:
+                return []
+            return [(0, 1), (1 + size, 1)]
+        return [] if size == 0 else [(0, 1)]
+
+    def snapshot(self, nvm: NVM, st_base: int) -> List[Any]:
+        size = nvm.read(st_base)
+        return [nvm.read(st_base + 1 + i)
+                for i in range(size - 1, -1, -1)]   # top first
+
+
 class HeapObject(SeqObject):
     """Bounded sequential min-heap (paper Section 5, PBHEAP).
 

@@ -51,6 +51,7 @@ class PBComb:
         self.nvm = nvm
         self.n = n_threads
         self.obj = obj
+        self._counters = counters
         sw = obj.state_words
         self.state_words = sw
         self.rec_words = sw + 2 * n_threads
@@ -106,10 +107,27 @@ class PBComb:
 
     def reset_volatile(self) -> None:
         """Re-initialize volatile protocol state after a crash (the crash
-        wiped registers/caches/DRAM — Request, Lock, LockVal are volatile)."""
+        wiped registers/caches/DRAM — Request, Lock, LockVal are volatile).
+
+        The recreated lock keeps the original ``Counters`` reference so
+        synchronization-cost measurements keep accumulating in post-crash
+        benchmark phases.  Request activate bits are re-seeded from the
+        durable deactivate bits (``resync_request``) so a thread whose
+        next operation arrives through the normal ``op`` path — not
+        ``recover`` — still flips to a fresh parity."""
         self.request = [RequestRec() for _ in range(self.n)]
-        self.lock = AtomicInt(0, shared=True)
+        self.lock = AtomicInt(0, shared=True, counters=self._counters)
         self.lockval = 0
+        for p in range(self.n):
+            self.resync_request(p)
+
+    def resync_request(self, p: int) -> None:
+        """Re-seed thread p's volatile activate parity from the durable
+        deactivate bit (the paper's system hands recovery the in-flight
+        seq; for threads with no in-flight op the persisted parity is the
+        only survivor of the crash)."""
+        deact = self.nvm.read(self._deact_addr(self._mindex(), p))
+        self.request[p] = RequestRec(None, None, deact, 0)
 
     # ---------------- Algorithm 2 ------------------------------------- #
     def _perform_request(self, p: int) -> Any:

@@ -93,6 +93,7 @@ class PWFComb:
         self.nvm = nvm
         self.n = n_threads
         self.obj = obj
+        self._counters = counters
         self.backoff_enabled = backoff
         sw = obj.state_words
         self.state_words = sw
@@ -163,11 +164,23 @@ class PWFComb:
     def reset_volatile(self) -> None:
         """Post-crash volatile re-initialization.  S (non-volatile) is
         rebuilt from its durable NVM word; Request/Flush/CombRound are
-        volatile and start fresh."""
-        self.S = _SRef(self.nvm, self.s_addr, self.nvm.read(self.s_addr))
+        volatile and start fresh.  The rebuilt S keeps the original
+        ``Counters`` reference (synchronization-cost measurements must
+        keep accumulating after a crash) and request activate bits are
+        re-seeded from the published StateRec's deactivate bits."""
+        self.S = _SRef(self.nvm, self.s_addr, self.nvm.read(self.s_addr),
+                       self._counters)
         self.request = [RequestRec() for _ in range(self.n)]
         self.flush = [0] * (self.n + 1)
         self.comb_round = [[0] * self.n for _ in range(self.n + 1)]
+        for p in range(self.n):
+            self.resync_request(p)
+
+    def resync_request(self, p: int) -> None:
+        """Re-seed thread p's volatile activate parity from the durable
+        deactivate bit of the currently published StateRec."""
+        deact = self.nvm.read(self._deact_addr(self.S.load(), p))
+        self.request[p] = RequestRec(None, None, deact, 0)
 
     # ---------------- Algorithm 4 -------------------------------------- #
     def _perform_request(self, p: int) -> Any:

@@ -32,26 +32,19 @@ from __future__ import annotations
 
 import threading
 import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
+from ..api.adapters import OpSpec, StructureAdapter
+from ..api.board import AnnounceBoard, Announcement
 from . import staterec
 from .store import Store
 
 INDEX_FILE = "mindex"
 SLOT_FILES = ("staterec.0", "staterec.1")
 
-
-@dataclass
-class AnnounceRec:
-    """The paper's RequestRec: (func=persist, args=payload, activate,
-    valid) + the system-supplied seq."""
-    payload: Any = None
-    seq: int = 0
-    activate: int = 0
-    valid: int = 0
-    response: Any = None   # explicit per-request response (default: seq)
-    done_event: threading.Event = field(default_factory=threading.Event)
+# The paper's RequestRec for this component is exactly an announcement
+# slot; the dedicated dataclass became the shared AnnounceBoard record.
+AnnounceRec = Announcement
 
 
 class PBCombCheckpointer:
@@ -63,13 +56,14 @@ class PBCombCheckpointer:
         self.n = n_announcers
         self.template = payload_template
         self.lease_s = lease_s
-        # volatile protocol state (rebuilt on recovery)
-        self.requests: List[AnnounceRec] = [AnnounceRec()
-                                            for _ in range(n_announcers)]
+        # volatile protocol state (rebuilt on recovery): the shared
+        # announcement plumbing from repro.api instead of a private list
+        self._kick = threading.Event()
+        self.board = AnnounceBoard(n_announcers,
+                                   on_announce=self._kick.set)
         self._lock = threading.Lock()         # the PBComb integer lock
         self._combine_count = 0
         self._stop = threading.Event()
-        self._kick = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self._last_combine = time.monotonic()
         # mirror of the durable deactivate/returnval (refreshed on combine)
@@ -98,7 +92,7 @@ class PBCombCheckpointer:
         payload, retval, deact = staterec.unpack(data, self.template)
         self._returnval = list(retval)
         self._deactivate = list(deact)
-        self.requests = [AnnounceRec() for _ in range(self.n)]
+        self.board.reset()                    # announcements are volatile
         return payload
 
     def was_applied(self, p: int, seq: int) -> bool:
@@ -120,11 +114,7 @@ class PBCombCheckpointer:
         detectability self-heals across crashes — the paper's Recover
         sets Request[p] := <func, args, seq mod 2, 1> with the same
         convention."""
-        rec = AnnounceRec(payload=payload, seq=seq,
-                          activate=seq % 2, valid=1,
-                          response=response)
-        self.requests[p] = rec
-        self._kick.set()
+        rec = self.board.announce(p, payload, seq=seq, response=response)
         if wait:
             if not rec.done_event.wait(timeout):
                 # combiner stalled past its lease -> wait-free takeover
@@ -162,9 +152,7 @@ class PBCombCheckpointer:
         """One combining round (paper Algorithm 2 lines 14-28).  Returns
         the number of requests served."""
         with self._lock:
-            active = [(p, self.requests[p]) for p in range(self.n)
-                      if self.requests[p].valid == 1
-                      and self.requests[p].activate != self._deactivate[p]]
+            active = self.board.active_vs(self._deactivate)
             if not active:
                 self._last_combine = time.monotonic()
                 return 0
@@ -198,3 +186,54 @@ class PBCombCheckpointer:
     def stats(self) -> Dict[str, Any]:
         return {"combines": self._combine_count,
                 **dict(self.store.counters)}
+
+
+class CheckpointAdapter(StructureAdapter):
+    """Registers a ``PBCombCheckpointer`` as a runtime structure.
+
+    One op, ``record(slot, seq, response)``: announce "slot's request
+    ``seq`` completed with ``response``" into the durable response log.
+    The batched path (``Handle.invoke_many``) announces every record of
+    a round first and runs ONE combining round — one contiguous slot
+    write, one psync, for any number of completions.  This is what the
+    serving engine's completion path rides on.
+    """
+
+    kind, protocol = "log", "pbcomb"
+    detectable = True
+    OPS = {"record": OpSpec("RECORD", "main")}
+
+    def create(self, nvm, n_threads, counters=None, **kw):
+        raise NotImplementedError(
+            "build a PBCombCheckpointer explicitly and runtime.register it")
+
+    @staticmethod
+    def _announce(core: PBCombCheckpointer, args: Tuple[int, int, Any]):
+        slot, seq, response = args
+        core.announce(slot, {}, seq, response=response)
+
+    def invoke(self, core, p, op, args, seq):
+        self._spec(op)
+        self._announce(core, args)
+        core.combine_once()
+        return args[2]
+
+    def invoke_batch(self, core, p, calls):
+        for _op, args, _hseq in calls:
+            self._announce(core, args)
+        core.combine_once()                   # one round, one psync
+        return [args[2] for _op, args, _hseq in calls]
+
+    def recover(self, core, p, op, args, seq):
+        """Exactly-once replay: the announce parity (slot seq mod 2) is
+        filtered against the durable deactivate bits, so an already-
+        applied record is not re-persisted."""
+        self._announce(core, args)
+        core.combine_once()
+        return core.response(args[0])
+
+    def reset_volatile(self, core):
+        core.recover()
+
+    def snapshot(self, core):
+        return list(core._returnval)

@@ -1,9 +1,11 @@
 """Combining batch-serving engine.
 
 Continuous batching IS software combining (DESIGN.md §2): clients
-announce generate/cancel requests into a flat slot array and wait; two
-combiner instances — mirroring PBQueue's enqueue/dequeue split — do all
-the work:
+announce generate/cancel requests onto a shared ``AnnounceBoard`` (the
+runtime's announcement plumbing — the same component every combining
+protocol in this repo announces through) and wait; two combiner
+instances — mirroring PBQueue's enqueue/dequeue split — do all the
+work:
 
   * the PREFILL combiner batches every active prefill announcement, runs
     one batched prefill, allocates KV slots, and appends the sequences to
@@ -17,8 +19,11 @@ PBQueue's "never dequeue past the durable tail", here "never generate
 from (or complete) state that a crash would un-happen".
 
 Detectability: client requests carry (client_id, seq).  Completed
-responses are recorded in the engine's StateRec (responses +
-deactivate bits, persisted contiguously by a PBComb round).  After a
+responses are recorded in the engine's response log — a
+``PBCombCheckpointer`` registered with the shared ``CombiningRuntime``
+and written through the batched ``Handle.invoke_many`` path: all
+completions of a round are announced together and persisted by ONE
+combining round (one contiguous StateRec write + one psync).  After a
 crash, a client re-announcing (client_id, seq) receives its cached
 response instead of recomputing — exactly the paper's Recover path.
 
@@ -35,28 +40,32 @@ from __future__ import annotations
 
 import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
+from ..api import AnnounceBoard, Announcement, CombiningRuntime
 from ..core.atomics import AtomicInt
-from ..persist.checkpoint import PBCombCheckpointer
+from ..persist.checkpoint import CheckpointAdapter, PBCombCheckpointer
 from ..persist.store import MemStore, Store
 from .kv_cache import SlotAllocator
 from .scheduler import RequestHeap
 
 
+def _live_key(client: int, seq: int) -> int:
+    """Sequence-table key for a (client, request-seq) pair."""
+    return (client << 32) | (seq & 0xffffffff)
+
+
 @dataclass
 class GenRequest:
+    """Announcement payload — pure request data; the announcement record
+    (activate/valid bits, done event, response) lives on the board."""
     client: int
     seq: int
     prompt: Tuple[int, ...]
     max_tokens: int
     priority: float = 0.0
     cancel_target: Optional[Tuple[int, int]] = None  # (client, seq) to cancel
-    activate: int = 0
-    valid: int = 0
-    done: threading.Event = field(default_factory=threading.Event)
-    response: Any = None
 
 
 @dataclass
@@ -76,16 +85,18 @@ class CombiningEngine:
                  n_kv_slots: int = 64,
                  max_batch: int = 32,
                  store: Optional[Store] = None,
-                 eos_token: int = 0) -> None:
+                 eos_token: int = 0,
+                 runtime: Optional[CombiningRuntime] = None) -> None:
         self.n = n_clients
         self.prefill_batch_fn = prefill_batch_fn
         self.decode_batch_fn = decode_batch_fn
         self.max_batch = max_batch
         self.eos = eos_token
-        # announce array (volatile — valid bits die with the process)
-        self.requests: List[Optional[GenRequest]] = [None] * n_clients
-        # engine StateRec: response log + per-client deactivate bits,
-        # persisted via the PBComb checkpointer (double-buffered slots).
+        # shared runtime: announce board (volatile — dies with the
+        # process) + the durable response log, both under one
+        # crash/recovery umbrella.
+        self.runtime = runtime or CombiningRuntime(n_threads=n_clients)
+        self.board: AnnounceBoard = self.runtime.board("engine", n_clients)
         self.store = store or MemStore()
         # The engine's durable state is exactly the response log, which
         # lives in the StateRec's ReturnVal/Deactivate fields — the
@@ -93,9 +104,9 @@ class CombiningEngine:
         self.ckpt = PBCombCheckpointer(self.store, n_clients,
                                        payload_template={})
         self.ckpt.initialize({})
-        self._responses: List[Any] = [None] * n_clients
-        self._deactivate: List[int] = [0] * n_clients
-        self._resp_seq: List[int] = [-1] * n_clients
+        self.log = self.runtime.register("engine/response-log", self.ckpt,
+                                         CheckpointAdapter())
+        self._log_handle = self.runtime.attach(0)
         # sequence table (the shared linked structure)
         self.live: Dict[int, LiveSeq] = {}
         self.kv: Dict[int, Any] = {}
@@ -114,26 +125,20 @@ class CombiningEngine:
     def submit(self, client: int, prompt: Sequence[int], max_tokens: int,
                seq: int, priority: float = 0.0,
                timeout: float = 30.0) -> Any:
-        prev = self.requests[client]
-        req = GenRequest(client, seq, tuple(prompt), max_tokens, priority,
-                         activate=1 - (prev.activate if prev else 0),
-                         valid=1)
-        self.requests[client] = req
-        if not req.done.wait(timeout):
+        req = GenRequest(client, seq, tuple(prompt), max_tokens, priority)
+        rec = self.board.announce(client, req)
+        if not rec.done.wait(timeout):
             raise TimeoutError(f"client {client} seq {seq}")
-        return req.response
+        return rec.response
 
     def cancel(self, client: int, target: Tuple[int, int], seq: int,
                timeout: float = 30.0) -> Any:
         """Cancel the pending request ``target = (client, seq)``."""
-        prev = self.requests[client]
-        req = GenRequest(client, seq, (), 0, cancel_target=tuple(target),
-                         activate=1 - (prev.activate if prev else 0),
-                         valid=1)
-        self.requests[client] = req
-        if not req.done.wait(timeout):
+        req = GenRequest(client, seq, (), 0, cancel_target=tuple(target))
+        rec = self.board.announce(client, req)
+        if not rec.done.wait(timeout):
             raise TimeoutError(f"cancel {client}/{seq}")
-        return req.response
+        return rec.response
 
     def recover_request(self, client: int, prompt: Sequence[int],
                         max_tokens: int, seq: int,
@@ -158,15 +163,15 @@ class CombiningEngine:
             t.join(timeout=5)
 
     def restart_after_crash(self) -> None:
-        """Simulated process restart: volatile state (announce array,
-        sequence table, KV) is lost; the durable response log survives."""
-        self.requests = [None] * self.n
+        """Simulated process restart: volatile state (announce board,
+        sequence table, KV) is lost; the durable response log survives.
+        One runtime call resets every volatile component it owns."""
         with self._table_lock:
             for s in self.live.values():
                 self.slots.free(s.slot)
             self.live.clear()
             self.kv.clear()
-        self.ckpt.recover()
+        self.runtime.recover()
 
     # ------------------ combiner loops --------------------------------- #
     def _prefill_loop(self) -> None:
@@ -179,18 +184,9 @@ class CombiningEngine:
             if not self._combine_decode():
                 time.sleep(0.001)
 
-    def _active(self, want_cancel: bool) -> List[GenRequest]:
-        out = []
-        for c in range(self.n):
-            req = self.requests[c]
-            if req is None or req.valid != 1:
-                continue
-            if req.done.is_set():
-                continue
-            if (req.cancel_target is not None) != want_cancel:
-                continue
-            out.append(req)
-        return out
+    def _active(self, want_cancel: bool) -> List[Announcement]:
+        return [rec for _c, rec in self.board.pending()
+                if (rec.payload.cancel_target is not None) == want_cancel]
 
     def _combine_prefill(self) -> int:
         lval = self.prefill_lock.load()
@@ -201,51 +197,63 @@ class CombiningEngine:
             gens = self._active(False)
             cancels = self._active(True)
             # --- elimination: pair cancels with waiting generates ------ #
-            by_seq = {(r.client, r.seq): r for r in gens}
+            by_seq = {(r.payload.client, r.payload.seq): r for r in gens}
             for c in cancels:
-                tgt = by_seq.get(c.cancel_target)
+                tgt = by_seq.get(c.payload.cancel_target)
                 if tgt is not None and not tgt.done.is_set():
-                    tgt.response = {"cancelled": True, "tokens": []}
-                    c.response = {"cancelled_ok": True}
+                    self.board.serve(tgt, {"cancelled": True, "tokens": []})
+                    self.board.serve(c, {"cancelled_ok": True})
                     self.stats["eliminated"] += 1
-                    tgt.done.set()
-                    c.done.set()
                     served += 2
                 else:
-                    c.response = {"cancelled_ok": False}
-                    c.done.set()
+                    self.board.serve(c, {"cancelled_ok": False})
                     served += 1
             # --- admission by priority (PBHeap) ------------------------ #
-            gens = [g for g in gens if not g.done.is_set()]
+            # skip requests already admitted (their LiveSeq is decoding):
+            # re-admitting would re-run prefill and orphan the earlier
+            # KV slot when the duplicate LiveSeq overwrites the table key
+            with self._table_lock:
+                admitted = set(self.live.keys())
+            gens = [g for g in gens if not g.done.is_set()
+                    and _live_key(g.payload.client,
+                                  g.payload.seq) not in admitted]
             for g in gens:
-                self.heap.insert(g.priority, g)
-            batch: List[GenRequest] = []
+                self.heap.insert(g.payload.priority, g)
+            batch: List[Announcement] = []
+            slot_of: Dict[int, int] = {}          # round-local: id -> slot
             while len(batch) < self.max_batch and len(self.heap):
                 if self.slots.available() == 0:
                     break
                 g = self.heap.delete_min()
                 if g.done.is_set():
                     continue
+                key = _live_key(g.payload.client, g.payload.seq)
+                if key in admitted:      # stale duplicate heap entry
+                    continue
                 slot = self.slots.alloc()
                 if slot is None:
                     break
-                g._slot = slot          # stash for this round
+                admitted.add(key)
+                slot_of[id(g)] = slot
                 batch.append(g)
             if not batch:
                 return served
             # --- one batched prefill for the whole round --------------- #
-            toks, kvs = self.prefill_batch_fn([g.prompt for g in batch])
+            toks, kvs = self.prefill_batch_fn(
+                [g.payload.prompt for g in batch])
+            round_seqs: List[LiveSeq] = []
             with self._table_lock:
                 for g, t0, kv in zip(batch, toks, kvs):
-                    ls = LiveSeq(g.client, g.seq, g._slot, [t0],
-                                 g.max_tokens)
-                    self.live[(g.client << 32) | (g.seq & 0xffffffff)] = ls
+                    req = g.payload
+                    ls = LiveSeq(req.client, req.seq, slot_of[id(g)], [t0],
+                                 req.max_tokens)
+                    self.live[_live_key(req.client, req.seq)] = ls
                     self.kv[ls.slot] = kv
-                    g._liveseq = ls
+                    round_seqs.append(ls)
             # commit marker (oldTail): decode may now adopt these
             with self._table_lock:
-                for g in batch:
-                    g._liveseq.committed = True
+                for ls in round_seqs:
+                    ls.committed = True
             self.stats["prefill_rounds"] += 1
             self.stats["prefill_batched"] += len(batch)
             return served + len(batch)
@@ -278,27 +286,22 @@ class CombiningEngine:
             self.decode_lock.store(self.decode_lock.load() + 1)
 
     def _complete(self, finished: List[LiveSeq]) -> None:
-        """Persist ALL completions of the round with one PBComb round
-        (one contiguous StateRec write), then release waiters and recycle
-        slots — the paper's 'respond only after psync' rule."""
-        for s in finished:
-            self._responses[s.client] = {"tokens": list(s.tokens),
-                                         "seq": s.seq}
-            self._resp_seq[s.client] = s.seq
-        for s in finished:
-            self.ckpt.announce(s.client, {}, s.seq,
-                               response={"tokens": list(s.tokens),
-                                         "seq": s.seq})
-        self.ckpt.combine_once()                   # one round, one psync
+        """Persist ALL completions of the round through the runtime's
+        batched ``invoke_many`` path — one combining round, one
+        contiguous StateRec write, one psync — then release waiters and
+        recycle slots (the paper's 'respond only after psync' rule)."""
+        responses = {s.slot: {"tokens": list(s.tokens), "seq": s.seq}
+                     for s in finished}
+        self._log_handle.invoke_many(
+            [(self.log, "record", s.client, s.seq, responses[s.slot])
+             for s in finished])
         self.stats["persists"] += 1
         with self._table_lock:
             for s in finished:
-                key = (s.client << 32) | (s.seq & 0xffffffff)
-                self.live.pop(key, None)
+                self.live.pop(_live_key(s.client, s.seq), None)
                 self.kv.pop(s.slot, None)
                 self.slots.free(s.slot)            # recycling stack
         for s in finished:
-            req = self.requests[s.client]
-            if req is not None and req.seq == s.seq:
-                req.response = {"tokens": list(s.tokens), "seq": s.seq}
-                req.done.set()
+            rec = self.board.slots[s.client]
+            if rec is not None and rec.payload.seq == s.seq:
+                self.board.serve(rec, responses[s.slot])

@@ -1,5 +1,15 @@
 """Recoverable data structures built on the combining protocols
-(paper Section 5) plus the baseline competitors used in Section 6."""
+(paper Section 5) plus the baseline competitors used in Section 6.
+
+.. deprecated::
+   The per-structure calling conventions exposed here (explicit thread
+   ids and seq numbers: ``PBQueue.enqueue(p, value, seq)``,
+   ``PBStack.push(p, value, seq)``, manual ``reset_volatile`` +
+   ``recover`` dances) are shims kept for one PR cycle.  New code goes
+   through ``repro.api``: ``CombiningRuntime.make(kind, protocol)`` +
+   per-thread handles (``rt.attach(p).bind(obj)``) — see DESIGN.md §1
+   for the migration table.
+"""
 
 from .baselines import (DFCStack, DurableMSQueue, LockDirectObject,
                         LockUndoLogObject)

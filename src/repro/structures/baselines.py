@@ -50,12 +50,33 @@ class LockDirectObject:
         self._lock = threading.Lock()
 
     def op(self, p: int, func: str, args: Any, seq: int) -> Any:
+        nvm = self.nvm
         with self._lock:
-            ret = self.obj.apply(self.nvm, self.st_base, func, args)
-            self.nvm.pwb(self.st_base, self.obj.state_words)
-            self.nvm.pfence()
-            self.nvm.psync()
+            # persist only the touched lines when the object can name
+            # them (the baselines' real scattered-persist cost shape);
+            # small objects without a plan persist their whole state
+            plan = getattr(self.obj, "touch_plan", None)
+            ranges = plan(nvm, self.st_base, func, args) if plan else None
+            ret = self.obj.apply(nvm, self.st_base, func, args)
+            if ranges is None:
+                nvm.pwb(self.st_base, self.obj.state_words)
+            else:
+                for off, n in ranges:
+                    nvm.pwb(self.st_base + off, n)
+            nvm.pfence()
+            nvm.psync()
             return ret
+
+    def reset_volatile(self) -> None:
+        """Post-crash re-initialization: only the lock is volatile.  No
+        rollback is possible — a crash mid-update can leave torn state
+        (the failure mode the paper's combining protocols remove)."""
+        self._lock = threading.Lock()
+
+    def recover(self, p: int, func: str, args: Any, seq: int) -> Any:
+        """Not detectable: an in-flight op is simply re-executed
+        (at-least-once semantics — the baseline's documented weakness)."""
+        return self.op(p, func, args, seq)
 
 
 class LockUndoLogObject:
@@ -75,21 +96,74 @@ class LockUndoLogObject:
     def op(self, p: int, func: str, args: Any, seq: int) -> Any:
         nvm = self.nvm
         with self._lock:
-            # 1. persist undo record
-            nvm.write_range(self.log_base,
-                            nvm.read_range(self.st_base, self.obj.state_words))
+            plan = getattr(self.obj, "touch_plan", None)
+            ranges = plan(nvm, self.st_base, func, args) if plan else None
+            # 1. persist undo record: word-granular entries for the
+            #    words about to change (PMDK logs ranges, not the whole
+            #    object); objects without a plan snapshot full state.
+            #    Ranged log layout: [count | (offset, old_value)* | valid]
+            if ranges is None:
+                nvm.write_range(self.log_base,
+                                nvm.read_range(self.st_base,
+                                               self.obj.state_words))
+                nvm.pwb(self.log_base, self.obj.state_words)
+            else:
+                n = 0
+                for off, cnt in ranges:
+                    for j in range(cnt):
+                        nvm.write(self.log_base + 1 + 2 * n, off + j)
+                        nvm.write(self.log_base + 2 + 2 * n,
+                                  nvm.read(self.st_base + off + j))
+                        n += 1
+                nvm.write(self.log_base, n)
+                nvm.pwb(self.log_base, 2 * n + 1)
             nvm.write(self.log_base + self.obj.state_words, 1)  # valid
-            nvm.pwb(self.log_base, self.obj.state_words + 1)
+            nvm.pwb(self.log_base + self.obj.state_words, 1)
             nvm.pfence()
-            # 2. in-place update + persist
+            # 2. in-place update + persist touched lines
             ret = self.obj.apply(nvm, self.st_base, func, args)
-            nvm.pwb(self.st_base, self.obj.state_words)
+            if ranges is None:
+                nvm.pwb(self.st_base, self.obj.state_words)
+            else:
+                for off, cnt in ranges:
+                    nvm.pwb(self.st_base + off, cnt)
             nvm.pfence()
             # 3. invalidate log
             nvm.write(self.log_base + self.obj.state_words, 0)
             nvm.pwb(self.log_base + self.obj.state_words, 1)
             nvm.psync()
             return ret
+
+    def reset_volatile(self) -> None:
+        """Post-crash: recreate the lock and roll back a torn in-place
+        update from the persisted undo record (PMDK-style recovery).
+        Both log layouts are handled: ranged entries for objects with a
+        ``touch_plan``, full-state snapshot otherwise."""
+        self._lock = threading.Lock()
+        nvm = self.nvm
+        if nvm.read(self.log_base + self.obj.state_words) == 1:
+            if hasattr(self.obj, "touch_plan"):
+                n = nvm.read(self.log_base)
+                for i in range(n):
+                    off = nvm.read(self.log_base + 1 + 2 * i)
+                    val = nvm.read(self.log_base + 2 + 2 * i)
+                    nvm.write(self.st_base + off, val)
+                    nvm.pwb(self.st_base + off, 1)
+            else:
+                nvm.write_range(self.st_base,
+                                nvm.read_range(self.log_base,
+                                               self.obj.state_words))
+                nvm.pwb(self.st_base, self.obj.state_words)
+            nvm.pfence()
+            nvm.write(self.log_base + self.obj.state_words, 0)
+            nvm.pwb(self.log_base + self.obj.state_words, 1)
+            nvm.psync()
+
+    def recover(self, p: int, func: str, args: Any, seq: int) -> Any:
+        """Not detectable: the log restores atomicity of the interrupted
+        update, but whether the op took effect is unknowable — re-execute
+        (at-least-once semantics)."""
+        return self.op(p, func, args, seq)
 
 
 class DurableMSQueue:
@@ -108,15 +182,18 @@ class DurableMSQueue:
         nvm.write(dummy, None)
         nvm.write(dummy + 1, NULL)
         nvm.pwb(dummy, NODE_WORDS)
-        nvm.psync()
-        nvm.reset_counters()
-        self.head = AtomicRef(dummy, shared=True)
-        self.tail = AtomicRef(dummy, shared=True)
-        # head/tail words also mirrored in NVM for recovery
+        # head/tail words also mirrored in NVM for recovery — the initial
+        # image must be durable or a pre-first-dequeue crash loses them.
         self.head_addr = nvm.alloc(1)
         self.tail_addr = nvm.alloc(1)
         nvm.write(self.head_addr, dummy)
         nvm.write(self.tail_addr, dummy)
+        nvm.pwb(self.head_addr, 1)
+        nvm.pwb(self.tail_addr, 1)
+        nvm.psync()
+        nvm.reset_counters()
+        self.head = AtomicRef(dummy, shared=True)
+        self.tail = AtomicRef(dummy, shared=True)
 
     def enqueue(self, p: int, value: Any, seq: int) -> Any:
         nvm = self.nvm
@@ -163,6 +240,29 @@ class DurableMSQueue:
             out.append(self.nvm.read(addr))
             addr = self.nvm.read(addr + 1)
         return out
+
+    def reset_volatile(self) -> None:
+        """Post-crash: rebuild the volatile head/tail refs from the
+        durable mirrors.  The persisted tail word may lag the real list
+        end (it is swung after the link pwb), so walk next pointers to
+        the true tail — FHMP's recovery walk."""
+        nvm = self.nvm
+        head = nvm.read(self.head_addr)
+        tail = nvm.read(self.tail_addr)
+        while nvm.read(tail + 1) != NULL:
+            tail = nvm.read(tail + 1)
+        nvm.write(self.tail_addr, tail)
+        nvm.pwb(self.tail_addr, 1)
+        nvm.psync()
+        self.head = AtomicRef(head, shared=True)
+        self.tail = AtomicRef(tail, shared=True)
+
+    def recover(self, p: int, func: str, args: Any, seq: int) -> Any:
+        """Not detectable (the FHMP-class queue has no announcement log):
+        re-execute the in-flight op (at-least-once semantics)."""
+        if func == "ENQ":
+            return self.enqueue(p, args, seq)
+        return self.dequeue(p, seq)
 
 
 class DFCStack:
@@ -243,3 +343,21 @@ class DFCStack:
             out.append(self.nvm.read(addr))
             addr = self.nvm.read(addr + 1)
         return out
+
+    def reset_volatile(self) -> None:
+        """Post-crash: only the combiner lock is volatile — announcements,
+        responses and done-marks live in NVMM (DFC's design)."""
+        self.lock = AtomicInt(0, shared=True)
+
+    def recover(self, p: int, func: str, args: Any, seq: int) -> Any:
+        """Done-mark fast path: if the persisted done-mark carries this
+        op's seq, its response was recorded before the crash — return it
+        instead of re-executing.  Note this is only exactly-once for ops
+        served in a *psync'd* round: DFC psyncs once per round, so a
+        mid-round crash can persist the done-mark and the structural
+        update independently (the runtime adapter reports
+        ``detectable=False`` for this reason)."""
+        a = self.ann_base[p]
+        if self.nvm.read(a + 4) == seq:
+            return self.nvm.read(a + 3)
+        return self.op(p, func, args, seq)

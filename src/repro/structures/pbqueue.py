@@ -141,11 +141,13 @@ class PBQueue:
                                 counters=counters)
         nvm.reset_counters()
 
-    # -------------------- public API ------------------------------------ #
+    # ------------- public API (deprecated shims — use repro.api) -------- #
     def enqueue(self, p: int, value: Any, seq: int) -> Any:
+        """.. deprecated:: use ``handle.bind(obj).enqueue(value)``."""
         return self.enq.op(p, "ENQ", value, seq)
 
     def dequeue(self, p: int, seq: int) -> Any:
+        """.. deprecated:: use ``handle.bind(obj).dequeue()``."""
         return self.deq.op(p, "DEQ", None, seq)
 
     # -------------------- recovery (Algorithm 7) ------------------------ #

@@ -64,11 +64,13 @@ class PBStack(PBComb):
         self.to_persist: List[int] = []
         self.popped: List[int] = []
 
-    # -------------------- public API ----------------------------------- #
+    # ------------- public API (deprecated shims — use repro.api) -------- #
     def push(self, p: int, value: Any, seq: int) -> Any:
+        """.. deprecated:: use ``handle.bind(obj).push(value)``."""
         return self.op(p, "PUSH", value, seq)
 
     def pop(self, p: int, seq: int) -> Any:
+        """.. deprecated:: use ``handle.bind(obj).pop()``."""
         return self.op(p, "POP", None, seq)
 
     # -------------------- combiner hooks -------------------------------- #

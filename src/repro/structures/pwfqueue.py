@@ -203,11 +203,13 @@ class PWFQueue:
             self.enq._cas_flush(s_pid, lval, lval + 1)
         return nvm.read(self.enq._base(slot))
 
-    # ------------------ public API --------------------------------------- #
+    # ---------- public API (deprecated shims — use repro.api) ------------ #
     def enqueue(self, p: int, value: Any, seq: int) -> Any:
+        """.. deprecated:: use ``handle.bind(obj).enqueue(value)``."""
         return self.enq.op(p, "ENQ", value, seq)
 
     def dequeue(self, p: int, seq: int) -> Any:
+        """.. deprecated:: use ``handle.bind(obj).dequeue()``."""
         return self.deq.op(p, "DEQ", None, seq)
 
     # ------------------ recovery ----------------------------------------- #

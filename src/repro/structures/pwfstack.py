@@ -41,11 +41,13 @@ class PWFStack(PWFComb):
         self._popped: Dict[int, List[int]] = {p: [] for p in range(n_threads)}
         self._tls = threading.local()  # which logical thread runs here
 
-    # -------------------- public API ----------------------------------- #
+    # ------------- public API (deprecated shims — use repro.api) -------- #
     def push(self, p: int, value: Any, seq: int) -> Any:
+        """.. deprecated:: use ``handle.bind(obj).push(value)``."""
         return self.op(p, "PUSH", value, seq)
 
     def pop(self, p: int, seq: int) -> Any:
+        """.. deprecated:: use ``handle.bind(obj).pop()``."""
         return self.op(p, "POP", None, seq)
 
     # -------------------- combining hooks ------------------------------- #

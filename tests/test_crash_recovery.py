@@ -10,7 +10,11 @@ got a response; no value duplicated)."""
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:                                   # optional dep: `pip install .[test]`
+    from hypothesis import given, settings, strategies as st
+except ImportError:                    # property tests skip below
+    given = settings = st = None
 
 from repro.core import NVM, SimulatedCrash
 from repro.core.pbcomb import RequestRec
@@ -123,42 +127,47 @@ def test_pwfstack_crash_mid_publish(crash_at, seed):
     assert content[-1] == "base"
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.integers(0, 14), st.integers(0, 2 ** 31 - 1),
-       st.lists(st.sampled_from(["PUSH", "POP"]), min_size=2, max_size=4))
-def test_property_pbstack_mixed_ops_crash(crash_at, seed, funcs):
-    """Mixed push/pop rounds with crashes: conservation — every pushed
-    value is either still in the stack or was returned by exactly one
-    pop."""
-    nvm = NVM(1 << 20)
-    s = PBStack(nvm, len(funcs), elimination=False)
-    committed = []
-    for i in range(3):
-        s.push(0, f"pre{i}", i + 1)
-        committed.append(f"pre{i}")
-    for p, f in enumerate(funcs):
-        args = f"x{p}" if f == "PUSH" else None
-        s.request[p] = RequestRec(f, args, 1 - s.request[p].activate, 1)
-    nvm.arm_crash(crash_at, random.Random(seed))
-    try:
-        s._perform_request(0)
-    except SimulatedCrash:
-        pass
-    nvm.disarm_crash()
-    s.reset_volatile()
-    seqs = [4 if p == 0 else 1 for p in range(len(funcs))]
-    rets = {}
-    for p, f in enumerate(funcs):
-        args = f"x{p}" if f == "PUSH" else None
-        rets[p] = s.recover(p, f, args, seqs[p])
-    pushed = set(committed) | {f"x{p}" for p, f in enumerate(funcs)
-                               if f == "PUSH"}
-    popped = [r for p, r in rets.items() if funcs[p] == "POP"
-              and r is not None]
-    content = s.drain()
-    # no duplicates anywhere
-    assert len(popped) == len(set(popped))
-    assert len(content) == len(set(content))
-    # conservation
-    assert set(content) | set(popped) == pushed
-    assert not (set(content) & set(popped))
+if st is not None:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 14), st.integers(0, 2 ** 31 - 1),
+           st.lists(st.sampled_from(["PUSH", "POP"]),
+                    min_size=2, max_size=4))
+    def test_property_pbstack_mixed_ops_crash(crash_at, seed, funcs):
+        """Mixed push/pop rounds with crashes: conservation — every
+        pushed value is either still in the stack or was returned by
+        exactly one pop."""
+        nvm = NVM(1 << 20)
+        s = PBStack(nvm, len(funcs), elimination=False)
+        committed = []
+        for i in range(3):
+            s.push(0, f"pre{i}", i + 1)
+            committed.append(f"pre{i}")
+        for p, f in enumerate(funcs):
+            args = f"x{p}" if f == "PUSH" else None
+            s.request[p] = RequestRec(f, args, 1 - s.request[p].activate, 1)
+        nvm.arm_crash(crash_at, random.Random(seed))
+        try:
+            s._perform_request(0)
+        except SimulatedCrash:
+            pass
+        nvm.disarm_crash()
+        s.reset_volatile()
+        seqs = [4 if p == 0 else 1 for p in range(len(funcs))]
+        rets = {}
+        for p, f in enumerate(funcs):
+            args = f"x{p}" if f == "PUSH" else None
+            rets[p] = s.recover(p, f, args, seqs[p])
+        pushed = set(committed) | {f"x{p}" for p, f in enumerate(funcs)
+                                   if f == "PUSH"}
+        popped = [r for p, r in rets.items() if funcs[p] == "POP"
+                  and r is not None]
+        content = s.drain()
+        # no duplicates anywhere
+        assert len(popped) == len(set(popped))
+        assert len(content) == len(set(content))
+        # conservation
+        assert set(content) | set(popped) == pushed
+        assert not (set(content) & set(popped))
+else:
+    def test_property_pbstack_mixed_ops_crash():
+        pytest.importorskip("hypothesis")
