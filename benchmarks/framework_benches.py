@@ -12,6 +12,7 @@ training/serving runtime (beyond the paper's own tables).
 
 from __future__ import annotations
 
+import gc
 import threading
 import time
 from typing import Any, Dict, List
@@ -29,39 +30,53 @@ FSYNC_LATENCY = 2e-3      # modeled storage fsync cost per psync
 
 
 def structure_matrix_bench(kinds=("queue", "stack"), n_threads: int = 4,
-                           ops_per_thread: int = 300) -> List[Dict[str, Any]]:
+                           ops_per_thread: int = 300,
+                           runs: int = 5) -> List[Dict[str, Any]]:
     """One workload, every protocol: the registry makes the paper's
-    Section 6 comparison a loop instead of a class list."""
+    Section 6 comparison a loop instead of a class list.  Each cell is
+    the MEDIAN over ``runs`` fresh runtimes — single-shot wall clock
+    under a thread scheduler is far too noisy to trend across PRs, and
+    a mean is still hostage to one descheduled run."""
     out = []
     for kind in kinds:
         for k, proto in entries(kind):
-            rt = CombiningRuntime(n_threads=n_threads)
-            obj = rt.make(kind, proto)
-
-            def worker(p):
-                b = rt.attach(p).bind(obj)
-                add = b.enqueue if kind == "queue" else b.push
-                rem = b.dequeue if kind == "queue" else b.pop
-                for i in range(ops_per_thread):
-                    add(p * 1000000 + i)
-                    rem()
-
-            ts = [threading.Thread(target=worker, args=(p,))
-                  for p in range(n_threads)]
-            t0 = time.perf_counter()
-            for t in ts:
-                t.start()
-            for t in ts:
-                t.join()
-            el = time.perf_counter() - t0
             total = 2 * n_threads * ops_per_thread
-            c = rt.nvm.counters
+            times, pwbs, pfences, psyncs = [], [], [], []
+            for _run in range(runs):
+                rt = CombiningRuntime(n_threads=n_threads)
+                obj = rt.make(kind, proto)
+                barrier = threading.Barrier(n_threads + 1)
+
+                def worker(p):
+                    b = rt.attach(p).bind(obj)
+                    add = b.enqueue if kind == "queue" else b.push
+                    rem = b.dequeue if kind == "queue" else b.pop
+                    barrier.wait()
+                    for i in range(ops_per_thread):
+                        add(p * 1000000 + i)
+                        rem()
+
+                ts = [threading.Thread(target=worker, args=(p,))
+                      for p in range(n_threads)]
+                for t in ts:
+                    t.start()
+                gc.collect()          # keep allocator churn out of the run
+                barrier.wait()        # thread startup is not protocol cost
+                t0 = time.perf_counter()
+                for t in ts:
+                    t.join()
+                times.append(time.perf_counter() - t0)
+                c = rt.nvm.counters
+                pwbs.append(c["pwb"])
+                pfences.append(c["pfence"])
+                psyncs.append(c["psync"])
+            el = sorted(times)[runs // 2]
             out.append({"name": f"{kind}/{proto}",
                         "us_per_op": el / total * 1e6,
                         "ops_per_s": total / el,
-                        "pwb_per_op": c["pwb"] / total,
-                        "pfence_per_op": c["pfence"] / total,
-                        "psync_per_op": c["psync"] / total})
+                        "pwb_per_op": sum(pwbs) / runs / total,
+                        "pfence_per_op": sum(pfences) / runs / total,
+                        "psync_per_op": sum(psyncs) / runs / total})
     return out
 
 

@@ -9,18 +9,26 @@ Fig 6  queue throughput, pwb->NOP (sync cost)  -> fig6_queues_no_pwb
 Fig 7a stack throughput + elim/recycle ablations -> fig7a_stacks
 Fig 7b heap throughput vs size                 -> fig7b_heap
 Tab 1  shared-location traffic (volatile mode) -> table1_counters
+
+The structure figures (4-7) run through the unified ``repro.api``
+runtime/handle surface — the same path applications use — so handle
+fast-path regressions show up here.  Figure 1 and Table 1 bench the
+combining protocols themselves (``PBComb.op`` is Algorithm 1's entry
+point, not a deprecated shim).
+
+Every figure takes ``n_threads``/``total_ops`` so the CI perf-smoke job
+(and tests/test_bench_json.py) can run the whole pipeline at tiny sizes.
 """
 
 from __future__ import annotations
 
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Optional, Tuple
 
+from repro.api import CombiningRuntime
 from repro.core import (NVM, AtomicFloatObject, Counters, PBComb, PWFComb)
-from repro.structures import (DFCStack, DurableMSQueue, LockDirectObject,
-                              LockUndoLogObject, PBHeap, PBQueue, PBStack,
-                              PWFQueue, PWFStack)
+from repro.structures import LockDirectObject, LockUndoLogObject
 
-from .common import bench, csv_rows, print_rows
+from .common import bench, run_threads
 
 N_THREADS = 6
 OPS = 2400
@@ -37,145 +45,147 @@ def _nvm(**kw):
     return NVM(1 << 22, **kw)
 
 
+def _api_bench(name: str, kind: str, protocol: str,
+               ops: Tuple[str, str], n_threads: int, total_ops: int,
+               nvm_kw: Optional[dict] = None,
+               mk_kw: Optional[dict] = None) -> Dict[str, Any]:
+    """Bench one (kind, protocol) cell through runtime + handles: the
+    workload alternates add/remove exactly like the paper's pairs
+    benchmark."""
+    def make():
+        rt = CombiningRuntime(nvm=_nvm(**(nvm_kw or {})),
+                              n_threads=n_threads)
+        obj = rt.make(kind, protocol, **(mk_kw or {}))
+        return (rt, obj), rt.nvm
+
+    def op_factory(ro):
+        rt, obj = ro
+        bound = [rt.attach(p).bind(obj) for p in range(n_threads)]
+        add = [getattr(b, ops[0]) for b in bound]
+        rem = [getattr(b, ops[1]) for b in bound]
+
+        def op(p, i, seq):
+            if i % 2 == 0:
+                add[p](p * 10 ** 6 + i)
+            else:
+                rem[p]()
+        return op
+
+    return bench(name, make, op_factory, n_threads, total_ops)
+
+
 # ------------------------------------------------------------------ #
-def fig1_atomicfloat(**nvm_kw) -> List[Dict[str, Any]]:
+def fig1_atomicfloat(n_threads: int = N_THREADS, total_ops: int = OPS,
+                     **nvm_kw) -> List[Dict[str, Any]]:
     rows = []
 
     def mk(proto):
         def make():
             nvm = _nvm(**nvm_kw)
-            return proto(nvm, N_THREADS, AtomicFloatObject()), nvm
+            return proto(nvm, n_threads, AtomicFloatObject()), nvm
         return make
 
     rows.append(bench("PBComb", mk(PBComb),
                       lambda o: lambda p, i, seq: o.op(p, "MUL", 1.000001, seq),
-                      N_THREADS, OPS))
+                      n_threads, total_ops))
     rows.append(bench("PWFComb", mk(PWFComb),
                       lambda o: lambda p, i, seq: o.op(p, "MUL", 1.000001, seq),
-                      N_THREADS, OPS))
+                      n_threads, total_ops))
 
     def mk_base(cls):
         def make():
             nvm = _nvm(**nvm_kw)
-            return cls(nvm, N_THREADS, AtomicFloatObject()), nvm
+            return cls(nvm, n_threads, AtomicFloatObject()), nvm
         return make
 
     rows.append(bench("LockDirect (per-op persist)", mk_base(LockDirectObject),
                       lambda o: lambda p, i, seq: o.op(p, "MUL", 1.000001, seq),
-                      N_THREADS, OPS))
+                      n_threads, total_ops))
     rows.append(bench("LockUndoLog (PMDK-shape)", mk_base(LockUndoLogObject),
                       lambda o: lambda p, i, seq: o.op(p, "MUL", 1.000001, seq),
-                      N_THREADS, OPS))
+                      n_threads, total_ops))
     return rows
 
 
-def fig3_no_psync():
-    return fig1_atomicfloat(psync_nop=True)
+def fig3_no_psync(n_threads: int = N_THREADS, total_ops: int = OPS):
+    return fig1_atomicfloat(n_threads, total_ops, psync_nop=True)
 
 
-def fig4_queues(**nvm_kw) -> List[Dict[str, Any]]:
+def fig4_queues(n_threads: int = N_THREADS, total_ops: int = OPS,
+                **nvm_kw) -> List[Dict[str, Any]]:
+    cells = [("PBQueue", "pbcomb", {}),
+             ("PBQueue-no-recycle", "pbcomb", {"recycle": False}),
+             ("PWFQueue", "pwfcomb", {}),
+             ("DurableMSQueue (FHMP-shape)", "durable-ms", {})]
+    return [_api_bench(name, "queue", proto, ("enqueue", "dequeue"),
+                       n_threads, total_ops, nvm_kw=nvm_kw, mk_kw=kw)
+            for name, proto, kw in cells]
+
+
+def fig6_queues_no_pwb(n_threads: int = N_THREADS, total_ops: int = OPS):
+    return fig4_queues(n_threads, total_ops, pwb_nop=True, psync_nop=True)
+
+
+def fig7a_stacks(n_threads: int = N_THREADS,
+                 total_ops: int = OPS) -> List[Dict[str, Any]]:
+    cells = [("PBStack", "pbcomb", {}),
+             ("PBStack-no-elim", "pbcomb", {"elimination": False}),
+             ("PBStack-no-rec", "pbcomb", {"recycle": False}),
+             ("PWFStack", "pwfcomb", {}),
+             ("PWFStack-no-elim", "pwfcomb", {"elimination": False}),
+             ("DFCStack (flat-combining)", "dfc", {})]
+    return [_api_bench(name, "stack", proto, ("push", "pop"),
+                       n_threads, total_ops, mk_kw=kw)
+            for name, proto, kw in cells]
+
+
+def fig7b_heap(n_threads: int = N_THREADS, total_ops: int = OPS,
+               sizes=(64, 128, 256, 512, 1024)) -> List[Dict[str, Any]]:
     rows = []
-
-    def pairs(o):
-        def op(p, i, seq):
-            if i % 2 == 0:
-                o.enqueue(p, p * 10 ** 6 + i, seq)
-            else:
-                o.dequeue(p, seq)
-        return op
-
-    for name, cls, kw in [("PBQueue", PBQueue, {}),
-                          ("PBQueue-no-recycle", PBQueue, {"recycle": False}),
-                          ("PWFQueue", PWFQueue, {}),
-                          ("DurableMSQueue (FHMP-shape)", DurableMSQueue, {})]:
-        def make(cls=cls, kw=kw):
-            nvm = _nvm(**nvm_kw)
-            return cls(nvm, N_THREADS, **kw), nvm
-        rows.append(bench(name, make, pairs, N_THREADS, OPS))
-    return rows
-
-
-def fig6_queues_no_pwb():
-    return fig4_queues(pwb_nop=True, psync_nop=True)
-
-
-def fig7a_stacks() -> List[Dict[str, Any]]:
-    rows = []
-
-    def pairs(o):
-        if isinstance(o, DFCStack):
-            def op(p, i, seq):
-                if i % 2 == 0:
-                    o.op(p, "PUSH", i, seq)
-                else:
-                    o.op(p, "POP", None, seq)
-            return op
-
-        def op(p, i, seq):
-            if i % 2 == 0:
-                o.push(p, i, seq)
-            else:
-                o.pop(p, seq)
-        return op
-
-    for name, cls, kw in [
-            ("PBStack", PBStack, {}),
-            ("PBStack-no-elim", PBStack, {"elimination": False}),
-            ("PBStack-no-rec", PBStack, {"recycle": False}),
-            ("PWFStack", PWFStack, {}),
-            ("PWFStack-no-elim", PWFStack, {"elimination": False}),
-            ("DFCStack (flat-combining)", DFCStack, {})]:
-        def make(cls=cls, kw=kw):
-            nvm = _nvm()
-            return cls(nvm, N_THREADS, **kw), nvm
-        rows.append(bench(name, make, pairs, N_THREADS, OPS))
-    return rows
-
-
-def fig7b_heap() -> List[Dict[str, Any]]:
-    rows = []
-    for size in (64, 128, 256, 512, 1024):
+    for size in sizes:
         def make(size=size):
-            nvm = _nvm()
-            h = PBHeap(nvm, N_THREADS, capacity=size)
-            seq = 10 ** 7
+            rt = CombiningRuntime(nvm=_nvm(), n_threads=n_threads)
+            h = rt.make("heap", "pbcomb", capacity=size)
+            b = rt.attach(0).bind(h)
             for k in range(size // 2):          # half-full start (paper)
-                seq += 1
-                h.insert(0, k, seq)
-            nvm.reset_counters()
-            return h, nvm
+                b.insert(k)
+            rt.nvm.reset_counters()
+            return (rt, h), rt.nvm
 
-        def op_factory(h):
+        def op_factory(ro):
+            rt, h = ro
+            bound = [rt.attach(p).bind(h) for p in range(n_threads)]
+
             def op(p, i, seq):
                 if i % 2 == 0:
-                    h.insert(p, (p * 31 + i) % 10 ** 6, seq)
+                    bound[p].insert((p * 31 + i) % 10 ** 6)
                 else:
-                    h.delete_min(p, seq)
+                    bound[p].delete_min()
             return op
         rows.append(bench(f"PBHeap-{size}", make, op_factory,
-                          N_THREADS, OPS))
+                          n_threads, total_ops))
     return rows
 
 
-def table1_counters() -> List[Dict[str, Any]]:
+def table1_counters(n_threads: int = N_THREADS,
+                    total_ops: int = OPS) -> List[Dict[str, Any]]:
     """Shared-location traffic per op (volatile mode, paper Table 1)."""
     out = []
     for name, mk in [
         ("PBComb", lambda c: PBComb(_nvm(pwb_nop=True, psync_nop=True),
-                                    N_THREADS, AtomicFloatObject(),
+                                    n_threads, AtomicFloatObject(),
                                     counters=c)),
         ("PWFComb", lambda c: PWFComb(_nvm(pwb_nop=True, psync_nop=True),
-                                      N_THREADS, AtomicFloatObject(),
+                                      n_threads, AtomicFloatObject(),
                                       counters=c)),
     ]:
         counters = Counters()
         obj = mk(counters)
-        from .common import run_threads
-        run_threads(N_THREADS, OPS,
+        run_threads(n_threads, total_ops,
                     lambda p, i, seq: obj.op(p, "MUL", 1.000001, seq))
         snap = counters.snapshot()
         out.append({"name": name,
-                    "reads_per_op": snap["shared_reads"] / OPS,
-                    "writes_per_op": snap["shared_writes"] / OPS,
-                    "cas_per_op": snap["cas_calls"] / OPS})
+                    "reads_per_op": snap["shared_reads"] / total_ops,
+                    "writes_per_op": snap["shared_writes"] / total_ops,
+                    "cas_per_op": snap["cas_calls"] / total_ops})
     return out

@@ -1,12 +1,30 @@
 """Benchmark entry point: one function per paper table/figure plus the
-framework-level benches; prints ``name,us_per_call,derived`` CSV at the
-end (and human-readable tables as it goes).
+framework-level benches; prints human-readable tables as it goes, a
+``name,us_per_call,derived`` CSV at the end, and — with ``--json`` — a
+machine-readable result file so every PR extends a real perf trajectory.
 
-Run:  PYTHONPATH=src python -m benchmarks.run
+Run:  PYTHONPATH=src python -m benchmarks.run [--quick] [--json PATH]
+
+JSON schema (``bench.v1``)::
+
+    {"schema": "bench.v1", "tag": "<tag>", "quick": bool,
+     "rows": [{"name": "<table>/<impl>",
+               "us_per_op": float,
+               "pwbs_per_op": float,
+               "psyncs_per_op": float}, ...]}
+
+``--quick`` runs every bench at tiny sizes (seconds, CI perf-smoke);
+absolute numbers are then meaningless but the schema and the per-op
+persistence-instruction counts remain exact, which is what the smoke
+test (tests/test_bench_json.py) pins: pbcomb/pwfcomb rows must stay at
+psyncs_per_op <= 1 + eps — one psync per combining ROUND is the paper's
+whole point.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 
 sys.path.insert(0, "src")                      # repo-root invocation
@@ -15,36 +33,49 @@ from benchmarks import framework_benches, paper_figures, roofline_report
 from benchmarks.common import csv_rows, print_rows
 
 
-def main() -> None:
+def collect(quick: bool = False):
+    """Run every bench; returns (csv_lines, json_rows)."""
     csv: list = []
+    json_rows: list = []
 
-    rows = paper_figures.fig1_atomicfloat()
-    print_rows("Fig 1/2 — persistent AtomicFloat (throughput, pwbs/op)",
-               rows)
-    csv += csv_rows(rows, "fig1_atomicfloat")
+    if quick:
+        nt, ops = 3, 120
+        heap_sizes = (64, 128)
+        matrix_kw = dict(n_threads=3, ops_per_thread=40, runs=2)
+        ckpt_kw = dict(n_hosts=2, rounds=3, shard_kb=16)
+        serve_kw = dict(n_clients=2, reqs_per_client=2, gen_len=4)
+    else:
+        nt, ops = paper_figures.N_THREADS, paper_figures.OPS
+        heap_sizes = (64, 128, 256, 512, 1024)
+        matrix_kw = {}
+        ckpt_kw = {}
+        serve_kw = {}
 
-    rows = paper_figures.fig3_no_psync()
-    print_rows("Fig 3 — AtomicFloat with psync as NOP", rows)
-    csv += csv_rows(rows, "fig3_no_psync")
+    def add(table: str, title: str, rows) -> None:
+        print_rows(title, rows)
+        csv.extend(csv_rows(rows, table))
+        json_rows.extend(
+            {"name": f"{table}/{r['name']}",
+             "us_per_op": round(r["us_per_op"], 3),
+             "pwbs_per_op": round(r["pwb_per_op"], 3),
+             "psyncs_per_op": round(r["psync_per_op"], 3)}
+            for r in rows)
 
-    rows = paper_figures.fig4_queues()
-    print_rows("Fig 4/5 — persistent queues (throughput, pwbs/op)", rows)
-    csv += csv_rows(rows, "fig4_queues")
+    add("fig1_atomicfloat",
+        "Fig 1/2 — persistent AtomicFloat (throughput, pwbs/op)",
+        paper_figures.fig1_atomicfloat(nt, ops))
+    add("fig3_no_psync", "Fig 3 — AtomicFloat with psync as NOP",
+        paper_figures.fig3_no_psync(nt, ops))
+    add("fig4_queues", "Fig 4/5 — persistent queues (throughput, pwbs/op)",
+        paper_figures.fig4_queues(nt, ops))
+    add("fig6_queues_no_pwb", "Fig 6 — queues with pwb as NOP (pure sync cost)",
+        paper_figures.fig6_queues_no_pwb(nt, ops))
+    add("fig7a_stacks", "Fig 7a — persistent stacks (+elim/recycle ablations)",
+        paper_figures.fig7a_stacks(nt, ops))
+    add("fig7b_heap", f"Fig 7b — PBHeap across sizes {heap_sizes}",
+        paper_figures.fig7b_heap(nt, ops, sizes=heap_sizes))
 
-    rows = paper_figures.fig6_queues_no_pwb()
-    print_rows("Fig 6 — queues with pwb as NOP (pure sync cost)", rows)
-    csv += csv_rows(rows, "fig6_queues_no_pwb")
-
-    rows = paper_figures.fig7a_stacks()
-    print_rows("Fig 7a — persistent stacks (+elim/recycle ablations)",
-               rows)
-    csv += csv_rows(rows, "fig7a_stacks")
-
-    rows = paper_figures.fig7b_heap()
-    print_rows("Fig 7b — PBHeap across sizes 64-1024", rows)
-    csv += csv_rows(rows, "fig7b_heap")
-
-    t1 = paper_figures.table1_counters()
+    t1 = paper_figures.table1_counters(nt, ops)
     print("\n## Table 1 — shared-location traffic per op (volatile mode)")
     print(f"{'impl':12s} {'reads/op':>9s} {'writes/op':>10s} {'cas/op':>7s}")
     for r in t1:
@@ -54,20 +85,32 @@ def main() -> None:
                    f"reads/op={r['reads_per_op']:.2f};"
                    f"writes/op={r['writes_per_op']:.2f}")
 
-    rows = framework_benches.structure_matrix_bench()
-    print_rows("Framework — protocol matrix via the unified runtime API",
-               rows)
-    csv += csv_rows(rows, "matrix")
+    add("matrix", "Framework — protocol matrix via the unified runtime API",
+        framework_benches.structure_matrix_bench(**matrix_kw))
+    add("checkpoint",
+        "Framework — sharded checkpoint commit (combining vs naive)",
+        framework_benches.checkpoint_bench(**ckpt_kw))
+    add("serving", "Framework — serving (combining batcher vs lock/request)",
+        framework_benches.serving_bench(**serve_kw))
 
-    rows = framework_benches.checkpoint_bench()
-    print_rows("Framework — sharded checkpoint commit (combining vs naive)",
-               rows)
-    csv += csv_rows(rows, "checkpoint")
+    return csv, json_rows
 
-    rows = framework_benches.serving_bench()
-    print_rows("Framework — serving (combining batcher vs lock/request)",
-               rows)
-    csv += csv_rows(rows, "serving")
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="Persistent-software-combining benchmark suite")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write machine-readable results (bench.v1) here, "
+                         "e.g. BENCH_pr2.json")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny sizes for CI perf-smoke (schema-exact, "
+                         "timing-meaningless)")
+    ap.add_argument("--tag", default=None,
+                    help="trajectory tag recorded in the JSON (defaults "
+                         "to the --json filename stem)")
+    args = ap.parse_args(argv)
+
+    csv, json_rows = collect(quick=args.quick)
 
     # roofline tables from dry-run artifacts (if present)
     try:
@@ -83,6 +126,20 @@ def main() -> None:
     print("\n# CSV: name,us_per_call,derived")
     for line in csv:
         print(line)
+
+    if args.json:
+        tag = args.tag
+        if tag is None:
+            stem = args.json.rsplit("/", 1)[-1]
+            tag = stem[len("BENCH_"):-len(".json")] \
+                if stem.startswith("BENCH_") and stem.endswith(".json") \
+                else stem
+        doc = {"schema": "bench.v1", "tag": tag, "quick": args.quick,
+               "rows": json_rows}
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1)
+            f.write("\n")
+        print(f"\n(wrote {len(json_rows)} rows to {args.json})")
 
 
 if __name__ == "__main__":

@@ -12,10 +12,12 @@ class).
     bq.enqueue(1); bq.dequeue()
     rt.crash(); rt.recover()             # machine-wide, one call each
 
-The old per-structure conventions (``PBComb.op(p, func, args, seq)``,
-``PBQueue.enqueue(p, value, seq)``, manual ``reset_volatile`` +
-``recover`` dances) remain as thin deprecated shims for one PR cycle —
-see DESIGN.md for the migration table.
+The old per-structure conventions (``PBQueue.enqueue(p, value, seq)``,
+``PBStack.push(p, value, seq)``, manual ``reset_volatile`` +
+``recover`` dances) were kept as deprecated shims for one PR cycle and
+are now removed — see DESIGN.md §1 for the migration table.  The
+protocol-layer entry ``PBComb.op(p, func, args, seq)`` (Algorithm 1)
+remains: it is the interface the adapters are built on.
 """
 
 from .adapters import OpSpec, StructureAdapter

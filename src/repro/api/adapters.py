@@ -51,7 +51,7 @@ STACK_OPS = {"push": OpSpec("PUSH", "main"),
 HEAP_OPS = {"insert": OpSpec("HINSERT", "main"),
             "delete_min": OpSpec("HDELETEMIN", "main"),
             "get_min": OpSpec("HGETMIN", "main")}
-COUNTER_OPS = {"fetch_add": OpSpec("FAA", "main"),
+COUNTER_OPS = {"fetch_add": OpSpec("FAA", "main", 1),
                "read": OpSpec("FAA", "main", 0)}
 
 
@@ -85,6 +85,26 @@ class StructureAdapter:
     def invoke(self, core: Any, p: int, op: str, args: Any,
                seq: int) -> Any:
         raise NotImplementedError
+
+    def bind_op(self, core: Any, op: str):
+        """Pre-resolved ``fn(p, args, seq)`` for one (core, op) pair —
+        handles cache these so the hot invoke path stops re-resolving op
+        strings and OpSpecs per call.  The default wraps ``invoke``;
+        adapters whose cores expose a direct entry override it to bind
+        the core method itself."""
+        self._spec(op)                  # validate (raises ValueError)
+        invoke = self.invoke
+
+        def fn(p: int, args: Any, seq: int) -> Any:
+            return invoke(core, p, op, args, seq)
+        return fn
+
+    def bind_parts(self, core: Any, op: str):
+        """Optional deeper binding: ``(entry, func, default)`` such that
+        ``entry(p, func, args-or-default, seq)`` IS the operation — lets
+        the handle skip one wrapper frame per call.  None means "use
+        bind_op"."""
+        return None
 
     def recover(self, core: Any, p: int, op: str, args: Any,
                 seq: int) -> Any:
@@ -131,6 +151,19 @@ class _CombiningAdapter(StructureAdapter):
         spec = self._spec(op)
         return self._instance(core, op).op(p, spec.func,
                                            self._args(op, args), seq)
+
+    def bind_op(self, core, op):
+        spec = self._spec(op)
+        inst_op = self._instance(core, op).op
+        func, default = spec.func, spec.default
+
+        def fn(p: int, args: Any, seq: int) -> Any:
+            return inst_op(p, func, default if args is None else args, seq)
+        return fn
+
+    def bind_parts(self, core, op):
+        spec = self._spec(op)
+        return (self._instance(core, op).op, spec.func, spec.default)
 
     def announce(self, core, p, op, args, seq):
         spec = self._spec(op)
@@ -245,7 +278,29 @@ _KIND_OPS = {"queue": QUEUE_OPS, "stack": STACK_OPS,
              "heap": HEAP_OPS, "counter": COUNTER_OPS}
 
 
-class LockAdapter(StructureAdapter):
+class _DirectOpAdapter(StructureAdapter):
+    """Shared dispatch for cores exposing ``core.op(p, func, args, seq)``
+    directly (lock baselines, DFC)."""
+
+    def invoke(self, core, p, op, args, seq):
+        spec = self._spec(op)
+        return core.op(p, spec.func, self._args(op, args), seq)
+
+    def bind_op(self, core, op):
+        spec = self._spec(op)
+        core_op = core.op
+        func, default = spec.func, spec.default
+
+        def fn(p: int, args: Any, seq: int) -> Any:
+            return core_op(p, func, default if args is None else args, seq)
+        return fn
+
+    def bind_parts(self, core, op):
+        spec = self._spec(op)
+        return (core.op, spec.func, spec.default)
+
+
+class LockAdapter(_DirectOpAdapter):
     """Coarse-lock baselines over any SeqObject (direct or undo-log)."""
 
     detectable = False
@@ -261,10 +316,6 @@ class LockAdapter(StructureAdapter):
         obj = self._obj_cls() if self._obj_cls is FetchAddObject \
             else self._obj_cls(capacity)
         return self._cls(nvm, n_threads, obj)
-
-    def invoke(self, core, p, op, args, seq):
-        spec = self._spec(op)
-        return core.op(p, spec.func, self._args(op, args), seq)
 
     def snapshot(self, core):
         nvm, base, obj = core.nvm, core.st_base, core.obj
@@ -288,11 +339,19 @@ class DurableMSQueueAdapter(StructureAdapter):
             return core.enqueue(p, self._args(op, args), seq)
         return core.dequeue(p, seq)
 
+    def bind_op(self, core, op):
+        self._spec(op)
+        if op == "enqueue":
+            enq = core.enqueue
+            return lambda p, args, seq: enq(p, args, seq)
+        deq = core.dequeue
+        return lambda p, args, seq: deq(p, seq)
+
     def snapshot(self, core):
         return core.drain()
 
 
-class DFCStackAdapter(StructureAdapter):
+class DFCStackAdapter(_DirectOpAdapter):
     kind, protocol, OPS = "stack", "dfc", STACK_OPS
     # DFC persists announcements and done-marks, and recover() uses them
     # as a fast path — but the combiner psyncs once per ROUND, so under
@@ -303,10 +362,6 @@ class DFCStackAdapter(StructureAdapter):
 
     def create(self, nvm, n_threads, counters=None, **kw):
         return DFCStack(nvm, n_threads, **kw)
-
-    def invoke(self, core, p, op, args, seq):
-        spec = self._spec(op)
-        return core.op(p, spec.func, self._args(op, args), seq)
 
     def snapshot(self, core):
         return core.drain()

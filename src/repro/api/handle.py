@@ -9,11 +9,20 @@ enqueue/dequeue counters), records every in-flight call with the runtime
 so ``CombiningRuntime.recover`` can replay it, and exposes the typed
 sugar (``q.enqueue(x)``, ``stack.pop()``, ``heap.insert(k)``) so callers
 stop hand-threading thread ids and seq numbers.
+
+Hot path (DESIGN.md §5): the first ``invoke`` of an (object, op) pair
+resolves the op spec once — seq-group key, in-flight key, and a
+pre-bound adapter callable from ``adapter.bind_op`` — and caches the
+triple on the handle.  Every later call is two dict operations, the seq
+bump, and the direct call: no string re-resolution, no per-call
+OpSpec lookups, no intermediate adapter frame.  The typed ``Bound``
+sugar goes one step further and stores the per-op invoker as an
+instance attribute at bind time.
 """
 
 from __future__ import annotations
 
-from typing import Any, Dict, List, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from ..core.nvm import SimulatedCrash
 
@@ -23,17 +32,32 @@ BATCH = "__batch__"   # runtime in-flight marker for invoke_many records
 class Handle:
     """One logical thread attached to a CombiningRuntime."""
 
+    __slots__ = ("runtime", "tid", "_seq", "_resolved")
+
     def __init__(self, runtime: Any, tid: int) -> None:
         self.runtime = runtime
         self.tid = tid
         self._seq: Dict[Tuple[str, str], int] = {}
+        # (object name, op) -> (seq_key, inflight_key, bound fn)
+        self._resolved: Dict[Tuple[str, str], Tuple] = {}
 
-    # ------------------ seq management -------------------------------- #
+    # ------------------ op resolution / seq management ----------------- #
+    def _resolve(self, obj: Any, op: str) -> Tuple:
+        key = (obj.name, op)
+        ent = self._resolved.get(key)
+        if ent is None:
+            spec = obj.adapter._spec(op)       # raises ValueError: no op
+            parts = obj.adapter.bind_parts(obj.core, op)
+            ent = ((obj.name, spec.group), (obj.name, self.tid),
+                   obj.adapter.bind_op(obj.core, op), parts)
+            self._resolved[key] = ent
+        return ent
+
     def _next_seq(self, obj: Any, op: str) -> int:
-        group = obj.adapter._spec(op).group
-        key = (obj.name, group)
-        self._seq[key] = self._seq.get(key, 0) + 1
-        return self._seq[key]
+        seq_key = self._resolve(obj, op)[0]
+        seq = self._seq.get(seq_key, 0) + 1
+        self._seq[seq_key] = seq
+        return seq
 
     @staticmethod
     def _norm(args: tuple) -> Any:
@@ -47,19 +71,75 @@ class Handle:
     def invoke(self, obj: Any, op: str, *args: Any) -> Any:
         """Run one operation; the runtime replays it on recovery if a
         crash lands mid-call."""
-        a = self._norm(args)
-        seq = self._next_seq(obj, op)
-        key = (obj.name, self.tid)
-        self.runtime._inflight[key] = (op, a, seq)
+        seq_key, key, fn, _parts = self._resolve(obj, op)
+        a = args[0] if len(args) == 1 else (None if not args
+                                            else tuple(args))
+        seqs = self._seq
+        seq = seqs.get(seq_key, 0) + 1
+        seqs[seq_key] = seq
+        inflight = self.runtime._inflight
+        inflight[key] = (op, a, seq)
         try:
-            ret = obj.adapter.invoke(obj.core, self.tid, op, a, seq)
+            ret = fn(self.tid, a, seq)
         except SimulatedCrash:
             raise                       # stays in-flight -> replayed
         except BaseException:
-            self.runtime._inflight.pop(key, None)
+            inflight.pop(key, None)
             raise
-        self.runtime._inflight.pop(key, None)
+        inflight.pop(key, None)
         return ret
+
+    def invoker(self, obj: Any, op: str, arity: Optional[int] = None):
+        """A zero-lookup callable for one (object, op): everything the
+        invoke path needs is captured at bind time.  Used by the typed
+        sugar; semantically identical to ``invoke(obj, op, *args)``.
+        ``arity`` 0/1 selects a specialized closure without per-call
+        varargs packing (the typed sugar knows each op's shape)."""
+        seq_key, key, fn, parts = self._resolve(obj, op)
+        seqs = self._seq
+        inflight = self.runtime._inflight
+        tid = self.tid
+
+        if parts is not None:
+            entry, func, default = parts
+
+            def run(a: Any) -> Any:
+                seq = seqs.get(seq_key, 0) + 1
+                seqs[seq_key] = seq
+                inflight[key] = (op, a, seq)
+                try:
+                    ret = entry(tid, func, default if a is None else a, seq)
+                except SimulatedCrash:
+                    raise
+                except BaseException:
+                    inflight.pop(key, None)
+                    raise
+                inflight.pop(key, None)
+                return ret
+        else:
+            def run(a: Any) -> Any:
+                seq = seqs.get(seq_key, 0) + 1
+                seqs[seq_key] = seq
+                inflight[key] = (op, a, seq)
+                try:
+                    ret = fn(tid, a, seq)
+                except SimulatedCrash:
+                    raise
+                except BaseException:
+                    inflight.pop(key, None)
+                    raise
+                inflight.pop(key, None)
+                return ret
+
+        if arity == 0:
+            return lambda: run(None)
+        if arity == 1:
+            return run
+
+        def call(*args: Any) -> Any:
+            return run(args[0] if len(args) == 1
+                       else (None if not args else tuple(args)))
+        return call
 
     def invoke_many(self, calls: Sequence[Sequence[Any]]) -> List[Any]:
         """Batched invocation: ``calls`` is ``[(obj, op, *args), ...]``.
@@ -113,7 +193,13 @@ class Handle:
             raise RuntimeError(f"nothing announced on {obj.name} "
                                f"by thread {self.tid}")
         op, _a, _seq = self.runtime._inflight[key]
-        ret = obj.adapter.perform(obj.core, self.tid, op)
+        try:
+            ret = obj.adapter.perform(obj.core, self.tid, op)
+        except SimulatedCrash:
+            raise                       # stays in-flight -> replayed
+        except BaseException:
+            self.runtime._inflight.pop(key, None)
+            raise
         self.runtime._inflight.pop(key, None)
         return ret
 
@@ -123,7 +209,11 @@ class Handle:
 
 
 class Bound:
-    """Base typed proxy: an object + the handle operating on it."""
+    """Base typed proxy: an object + the handle operating on it.
+
+    Subclasses pre-bind their per-op invokers as instance attributes —
+    ``bound.enqueue(x)`` goes straight into the cached fast path with no
+    per-call attribute or string resolution."""
 
     def __init__(self, handle: Handle, obj: Any) -> None:
         self._h = handle
@@ -134,44 +224,40 @@ class Bound:
 
 
 class BoundQueue(Bound):
-    def enqueue(self, value: Any) -> Any:
-        return self._h.invoke(self._obj, "enqueue", value)
-
-    def dequeue(self) -> Any:
-        return self._h.invoke(self._obj, "dequeue")
+    def __init__(self, handle: Handle, obj: Any) -> None:
+        super().__init__(handle, obj)
+        self.enqueue = handle.invoker(obj, "enqueue", arity=1)
+        self.dequeue = handle.invoker(obj, "dequeue", arity=0)
 
     def drain(self) -> List[Any]:
         return self._obj.snapshot()
 
 
 class BoundStack(Bound):
-    def push(self, value: Any) -> Any:
-        return self._h.invoke(self._obj, "push", value)
-
-    def pop(self) -> Any:
-        return self._h.invoke(self._obj, "pop")
+    def __init__(self, handle: Handle, obj: Any) -> None:
+        super().__init__(handle, obj)
+        self.push = handle.invoker(obj, "push", arity=1)
+        self.pop = handle.invoker(obj, "pop", arity=0)
 
     def drain(self) -> List[Any]:
         return self._obj.snapshot()
 
 
 class BoundHeap(Bound):
-    def insert(self, key: Any) -> Any:
-        return self._h.invoke(self._obj, "insert", key)
-
-    def delete_min(self) -> Any:
-        return self._h.invoke(self._obj, "delete_min")
-
-    def get_min(self) -> Any:
-        return self._h.invoke(self._obj, "get_min")
+    def __init__(self, handle: Handle, obj: Any) -> None:
+        super().__init__(handle, obj)
+        self.insert = handle.invoker(obj, "insert", arity=1)
+        self.delete_min = handle.invoker(obj, "delete_min", arity=0)
+        self.get_min = handle.invoker(obj, "get_min", arity=0)
 
 
 class BoundCounter(Bound):
-    def fetch_add(self, delta: int = 1) -> Any:
-        return self._h.invoke(self._obj, "fetch_add", delta)
-
-    def read(self) -> Any:
-        return self._h.invoke(self._obj, "read")
+    def __init__(self, handle: Handle, obj: Any) -> None:
+        super().__init__(handle, obj)
+        # fetch_add stays varargs: ``fetch_add()`` means FAA(1) (the
+        # OpSpec default fills in when no argument is given)
+        self.fetch_add = handle.invoker(obj, "fetch_add")
+        self.read = handle.invoker(obj, "read", arity=0)
 
 
 _BOUND_BY_KIND = {"queue": BoundQueue, "stack": BoundStack,

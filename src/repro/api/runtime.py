@@ -154,7 +154,12 @@ class CombiningRuntime:
             b.reset()
         for obj in self.objects.values():
             obj.adapter.reset_volatile(obj.core)
-        inflight, self._inflight = dict(self._inflight), {}
+        # snapshot + clear IN PLACE: handle invokers captured this dict
+        # at bind time, so reassigning it would orphan every bound proxy
+        # created before the recover (their in-flight records would land
+        # in a dead dict and never replay)
+        inflight = dict(self._inflight)
+        self._inflight.clear()
         responses: Dict[Tuple[str, int], Any] = {}
         for (name, tid), (op, a, seq) in inflight.items():
             obj = self.objects.get(name)

@@ -6,7 +6,7 @@ and the sequential-object interface they transform into recoverable
 concurrent objects.
 """
 
-from .atomics import AtomicInt, AtomicRef, Counters, GLOBAL_COUNTERS
+from .atomics import AtomicInt, AtomicRef, Counters
 from .nvm import LINE, NVM, SimulatedCrash
 from .objects import (AtomicFloatObject, FetchAddObject, HeapObject,
                       SeqObject, SeqQueueObject, SeqStackObject)
@@ -14,7 +14,7 @@ from .pbcomb import PBComb, RequestRec
 from .pwfcomb import PWFComb
 
 __all__ = [
-    "AtomicInt", "AtomicRef", "Counters", "GLOBAL_COUNTERS",
+    "AtomicInt", "AtomicRef", "Counters",
     "LINE", "NVM", "SimulatedCrash",
     "AtomicFloatObject", "FetchAddObject", "HeapObject", "SeqObject",
     "SeqQueueObject", "SeqStackObject",

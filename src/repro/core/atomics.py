@@ -38,35 +38,37 @@ class Counters:
         self.cas_calls = 0
 
 
-GLOBAL_COUNTERS = Counters()
-
-
 class AtomicInt:
+    """Instrumentation is opt-in: traffic is counted only when a
+    ``Counters`` object is supplied for a ``shared`` word (the Table 1
+    harness does) — the un-instrumented hot path pays no bookkeeping."""
+
+    __slots__ = ("_value", "_mutex", "_count")
+
     def __init__(self, value: int = 0, *, shared: bool = False,
                  counters: Optional[Counters] = None) -> None:
         self._value = value
         self._mutex = threading.Lock()
-        self._shared = shared
-        self._counters = counters or GLOBAL_COUNTERS
+        self._count = counters if (shared and counters is not None) else None
 
     def load(self) -> int:
-        if self._shared:
-            self._counters.shared_reads += 1
+        if self._count is not None:
+            self._count.shared_reads += 1
         return self._value
 
     def store(self, value: int) -> None:
-        if self._shared:
-            self._counters.shared_writes += 1
+        if self._count is not None:
+            self._count.shared_writes += 1
         self._value = value
 
     def cas(self, old: int, new: int) -> bool:
         with self._mutex:
-            if self._shared:
-                self._counters.cas_calls += 1
+            if self._count is not None:
+                self._count.cas_calls += 1
             if self._value == old:
                 self._value = new
-                if self._shared:
-                    self._counters.shared_writes += 1
+                if self._count is not None:
+                    self._count.shared_writes += 1
                 return True
             return False
 
@@ -74,46 +76,48 @@ class AtomicInt:
         with self._mutex:
             old = self._value
             self._value = old + delta
-            if self._shared:
-                self._counters.shared_writes += 1
+            if self._count is not None:
+                self._count.shared_writes += 1
             return old
 
 
 class AtomicRef:
-    """Versioned reference supporting LL/VL/SC (ABA-safe, as in paper §6)."""
+    """Versioned reference supporting LL/VL/SC (ABA-safe, as in paper §6).
+    Instrumentation opt-in as for ``AtomicInt``."""
+
+    __slots__ = ("_value", "_mutex", "_count")
 
     def __init__(self, value: Any, *, shared: bool = False,
                  counters: Optional[Counters] = None) -> None:
         self._value: Tuple[Any, int] = (value, 0)
         self._mutex = threading.Lock()
-        self._shared = shared
-        self._counters = counters or GLOBAL_COUNTERS
+        self._count = counters if (shared and counters is not None) else None
 
     def ll(self) -> Tuple[Any, int]:
         """Load-linked: returns (value, version); version feeds VL/SC."""
-        if self._shared:
-            self._counters.shared_reads += 1
+        if self._count is not None:
+            self._count.shared_reads += 1
         return self._value
 
     def vl(self, version: int) -> bool:
         """Validate: has the reference changed since the LL?"""
-        if self._shared:
-            self._counters.shared_reads += 1
+        if self._count is not None:
+            self._count.shared_reads += 1
         return self._value[1] == version
 
     def sc(self, version: int, new_value: Any) -> bool:
         """Store-conditional: succeeds iff no SC since the matching LL."""
         with self._mutex:
-            if self._shared:
-                self._counters.cas_calls += 1
+            if self._count is not None:
+                self._count.cas_calls += 1
             if self._value[1] == version:
                 self._value = (new_value, version + 1)
-                if self._shared:
-                    self._counters.shared_writes += 1
+                if self._count is not None:
+                    self._count.shared_writes += 1
                 return True
             return False
 
     def load(self) -> Any:
-        if self._shared:
-            self._counters.shared_reads += 1
+        if self._count is not None:
+            self._count.shared_reads += 1
         return self._value[0]

@@ -28,6 +28,19 @@ Counters expose the paper's performance metrics: pwbs (counted per cache
 line, so persistence principle P3 — contiguity — is visible in the
 numbers), pfences, psyncs.  ``pwb_nop``/``psync_nop`` reproduce the
 ablations of paper Figures 3 and 6.
+
+Batching (DESIGN.md §5): the write-back queue stores line *runs* —
+``(first_line, n_lines, snapshot)`` — not individual lines, so a
+combining round's one contiguous StateRec pwb is one queue entry, one
+slice copy, and one slice drain at psync, however many lines it covers.
+``persist_lines`` coalesces several (addr, n_words) ranges into the
+union of their cache lines in a single lock acquisition (duplicate lines
+within one call count once — the coalescing the flat-combining and MOD
+lines of work show is where persistence wins live), and ``copy_range``
+gives the combiner's state copy a single slice-assign path.  Snapshots
+are Python list slices (C-level pointer memcpy), not numpy arrays: NVM
+words hold arbitrary Python payloads (tuples, strings), which object
+ndarrays reject in range stores.
 """
 
 from __future__ import annotations
@@ -59,9 +72,10 @@ class NVM:
         self.n_words = n_words
         self._vol: List[Any] = [0] * n_words        # volatile (cache) image
         self._dur: List[Any] = [0] * n_words        # durable (NVMM) image
-        # Write-back queue: list of epochs; each epoch is an ordered list of
-        # (line_index, snapshot_of_line_words) taken at pwb-issue time.
-        self._epochs: List[List[Tuple[int, List[Any]]]] = [[]]
+        # Write-back queue: list of epochs; each epoch is an ordered list
+        # of line runs (first_line, n_lines, snapshot_of_run_words) taken
+        # at pwb-issue time.
+        self._epochs: List[List[Tuple[int, int, List[Any]]]] = [[]]
         # Line 0 is reserved: address 0 doubles as the NULL pointer for the
         # linked structures, so no allocation may ever receive it.
         self._alloc_ptr = LINE
@@ -104,6 +118,12 @@ class NVM:
     def write_range(self, addr: int, values: List[Any]) -> None:
         self._vol[addr:addr + len(values)] = values
 
+    def copy_range(self, dst: int, src: int, n: int) -> None:
+        """Volatile memcpy — the combiner's state copy as one slice
+        assignment instead of a read_range/write_range round trip."""
+        vol = self._vol
+        vol[dst:dst + n] = vol[src:src + n]
+
     # ------------------------------------------------------------------ #
     # Persistence instructions                                           #
     # ------------------------------------------------------------------ #
@@ -116,15 +136,50 @@ class NVM:
                 raise SimulatedCrash()
 
     def pwb(self, addr: int, n_words: int = 1) -> None:
-        """Queue write-back of every line covering [addr, addr+n_words)."""
+        """Queue write-back of every line covering [addr, addr+n_words).
+
+        One contiguous run is one queue entry and one slice snapshot,
+        however many lines it covers; the counter still counts lines.
+        """
         first = addr // LINE
-        last = (addr + n_words - 1) // LINE
+        n_lines = (addr + n_words - 1) // LINE - first + 1
         with self._lock:
-            for line in range(first, last + 1):
-                if not self.pwb_nop:
-                    snap = self._vol[line * LINE:(line + 1) * LINE]
-                    self._epochs[-1].append((line, snap))
-                self.counters["pwb"] += 1
+            if not self.pwb_nop:
+                self._epochs[-1].append(
+                    (first, n_lines,
+                     self._vol[first * LINE:(first + n_lines) * LINE]))
+            self.counters["pwb"] += n_lines
+        self._tick_crash_point()
+
+    # Explicit alias: round persistence paths call this so the intent —
+    # one coalesced range, not a per-word loop — reads at the call site.
+    pwb_range = pwb
+
+    def persist_lines(self, ranges) -> None:
+        """Queue write-back of the UNION of cache lines covering several
+        ``(addr, n_words)`` ranges — one persistence event, one lock
+        acquisition.  Lines named by more than one range are snapshotted
+        (and counted) once: this is the cache-line coalescing a combining
+        round gets for free by persisting all its node/state touches
+        together (P3)."""
+        if isinstance(ranges, list) and len(ranges) == 1:
+            # single range: plain pwb (same event count, no set/merge)
+            addr, n_words = ranges[0]
+            self.pwb(addr, n_words)
+            return
+        runs = self._pending_lines(ranges)
+        if not runs:
+            return
+        n_total = sum(n for _first, n in runs)
+        vol = self._vol
+        with self._lock:
+            if not self.pwb_nop:
+                epoch = self._epochs[-1]
+                for first, n_lines in runs:
+                    epoch.append(
+                        (first, n_lines,
+                         vol[first * LINE:(first + n_lines) * LINE]))
+            self.counters["pwb"] += n_total
         self._tick_crash_point()
 
     def pfence(self) -> None:
@@ -134,6 +189,135 @@ class NVM:
                 self._epochs.append([])
         self._tick_crash_point()
 
+    # ---------------- fused round-commit paths ------------------------ #
+    # A combining round ends with a fixed persistence sentence — e.g.
+    # PBComb: pwb(StateRec); pfence; MIndex := ind; pwb(&MIndex); psync.
+    # Issuing it as four locked calls costs more simulator overhead than
+    # the protocol work it models.  The fused paths below execute the
+    # SAME sentence under one lock acquisition with identical counter
+    # arithmetic and durable effect; whenever an observer could tell the
+    # difference — an armed crash countdown (ticks must land *between*
+    # instructions), pwb/psync NOP ablations, or a psync cost model —
+    # they fall back to the separate instructions.
+
+    def _fast_ok(self) -> bool:
+        return (self._crash_countdown is None and not self.pwb_nop
+                and not self.psync_nop and not self.persist_latency)
+
+    def _pending_lines(self, pending) -> List[Tuple[int, int]]:
+        """Dedupe/merge (addr, n_words) ranges to [first, n_lines] runs
+        (same coalescing as persist_lines, for the fused paths)."""
+        lines = set()
+        add = lines.add
+        for addr, n_words in pending:
+            first = addr // LINE
+            last = (addr + n_words - 1) // LINE
+            add(first)
+            while first < last:
+                first += 1
+                add(first)
+        runs: List[List[int]] = []
+        for line in sorted(lines):
+            if runs and line == runs[-1][0] + runs[-1][1]:
+                runs[-1][1] += 1
+            else:
+                runs.append([line, 1])
+        return runs
+
+    def pwb_fence(self, addr: int, n_words: int, pending=None) -> None:
+        """``[persist_lines(pending);] pwb_range(addr, n_words); pfence()``
+        fused.  ``pending`` carries a round's node touches so the whole
+        pre-publish persistence sentence is one lock acquisition."""
+        if not self._fast_ok():
+            if pending:
+                self.persist_lines(pending)
+            self.pwb_range(addr, n_words)
+            self.pfence()
+            return
+        runs = self._pending_lines(pending) if pending else ()
+        first = addr // LINE
+        n_lines = (addr + n_words - 1) // LINE - first + 1
+        vol = self._vol
+        with self._lock:
+            epoch = self._epochs[-1]
+            n_pending = 0
+            for pfirst, pn in runs:
+                epoch.append(
+                    (pfirst, pn, vol[pfirst * LINE:(pfirst + pn) * LINE]))
+                n_pending += pn
+            epoch.append(
+                (first, n_lines, vol[first * LINE:(first + n_lines) * LINE]))
+            self._epochs.append([])
+            c = self.counters
+            c["pwb"] += n_lines + n_pending
+            c["pfence"] += 1
+
+    def pwb_sync(self, addr: int, n_words: int = 1) -> None:
+        """``pwb(addr); psync()`` fused: queue the line(s), then drain
+        the whole write-back queue straight to the durable image."""
+        if not self._fast_ok():
+            self.pwb(addr, n_words)
+            self.psync()
+            return
+        first = addr // LINE
+        n_lines = (addr + n_words - 1) // LINE - first + 1
+        with self._lock:
+            dur, vol = self._dur, self._vol
+            for epoch in self._epochs:
+                for efirst, _en, snap in epoch:
+                    dur[efirst * LINE:efirst * LINE + len(snap)] = snap
+            a, b = first * LINE, (first + n_lines) * LINE
+            dur[a:b] = vol[a:b]
+            self._epochs = [[]]
+            c = self.counters
+            c["pwb"] += n_lines
+            c["psync"] += 1
+
+    def commit_round(self, state_addr: int, n_words: int,
+                     index_addr: int, index_value: Any,
+                     pending=None) -> None:
+        """PBComb's full round commit (Algorithm 2 lines 22-27):
+        ``[persist_lines(pending);] pwb(StateRec); pfence;
+        MIndex := v; pwb(&MIndex); psync`` — ``pending`` carries the
+        round's node touches (Algorithm 5 line 24)."""
+        if not self._fast_ok():
+            if pending:
+                self.persist_lines(pending)
+            self.pwb_range(state_addr, n_words)
+            self.pfence()
+            self.write(index_addr, index_value)
+            self.pwb(index_addr, 1)
+            self.psync()
+            return
+        runs = self._pending_lines(pending) if pending else ()
+        first = state_addr // LINE
+        n_lines = (state_addr + n_words - 1) // LINE - first + 1
+        with self._lock:
+            dur, vol = self._dur, self._vol
+            # drain epochs queued before this commit, the round's node
+            # lines, the StateRec, then MIndex — everything the round's
+            # psync would have drained
+            for epoch in self._epochs:
+                for efirst, _en, snap in epoch:
+                    dur[efirst * LINE:efirst * LINE + len(snap)] = snap
+            n_pending = 0
+            for pfirst, pn in runs:
+                a = pfirst * LINE
+                b = a + pn * LINE
+                dur[a:b] = vol[a:b]
+                n_pending += pn
+            a, b = first * LINE, (first + n_lines) * LINE
+            dur[a:b] = vol[a:b]
+            vol[index_addr] = index_value
+            iline = index_addr // LINE
+            a = iline * LINE
+            dur[a:a + LINE] = vol[a:a + LINE]
+            self._epochs = [[]]
+            c = self.counters
+            c["pwb"] += n_lines + n_pending + 1
+            c["pfence"] += 1
+            c["psync"] += 1
+
     # One write-back engine per DIMM: concurrent psyncs serialize on the
     # device (an infinite-bandwidth model would let per-op-persist
     # baselines overlap all their syncs for free).
@@ -142,24 +326,30 @@ class NVM:
     STREAM_COST = 5e-7   # per line within a contiguous run
 
     def psync(self) -> None:
-        lines: List[int] = []
+        drained: List[Tuple[int, int]] = []
         with self._lock:
             self.counters["psync"] += 1
             if not self.psync_nop:
+                dur = self._dur
                 for epoch in self._epochs:
-                    for line, snap in epoch:
-                        self._dur[line * LINE:(line + 1) * LINE] = snap
-                        lines.append(line)
+                    for first, n_lines, snap in epoch:
+                        dur[first * LINE:first * LINE + len(snap)] = snap
+                        drained.append((first, n_lines))
                 self._epochs = [[]]
-        if lines and self.persist_latency:
+        if drained and self.persist_latency:
             # cost model: fixed sync latency + seek per discontiguous run
             # + stream per line — contiguous layouts (persistence
             # principle P3) drain in few runs, scattered ones pay seeks.
-            lines.sort()
-            runs = 1 + sum(1 for a, b in zip(lines, lines[1:])
-                           if b > a + 1)
+            drained.sort()
+            runs, prev_end, total_lines = 0, None, 0
+            for first, n_lines in drained:
+                if prev_end is None or first > prev_end + 1:
+                    runs += 1
+                end = first + n_lines - 1
+                prev_end = end if prev_end is None else max(prev_end, end)
+                total_lines += n_lines
             cost = (self.persist_latency + runs * self.SEEK_COST
-                    + len(lines) * self.STREAM_COST)
+                    + total_lines * self.STREAM_COST)
             with NVM._device_lock:
                 time.sleep(cost)
         self._tick_crash_point()
@@ -194,11 +384,16 @@ class NVM:
             if rng is not None and epochs:
                 cut = rng.randint(0, len(epochs) - 1)
                 for epoch in epochs[:cut]:
-                    for line, snap in epoch:
-                        self._dur[line * LINE:(line + 1) * LINE] = snap
-                # Partial drain of the cut epoch: keep a prefix per line so
-                # same-line program order is respected.
-                cut_epoch = epochs[cut]
+                    for first, _n, snap in epoch:
+                        self._dur[first * LINE:first * LINE + len(snap)] = snap
+                # Partial drain of the cut epoch: expand its runs back to
+                # per-line entries (cold path — only on crash) and keep a
+                # prefix per line so same-line program order is respected.
+                cut_epoch: List[Tuple[int, List[Any]]] = []
+                for first, n_lines, snap in epochs[cut]:
+                    for j in range(n_lines):
+                        cut_epoch.append(
+                            (first + j, snap[j * LINE:(j + 1) * LINE]))
                 taken_upto: Dict[int, int] = {}
                 for i, (line, _snap) in enumerate(cut_epoch):
                     if rng.random() < 0.5:
@@ -218,7 +413,7 @@ class NVM:
 
     def pending_lines(self) -> int:
         with self._lock:
-            return sum(len(e) for e in self._epochs)
+            return sum(n for e in self._epochs for _first, n, _snap in e)
 
     def reset_counters(self) -> None:
         for k in self.counters:

@@ -76,10 +76,7 @@ class SeqQueueObject(SeqObject):
         self.state_words = capacity + 2
 
     def init_state(self, nvm: NVM, st_base: int) -> None:
-        nvm.write(st_base, 0)
-        nvm.write(st_base + 1, 0)
-        for i in range(self.capacity):
-            nvm.write(st_base + 2 + i, 0)
+        nvm.write_range(st_base, [0] * (self.capacity + 2))
 
     def apply(self, nvm, st_base, func, args, ctx=None):
         head, tail = nvm.read(st_base), nvm.read(st_base + 1)
@@ -129,9 +126,7 @@ class SeqStackObject(SeqObject):
         self.state_words = capacity + 1
 
     def init_state(self, nvm: NVM, st_base: int) -> None:
-        nvm.write(st_base, 0)
-        for i in range(self.capacity):
-            nvm.write(st_base + 1 + i, 0)
+        nvm.write_range(st_base, [0] * (self.capacity + 1))
 
     def apply(self, nvm, st_base, func, args, ctx=None):
         size = nvm.read(st_base)
@@ -177,9 +172,7 @@ class HeapObject(SeqObject):
         self.state_words = capacity + 1
 
     def init_state(self, nvm: NVM, st_base: int) -> None:
-        nvm.write(st_base, 0)
-        for i in range(1, self.capacity + 1):
-            nvm.write(st_base + i, 0)
+        nvm.write_range(st_base, [0] * (self.capacity + 1))
 
     # -- sequential helpers on NVM words ------------------------------- #
     def _get(self, nvm, b, i):

@@ -28,6 +28,8 @@ StateRec NVM layout (contiguous, line-aligned):
 
 from __future__ import annotations
 
+import random
+import threading
 import time
 from dataclasses import dataclass
 from typing import Any, List, Optional
@@ -37,7 +39,7 @@ from .nvm import NVM
 from .objects import SeqObject
 
 
-@dataclass
+@dataclass(slots=True)
 class RequestRec:
     func: Optional[str] = None
     args: Any = None
@@ -46,8 +48,19 @@ class RequestRec:
 
 
 class PBComb:
+    # Announce-backoff: a small random fraction of operations parks
+    # briefly right after announcing, widening the window in which a
+    # concurrent combiner adopts the request into ITS round.  Served
+    # ops skip their own round entirely — fewer pwbs/psyncs per op, the
+    # very effect combining exists to create (and what the paper's
+    # backoff at the protocol entry is for).  Disable with park=False
+    # for deterministic single-threaded tests.
+    ANNOUNCE_PARK_PROB = 0.03
+    ANNOUNCE_PARK_SECONDS = 1e-6   # OS floor applies; "as short as possible"
+
     def __init__(self, nvm: NVM, n_threads: int, obj: SeqObject,
-                 counters: Optional[Counters] = None) -> None:
+                 counters: Optional[Counters] = None,
+                 park: bool = True) -> None:
         self.nvm = nvm
         self.n = n_threads
         self.obj = obj
@@ -74,6 +87,13 @@ class PBComb:
         self.request: List[RequestRec] = [RequestRec() for _ in range(n_threads)]
         self.lock = AtomicInt(0, shared=True, counters=counters)
         self.lockval = 0  # written only by the combiner, read by waiters
+        # Combiner election (the line 8 CAS) as a non-blocking mutex
+        # try-acquire: same atomicity, one C call instead of a guarded
+        # compare under a Python-level mutex.  ``lock`` itself is then
+        # written only by the elected combiner (plain GIL-atomic store).
+        self._elect = threading.Lock()
+        self.park_enabled = park
+        self._rng = random.Random(0x9B5EED)   # seeded: runs reproducible
 
     # ---------------- field address helpers --------------------------- #
     def _st_base(self, ind: int) -> int:
@@ -90,9 +110,31 @@ class PBComb:
 
     # ---------------- public API (Algorithm 1) ------------------------ #
     def op(self, p: int, func: str, args: Any, seq: int) -> Any:
-        """PBCOMB(func, args, seq) executed by thread p."""
+        """PBCOMB(func, args, seq) executed by thread p.
+
+        The announcement mutates p's RequestRec in place instead of
+        allocating a fresh record per op.  This is race-safe: p's
+        previous request is necessarily served already (p stays inside
+        ``_perform_request`` until it is), so a concurrent combiner
+        skips the record while ``valid`` is 0 and observes the new
+        (func, args, activate) only after ``valid`` flips back to 1.
+        """
         req = self.request[p]
-        self.request[p] = RequestRec(func, args, 1 - req.activate, 1)
+        req.valid = 0
+        req.func = func
+        req.args = args
+        req.activate = 1 - req.activate
+        req.valid = 1
+        if self.park_enabled and self._rng.random() < self.ANNOUNCE_PARK_PROB:
+            time.sleep(self.ANNOUNCE_PARK_SECONDS)
+            # a combiner may have served the parked request: if its
+            # round already psync'd (lock even), return the recorded
+            # response without a round of our own (cf. Recover's path)
+            nvm = self.nvm
+            if self.lock.load() % 2 == 0:
+                mindex = nvm.read(self.mindex_addr)
+                if req.activate == nvm.read(self._deact_addr(mindex, p)):
+                    return nvm.read(self._retval_addr(mindex, p))
         return self._perform_request(p)
 
     def recover(self, p: int, func: str, args: Any, seq: int) -> Any:
@@ -118,6 +160,7 @@ class PBComb:
         self.request = [RequestRec() for _ in range(self.n)]
         self.lock = AtomicInt(0, shared=True, counters=self._counters)
         self.lockval = 0
+        self._elect = threading.Lock()   # may have been held at the crash
         for p in range(self.n):
             self.resync_request(p)
 
@@ -129,64 +172,103 @@ class PBComb:
         deact = self.nvm.read(self._deact_addr(self._mindex(), p))
         self.request[p] = RequestRec(None, None, deact, 0)
 
+    # A waiter spins a few GIL-yields, then parks on a real (tiny) sleep.
+    # On hardware the paper's waiters spin on a cache line; under CPython
+    # a pure ``sleep(0)`` spinner can convoy the GIL against the combiner
+    # (it re-wins the handoff), starving the very round that would serve
+    # it.  Parking lets the combiner run — and widens the announcement
+    # window, so rounds combine MORE requests per psync, which is the
+    # effect the protocol exists to create.
+    SPIN_FAST = 3
+    PARK_SECONDS = 2e-5
+
+    def _wait_while(self, expected: int) -> None:
+        lock = self.lock
+        spins = 0
+        while lock.load() == expected:
+            spins += 1
+            time.sleep(0 if spins <= self.SPIN_FAST else self.PARK_SECONDS)
+
     # ---------------- Algorithm 2 ------------------------------------- #
     def _perform_request(self, p: int) -> Any:
         nvm = self.nvm
         while True:
             lval = self.lock.load()                          # line 6
             if lval % 2 == 0:                                # line 7
-                if self.lock.cas(lval, lval + 1):            # line 8
+                if self._elect.acquire(False):               # line 8 (CAS)
+                    if self._counters is not None:
+                        self._counters.cas_calls += 1
+                    # while _elect is held nobody else stores the lock,
+                    # and its last writer left it even — re-read in case
+                    # a whole round completed since the line 6 load
+                    lval = self.lock.load()
+                    self.lock.store(lval + 1)
                     break                                    # p is combiner
+                if self._counters is not None:
+                    self._counters.cas_calls += 1
                 lval += 1                                    # line 9
-            while self.lock.load() == lval:                  # line 10
-                time.sleep(0)
+            self._wait_while(lval)                           # line 10
             mindex = self._mindex()
             if self.request[p].activate == nvm.read(self._deact_addr(mindex, p)):  # line 11
                 if self.lockval != lval:                     # line 12
                     # Served by an in-flight round: wait for its psync.
-                    while self.lock.load() == lval + 2:
-                        time.sleep(0)
+                    self._wait_while(lval + 2)
                 return nvm.read(self._retval_addr(self._mindex(), p))  # line 13
-        return self._combine(p)
+        return self._combine(p, lval + 1)
 
-    def _combine(self, p: int) -> Any:
-        """Combiner code, Algorithm 2 lines 14-29."""
+    def _combine(self, p: int, lock_val: int) -> Any:
+        """Combiner code, Algorithm 2 lines 14-29.  Hot path: addresses
+        are derived once per round and NVM accessors bound to locals —
+        the loop body is the per-request cost the paper amortizes.
+        ``lock_val`` is the (odd) lock value this combiner installed at
+        line 8: while the lock is held nobody else writes it, so the
+        line 24 read and line 28 increment are plain arithmetic."""
         nvm = self.nvm
-        mindex = self._mindex()
+        wr = nvm.write
+        mindex = nvm.read(self.mindex_addr)
         ind = 1 - mindex                                     # line 14
-        nvm.write_range(self.mem_base[ind],
-                        nvm.read_range(self.mem_base[mindex], self.rec_words))  # line 15
+        base = self.mem_base[ind]
+        nvm.copy_range(base, self.mem_base[mindex], self.rec_words)  # line 15
         self._begin_round(ind, p)
+        retval_base = base + self.state_words
+        deact_base = retval_base + self.n
+        request = self.request
+        deacts = nvm.read_range(deact_base, self.n)   # one slice, n reads
         for q in range(self.n):                              # line 16
-            req = self.request[q]
-            if req.valid == 1 and req.activate != nvm.read(self._deact_addr(ind, q)):  # line 17
+            req = request[q]
+            if req.valid == 1 and req.activate != deacts[q]:  # line 17
                 ret = self._apply(q, req.func, req.args, ind, p)       # lines 18-19
-                nvm.write(self._retval_addr(ind, q), ret)              # line 20
-                nvm.write(self._deact_addr(ind, q), req.activate)      # line 21
-        self._post_simulation(ind, p)
-        nvm.pwb(self.mem_base[ind], self.rec_words)          # line 22
-        nvm.pfence()                                         # line 23
-        self.lockval = self.lock.load()                      # line 24
-        nvm.write(self.mindex_addr, ind)                     # line 25
-        nvm.pwb(self.mindex_addr, 1)                         # line 26
-        nvm.psync()                                          # line 27
+                wr(retval_base + q, ret)                               # line 20
+                wr(deact_base + q, req.activate)                       # line 21
+        pending = self._post_simulation(ind, p)
+        self.lockval = lock_val                              # line 24
+        # lines 22-23 + 25-27 as one fused commit (identical counters,
+        # durable effect, and crash-tick behavior — see NVM.commit_round)
+        nvm.commit_round(base, self.rec_words, self.mindex_addr, ind,
+                         pending=pending)
         self._pre_unlock(ind, p)
-        self.lock.store(self.lock.load() + 1)               # line 28
-        return nvm.read(self._retval_addr(self._mindex(), p))  # line 29
+        self.lock.store(lock_val + 1)                        # line 28
+        self._elect.release()
+        # line 29 reads ReturnVal[MIndex][p]; MIndex == ind until the
+        # next combiner (which needs the lock we just released) flips it
+        return nvm.read(retval_base + p)
 
     # ---------------- structure hooks --------------------------------- #
     def _apply(self, q: int, func: str, args: Any, ind: int,
                combiner: int) -> Any:
-        return self.obj.apply(self.nvm, self._st_base(ind), func, args, ctx=self)
+        return self.obj.apply(self.nvm, self.mem_base[ind], func, args,
+                              ctx=self)
 
     def _begin_round(self, ind: int, combiner: int) -> None:
         """Called after the state copy, before the simulation loop.
         PBStack's elimination pass lives here."""
 
-    def _post_simulation(self, ind: int, combiner: int) -> None:
+    def _post_simulation(self, ind: int, combiner: int):
         """Called after the simulation loop, before pwb(StateRec).
-        PBQueue's enqueue instance persists its ``toPersist`` node set here
-        (Algorithm 5 line 24)."""
+        Returns the round's extra NVM ranges to persist ahead of the
+        StateRec — PBQueue's enqueue instance reports its ``toPersist``
+        node set here (Algorithm 5 line 24) — or None."""
+        return None
 
     def _pre_unlock(self, ind: int, combiner: int) -> None:
         """Called after psync, before the lock release.  PBQueue's enqueue

@@ -86,6 +86,8 @@ class _SRef:
 
 class PWFComb:
     MAX_BACKOFF = 64  # spin iterations; adaptive, tiny on a 1-core host
+    ANNOUNCE_PARK_PROB = 0.05
+    ANNOUNCE_PARK_SECONDS = 1e-6   # OS floor applies
 
     def __init__(self, nvm: NVM, n_threads: int, obj: SeqObject,
                  counters: Optional[Counters] = None,
@@ -118,6 +120,7 @@ class PWFComb:
         self.comb_round = [[0] * n_threads for _ in range(n_threads + 1)]
         self._rng = random.Random(0xC0FFEE)
         self._backoff_window = [1] * n_threads
+        self._flush_mutex = threading.Lock()
 
     # ---------------- layout helpers ---------------------------------- #
     def _slot_id(self, owner: int, ind: int) -> int:
@@ -149,9 +152,26 @@ class PWFComb:
 
     # ---------------- public API (Algorithm 3) ------------------------ #
     def op(self, p: int, func: str, args: Any, seq: int) -> Any:
+        # Announce in place (line 1).  Mutating the existing RequestRec
+        # is race-safe: p's previous request is already served (p was
+        # inside _perform_request until then), so scanners skip it while
+        # ``valid`` is 0 and pick the new fields up atomically-enough
+        # once ``valid`` flips back to 1 under the GIL.
         req = self.request[p]
-        self.request[p] = RequestRec(func, args, 1 - req.activate, 1)  # line 1
-        self._backoff(p)                                               # line 2
+        req.valid = 0
+        req.func = func
+        req.args = args
+        req.activate = 1 - req.activate
+        req.valid = 1
+        # line 2 (backoff): a small random fraction of ops parks after
+        # announcing so a concurrent pretend-combiner adopts the request
+        # into its round — _try_finish then returns the recorded
+        # response without a publication of our own (cf. PBComb).
+        if self.backoff_enabled:
+            if self._rng.random() < self.ANNOUNCE_PARK_PROB:
+                time.sleep(self.ANNOUNCE_PARK_SECONDS)
+            else:
+                self._backoff(p)
         return self._perform_request(p)
 
     def recover(self, p: int, func: str, args: Any, seq: int) -> Any:
@@ -183,38 +203,70 @@ class PWFComb:
         self.request[p] = RequestRec(None, None, deact, 0)
 
     # ---------------- Algorithm 4 -------------------------------------- #
+    def _try_finish(self, p: int):
+        """Helping fast path: if p's request was already served by the
+        *published* StateRec, ensure that publication is durable (the
+        fallback's lines 42-50) and return its recorded response — no
+        copy, no simulation, no SC.  The paper reaches this state only
+        through the fallback after two failed attempts; checking before
+        each attempt removes the duplicated pretend-combiner work that
+        dominates under contention (every applied request's response and
+        deactivate bit are already in the StateRec S points to)."""
+        nvm = self.nvm
+        rd = nvm.read
+        ls = self.S.load()
+        if self.request[p].activate != rd(
+                self._base(ls) + self.state_words + self.n + p):
+            return False, None
+        s_pid = rd(self._pid_addr(ls))
+        lval = self.flush[s_pid]
+        if lval % 2 == 1:                   # publication not yet flushed
+            nvm.pwb_sync(self.s_addr, 1)
+            if lval == self.comb_round[s_pid][p]:
+                self._cas_flush(s_pid, lval, lval + 1)
+        return True, rd(self._retval_addr(self.S.load(), p))
+
     def _perform_request(self, p: int) -> Any:
         nvm = self.nvm
+        rd, wr = nvm.read, nvm.write
         my_slots = (self._slot_id(p, 0), self._slot_id(p, 1))
+        sw, n = self.state_words, self.n
         for _attempt in range(2):                                # line 5
+            done, val = self._try_finish(p)
+            if done:
+                return val
             ls, ver = self.S.ll()                                # line 9
-            ind = nvm.read(self._index_addr(ls, p))              # line 11
+            ind = rd(self._base(ls) + sw + 2 * n + p)            # line 11
             dst = my_slots[ind]
-            nvm.write_range(self._base(dst),
-                            nvm.read_range(self._base(ls), self.rec_words))  # line 13
-            nvm.write(self._pid_addr(dst), p)                    # line 14
+            dst_base = self._base(dst)
+            nvm.copy_range(dst_base, self._base(ls), self.rec_words)  # line 13
+            wr(dst_base + sw + 3 * n, p)                         # line 14
             lval = self.flush[p]                                 # line 15 (own, see module doc)
             lval = lval + 1 if lval % 2 == 0 else lval + 2       # lines 16-17
             if not self.S.vl(ver):                               # line 18
                 continue
             self._begin_attempt(dst, p)
-            for q in range(self.n):                              # line 19
-                req = self.request[q]
-                if req.valid == 1 and req.activate != nvm.read(self._deact_addr(dst, q)):  # line 20
+            retval_base = dst_base + sw
+            deact_base = retval_base + n
+            request = self.request
+            comb_round = self.comb_round[p]
+            deacts = nvm.read_range(deact_base, n)    # one slice, n reads
+            for q in range(n):                                   # line 19
+                req = request[q]
+                if req.valid == 1 and req.activate != deacts[q]:  # line 20
                     ret = self._apply(q, req.func, req.args, dst, p)    # lines 21-22
-                    nvm.write(self._retval_addr(dst, q), ret)           # line 23
-                    nvm.write(self._deact_addr(dst, q), req.activate)   # line 24
-                    self.comb_round[p][q] = lval                        # line 25
+                    wr(retval_base + q, ret)                            # line 23
+                    wr(deact_base + q, req.activate)                    # line 24
+                    comb_round[q] = lval                                # line 25
             if self.S.vl(ver):                                   # line 26
-                nvm.write(self._index_addr(dst, p),
-                          1 - nvm.read(self._index_addr(dst, p)))       # line 27
-                self._pre_publish(dst, p)
-                nvm.pwb(self._base(dst), self.rec_words)         # line 28
-                nvm.pfence()                                     # line 29
+                index_addr = deact_base + n + p
+                wr(index_addr, 1 - rd(index_addr))               # line 27
+                pending = self._pre_publish(dst, p)
+                nvm.pwb_fence(dst_base, self.rec_words,
+                              pending=pending)                   # lines 28-29
                 self.flush[p] = lval                             # line 30
                 if self.S.sc(ver, dst):                          # line 31
-                    nvm.pwb(self.s_addr, 1)                      # line 32
-                    nvm.psync()                                  # line 33
+                    nvm.pwb_sync(self.s_addr, 1)                 # lines 32-33
                     self._cas_flush(p, lval, lval + 1)           # line 34
                     # Hook runs after S is durable: safe point to recycle
                     # nodes the published round removed.
@@ -227,16 +279,16 @@ class PWFComb:
         s_pid = nvm.read(self._pid_addr(ls))
         lval = self.flush[s_pid]                                 # line 40
         if lval % 2 == 1:                                        # line 42 (see module doc)
-            nvm.pwb(self.s_addr, 1)                              # line 44
-            nvm.psync()                                          # line 46
+            nvm.pwb_sync(self.s_addr, 1)                         # lines 44-46
             if lval == self.comb_round[s_pid][p]:
                 self._cas_flush(s_pid, lval, lval + 1)           # line 48
         return nvm.read(self._retval_addr(self.S.load(), p))     # line 50
 
     # ---------------- helpers ------------------------------------------ #
-    _flush_mutex = threading.Lock()
-
     def _cas_flush(self, i: int, old: int, new: int) -> None:
+        # per-instance mutex (guards this instance's flush[] only — a
+        # class-level lock would serialize unrelated instances, e.g. a
+        # split queue's enqueue and dequeue sides)
         with self._flush_mutex:
             if self.flush[i] == old:
                 self.flush[i] = new
@@ -249,9 +301,11 @@ class PWFComb:
     def _begin_attempt(self, slot: int, p: int) -> None:
         """Called after a consistent copy, before the simulation loop."""
 
-    def _pre_publish(self, slot: int, p: int) -> None:
-        """Called before pwb(StateRec) — persist attempt-local node
-        allocations here (they must be durable before S can move)."""
+    def _pre_publish(self, slot: int, p: int):
+        """Called before pwb(StateRec).  Returns the attempt-local node
+        allocations to persist ahead of the StateRec (they must be
+        durable before S can move), or None."""
+        return None
 
     def _on_publish_success(self, slot: int, p: int) -> None:
         """Called right after a successful SC."""
@@ -260,11 +314,24 @@ class PWFComb:
         """Called when an attempt is abandoned (failed VL or SC) — return
         attempt-local node allocations to the pool."""
 
+    PARK_QUANTUM = 1e-5   # seconds per backoff unit (real GIL handoff)
+
     def _backoff(self, p: int, grow: bool = False) -> None:
+        """Adaptive backoff (Algorithm 3 line 2 / Algorithm 4 line 36).
+        The window only opens after a failed attempt and closes again on
+        success, so the uncontended fast path skips the RNG and the park
+        entirely — contention is what the backoff is for.  Parking is a
+        real (tiny) sleep, not a bare GIL yield: under CPython a yield
+        spinner can win the GIL straight back and starve the publisher
+        that would have served this thread's announced request."""
         if not self.backoff_enabled:
             return
+        window = self._backoff_window[p]
         if grow:
-            self._backoff_window[p] = min(self._backoff_window[p] * 2,
-                                          self.MAX_BACKOFF)
-        for _ in range(self._rng.randint(0, self._backoff_window[p])):
-            time.sleep(0)
+            window = min(window * 2, self.MAX_BACKOFF)
+            self._backoff_window[p] = window
+        elif window <= 1:
+            return
+        else:
+            self._backoff_window[p] = max(1, window // 2)
+        time.sleep(self._rng.randint(0, window) * self.PARK_QUANTUM)

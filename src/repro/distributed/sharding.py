@@ -50,14 +50,23 @@ class Sharder:
             if entry is None:
                 out.append(None)
                 continue
-            entries = entry if isinstance(entry, (tuple, list)) else (entry,)
+            was_tuple = isinstance(entry, (tuple, list))
+            entries = entry if was_tuple else (entry,)
             kept = []
             prod = 1
             for a in entries:
                 if a in names and dim % (prod * sizes[a]) == 0:
                     kept.append(a)
                     prod *= sizes[a]
-            out.append(tuple(kept) if kept else None)
+            if not kept:
+                out.append(None)
+            elif not was_tuple:
+                # a plain axis name came in: hand it back unwrapped —
+                # wrapping the lone survivor as ('model',) changes the
+                # spec's identity even though it means the same sharding
+                out.append(kept[0])
+            else:
+                out.append(tuple(kept))
         return P(*out)
 
     def __call__(self, x, spec: P):

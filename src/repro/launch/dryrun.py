@@ -38,7 +38,7 @@ import jax.numpy as jnp
 from ..configs import ARCHS, SHAPES, cells_for, get
 from ..models import active_param_count, init_params, param_count
 from .hlo_analysis import (collective_stats, model_flops, roofline_terms)
-from .hlo_cost import HloCost
+from .hlo_cost import HloCost, xla_cost_analysis
 from .mesh import make_production_mesh
 from .steps import lower_prefill_step, lower_serve_step, lower_train_step
 
@@ -81,9 +81,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     compiled = lowered.compile()
     t2 = time.time()
     mem = compiled.memory_analysis()
-    cost_raw = compiled.cost_analysis()
-    cost_raw = cost_raw[0] if isinstance(cost_raw, (list, tuple)) \
-        else cost_raw
+    cost_raw = xla_cost_analysis(compiled)
     hlo_txt = compiled.as_text()
     coll = collective_stats(hlo_txt)      # un-folded counts (reference)
     # Loop-folded costs: XLA cost_analysis counts while bodies ONCE

@@ -21,7 +21,21 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
+
+
+def xla_cost_analysis(compiled: Any) -> Dict[str, float]:
+    """Normalized ``compiled.cost_analysis()``.
+
+    Recent jaxlibs return a LIST of per-device dicts (older ones a bare
+    dict, some a tuple), so ``compiled.cost_analysis()["flops"]`` raises
+    ``TypeError: list indices must be integers...`` depending on the
+    installed version.  Always returns the device-0 dict; {} when the
+    backend reports nothing."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,

@@ -1,14 +1,13 @@
 """Recoverable data structures built on the combining protocols
 (paper Section 5) plus the baseline competitors used in Section 6.
 
-.. deprecated::
-   The per-structure calling conventions exposed here (explicit thread
-   ids and seq numbers: ``PBQueue.enqueue(p, value, seq)``,
-   ``PBStack.push(p, value, seq)``, manual ``reset_volatile`` +
-   ``recover`` dances) are shims kept for one PR cycle.  New code goes
-   through ``repro.api``: ``CombiningRuntime.make(kind, protocol)`` +
-   per-thread handles (``rt.attach(p).bind(obj)``) — see DESIGN.md §1
-   for the migration table.
+The per-structure calling conventions (``PBQueue.enqueue(p, value,
+seq)``, ``PBStack.push(p, value, seq)``, ...) were deprecated in the
+runtime-API PR and are now removed.  All callers go through
+``repro.api``: ``CombiningRuntime.make(kind, protocol)`` + per-thread
+handles (``rt.attach(p).bind(obj)``) — see DESIGN.md §1.  The protocol
+entry points themselves (``PBComb.op`` / ``PWFComb.op``, Algorithm 1/3)
+remain: they are what the adapters call.
 """
 
 from .baselines import (DFCStack, DurableMSQueue, LockDirectObject,

@@ -59,10 +59,10 @@ class LockDirectObject:
             ranges = plan(nvm, self.st_base, func, args) if plan else None
             ret = self.obj.apply(nvm, self.st_base, func, args)
             if ranges is None:
-                nvm.pwb(self.st_base, self.obj.state_words)
-            else:
-                for off, n in ranges:
-                    nvm.pwb(self.st_base + off, n)
+                nvm.pwb_range(self.st_base, self.obj.state_words)
+            elif ranges:
+                base = self.st_base
+                nvm.persist_lines((base + off, n) for off, n in ranges)
             nvm.pfence()
             nvm.psync()
             return ret
@@ -103,30 +103,36 @@ class LockUndoLogObject:
             #    object); objects without a plan snapshot full state.
             #    Ranged log layout: [count | (offset, old_value)* | valid]
             if ranges is None:
-                nvm.write_range(self.log_base,
-                                nvm.read_range(self.st_base,
-                                               self.obj.state_words))
-                nvm.pwb(self.log_base, self.obj.state_words)
+                nvm.copy_range(self.log_base, self.st_base,
+                               self.obj.state_words)
+                nvm.pwb_range(self.log_base, self.obj.state_words)
             else:
-                n = 0
+                entries: List[Any] = []
                 for off, cnt in ranges:
+                    vals = nvm.read_range(self.st_base + off, cnt)
                     for j in range(cnt):
-                        nvm.write(self.log_base + 1 + 2 * n, off + j)
-                        nvm.write(self.log_base + 2 + 2 * n,
-                                  nvm.read(self.st_base + off + j))
-                        n += 1
+                        entries.append(off + j)
+                        entries.append(vals[j])
+                n = len(entries) // 2
                 nvm.write(self.log_base, n)
-                nvm.pwb(self.log_base, 2 * n + 1)
+                nvm.write_range(self.log_base + 1, entries)
+                nvm.pwb_range(self.log_base, 2 * n + 1)
+            # the log entries' epoch must fully drain before the valid
+            # flag can: without this fence a crash may persist valid=1
+            # over a STALE log image, and recovery would roll back
+            # acknowledged (psync'd) operations
+            nvm.pfence()
             nvm.write(self.log_base + self.obj.state_words, 1)  # valid
             nvm.pwb(self.log_base + self.obj.state_words, 1)
             nvm.pfence()
-            # 2. in-place update + persist touched lines
+            # 2. in-place update + persist touched lines (one coalesced
+            #    line-set, like every other per-op persist in this file)
             ret = self.obj.apply(nvm, self.st_base, func, args)
             if ranges is None:
-                nvm.pwb(self.st_base, self.obj.state_words)
-            else:
-                for off, cnt in ranges:
-                    nvm.pwb(self.st_base + off, cnt)
+                nvm.pwb_range(self.st_base, self.obj.state_words)
+            elif ranges:
+                base = self.st_base
+                nvm.persist_lines((base + off, cnt) for off, cnt in ranges)
             nvm.pfence()
             # 3. invalidate log
             nvm.write(self.log_base + self.obj.state_words, 0)
@@ -194,6 +200,7 @@ class DurableMSQueue:
         nvm.reset_counters()
         self.head = AtomicRef(dummy, shared=True)
         self.tail = AtomicRef(dummy, shared=True)
+        self._link_mutex = threading.Lock()
 
     def enqueue(self, p: int, value: Any, seq: int) -> Any:
         nvm = self.nvm
@@ -206,15 +213,24 @@ class DurableMSQueue:
             last, ver = self.tail.ll()
             nxt = nvm.read(last + 1)
             if nxt == NULL:
-                nvm.write(last + 1, node)      # link (racy CAS-free under GIL
-                nvm.pwb(last + 1, 1)           #  — adequate for cost shape)
-                nvm.pfence()
-                if self.tail.sc(ver, node):
-                    nvm.write(self.tail_addr, node)
-                    nvm.pwb(self.tail_addr, 1)
+                # CAS on the next pointer (MS queue's linearization
+                # point), emulated under a mutex.  Once the link lands
+                # the node IS in the list; a failed tail SC only means
+                # someone helped swing — never undo the link (an undo
+                # can erase a concurrent enqueuer's successful link and
+                # knot the list into a cycle).
+                with self._link_mutex:
+                    linked = nvm.read(last + 1) == NULL
+                    if linked:
+                        nvm.write(last + 1, node)
+                if linked:
+                    nvm.pwb(last + 1, 1)
+                    nvm.pfence()
+                    if self.tail.sc(ver, node):
+                        nvm.write(self.tail_addr, node)
+                        nvm.pwb(self.tail_addr, 1)
                     nvm.psync()
                     return "ACK"
-                nvm.write(last + 1, NULL)      # undo failed link
             else:
                 self.tail.sc(ver, nxt)         # help swing tail
             time.sleep(0)

@@ -20,7 +20,6 @@ A node occupies NODE_WORDS consecutive NVM words: [data, next].
 
 from __future__ import annotations
 
-import threading
 from typing import Dict, List, Optional
 
 from ..core.nvm import NVM
@@ -50,19 +49,23 @@ class ChunkAllocator:
 
 
 class RecyclingStack:
-    """Shared volatile LIFO free list (PBStack GC scheme)."""
+    """Shared volatile LIFO free list (PBStack GC scheme).
+
+    ``list.append`` and ``list.pop`` are single atomic bytecodes under
+    the GIL, so the shared LIFO needs no lock — the empty case is an
+    exception branch instead of a guarded check (which WOULD race)."""
 
     def __init__(self) -> None:
         self._stack: List[int] = []
-        self._lock = threading.Lock()
 
     def push(self, addr: int) -> None:
-        with self._lock:
-            self._stack.append(addr)
+        self._stack.append(addr)
 
     def pop(self) -> Optional[int]:
-        with self._lock:
-            return self._stack.pop() if self._stack else None
+        try:
+            return self._stack.pop()
+        except IndexError:
+            return None
 
     def __len__(self) -> int:
         return len(self._stack)
@@ -83,28 +86,36 @@ class PerThreadFreeList:
 
 
 class NodePool:
-    """Chunk allocator + optional recycler, the paper's full scheme."""
+    """Chunk allocator + optional recycler, the paper's full scheme.
+    The recycling strategy is bound once at construction — the hot
+    alloc/free path carries no isinstance dispatch."""
 
     def __init__(self, nvm: NVM, n_threads: int, recycler=None,
                  chunk_nodes: int = 256) -> None:
         self.nvm = nvm
         self.chunks = ChunkAllocator(nvm, n_threads, chunk_nodes)
         self.recycler = recycler
-
-    def alloc(self, p: int) -> int:
-        if self.recycler is not None:
-            if isinstance(self.recycler, PerThreadFreeList):
-                addr = self.recycler.pop(p)
-            else:
-                addr = self.recycler.pop()
-            if addr is not None:
-                return addr
-        return self.chunks.alloc(p)
-
-    def free(self, p: int, addr: int) -> None:
-        if self.recycler is None:
-            return
-        if isinstance(self.recycler, PerThreadFreeList):
-            self.recycler.push(p, addr)
+        if recycler is None:
+            self.alloc = self.chunks.alloc
+            self.free = self._free_noop
+        elif isinstance(recycler, PerThreadFreeList):
+            self.alloc = self._alloc_per_thread
+            self.free = recycler.push
         else:
-            self.recycler.push(addr)
+            self.alloc = self._alloc_shared
+            self.free = self._free_shared
+
+    def _alloc_per_thread(self, p: int) -> int:
+        addr = self.recycler.pop(p)
+        return addr if addr is not None else self.chunks.alloc(p)
+
+    def _alloc_shared(self, p: int) -> int:
+        addr = self.recycler.pop()
+        return addr if addr is not None else self.chunks.alloc(p)
+
+    def _free_shared(self, p: int, addr: int) -> None:
+        self.recycler.push(addr)
+
+    @staticmethod
+    def _free_noop(p: int, addr: int) -> None:
+        return None

@@ -23,18 +23,5 @@ class PBHeap(PBComb):
                          counters=counters)
         self.capacity = capacity
 
-    # ------------- public API (deprecated shims — use repro.api) -------- #
-    def insert(self, p: int, key: Any, seq: int) -> Any:
-        """.. deprecated:: use ``handle.bind(obj).insert(key)``."""
-        return self.op(p, "HINSERT", key, seq)
-
-    def delete_min(self, p: int, seq: int) -> Any:
-        """.. deprecated:: use ``handle.bind(obj).delete_min()``."""
-        return self.op(p, "HDELETEMIN", None, seq)
-
-    def get_min(self, p: int, seq: int) -> Any:
-        """.. deprecated:: use ``handle.bind(obj).get_min()``."""
-        return self.op(p, "HGETMIN", None, seq)
-
     def size(self) -> int:
         return self.nvm.read(self._st_base(self._mindex()))

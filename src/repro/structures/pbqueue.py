@@ -90,17 +90,19 @@ class _EnqInstance(PBComb):
 
     def _begin_round(self, ind: int, combiner: int) -> None:
         self.current_combiner = combiner
-        self.to_persist = []
+        self.to_persist.clear()
 
-    def _post_simulation(self, ind: int, combiner: int) -> None:
-        tail = self.nvm.read(self._st_base(ind))
+    def _post_simulation(self, ind: int, combiner: int):
+        tail = self.nvm.read(self.mem_base[ind])
         self.to_persist.append(tail)                  # Alg 5 line 23
-        for node in self.to_persist:                  # Alg 5 line 24
-            self.nvm.pwb(node, NODE_WORDS)
+        # Alg 5 line 24: all modified/created nodes in one coalesced
+        # line-set (duplicate lines — e.g. tail sharing a line with the
+        # node it links to — persist once).
+        return [(node, NODE_WORDS) for node in self.to_persist]
 
     def _pre_unlock(self, ind: int, combiner: int) -> None:
-        self.queue.old_tail = self.nvm.read(self._st_base(ind))  # line 31
-        self.to_persist = []                                     # line 32
+        self.queue.old_tail = self.nvm.read(self.mem_base[ind])  # line 31
+        self.to_persist.clear()                                  # line 32
 
 
 class _DeqInstance(PBComb):
@@ -110,13 +112,14 @@ class _DeqInstance(PBComb):
         self.removed: List[int] = []
 
     def _begin_round(self, ind: int, combiner: int) -> None:
-        self.removed = []
+        self.removed.clear()
 
     def _pre_unlock(self, ind: int, combiner: int) -> None:
         # Removal took effect (psync done): bank nodes for reuse.
+        free = self.queue.pool.free
         for node in self.removed:
-            self.queue.pool.free(combiner, node)
-        self.removed = []
+            free(combiner, node)
+        self.removed.clear()
 
 
 class PBQueue:
@@ -140,15 +143,6 @@ class PBQueue:
         self.deq = _DeqInstance(nvm, n_threads, _DeqState(self.dummy), self,
                                 counters=counters)
         nvm.reset_counters()
-
-    # ------------- public API (deprecated shims — use repro.api) -------- #
-    def enqueue(self, p: int, value: Any, seq: int) -> Any:
-        """.. deprecated:: use ``handle.bind(obj).enqueue(value)``."""
-        return self.enq.op(p, "ENQ", value, seq)
-
-    def dequeue(self, p: int, seq: int) -> Any:
-        """.. deprecated:: use ``handle.bind(obj).dequeue()``."""
-        return self.deq.op(p, "DEQ", None, seq)
 
     # -------------------- recovery (Algorithm 7) ------------------------ #
     def reset_volatile(self) -> None:

@@ -64,20 +64,11 @@ class PBStack(PBComb):
         self.to_persist: List[int] = []
         self.popped: List[int] = []
 
-    # ------------- public API (deprecated shims — use repro.api) -------- #
-    def push(self, p: int, value: Any, seq: int) -> Any:
-        """.. deprecated:: use ``handle.bind(obj).push(value)``."""
-        return self.op(p, "PUSH", value, seq)
-
-    def pop(self, p: int, seq: int) -> Any:
-        """.. deprecated:: use ``handle.bind(obj).pop()``."""
-        return self.op(p, "POP", None, seq)
-
     # -------------------- combiner hooks -------------------------------- #
     def _begin_round(self, ind: int, combiner: int) -> None:
         self.current_combiner = combiner
-        self.to_persist = []
-        self.popped = []
+        self.to_persist.clear()
+        self.popped.clear()
         if not self.elimination:
             return
         # Elimination: pair each active PUSH with an active POP and serve
@@ -85,11 +76,14 @@ class PBStack(PBComb):
         # after the push).  Responses/deactivate bits are recorded in the
         # working StateRec, so they persist with the round as usual.
         nvm = self.nvm
+        deacts = nvm.read_range(self._deact_addr(ind, 0), self.n)
         pushes, pops = [], []
         for q in range(self.n):
             req = self.request[q]
-            if req.valid == 1 and req.activate != nvm.read(self._deact_addr(ind, q)):
+            if req.valid == 1 and req.activate != deacts[q]:
                 (pushes if req.func == "PUSH" else pops).append(q)
+        if not pushes or not pops:
+            return
         for qp, qo in zip(pushes, pops):
             req_push, req_pop = self.request[qp], self.request[qo]
             nvm.write(self._retval_addr(ind, qp), "ACK")
@@ -97,18 +91,21 @@ class PBStack(PBComb):
             nvm.write(self._retval_addr(ind, qo), req_push.args)
             nvm.write(self._deact_addr(ind, qo), req_pop.activate)
 
-    def _post_simulation(self, ind: int, combiner: int) -> None:
-        # Persist new nodes before the StateRec (one pwb per node range;
-        # chunk allocation keeps them contiguous so lines coalesce).
-        for node in self.to_persist:
-            self.nvm.pwb(node, NODE_WORDS)
+    def _post_simulation(self, ind: int, combiner: int):
+        # The round's new nodes persist before the StateRec as ONE
+        # coalesced line-set (chunk allocation keeps them contiguous, so
+        # the union collapses to a few runs — P3 made visible).
+        if self.to_persist:
+            return [(node, NODE_WORDS) for node in self.to_persist]
+        return None
 
     def _pre_unlock(self, ind: int, combiner: int) -> None:
         # Recycle popped nodes only after the round took effect (psync).
+        free = self.pool.free
         for node in self.popped:
-            self.pool.free(combiner, node)
-        self.to_persist = []
-        self.popped = []
+            free(combiner, node)
+        self.to_persist.clear()
+        self.popped.clear()
 
     # -------------------- introspection --------------------------------- #
     def drain(self) -> List[Any]:

@@ -31,13 +31,26 @@ come from per-thread contiguous chunks and are never reused.
 
 from __future__ import annotations
 
-import threading
-from typing import Any, Dict, List
+from typing import Any, List
 
 from ..core.nvm import NVM
 from ..core.objects import SeqObject
 from ..core.pwfcomb import PWFComb
 from .nodes import NODE_WORDS, NULL, NodePool
+
+
+class _EnqCtx:
+    """Per-pretend-combiner enqueue context: plain attributes, one per
+    thread (no thread-local lookups on the application hot path)."""
+
+    __slots__ = ("pool", "p", "alloc", "first", "last")
+
+    def __init__(self, pool: NodePool, p: int) -> None:
+        self.pool = pool
+        self.p = p
+        self.alloc: List[int] = []
+        self.first = NULL
+        self.last = NULL
 
 
 class _EnqState(SeqObject):
@@ -54,23 +67,28 @@ class _EnqState(SeqObject):
         nvm.write(st_base + 2, NULL)
 
     def apply(self, nvm, st_base, func, args, ctx=None):
-        p = ctx.current_combiner
-        node = ctx.pool.alloc(p)
+        node = ctx.pool.alloc(ctx.p)
         nvm.write(node, args)
         nvm.write(node + 1, NULL)
-        ctx.attempt_alloc(p).append(node)
-        local = ctx.attempt_local(p)
-        if local["first"] == NULL:
+        ctx.alloc.append(node)
+        if ctx.first == NULL:
             # First enqueue of this round: the previous tail becomes
             # link_from, this node link_to.
-            local["first"] = node
+            ctx.first = node
             nvm.write(st_base + 1, nvm.read(st_base))   # link_from := tail
             nvm.write(st_base + 2, node)                # link_to := first new
         else:
-            nvm.write(local["last"] + 1, node)          # chain locally
-        local["last"] = node
+            nvm.write(ctx.last + 1, node)               # chain locally
+        ctx.last = node
         nvm.write(st_base, node)                        # tail := node
         return "ACK"
+
+
+class _DeqCtx:
+    __slots__ = ("boundary",)
+
+    def __init__(self, boundary: int) -> None:
+        self.boundary = boundary
 
 
 class _DeqState(SeqObject):
@@ -86,7 +104,7 @@ class _DeqState(SeqObject):
 
     def apply(self, nvm, st_base, func, args, ctx=None):
         head = nvm.read(st_base)
-        if head == ctx.boundary(ctx.current_combiner):  # durable frontier
+        if head == ctx.boundary:                 # durable frontier
             return None
         nxt = nvm.read(head + 1)
         if nxt == NULL:
@@ -100,64 +118,48 @@ class _EnqInstance(PWFComb):
         super().__init__(nvm, n, obj, counters=counters, backoff=backoff)
         self.queue = queue
         self.pool = queue.pool
-        self._tls = threading.local()
-        self._allocs: Dict[int, List[int]] = {p: [] for p in range(n)}
-        self._local: Dict[int, Dict[str, int]] = {
-            p: {"first": NULL, "last": NULL} for p in range(n)}
-
-    # context accessors used by _EnqState.apply
-    @property
-    def current_combiner(self):
-        return self._tls.combiner
-
-    def attempt_alloc(self, p):
-        return self._allocs[p]
-
-    def attempt_local(self, p):
-        return self._local[p]
+        self._ctx = [_EnqCtx(queue.pool, p) for p in range(n)]
 
     def _apply(self, q, func, args, slot, combiner):
-        self._tls.combiner = combiner
-        return self.obj.apply(self.nvm, self._base(slot), func, args, ctx=self)
+        return self.obj.apply(self.nvm, self._base(slot), func, args,
+                              ctx=self._ctx[combiner])
 
     def _begin_attempt(self, slot: int, p: int) -> None:
-        self._allocs[p] = []
-        self._local[p] = {"first": NULL, "last": NULL}
+        ctx = self._ctx[p]
+        ctx.alloc = []
+        ctx.first = NULL
+        ctx.last = NULL
         self.queue.help_link()  # apply the previous round's pending link
 
-    def _pre_publish(self, slot: int, p: int) -> None:
-        for node in self._allocs[p]:
-            self.nvm.pwb(node, NODE_WORDS)
+    def _pre_publish(self, slot: int, p: int):
+        alloc = self._ctx[p].alloc
+        if alloc:
+            return [(node, NODE_WORDS) for node in alloc]
+        return None
 
     def _attempt_failed(self, slot: int, p: int) -> None:
         # No recycling (see module doc); just drop the bookkeeping.
-        self._allocs[p] = []
-        self._local[p] = {"first": NULL, "last": NULL}
+        ctx = self._ctx[p]
+        ctx.alloc = []
+        ctx.first = NULL
+        ctx.last = NULL
 
 
 class _DeqInstance(PWFComb):
     def __init__(self, nvm, n, obj, queue, counters=None, backoff=True):
         super().__init__(nvm, n, obj, counters=counters, backoff=backoff)
         self.queue = queue
-        self._tls = threading.local()
-        self._boundary: Dict[int, int] = {p: queue.dummy for p in range(n)}
-
-    @property
-    def current_combiner(self):
-        return self._tls.combiner
-
-    def boundary(self, p):
-        return self._boundary[p]
+        self._ctx = [_DeqCtx(queue.dummy) for _ in range(n)]
 
     def _apply(self, q, func, args, slot, combiner):
-        self._tls.combiner = combiner
-        return self.obj.apply(self.nvm, self._base(slot), func, args, ctx=self)
+        return self.obj.apply(self.nvm, self._base(slot), func, args,
+                              ctx=self._ctx[combiner])
 
     def _begin_attempt(self, slot: int, p: int) -> None:
         # Help the pending link, then make the current enqueue publication
         # durable before adopting its tail as the dequeue frontier.
         self.queue.help_link()
-        self._boundary[p] = self.queue.durable_tail()
+        self._ctx[p].boundary = self.queue.durable_tail()
 
 
 class PWFQueue:
@@ -203,23 +205,12 @@ class PWFQueue:
             self.enq._cas_flush(s_pid, lval, lval + 1)
         return nvm.read(self.enq._base(slot))
 
-    # ---------- public API (deprecated shims — use repro.api) ------------ #
-    def enqueue(self, p: int, value: Any, seq: int) -> Any:
-        """.. deprecated:: use ``handle.bind(obj).enqueue(value)``."""
-        return self.enq.op(p, "ENQ", value, seq)
-
-    def dequeue(self, p: int, seq: int) -> Any:
-        """.. deprecated:: use ``handle.bind(obj).dequeue()``."""
-        return self.deq.op(p, "DEQ", None, seq)
-
     # ------------------ recovery ----------------------------------------- #
     def reset_volatile(self) -> None:
         self.enq.reset_volatile()
         self.deq.reset_volatile()
-        self.enq._local = {p: {"first": NULL, "last": NULL}
-                           for p in range(self.n)}
-        self.enq._allocs = {p: [] for p in range(self.n)}
-        self.deq._boundary = {p: self.dummy for p in range(self.n)}
+        self.enq._ctx = [_EnqCtx(self.pool, p) for p in range(self.n)]
+        self.deq._ctx = [_DeqCtx(self.dummy) for _ in range(self.n)]
         # Redo the pending link from the durable EState record, then
         # persist it (paper: links must be redoable after a crash).
         self.help_link()

@@ -17,13 +17,26 @@ management differs because losing pretend-combiners must roll back:
 
 from __future__ import annotations
 
-import threading
-from typing import Any, Dict, List
+from typing import Any, List
 
 from ..core.nvm import NVM
 from ..core.pwfcomb import PWFComb
 from .nodes import NODE_WORDS, NULL, NodePool, PerThreadFreeList
 from .pbstack import _StackState
+
+
+class _AttemptCtx:
+    """Per-pretend-combiner context handed to ``_StackState.apply`` —
+    one object per thread, plain attributes (no thread-local lookups on
+    the application hot path; concurrent attempts never share one)."""
+
+    __slots__ = ("pool", "current_combiner", "to_persist", "popped")
+
+    def __init__(self, pool: NodePool, p: int) -> None:
+        self.pool = pool
+        self.current_combiner = p
+        self.to_persist: List[int] = []
+        self.popped: List[int] = []
 
 
 class PWFStack(PWFComb):
@@ -36,48 +49,29 @@ class PWFStack(PWFComb):
                              PerThreadFreeList(n_threads) if recycle else None,
                              chunk_nodes)
         self.elimination = elimination
-        # attempt-local bookkeeping, keyed by thread id
-        self._alloc: Dict[int, List[int]] = {p: [] for p in range(n_threads)}
-        self._popped: Dict[int, List[int]] = {p: [] for p in range(n_threads)}
-        self._tls = threading.local()  # which logical thread runs here
-
-    # ------------- public API (deprecated shims — use repro.api) -------- #
-    def push(self, p: int, value: Any, seq: int) -> Any:
-        """.. deprecated:: use ``handle.bind(obj).push(value)``."""
-        return self.op(p, "PUSH", value, seq)
-
-    def pop(self, p: int, seq: int) -> Any:
-        """.. deprecated:: use ``handle.bind(obj).pop()``."""
-        return self.op(p, "POP", None, seq)
+        # attempt-local bookkeeping, one context per thread id
+        self._ctx = [_AttemptCtx(self.pool, p) for p in range(n_threads)]
 
     # -------------------- combining hooks ------------------------------- #
     def _apply(self, q, func, args, slot, combiner):
-        self._tls.combiner = combiner
-        return self.obj.apply(self.nvm, self._base(slot), func, args, ctx=self)
-
-    @property
-    def current_combiner(self) -> int:  # _StackState allocates under this id
-        return self._tls.combiner
-
-    @property
-    def to_persist(self):  # _StackState records allocations here
-        return self._alloc[self._tls.combiner]
-
-    @property
-    def popped(self):
-        return self._popped[self._tls.combiner]
+        return self.obj.apply(self.nvm, self._base(slot), func, args,
+                              ctx=self._ctx[combiner])
 
     def _begin_attempt(self, slot: int, p: int) -> None:
-        self._alloc[p] = []
-        self._popped[p] = []
+        ctx = self._ctx[p]
+        ctx.to_persist = []
+        ctx.popped = []
         if not self.elimination:
             return
         nvm = self.nvm
+        deacts = nvm.read_range(self._deact_addr(slot, 0), self.n)
         pushes, pops = [], []
         for q in range(self.n):
             req = self.request[q]
-            if req.valid == 1 and req.activate != nvm.read(self._deact_addr(slot, q)):
+            if req.valid == 1 and req.activate != deacts[q]:
                 (pushes if req.func == "PUSH" else pops).append(q)
+        if not pushes or not pops:
+            return
         for qp, qo in zip(pushes, pops):
             req_push, req_pop = self.request[qp], self.request[qo]
             nvm.write(self._retval_addr(slot, qp), "ACK")
@@ -85,21 +79,25 @@ class PWFStack(PWFComb):
             nvm.write(self._retval_addr(slot, qo), req_push.args)
             nvm.write(self._deact_addr(slot, qo), req_pop.activate)
 
-    def _pre_publish(self, slot: int, p: int) -> None:
-        for node in self._alloc[p]:
-            self.nvm.pwb(node, NODE_WORDS)
+    def _pre_publish(self, slot: int, p: int):
+        alloc = self._ctx[p].to_persist
+        if alloc:
+            return [(node, NODE_WORDS) for node in alloc]
+        return None
 
     def _on_publish_success(self, slot: int, p: int) -> None:
-        for node in self._popped[p]:
+        ctx = self._ctx[p]
+        for node in ctx.popped:
             self.pool.free(p, node)
-        self._alloc[p] = []
-        self._popped[p] = []
+        ctx.to_persist = []
+        ctx.popped = []
 
     def _attempt_failed(self, slot: int, p: int) -> None:
-        for node in self._alloc[p]:
+        ctx = self._ctx[p]
+        for node in ctx.to_persist:
             self.pool.free(p, node)
-        self._alloc[p] = []
-        self._popped[p] = []
+        ctx.to_persist = []
+        ctx.popped = []
 
     # -------------------- introspection --------------------------------- #
     def drain(self) -> List[Any]:

@@ -140,6 +140,26 @@ def test_make_recoverable_standalone():
     assert q.snapshot() == [2]
 
 
+def test_bound_proxy_inflight_survives_recover():
+    """Bound proxies capture the runtime's in-flight dict at bind time;
+    recover() must clear it IN PLACE — a proxy created before a recover
+    still records (and replays) ops crashed after it."""
+    rt = CombiningRuntime(n_threads=1)
+    q = rt.make("queue", "pbcomb")
+    bq = rt.attach(0).bind(q)
+    bq.enqueue("a")
+    rt.crash()
+    rt.recover()
+    rt.arm_crash(1, random.Random(5))
+    try:
+        bq.enqueue("b")               # same pre-recover proxy
+    except SimulatedCrash:
+        pass
+    replies = rt.recover()
+    assert replies[(q.name, 0)] == "ACK"
+    assert q.snapshot() == ["a", "b"]
+
+
 def test_unknown_pair_raises():
     rt = CombiningRuntime(n_threads=2)
     with pytest.raises(ValueError, match="no recoverable implementation"):

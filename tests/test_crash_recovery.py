@@ -27,7 +27,7 @@ def test_pbstack_crash_mid_combine(crash_at, seed):
     nvm = NVM(1 << 20)
     s = PBStack(nvm, 3)
     # committed prefix
-    s.push(0, "base", 1)
+    s.op(0, "PUSH", "base", 1)
     # three announced pushes, combiner crashes mid-round
     for p in range(3):
         s.request[p] = RequestRec("PUSH", f"v{p}", 1 - s.request[p].activate, 1)
@@ -52,7 +52,7 @@ def test_pbstack_crash_mid_combine(crash_at, seed):
 def test_pbqueue_crash_mid_enqueue_round(crash_at, seed):
     nvm = NVM(1 << 20)
     q = PBQueue(nvm, 3)
-    q.enqueue(0, "base", 1)
+    q.enq.op(0, "ENQ", "base", 1)
     for p in range(3):
         q.enq.request[p] = RequestRec(
             "ENQ", f"v{p}", 1 - q.enq.request[p].activate, 1)
@@ -78,7 +78,7 @@ def test_pbqueue_crash_mid_dequeue_round(crash_at):
     seq = 0
     for i in range(4):
         seq += 1
-        q.enqueue(0, i, seq)
+        q.enq.op(0, "ENQ", i, seq)
     # two announced dequeues; crash mid-round
     for p in range(2):
         q.deq.request[p] = RequestRec(
@@ -108,7 +108,7 @@ def test_pwfstack_crash_mid_publish(crash_at, seed):
     from repro.structures import PWFStack
     nvm = NVM(1 << 20)
     s = PWFStack(nvm, 3, backoff=False)
-    s.push(0, "base", 1)
+    s.op(0, "PUSH", "base", 1)
     for p in range(3):
         s.request[p] = RequestRec("PUSH", f"v{p}",
                                   1 - s.request[p].activate, 1)
@@ -127,6 +127,32 @@ def test_pwfstack_crash_mid_publish(crash_at, seed):
     assert content[-1] == "base"
 
 
+@pytest.mark.parametrize("crash_at", range(9))
+@pytest.mark.parametrize("seed", [0, 3, 7])
+def test_lock_undo_log_never_rolls_back_acked_ops(crash_at, seed):
+    """The undo log's valid flag must be fenced AFTER the log entries:
+    a crash that drains the valid-flag line but not the entry lines
+    would otherwise roll back a STALE log image over acknowledged
+    (psync'd) state.  Sweep crash points through a third op and check
+    the two acknowledged items survive recovery exactly once."""
+    from repro.api import CombiningRuntime
+    rt = CombiningRuntime(n_threads=2)
+    q = rt.make("queue", "lock-undo")
+    b = rt.attach(0).bind(q)
+    b.enqueue("a")
+    b.enqueue("b")                       # acknowledged + psync'd
+    rt.arm_crash(crash_at, random.Random(seed))
+    try:
+        b.enqueue("c")
+    except SimulatedCrash:
+        pass
+    rt.crash(random.Random(seed + 1))
+    rt.recover()                         # at-least-once replay of 'c'
+    content = q.snapshot()
+    assert content[:2] == ["a", "b"]     # acked prefix intact, in order
+    assert all(v == "c" for v in content[2:]) and len(content) <= 4
+
+
 if st is not None:
     @settings(max_examples=20, deadline=None)
     @given(st.integers(0, 14), st.integers(0, 2 ** 31 - 1),
@@ -140,7 +166,7 @@ if st is not None:
         s = PBStack(nvm, len(funcs), elimination=False)
         committed = []
         for i in range(3):
-            s.push(0, f"pre{i}", i + 1)
+            s.op(0, "PUSH", f"pre{i}", i + 1)
             committed.append(f"pre{i}")
         for p, f in enumerate(funcs):
             args = f"x{p}" if f == "PUSH" else None

@@ -15,7 +15,7 @@ def _run_sub(body: str) -> str:
         sys.path.insert(0, "src")
         import jax, jax.numpy as jnp
         import numpy as np
-        from repro.launch.hlo_cost import HloCost
+        from repro.launch.hlo_cost import HloCost, xla_cost_analysis
     """) + textwrap.dedent(body)
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
                          text=True, timeout=600)
@@ -35,7 +35,7 @@ def test_scan_flops_folded_exactly():
         expected = 10 * 2 * 4 * 64 * 64
         assert t["flops"] == expected, (t["flops"], expected)
         # raw cost_analysis undercounts by the trip count
-        raw = comp.cost_analysis()["flops"]
+        raw = xla_cost_analysis(comp)["flops"]
         assert raw < expected / 5, raw
         print("OK folded", t["flops"], "raw", raw)
     """)

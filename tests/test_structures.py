@@ -1,33 +1,42 @@
-"""Recoverable stacks/queues/heap + baselines (paper Section 5)."""
+"""Recoverable stacks/queues/heap + baselines (paper Section 5).
+
+Everything goes through the unified ``repro.api`` surface — the old
+per-structure calling conventions (``s.push(p, v, seq)``) were removed
+after their one-PR deprecation cycle (DESIGN.md §1).  Protocol-level
+internals (node pools, ``old_tail``) are still reachable via
+``obj.core`` where an invariant needs them.
+"""
 
 import random
 import threading
 
 import pytest
 
-from repro.core import NVM
-from repro.structures import (DFCStack, DurableMSQueue, PBHeap, PBQueue,
-                              PBStack, PWFQueue, PWFStack)
+from repro.api import CombiningRuntime
 
 N = 5
 OPS = 80
 
 
-def _pairs_workload(push, pop, drain):
+def _make(kind, protocol, n_threads=N, **kw):
+    rt = CombiningRuntime(n_threads=n_threads, nvm_words=1 << 21)
+    return rt, rt.make(kind, protocol, **kw)
+
+
+def _pairs_workload(rt, obj, add, rem):
     pushed, popped = [[] for _ in range(N)], [[] for _ in range(N)]
 
     def worker(p):
-        seq = 0
+        b = rt.attach(p).bind(obj)
+        addf, remf = getattr(b, add), getattr(b, rem)
         rng = random.Random(p)
         for i in range(OPS):
             v = p * 100000 + i
-            seq += 1
-            push(p, v, seq)
+            addf(v)
             pushed[p].append(v)
             for _ in range(rng.randint(0, 25)):
                 pass
-            seq += 1
-            r = pop(p, seq)
+            r = remf()
             if r is not None:
                 popped[p].append(r)
     ts = [threading.Thread(target=worker, args=(p,)) for p in range(N)]
@@ -37,105 +46,76 @@ def _pairs_workload(push, pop, drain):
         t.join()
     all_pushed = sorted(v for vs in pushed for v in vs)
     all_popped = [v for vs in popped for v in vs]
-    rest = list(drain())
+    rest = list(obj.snapshot())
     assert sorted(all_popped + rest) == all_pushed      # no loss, no dup
 
 
-@pytest.mark.parametrize("cls,kwargs", [
-    (PBStack, {}), (PBStack, {"elimination": False}),
-    (PBStack, {"recycle": False}), (PWFStack, {}),
-    (PWFStack, {"elimination": False}),
+@pytest.mark.parametrize("protocol,kwargs", [
+    ("pbcomb", {}), ("pbcomb", {"elimination": False}),
+    ("pbcomb", {"recycle": False}), ("pwfcomb", {}),
+    ("pwfcomb", {"elimination": False}),
 ])
-def test_stack_no_loss_no_dup(cls, kwargs):
-    nvm = NVM(1 << 21)
-    s = cls(nvm, N, **kwargs)
-    _pairs_workload(s.push, s.pop, s.drain)
+def test_stack_no_loss_no_dup(protocol, kwargs):
+    rt, s = _make("stack", protocol, **kwargs)
+    _pairs_workload(rt, s, "push", "pop")
 
 
-@pytest.mark.parametrize("cls,kwargs", [
-    (PBQueue, {}), (PBQueue, {"recycle": False}), (PWFQueue, {}),
+@pytest.mark.parametrize("protocol,kwargs", [
+    ("pbcomb", {}), ("pbcomb", {"recycle": False}), ("pwfcomb", {}),
 ])
-def test_queue_no_loss_no_dup(cls, kwargs):
-    nvm = NVM(1 << 21)
-    q = cls(nvm, N, **kwargs)
-    _pairs_workload(q.enqueue, q.dequeue, q.drain)
+def test_queue_no_loss_no_dup(protocol, kwargs):
+    rt, q = _make("queue", protocol, **kwargs)
+    _pairs_workload(rt, q, "enqueue", "dequeue")
 
 
-@pytest.mark.parametrize("cls", [PBQueue, PWFQueue, DurableMSQueue])
-def test_queue_fifo(cls):
-    nvm = NVM()
-    q = cls(nvm, 2)
-    seq = 0
+@pytest.mark.parametrize("protocol", ["pbcomb", "pwfcomb", "durable-ms"])
+def test_queue_fifo(protocol):
+    rt, q = _make("queue", protocol, n_threads=2)
+    b = rt.attach(0).bind(q)
     for i in range(20):
-        seq += 1
-        q.enqueue(0, i, seq)
-    outs = []
-    for _ in range(20):
-        seq += 1
-        outs.append(q.dequeue(0, seq))
-    assert outs == list(range(20))
+        b.enqueue(i)
+    assert [b.dequeue() for _ in range(20)] == list(range(20))
 
 
-@pytest.mark.parametrize("cls", [PBStack, PWFStack, DFCStack])
-def test_stack_lifo(cls):
-    nvm = NVM()
-    s = cls(nvm, 2)
-    seq = 0
+@pytest.mark.parametrize("protocol", ["pbcomb", "pwfcomb", "dfc"])
+def test_stack_lifo(protocol):
+    rt, s = _make("stack", protocol, n_threads=2)
+    b = rt.attach(0).bind(s)
     for i in range(10):
-        seq += 1
-        if cls is DFCStack:
-            s.op(0, "PUSH", i, seq)
-        else:
-            s.push(0, i, seq)
-    outs = []
-    for _ in range(10):
-        seq += 1
-        outs.append(s.op(0, "POP", None, seq) if cls is DFCStack
-                    else s.pop(0, seq))
-    assert outs == list(range(9, -1, -1))
+        b.push(i)
+    assert [b.pop() for _ in range(10)] == list(range(9, -1, -1))
 
 
 def test_pop_empty_returns_none():
-    nvm = NVM()
-    s = PBStack(nvm, 2)
-    assert s.pop(0, 1) is None
-    q = PBQueue(nvm, 2)
-    assert q.dequeue(0, 1) is None
+    rt, s = _make("stack", "pbcomb", n_threads=2)
+    assert rt.attach(0).bind(s).pop() is None
+    rt2, q = _make("queue", "pbcomb", n_threads=2)
+    assert rt2.attach(0).bind(q).dequeue() is None
 
 
 def test_heap_sorts():
-    nvm = NVM()
-    h = PBHeap(nvm, 2, capacity=128)
+    rt, h = _make("heap", "pbcomb", n_threads=2, capacity=128)
+    b = rt.attach(0).bind(h)
     keys = random.Random(0).sample(range(1000), 60)
-    seq = 0
     for k in keys:
-        seq += 1
-        h.insert(0, k, seq)
-    seq += 1
-    assert h.get_min(0, seq) == min(keys)
-    outs = []
-    for _ in keys:
-        seq += 1
-        outs.append(h.delete_min(0, seq))
-    assert outs == sorted(keys)
+        b.insert(k)
+    assert b.get_min() == min(keys)
+    assert [b.delete_min() for _ in keys] == sorted(keys)
 
 
 def test_heap_threaded():
-    nvm = NVM()
-    h = PBHeap(nvm, N, capacity=N * OPS + 1)
+    rt, h = _make("heap", "pbcomb", capacity=N * OPS + 1)
     inserted = [[] for _ in range(N)]
     removed = [[] for _ in range(N)]
 
     def worker(p):
-        seq = 0
+        b = rt.attach(p).bind(h)
         rng = random.Random(p)
         for i in range(40):
             k = rng.randint(0, 10 ** 6)
-            seq += 1
-            if h.insert(p, k, seq):
+            if b.insert(k):
                 inserted[p].append(k)
-            seq += 1
-            r = h.delete_min(p, seq)
+            r = b.delete_min()
             if r is not None:
                 removed[p].append(r)
     ts = [threading.Thread(target=worker, args=(p,)) for p in range(N)]
@@ -145,11 +125,10 @@ def test_heap_threaded():
         t.join()
     all_in = sorted(k for ks in inserted for k in ks)
     all_out = [k for ks in removed for k in ks]
+    b = rt.attach(0).bind(h)
     rest = []
-    seq = 10 ** 6
     while True:
-        seq += 1
-        r = h.delete_min(0, seq)
+        r = b.delete_min()
         if r is None:
             break
         rest.append(r)
@@ -157,21 +136,41 @@ def test_heap_threaded():
 
 
 def test_stack_recycling_reuses_nodes():
-    nvm = NVM()
-    s = PBStack(nvm, 2, recycle=True, chunk_nodes=4)
-    seq = 1
-    s.push(0, 0, seq)
-    first_chunk_limit = s.pool.chunks._limit[0]
-    seq += 1
-    s.pop(0, seq)
+    rt, s = _make("stack", "pbcomb", n_threads=2, recycle=True,
+                  chunk_nodes=4)
+    core = s.core
+    b = rt.attach(0).bind(s)
+    b.push(0)
+    first_chunk_limit = core.pool.chunks._limit[0]
+    b.pop()
     for i in range(50):                      # push/pop far beyond a chunk
-        seq += 1
-        s.push(0, i, seq)
-        seq += 1
-        s.pop(0, seq)
+        b.push(i)
+        b.pop()
     # recycling kept allocation inside the FIRST chunk
-    assert s.pool.chunks._limit[0] == first_chunk_limit
-    assert len(s.pool.recycler) >= 1
+    assert core.pool.chunks._limit[0] == first_chunk_limit
+    assert len(core.pool.recycler) >= 1
+
+
+def test_stack_elimination_pairs_push_pop_in_round():
+    """The paper's elimination pass (Figure 7a): a round serving a
+    concurrent push/pop pair matches them against each other — the pop
+    returns the eliminated push's value, the stack state never changes,
+    and no node is allocated or persisted for the pair."""
+    rt, s = _make("stack", "pbcomb", n_threads=3)
+    rt.attach(0).bind(s).push("base")
+    h1, h2 = rt.attach(1), rt.attach(2)
+    h1.announce(s, "push", "x")
+    h2.announce(s, "pop")
+    pwb_before = rt.nvm.counters["pwb"]
+    assert h2.perform(s) == "x"              # eliminated pair
+    assert s.snapshot() == ["base"]          # state untouched
+    # the round persisted only StateRec + MIndex — no node lines
+    assert rt.nvm.counters["pwb"] - pwb_before <= 3
+    # the push is detectable: recovery returns its recorded response
+    # without re-applying it
+    replies = rt.recover()
+    assert replies[(s.name, 1)] == "ACK"
+    assert s.snapshot() == ["base"]
 
 
 def test_queue_oldtail_guard():
@@ -179,8 +178,8 @@ def test_queue_oldtail_guard():
     published oldTail (single-threaded: oldTail always caught up, so
     values flow; the guard logic is exercised under threads in
     test_queue_no_loss_no_dup)."""
-    nvm = NVM()
-    q = PBQueue(nvm, 2)
-    q.enqueue(0, "a", 1)
-    assert q.old_tail != q.dummy
-    assert q.dequeue(0, 2) == "a"
+    rt, q = _make("queue", "pbcomb", n_threads=2)
+    b = rt.attach(0).bind(q)
+    b.enqueue("a")
+    assert q.core.old_tail != q.core.dummy
+    assert b.dequeue() == "a"
