@@ -70,12 +70,17 @@ def bench(name: str, make: Callable, op_factory: Callable,
 
 def print_rows(title: str, rows: List[Dict[str, Any]]) -> None:
     print(f"\n## {title}")
+    modeled = any("modeled_us_per_op" in r for r in rows)
+    extra = " {:>12s}".format("model-us/op") if modeled else ""
     print(f"{'impl':34s} {'ops/s':>10s} {'us/op':>8s} "
-          f"{'pwb/op':>8s} {'pfence/op':>10s} {'psync/op':>9s}")
+          f"{'pwb/op':>8s} {'pfence/op':>10s} {'psync/op':>9s}" + extra)
     for r in rows:
+        extra = (" {:12.3f}".format(r["modeled_us_per_op"])
+                 if "modeled_us_per_op" in r else "")
         print(f"{r['name']:34s} {r['ops_per_s']:10.0f} "
               f"{r['us_per_op']:8.2f} {r['pwb_per_op']:8.2f} "
-              f"{r['pfence_per_op']:10.2f} {r['psync_per_op']:9.2f}")
+              f"{r['pfence_per_op']:10.2f} {r['psync_per_op']:9.2f}"
+              + extra)
 
 
 def csv_rows(rows: List[Dict[str, Any]], table: str) -> List[str]:

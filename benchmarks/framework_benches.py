@@ -25,6 +25,8 @@ from repro.persist.sharded import (NaiveShardedCheckpointer,
 from repro.persist.store import MemStore
 from repro.serving.engine import CombiningEngine
 
+from . import modeled
+
 
 FSYNC_LATENCY = 2e-3      # modeled storage fsync cost per psync
 
@@ -76,7 +78,8 @@ def structure_matrix_bench(kinds=("queue", "stack"), n_threads: int = 4,
                         "ops_per_s": total / el,
                         "pwb_per_op": sum(pwbs) / runs / total,
                         "pfence_per_op": sum(pfences) / runs / total,
-                        "psync_per_op": sum(psyncs) / runs / total})
+                        "psync_per_op": sum(psyncs) / runs / total,
+                        **modeled.modeled_cell(kind, proto)})
     return out
 
 

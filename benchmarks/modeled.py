@@ -1,0 +1,158 @@
+"""Deterministic modeled-cost pass: the virtual-clock NVM timing engine
+driven by a fixed schedule (DESIGN.md §6).
+
+Wall-clock benches on this host cannot price persistence instructions
+faithfully (sleep granularity ~250us vs 1-3us Optane psyncs) and their
+counters drift with the thread scheduler.  This module replays each
+bench cell's workload on ONE OS thread multiplexing ``n_threads``
+logical threads through the handle layer (which binds the virtual
+clock's logical-thread key per call):
+
+  * combining-capable protocols run rounds of a fixed degree — logical
+    threads 1..n-1 ``announce``, logical thread 0 invokes and thereby
+    combines every announced request into one round;
+  * everything else (lock baselines, the durable MS queue) executes the
+    same ops sequentially, each logical thread paying its own
+    persistence instructions, serialized through the modeled device.
+
+Because the schedule is fixed and the clock is pure arithmetic, the
+resulting ``modeled_us_per_op`` / ``modeled_pwbs_per_op`` /
+``modeled_psyncs_per_op`` are byte-identical across runs, hosts, and
+--quick settings — they are the perf trajectory CI's gate diffs, and
+the counters are gated at ZERO tolerance.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.api import CombiningRuntime
+from repro.core import NVM, AtomicFloatObject, PBComb, PWFComb, RequestRec
+from repro.structures import LockDirectObject, LockUndoLogObject
+
+#: Profile used when callers pass none; ``run.py --profile`` overrides
+#: it (read at call time, so mutating the module global is effective).
+DEFAULT_PROFILE = "optane"
+#: Fixed modeled sizes — independent of --quick so a baseline captured
+#: in CI gates full local runs identically.
+N_THREADS = 4
+ROUNDS = 24
+NVM_WORDS = 1 << 22
+
+# Per-kind deterministic schedule: (op name, arg builder | None),
+# cycled per round; every logical thread issues the same op per round
+# (matching the add/remove pairs workload of the wall benches).
+_SCHEDULES: Dict[str, List[Tuple[str, Any]]] = {
+    "queue": [("enqueue", lambda p, r: p * 1_000_000 + r),
+              ("dequeue", None)],
+    "stack": [("push", lambda p, r: p * 1_000_000 + r),
+              ("pop", None)],
+    "heap": [("insert", lambda p, r: (p * 31 + r) % 1_000_000),
+             ("delete_min", None)],
+    "counter": [("fetch_add", lambda p, r: 1)],
+}
+
+
+def _summarize(nvm: NVM, t0_ns: float, total_ops: int,
+               profile: str) -> Dict[str, Any]:
+    c = nvm.counters
+    return {
+        "modeled_us_per_op": (nvm.clock.max_time_ns() - t0_ns)
+        / 1e3 / total_ops,
+        "modeled_pwb_per_op": c["pwb"] / total_ops,
+        "modeled_pfence_per_op": c["pfence"] / total_ops,
+        "modeled_psync_per_op": c["psync"] / total_ops,
+        "profile": profile,
+    }
+
+
+def modeled_cell(kind: str, protocol: str, *,
+                 n_threads: int = N_THREADS, rounds: int = ROUNDS,
+                 profile: Optional[str] = None,
+                 nvm_kw: Optional[dict] = None,
+                 mk_kw: Optional[dict] = None,
+                 prefill: Optional[List[Tuple[str, Any]]] = None
+                 ) -> Dict[str, Any]:
+    """Modeled metrics for one registry (kind, protocol) cell.
+
+    ``prefill``: (op, arg) calls issued by logical thread 0 before the
+    measured window (e.g. half-filling the heap); their modeled time is
+    excluded by baselining at ``t0`` rather than resetting the clock —
+    logical time is monotone, so stale hand-off stamps from the prefill
+    can never inflate the measured window.
+    """
+    profile = profile or DEFAULT_PROFILE
+    nvm = NVM(NVM_WORDS, profile=profile, **(nvm_kw or {}))
+    rt = CombiningRuntime(nvm=nvm, n_threads=n_threads)
+    obj = rt.make(kind, protocol, **(mk_kw or {}))
+    handles = [rt.attach(p) for p in range(n_threads)]
+    bounds = [h.bind(obj) for h in handles]
+    for op, arg in prefill or ():
+        getattr(bounds[0], op)(*(() if arg is None else (arg,)))
+    nvm.reset_counters()
+    t0 = nvm.clock.max_time_ns()
+    schedule = _SCHEDULES[kind]
+    combining = obj.adapter.can_announce
+    for r in range(rounds):
+        op, argfn = schedule[r % len(schedule)]
+        if combining:
+            for p in range(1, n_threads):
+                if argfn is None:
+                    handles[p].announce(obj, op)
+                else:
+                    handles[p].announce(obj, op, argfn(p, r))
+            fn = getattr(bounds[0], op)
+            fn(*(() if argfn is None else (argfn(0, r),)))
+        else:
+            for p in range(n_threads):
+                fn = getattr(bounds[p], op)
+                fn(*(() if argfn is None else (argfn(p, r),)))
+    return _summarize(nvm, t0, rounds * n_threads, profile)
+
+
+# ------------------------------------------------------------------ #
+# Raw-protocol driver (Figure 1: the combining objects themselves)   #
+# ------------------------------------------------------------------ #
+def _announce_raw(inst, p: int, func: str, args: Any) -> None:
+    clk = inst.nvm.clock
+    with clk.bind(p):
+        rec = RequestRec(func, args, 1 - inst.request[p].activate, 1)
+        rec.vtime = clk.now()
+        inst.request[p] = rec
+
+
+#: fig1 impl name -> factory(nvm, n_threads) (mirrors paper_figures).
+FIG1_IMPLS = {
+    "PBComb": lambda nvm, n: PBComb(nvm, n, AtomicFloatObject()),
+    "PWFComb": lambda nvm, n: PWFComb(nvm, n, AtomicFloatObject()),
+    "LockDirect (per-op persist)":
+        lambda nvm, n: LockDirectObject(nvm, n, AtomicFloatObject()),
+    "LockUndoLog (PMDK-shape)":
+        lambda nvm, n: LockUndoLogObject(nvm, n, AtomicFloatObject()),
+}
+
+
+def modeled_fig1(name: str, *, n_threads: int = N_THREADS,
+                 rounds: int = ROUNDS, profile: Optional[str] = None,
+                 nvm_kw: Optional[dict] = None) -> Dict[str, Any]:
+    """Modeled metrics for one Figure 1 AtomicFloat implementation."""
+    profile = profile or DEFAULT_PROFILE
+    nvm = NVM(NVM_WORDS, profile=profile, **(nvm_kw or {}))
+    inst = FIG1_IMPLS[name](nvm, n_threads)
+    nvm.reset_counters()
+    clk = nvm.clock
+    t0 = clk.max_time_ns()
+    combining = isinstance(inst, (PBComb, PWFComb))
+    seq = 0
+    for r in range(rounds):
+        seq += 1
+        if combining:
+            for p in range(1, n_threads):
+                _announce_raw(inst, p, "MUL", 1.000001)
+            with clk.bind(0):
+                inst.op(0, "MUL", 1.000001, seq)
+        else:
+            for p in range(n_threads):
+                with clk.bind(p):
+                    inst.op(p, "MUL", 1.000001, seq)
+    return _summarize(nvm, t0, rounds * n_threads, profile)

@@ -1,0 +1,195 @@
+"""CI perf gate: diff two ``bench.v2`` result files on the deterministic
+virtual-clock columns.
+
+    python -m benchmarks.perf_gate BENCH_baseline.json BENCH_ci.json \
+        [--modeled-us-tol 0.10] [--summary $GITHUB_STEP_SUMMARY]
+    python -m benchmarks.perf_gate --identical A.json B.json
+
+Gate rules (rows are matched by name; only rows whose ``profile`` is
+set in BOTH documents are gated — the modeled columns are the only
+ones deterministic enough to gate; wall timings drift with the host):
+
+  * ``modeled_pwbs_per_op`` / ``modeled_psyncs_per_op``: ZERO tolerance
+    on increase — these are exact instruction counters, any growth is a
+    real protocol regression.  A decrease is reported as an improvement
+    (refresh BENCH_baseline.json to lock it in) but does not fail.
+  * ``modeled_us_per_op``: relative tolerance (default 10%) — the knob
+    the issue calls "small tolerance": it lets deliberate cost-profile
+    retunes land without a same-PR baseline refresh, while catching
+    real latency regressions.
+  * a baseline row missing from the current run fails (lost coverage);
+    new rows are reported (extend the baseline when they stabilize).
+
+``--identical`` compares the modeled columns (and profile) of every row
+byte-exactly in both directions — CI runs the quick suite twice and
+uses this to prove determinism on every PR.
+
+Pure stdlib: the gate job needs no numpy/jax install.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List, Optional, Tuple
+
+MODELED_KEYS = ("modeled_us_per_op", "modeled_pwbs_per_op",
+                "modeled_psyncs_per_op", "profile")
+
+
+def _rows_by_name(doc: Dict[str, Any]) -> Dict[str, Dict[str, Any]]:
+    return {r["name"]: r for r in doc.get("rows", [])}
+
+
+def compare(baseline: Dict[str, Any], current: Dict[str, Any],
+            modeled_us_tol: float = 0.10
+            ) -> Tuple[List[str], List[str], List[str]]:
+    """Returns (failures, warnings, markdown_table_lines)."""
+    base_rows = _rows_by_name(baseline)
+    cur_rows = _rows_by_name(current)
+    failures: List[str] = []
+    warnings: List[str] = []
+    table = ["| row | pwbs/op (base→cur) | psyncs/op (base→cur) | "
+             "modeled us/op (base→cur) | Δus | status |",
+             "|---|---|---|---|---|---|"]
+
+    for name in sorted(base_rows):
+        b = base_rows[name]
+        if b.get("profile") is None:
+            continue                       # wall-only row: not gated
+        c = cur_rows.get(name)
+        if c is None:
+            failures.append(f"{name}: row missing from current run "
+                            "(lost bench coverage)")
+            table.append(f"| {name} | — | — | — | — | ❌ missing |")
+            continue
+        if c.get("profile") is None:
+            failures.append(f"{name}: modeled columns missing from "
+                            "current run")
+            table.append(f"| {name} | — | — | — | — | ❌ no model |")
+            continue
+        if c["profile"] != b["profile"]:
+            warnings.append(f"{name}: profile changed "
+                            f"{b['profile']} → {c['profile']}; skipped")
+            table.append(f"| {name} | — | — | — | — | ⚠ profile |")
+            continue
+        status = "✅"
+        for key, label in (("modeled_pwbs_per_op", "pwbs/op"),
+                           ("modeled_psyncs_per_op", "psyncs/op")):
+            if c[key] > b[key]:
+                failures.append(
+                    f"{name}: {label} regressed {b[key]} → {c[key]} "
+                    "(exact counter, zero tolerance)")
+                status = "❌"
+            elif c[key] < b[key]:
+                warnings.append(
+                    f"{name}: {label} improved {b[key]} → {c[key]} — "
+                    "refresh BENCH_baseline.json to lock it in")
+                if status == "✅":
+                    status = "⬇ improved"
+        bus, cus = b["modeled_us_per_op"], c["modeled_us_per_op"]
+        if bus:
+            delta = (cus - bus) / bus
+            delta_str = f"{delta:+.1%}"
+            regressed = delta > modeled_us_tol
+            improved = delta < -modeled_us_tol
+        else:
+            # zero baseline (rounds to 0.000 at 3 decimals): relative
+            # tolerance is meaningless — any measurable cost regresses
+            delta_str = "n/a" if cus == 0 else f"+{cus:.3f}us"
+            regressed = cus > 1e-3
+            improved = False
+        if regressed:
+            failures.append(
+                f"{name}: modeled_us_per_op regressed "
+                f"{bus:.3f} → {cus:.3f} ({delta_str}, tolerance "
+                f"{modeled_us_tol:.0%})")
+            status = "❌"
+        elif improved and status == "✅":
+            status = "⬇ improved"
+        table.append(
+            f"| {name} | {b['modeled_pwbs_per_op']} → "
+            f"{c['modeled_pwbs_per_op']} | {b['modeled_psyncs_per_op']} "
+            f"→ {c['modeled_psyncs_per_op']} | {bus:.3f} → {cus:.3f} | "
+            f"{delta_str} | {status} |")
+
+    for name in sorted(set(cur_rows) - set(base_rows)):
+        if cur_rows[name].get("profile") is not None:
+            warnings.append(f"{name}: new modeled row (not in baseline) "
+                            "— extend BENCH_baseline.json")
+    return failures, warnings, table
+
+
+def check_identical(a: Dict[str, Any], b: Dict[str, Any]) -> List[str]:
+    """Byte-exact equality of the modeled columns of every row, both
+    directions (the determinism contract of the virtual clock)."""
+    ra, rb = _rows_by_name(a), _rows_by_name(b)
+    failures = []
+    for name in sorted(set(ra) | set(rb)):
+        if name not in ra or name not in rb:
+            failures.append(f"{name}: present in only one document")
+            continue
+        for key in MODELED_KEYS:
+            va, vb = ra[name].get(key), rb[name].get(key)
+            if va != vb:
+                failures.append(f"{name}: {key} differs: {va!r} != {vb!r}")
+    return failures
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Gate bench.v2 modeled columns against a baseline")
+    ap.add_argument("baseline", help="checked-in BENCH_baseline.json "
+                                     "(or first file with --identical)")
+    ap.add_argument("current", help="freshly produced BENCH_ci.json")
+    ap.add_argument("--modeled-us-tol", type=float, default=0.10,
+                    help="relative tolerance on modeled_us_per_op "
+                         "(default %(default)s; counters are always "
+                         "zero-tolerance)")
+    ap.add_argument("--summary", metavar="PATH", default=None,
+                    help="append the markdown table here as well "
+                         "(e.g. $GITHUB_STEP_SUMMARY)")
+    ap.add_argument("--identical", action="store_true",
+                    help="require byte-identical modeled columns "
+                         "instead of gating (determinism check)")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+
+    if args.identical:
+        failures = check_identical(baseline, current)
+        for msg in failures:
+            print(f"NOT IDENTICAL: {msg}")
+        if not failures:
+            print("modeled columns byte-identical across both runs "
+                  f"({len(_rows_by_name(baseline))} rows)")
+        return 1 if failures else 0
+
+    failures, warnings, table = compare(baseline, current,
+                                        args.modeled_us_tol)
+    out = "\n".join(["## Perf gate (virtual-clock modeled columns)", ""]
+                    + table + [""])
+    print(out)
+    if args.summary:
+        with open(args.summary, "a") as f:
+            f.write(out + "\n")
+    for msg in warnings:
+        print(f"WARN: {msg}")
+    for msg in failures:
+        print(f"FAIL: {msg}")
+    if failures:
+        print(f"\nperf gate FAILED ({len(failures)} regression(s)); "
+              "if intentional, refresh BENCH_baseline.json via "
+              "`python -m benchmarks.run --quick --json "
+              "BENCH_baseline.json`")
+        return 1
+    print("\nperf gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

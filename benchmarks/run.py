@@ -4,32 +4,50 @@ framework-level benches; prints human-readable tables as it goes, a
 machine-readable result file so every PR extends a real perf trajectory.
 
 Run:  PYTHONPATH=src python -m benchmarks.run [--quick] [--json PATH]
+                                              [--profile NAME]
 
-JSON schema (``bench.v1``)::
+JSON schema (``bench.v2``, superset of v1)::
 
-    {"schema": "bench.v1", "tag": "<tag>", "quick": bool,
+    {"schema": "bench.v2", "tag": "<tag>", "quick": bool,
+     "profile": "optane",
      "rows": [{"name": "<table>/<impl>",
-               "us_per_op": float,
-               "pwbs_per_op": float,
-               "psyncs_per_op": float}, ...]}
+               "us_per_op": float,          # wall clock (host-noisy)
+               "pwbs_per_op": float,        # wall-run counters
+               "psyncs_per_op": float,
+               "modeled_us_per_op": float|null,     # virtual clock —
+               "modeled_pwbs_per_op": float|null,   # deterministic,
+               "modeled_psyncs_per_op": float|null, # byte-identical
+               "profile": "optane"|null}, ...]}     # across runs
+
+The ``modeled_*`` columns come from the fixed-schedule virtual-clock
+pass (benchmarks/modeled.py): byte-identical across runs and hosts,
+they are the columns CI's perf gate (benchmarks/perf_gate.py) diffs
+against the checked-in BENCH_baseline.json — counters at zero
+tolerance.  Rows without a modeled replay (checkpoint/serving) carry
+nulls and are not gated.
 
 ``--quick`` runs every bench at tiny sizes (seconds, CI perf-smoke);
-absolute numbers are then meaningless but the schema and the per-op
-persistence-instruction counts remain exact, which is what the smoke
-test (tests/test_bench_json.py) pins: pbcomb/pwfcomb rows must stay at
-psyncs_per_op <= 1 + eps — one psync per combining ROUND is the paper's
-whole point.
+absolute wall numbers are then meaningless but the modeled columns are
+the same as a full run's, which is what makes the gate valid in CI.
+The smoke test (tests/test_bench_json.py) pins the schema plus the
+paper's core claim: pbcomb/pwfcomb rows spend at most ~one psync per
+op — one psync per combining ROUND.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
+import tempfile
 
 sys.path.insert(0, "src")                      # repo-root invocation
 
-from benchmarks import framework_benches, paper_figures, roofline_report
+from repro.core import PROFILES
+
+from benchmarks import framework_benches, modeled, paper_figures, \
+    roofline_report
 from benchmarks.common import csv_rows, print_rows
 
 
@@ -58,7 +76,17 @@ def collect(quick: bool = False):
             {"name": f"{table}/{r['name']}",
              "us_per_op": round(r["us_per_op"], 3),
              "pwbs_per_op": round(r["pwb_per_op"], 3),
-             "psyncs_per_op": round(r["psync_per_op"], 3)}
+             "psyncs_per_op": round(r["psync_per_op"], 3),
+             "modeled_us_per_op":
+                 None if "modeled_us_per_op" not in r
+                 else round(r["modeled_us_per_op"], 3),
+             "modeled_pwbs_per_op":
+                 None if "modeled_pwb_per_op" not in r
+                 else round(r["modeled_pwb_per_op"], 3),
+             "modeled_psyncs_per_op":
+                 None if "modeled_psync_per_op" not in r
+                 else round(r["modeled_psync_per_op"], 3),
+             "profile": r.get("profile")}
             for r in rows)
 
     add("fig1_atomicfloat",
@@ -74,6 +102,10 @@ def collect(quick: bool = False):
         paper_figures.fig7a_stacks(nt, ops))
     add("fig7b_heap", f"Fig 7b — PBHeap across sizes {heap_sizes}",
         paper_figures.fig7b_heap(nt, ops, sizes=heap_sizes))
+    add("fig8_modeled",
+        f"Fig 8 — modeled cost, '{modeled.DEFAULT_PROFILE}' profile "
+        "(deterministic virtual clock; us/op IS modeled)",
+        paper_figures.fig8_modeled())
 
     t1 = paper_figures.table1_counters(nt, ops)
     print("\n## Table 1 — shared-location traffic per op (volatile mode)")
@@ -96,20 +128,44 @@ def collect(quick: bool = False):
     return csv, json_rows
 
 
+def _atomic_write_json(path: str, doc) -> None:
+    """Serialize fully into a sibling temp file, then rename over the
+    target: a crash mid-write (or an unserializable doc) can never
+    clobber a previous good result file with a truncated one."""
+    d = os.path.dirname(os.path.abspath(path)) or "."
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=".bench-", suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(doc, f, indent=1)
+            f.write("\n")
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(
         description="Persistent-software-combining benchmark suite")
     ap.add_argument("--json", metavar="PATH",
-                    help="write machine-readable results (bench.v1) here, "
-                         "e.g. BENCH_pr2.json")
+                    help="write machine-readable results (bench.v2) here, "
+                         "e.g. BENCH_pr3.json")
     ap.add_argument("--quick", action="store_true",
-                    help="tiny sizes for CI perf-smoke (schema-exact, "
-                         "timing-meaningless)")
+                    help="tiny sizes for CI perf-smoke (wall timings "
+                         "meaningless; modeled columns unchanged)")
     ap.add_argument("--tag", default=None,
                     help="trajectory tag recorded in the JSON (defaults "
                          "to the --json filename stem)")
+    ap.add_argument("--profile", default=modeled.DEFAULT_PROFILE,
+                    choices=sorted(PROFILES),
+                    help="virtual-clock cost profile for the modeled "
+                         "columns (default: %(default)s)")
     args = ap.parse_args(argv)
 
+    modeled.DEFAULT_PROFILE = args.profile
     csv, json_rows = collect(quick=args.quick)
 
     # roofline tables from dry-run artifacts (if present)
@@ -134,11 +190,9 @@ def main(argv=None) -> None:
             tag = stem[len("BENCH_"):-len(".json")] \
                 if stem.startswith("BENCH_") and stem.endswith(".json") \
                 else stem
-        doc = {"schema": "bench.v1", "tag": tag, "quick": args.quick,
-               "rows": json_rows}
-        with open(args.json, "w") as f:
-            json.dump(doc, f, indent=1)
-            f.write("\n")
+        doc = {"schema": "bench.v2", "tag": tag, "quick": args.quick,
+               "profile": args.profile, "rows": json_rows}
+        _atomic_write_json(args.json, doc)
         print(f"\n(wrote {len(json_rows)} rows to {args.json})")
 
 

@@ -168,8 +168,12 @@ class _CombiningAdapter(StructureAdapter):
     def announce(self, core, p, op, args, seq):
         spec = self._spec(op)
         inst = self._instance(core, op)
-        inst.request[p] = RequestRec(spec.func, self._args(op, args),
-                                     1 - inst.request[p].activate, 1)
+        rec = RequestRec(spec.func, self._args(op, args),
+                         1 - inst.request[p].activate, 1)
+        clk = inst.nvm.clock
+        if clk is not None:
+            rec.vtime = clk.now()   # combiner merges this (Lamport)
+        inst.request[p] = rec
 
     def perform(self, core, p, op):
         return self._instance(core, op)._perform_request(p)
@@ -359,9 +363,30 @@ class DFCStackAdapter(_DirectOpAdapter):
     # update while dropping the done-mark (or vice versa).  Exactly-once
     # replay of in-flight ops is therefore not guaranteed; don't claim it.
     detectable = False
+    # DFC announcements live in NVMM, so the announce/perform split is
+    # natural: announce persists the request record (pwb+pfence — the
+    # per-thread persistence DFC pays that PBComb avoids), perform runs
+    # the combiner loop.  The modeled bench pass uses this to stage
+    # rounds of a fixed combining degree deterministically.
+    can_announce = True
 
     def create(self, nvm, n_threads, counters=None, **kw):
         return DFCStack(nvm, n_threads, **kw)
+
+    def announce(self, core, p, op, args, seq):
+        spec = self._spec(op)
+        nvm = core.nvm
+        base = core.ann_base[p]
+        nvm.write(base, spec.func)
+        nvm.write(base + 1, self._args(op, args))
+        nvm.write(base + 2, seq)
+        nvm.pwb(base, 3)
+        nvm.pfence()
+        if nvm.clock is not None:
+            core._ann_vt[p] = nvm.clock.now()
+
+    def perform(self, core, p, op):
+        return core.perform(p)
 
     def snapshot(self, core):
         return core.drain()

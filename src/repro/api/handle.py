@@ -67,6 +67,15 @@ class Handle:
             return args[0]
         return tuple(args)
 
+    def _clock(self):
+        """The runtime NVM's virtual clock, if a profile is engaged.
+        Handles bind their tid as the clock's logical thread for the
+        duration of each call, so modeled costs are charged per logical
+        thread even when one OS thread drives many handles (the
+        deterministic modeled bench pass does exactly that)."""
+        nvm = self.runtime.nvm
+        return nvm.clock if nvm is not None else None
+
     # ------------------ invocation ------------------------------------ #
     def invoke(self, obj: Any, op: str, *args: Any) -> Any:
         """Run one operation; the runtime replays it on recovery if a
@@ -79,8 +88,13 @@ class Handle:
         seqs[seq_key] = seq
         inflight = self.runtime._inflight
         inflight[key] = (op, a, seq)
+        clock = self._clock()
         try:
-            ret = fn(self.tid, a, seq)
+            if clock is None:
+                ret = fn(self.tid, a, seq)
+            else:
+                with clock.bind(self.tid):
+                    ret = fn(self.tid, a, seq)
         except SimulatedCrash:
             raise                       # stays in-flight -> replayed
         except BaseException:
@@ -130,6 +144,16 @@ class Handle:
                     raise
                 inflight.pop(key, None)
                 return ret
+
+        clock = self._clock()   # bind-time decision: no per-call check
+        if clock is not None:
+            inner = run
+
+            def run(a: Any) -> Any:
+                # binding may enclose the bookkeeping: it only affects
+                # which logical clock the call's costs are charged to
+                with clock.bind(tid):
+                    return inner(a)
 
         if arity == 0:
             return lambda: run(None)
@@ -181,7 +205,12 @@ class Handle:
         with."""
         a = self._norm(args)
         seq = self._next_seq(obj, op)
-        obj.adapter.announce(obj.core, self.tid, op, a, seq)
+        clock = self._clock()
+        if clock is None:
+            obj.adapter.announce(obj.core, self.tid, op, a, seq)
+        else:
+            with clock.bind(self.tid):
+                obj.adapter.announce(obj.core, self.tid, op, a, seq)
         self.runtime._inflight[(obj.name, self.tid)] = (op, a, seq)
         return seq
 
@@ -193,8 +222,13 @@ class Handle:
             raise RuntimeError(f"nothing announced on {obj.name} "
                                f"by thread {self.tid}")
         op, _a, _seq = self.runtime._inflight[key]
+        clock = self._clock()
         try:
-            ret = obj.adapter.perform(obj.core, self.tid, op)
+            if clock is None:
+                ret = obj.adapter.perform(obj.core, self.tid, op)
+            else:
+                with clock.bind(self.tid):
+                    ret = obj.adapter.perform(obj.core, self.tid, op)
         except SimulatedCrash:
             raise                       # stays in-flight -> replayed
         except BaseException:

@@ -72,11 +72,16 @@ class RecoverableObject:
 class CombiningRuntime:
     def __init__(self, nvm: Optional[NVM] = None, n_threads: int = 8,
                  counters: Optional[Counters] = None,
-                 nvm_words: int = 1 << 21) -> None:
+                 nvm_words: int = 1 << 21,
+                 profile: Optional[Any] = None) -> None:
+        """``profile`` (a cost-profile name or ``CostProfile``) engages
+        the virtual clock on the lazily created NVM; ignored when an
+        ``nvm`` is passed in (its own profile governs)."""
         self.nvm = nvm
         self.n_threads = n_threads
         self.counters = counters
         self._nvm_words = nvm_words
+        self._profile = profile
         self.objects: Dict[str, RecoverableObject] = {}
         self.boards: Dict[str, AnnounceBoard] = {}
         self._handles: Dict[int, Handle] = {}
@@ -88,7 +93,7 @@ class CombiningRuntime:
         """The NVM is created lazily: runtimes that only hand out boards
         (e.g. the serving engine's) never allocate a memory image."""
         if self.nvm is None:
-            self.nvm = NVM(self._nvm_words)
+            self.nvm = NVM(self._nvm_words, profile=self._profile)
         return self.nvm
 
     def make(self, kind: str, protocol: str = "pbcomb",

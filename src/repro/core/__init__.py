@@ -7,7 +7,8 @@ concurrent objects.
 """
 
 from .atomics import AtomicInt, AtomicRef, Counters
-from .nvm import LINE, NVM, SimulatedCrash
+from .nvm import (LINE, NVM, PROFILES, CostProfile, SimulatedCrash, VClock,
+                  resolve_profile)
 from .objects import (AtomicFloatObject, FetchAddObject, HeapObject,
                       SeqObject, SeqQueueObject, SeqStackObject)
 from .pbcomb import PBComb, RequestRec
@@ -16,6 +17,7 @@ from .pwfcomb import PWFComb
 __all__ = [
     "AtomicInt", "AtomicRef", "Counters",
     "LINE", "NVM", "SimulatedCrash",
+    "PROFILES", "CostProfile", "VClock", "resolve_profile",
     "AtomicFloatObject", "FetchAddObject", "HeapObject", "SeqObject",
     "SeqQueueObject", "SeqStackObject",
     "PBComb", "PWFComb", "RequestRec",

@@ -41,15 +41,20 @@ class Counters:
 class AtomicInt:
     """Instrumentation is opt-in: traffic is counted only when a
     ``Counters`` object is supplied for a ``shared`` word (the Table 1
-    harness does) — the un-instrumented hot path pays no bookkeeping."""
+    harness does) — the un-instrumented hot path pays no bookkeeping.
+    When a virtual clock (``NVM.clock``) is supplied, every CAS-class
+    instruction additionally advances the calling thread's logical
+    clock by the profile's ``cas_ns``."""
 
-    __slots__ = ("_value", "_mutex", "_count")
+    __slots__ = ("_value", "_mutex", "_count", "_clock")
 
     def __init__(self, value: int = 0, *, shared: bool = False,
-                 counters: Optional[Counters] = None) -> None:
+                 counters: Optional[Counters] = None,
+                 clock: Optional[Any] = None) -> None:
         self._value = value
         self._mutex = threading.Lock()
         self._count = counters if (shared and counters is not None) else None
+        self._clock = clock
 
     def load(self) -> int:
         if self._count is not None:
@@ -65,6 +70,8 @@ class AtomicInt:
         with self._mutex:
             if self._count is not None:
                 self._count.cas_calls += 1
+            if self._clock is not None:
+                self._clock.advance(self._clock.profile.cas_ns)
             if self._value == old:
                 self._value = new
                 if self._count is not None:
@@ -78,20 +85,25 @@ class AtomicInt:
             self._value = old + delta
             if self._count is not None:
                 self._count.shared_writes += 1
+            if self._clock is not None:
+                self._clock.advance(self._clock.profile.cas_ns)
             return old
 
 
 class AtomicRef:
     """Versioned reference supporting LL/VL/SC (ABA-safe, as in paper §6).
-    Instrumentation opt-in as for ``AtomicInt``."""
+    Instrumentation (counters, virtual clock) opt-in as for
+    ``AtomicInt``."""
 
-    __slots__ = ("_value", "_mutex", "_count")
+    __slots__ = ("_value", "_mutex", "_count", "_clock")
 
     def __init__(self, value: Any, *, shared: bool = False,
-                 counters: Optional[Counters] = None) -> None:
+                 counters: Optional[Counters] = None,
+                 clock: Optional[Any] = None) -> None:
         self._value: Tuple[Any, int] = (value, 0)
         self._mutex = threading.Lock()
         self._count = counters if (shared and counters is not None) else None
+        self._clock = clock
 
     def ll(self) -> Tuple[Any, int]:
         """Load-linked: returns (value, version); version feeds VL/SC."""
@@ -110,6 +122,8 @@ class AtomicRef:
         with self._mutex:
             if self._count is not None:
                 self._count.cas_calls += 1
+            if self._clock is not None:
+                self._clock.advance(self._clock.profile.cas_ns)
             if self._value[1] == version:
                 self._value = (new_value, version + 1)
                 if self._count is not None:

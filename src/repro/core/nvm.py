@@ -48,7 +48,9 @@ from __future__ import annotations
 import random
 import threading
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from contextlib import contextmanager
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple, Union
 
 LINE = 8  # words per simulated cache line
 
@@ -57,10 +59,150 @@ class SimulatedCrash(Exception):
     """Raised when an armed crash countdown fires inside protocol code."""
 
 
+# --------------------------------------------------------------------- #
+# Virtual-clock timing engine (DESIGN.md §6)                            #
+# --------------------------------------------------------------------- #
+# Host sleep granularity (~250us here) cannot express Optane-scale
+# (1-3us) psync latencies, so the wall-clock ``persist_latency`` knob
+# distorts rather than models.  The virtual clock instead *counts* time:
+# every persistence instruction advances the calling thread's logical
+# clock by a profile-defined cost, combining hand-offs merge clocks
+# Lamport-style (a round's latency is the max over its participants, not
+# the sum), and the makespan max(thread clocks) / ops is a deterministic
+# ``modeled_us_per_op`` that survives host drift — the MOD / DFC
+# evaluation methodology, machine-checkable in CI.
+
+@dataclass(frozen=True)
+class CostProfile:
+    """Per-instruction modeled costs, all in nanoseconds."""
+
+    name: str
+    pwb_ns: float     # per cache line queued by a pwb (CLWB issue)
+    pfence_ns: float  # per pfence (store-fence retire)
+    psync_ns: float   # fixed device round trip per psync drain
+    seek_ns: float    # per discontiguous run of lines drained (P3 visible)
+    line_ns: float    # per line streamed within a contiguous run
+    cas_ns: float     # per CAS / LL-SC on a shared word
+    round_ns: float   # combiner round fusion/hand-off bookkeeping
+
+
+#: Built-in profiles.  "wall-clock mode" is not a profile: it is
+#: ``profile=None`` plus the pre-existing ``persist_latency`` sleep knob.
+PROFILES: Dict[str, CostProfile] = {
+    # Optane DCPMM shape: psync in the 1-3us band the ROADMAP names,
+    # expensive seeks for scattered lines (XPLine write amplification).
+    "optane": CostProfile("optane", pwb_ns=30.0, pfence_ns=30.0,
+                          psync_ns=1500.0, seek_ns=300.0, line_ns=60.0,
+                          cas_ns=25.0, round_ns=50.0),
+    # NVDIMM-N / emulated-DRAM shape: flushes cheap, drains fast.
+    "dram": CostProfile("dram", pwb_ns=15.0, pfence_ns=20.0,
+                        psync_ns=120.0, seek_ns=30.0, line_ns=8.0,
+                        cas_ns=25.0, round_ns=50.0),
+    # Battery-backed / eADR shape: the persistence domain covers the
+    # caches, so write-backs are ordering tokens, draining is ~free.
+    "battery-backed": CostProfile("battery-backed", pwb_ns=5.0,
+                                  pfence_ns=10.0, psync_ns=30.0,
+                                  seek_ns=0.0, line_ns=0.0,
+                                  cas_ns=25.0, round_ns=50.0),
+}
+
+
+def resolve_profile(profile: Union[str, CostProfile, None]
+                    ) -> Optional[CostProfile]:
+    if profile is None:
+        return None
+    if isinstance(profile, CostProfile):
+        return profile
+    try:
+        return PROFILES[profile]
+    except KeyError:
+        raise ValueError(f"unknown cost profile {profile!r}; "
+                         f"available: {sorted(PROFILES)}") from None
+
+
+class VClock:
+    """Per-thread logical clocks (ns) advanced by a ``CostProfile``.
+
+    A "thread" is normally the OS thread, but a driver multiplexing many
+    logical threads onto one OS thread (the deterministic modeled bench
+    pass) rebinds the key with ``bind(logical_id)`` — this is how the
+    handle layer charges costs to the handle's tid regardless of which
+    OS thread runs the call.
+
+    Merge rule (Lamport): an event that *receives* from another thread
+    (a combiner adopting an announced request, a waiter picking up its
+    response) merges the sender's timestamp with ``merge`` — so a
+    combining round's modeled latency is the max over its participants,
+    never the sum.  ``sync_device`` models the single per-DIMM
+    write-back engine: concurrent psyncs serialize on device time.
+    """
+
+    __slots__ = ("profile", "_times", "_tls", "_device_free",
+                 "_device_lock")
+
+    def __init__(self, profile: CostProfile) -> None:
+        self.profile = profile
+        self._times: Dict[Any, float] = {}
+        self._tls = threading.local()
+        self._device_free = 0.0
+        self._device_lock = threading.Lock()
+
+    def _key(self) -> Any:
+        lid = getattr(self._tls, "lid", None)
+        return threading.get_ident() if lid is None else lid
+
+    @contextmanager
+    def bind(self, logical_id: Any):
+        """Charge this OS thread's costs to ``logical_id`` while bound."""
+        tls = self._tls
+        prev = getattr(tls, "lid", None)
+        tls.lid = logical_id
+        try:
+            yield self
+        finally:
+            tls.lid = prev
+
+    def now(self) -> float:
+        return self._times.get(self._key(), 0.0)
+
+    def advance(self, ns: float) -> None:
+        key = self._key()
+        self._times[key] = self._times.get(key, 0.0) + ns
+
+    def merge(self, t_ns: float) -> None:
+        key = self._key()
+        if t_ns > self._times.get(key, 0.0):
+            self._times[key] = t_ns
+
+    def sync_device(self, cost_ns: float) -> float:
+        """Advance through the (serialized) write-back device: the drain
+        starts when both this thread and the device are free."""
+        key = self._key()
+        with self._device_lock:
+            t = self._times.get(key, 0.0)
+            if self._device_free > t:
+                t = self._device_free
+            t += cost_ns
+            self._device_free = t
+        self._times[key] = t
+        return t
+
+    def max_time_ns(self) -> float:
+        """Makespan: the latest clock (modeled elapsed time so far).
+        tuple() snapshots the dict atomically under the GIL — concurrent
+        threads insert their key on their first clocked instruction."""
+        return max(tuple(self._times.values()), default=0.0)
+
+    def reset(self) -> None:
+        self._times.clear()
+        self._device_free = 0.0
+
+
 class NVM:
     def __init__(self, n_words: int = 1 << 20, *, pwb_nop: bool = False,
                  psync_nop: bool = False,
-                 persist_latency: float = 0.0) -> None:
+                 persist_latency: float = 0.0,
+                 profile: Union[str, CostProfile, None] = None) -> None:
         """``persist_latency``: seconds a psync blocks the calling thread
         (models NVMM write-back latency, ~1-3us on Optane DCPMM; the
         benchmark harness sets it so the paper's cost trends — one psync
@@ -68,6 +210,12 @@ class NVM:
         memory writes are otherwise free).  The sleep happens OUTSIDE the
         queue lock: other threads keep announcing while the combiner
         waits, which is exactly the contention window combining exploits.
+
+        ``profile``: a ``CostProfile`` (or its name) engaging the virtual
+        clock — every persistence instruction then advances the calling
+        thread's logical clock by the modeled cost instead of sleeping
+        (``self.clock``; see module docs / DESIGN.md §6).  The NOP
+        ablations compose: a nop'd instruction charges nothing.
         """
         self.n_words = n_words
         self._vol: List[Any] = [0] * n_words        # volatile (cache) image
@@ -83,6 +231,12 @@ class NVM:
         self.pwb_nop = pwb_nop
         self.psync_nop = psync_nop
         self.persist_latency = persist_latency
+        prof = resolve_profile(profile)
+        self.clock: Optional[VClock] = VClock(prof) if prof else None
+        # Test knob: force every fused persistence sentence onto its
+        # discrete-instruction fallback (the fused-vs-discrete
+        # equivalence property tests pin cost and counter equality).
+        self.force_discrete = False
         self.counters: Dict[str, int] = {
             "pwb": 0, "pfence": 0, "psync": 0, "crashes": 0}
         # Crash-point injection: countdown on persistence "events".
@@ -149,6 +303,8 @@ class NVM:
                     (first, n_lines,
                      self._vol[first * LINE:(first + n_lines) * LINE]))
             self.counters["pwb"] += n_lines
+        if self.clock is not None and not self.pwb_nop:
+            self.clock.advance(n_lines * self.clock.profile.pwb_ns)
         self._tick_crash_point()
 
     # Explicit alias: round persistence paths call this so the intent —
@@ -180,6 +336,8 @@ class NVM:
                         (first, n_lines,
                          vol[first * LINE:(first + n_lines) * LINE]))
             self.counters["pwb"] += n_total
+        if self.clock is not None and not self.pwb_nop:
+            self.clock.advance(n_total * self.clock.profile.pwb_ns)
         self._tick_crash_point()
 
     def pfence(self) -> None:
@@ -187,6 +345,8 @@ class NVM:
             self.counters["pfence"] += 1
             if self._epochs[-1]:
                 self._epochs.append([])
+        if self.clock is not None:
+            self.clock.advance(self.clock.profile.pfence_ns)
         self._tick_crash_point()
 
     # ---------------- fused round-commit paths ------------------------ #
@@ -202,7 +362,8 @@ class NVM:
 
     def _fast_ok(self) -> bool:
         return (self._crash_countdown is None and not self.pwb_nop
-                and not self.psync_nop and not self.persist_latency)
+                and not self.psync_nop and not self.persist_latency
+                and not self.force_discrete)
 
     def _pending_lines(self, pending) -> List[Tuple[int, int]]:
         """Dedupe/merge (addr, n_words) ranges to [first, n_lines] runs
@@ -251,6 +412,15 @@ class NVM:
             c = self.counters
             c["pwb"] += n_lines + n_pending
             c["pfence"] += 1
+        clock = self.clock
+        if clock is not None:
+            # Charge the exact advance sequence of the discrete fallback:
+            # persist_lines(pending); pwb_range(addr); pfence.
+            prof = clock.profile
+            if n_pending:
+                clock.advance(n_pending * prof.pwb_ns)
+            clock.advance(n_lines * prof.pwb_ns)
+            clock.advance(prof.pfence_ns)
 
     def pwb_sync(self, addr: int, n_words: int = 1) -> None:
         """``pwb(addr); psync()`` fused: queue the line(s), then drain
@@ -261,17 +431,28 @@ class NVM:
             return
         first = addr // LINE
         n_lines = (addr + n_words - 1) // LINE - first + 1
+        clock = self.clock
+        drained: Optional[List[Tuple[int, int]]] = \
+            [] if clock is not None else None
         with self._lock:
             dur, vol = self._dur, self._vol
             for epoch in self._epochs:
-                for efirst, _en, snap in epoch:
+                for efirst, en, snap in epoch:
                     dur[efirst * LINE:efirst * LINE + len(snap)] = snap
+                    if drained is not None:
+                        drained.append((efirst, en))
             a, b = first * LINE, (first + n_lines) * LINE
             dur[a:b] = vol[a:b]
+            if drained is not None:
+                drained.append((first, n_lines))
             self._epochs = [[]]
             c = self.counters
             c["pwb"] += n_lines
             c["psync"] += 1
+        if clock is not None:
+            # Exact discrete sequence: pwb(addr); psync().
+            clock.advance(n_lines * clock.profile.pwb_ns)
+            clock.sync_device(self._drain_cost_ns(drained))
 
     def commit_round(self, state_addr: int, n_words: int,
                      index_addr: int, index_value: Any,
@@ -292,31 +473,54 @@ class NVM:
         runs = self._pending_lines(pending) if pending else ()
         first = state_addr // LINE
         n_lines = (state_addr + n_words - 1) // LINE - first + 1
+        clock = self.clock
+        drained: Optional[List[Tuple[int, int]]] = \
+            [] if clock is not None else None
         with self._lock:
             dur, vol = self._dur, self._vol
             # drain epochs queued before this commit, the round's node
             # lines, the StateRec, then MIndex — everything the round's
             # psync would have drained
             for epoch in self._epochs:
-                for efirst, _en, snap in epoch:
+                for efirst, en, snap in epoch:
                     dur[efirst * LINE:efirst * LINE + len(snap)] = snap
+                    if drained is not None:
+                        drained.append((efirst, en))
             n_pending = 0
             for pfirst, pn in runs:
                 a = pfirst * LINE
                 b = a + pn * LINE
                 dur[a:b] = vol[a:b]
                 n_pending += pn
+                if drained is not None:
+                    drained.append((pfirst, pn))
             a, b = first * LINE, (first + n_lines) * LINE
             dur[a:b] = vol[a:b]
+            if drained is not None:
+                drained.append((first, n_lines))
             vol[index_addr] = index_value
             iline = index_addr // LINE
             a = iline * LINE
             dur[a:a + LINE] = vol[a:a + LINE]
+            if drained is not None:
+                drained.append((iline, 1))
             self._epochs = [[]]
             c = self.counters
             c["pwb"] += n_lines + n_pending + 1
             c["pfence"] += 1
             c["psync"] += 1
+        if clock is not None:
+            # Exact discrete sequence: persist_lines(pending);
+            # pwb(StateRec); pfence; pwb(&MIndex); psync — same advance
+            # granularity, same drained multiset (duplicates included),
+            # so the charged floats are bit-identical to the fallback's.
+            prof = clock.profile
+            if n_pending:
+                clock.advance(n_pending * prof.pwb_ns)
+            clock.advance(n_lines * prof.pwb_ns)
+            clock.advance(prof.pfence_ns)
+            clock.advance(1 * prof.pwb_ns)
+            clock.sync_device(self._drain_cost_ns(drained))
 
     # One write-back engine per DIMM: concurrent psyncs serialize on the
     # device (an infinite-bandwidth model would let per-op-persist
@@ -324,6 +528,33 @@ class NVM:
     _device_lock = threading.Lock()
     SEEK_COST = 4e-6     # per discontiguous run of lines (P3 visible!)
     STREAM_COST = 5e-7   # per line within a contiguous run
+
+    @staticmethod
+    def _run_stats(drained: List[Tuple[int, int]]) -> Tuple[int, int]:
+        """(discontiguous runs, total lines) over drained (first, n)
+        entries.  Lines drained more than once (queued in several
+        epochs) count each time — they cost device writes each time.
+        Contiguous layouts (persistence principle P3) drain in few runs,
+        scattered ones pay a seek per run."""
+        drained = sorted(drained)
+        runs, prev_end, total_lines = 0, None, 0
+        for first, n_lines in drained:
+            if prev_end is None or first > prev_end + 1:
+                runs += 1
+            end = first + n_lines - 1
+            prev_end = end if prev_end is None else max(prev_end, end)
+            total_lines += n_lines
+        return runs, total_lines
+
+    def _drain_cost_ns(self, drained: List[Tuple[int, int]]) -> float:
+        """Modeled cost of one psync draining ``drained``: fixed device
+        round trip + seek per discontiguous run + stream per line."""
+        prof = self.clock.profile
+        if not drained:
+            return prof.psync_ns
+        runs, total_lines = self._run_stats(drained)
+        return (prof.psync_ns + runs * prof.seek_ns
+                + total_lines * prof.line_ns)
 
     def psync(self) -> None:
         drained: List[Tuple[int, int]] = []
@@ -336,18 +567,13 @@ class NVM:
                         dur[first * LINE:first * LINE + len(snap)] = snap
                         drained.append((first, n_lines))
                 self._epochs = [[]]
+        if self.clock is not None and not self.psync_nop:
+            self.clock.sync_device(self._drain_cost_ns(drained))
         if drained and self.persist_latency:
-            # cost model: fixed sync latency + seek per discontiguous run
-            # + stream per line — contiguous layouts (persistence
-            # principle P3) drain in few runs, scattered ones pay seeks.
-            drained.sort()
-            runs, prev_end, total_lines = 0, None, 0
-            for first, n_lines in drained:
-                if prev_end is None or first > prev_end + 1:
-                    runs += 1
-                end = first + n_lines - 1
-                prev_end = end if prev_end is None else max(prev_end, end)
-                total_lines += n_lines
+            # wall-clock cost model (sleep): same shape as the virtual
+            # one, bounded below by host sleep granularity (~250us here,
+            # the distortion the virtual clock exists to remove).
+            runs, total_lines = self._run_stats(drained)
             cost = (self.persist_latency + runs * self.SEEK_COST
                     + total_lines * self.STREAM_COST)
             with NVM._device_lock:
@@ -414,6 +640,11 @@ class NVM:
     def pending_lines(self) -> int:
         with self._lock:
             return sum(n for e in self._epochs for _first, n, _snap in e)
+
+    def modeled_time_us(self) -> float:
+        """Virtual-clock makespan in microseconds (0.0 when no profile
+        is engaged): max over per-thread logical clocks."""
+        return self.clock.max_time_ns() / 1e3 if self.clock else 0.0
 
     def reset_counters(self) -> None:
         for k in self.counters:

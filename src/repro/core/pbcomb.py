@@ -45,6 +45,10 @@ class RequestRec:
     args: Any = None
     activate: int = 0
     valid: int = 0
+    # Virtual-clock announce timestamp (ns): a combiner adopting this
+    # request merges it Lamport-style, so a round's modeled latency is
+    # the max over its participants (unused when no profile is engaged).
+    vtime: float = 0.0
 
 
 class PBComb:
@@ -85,7 +89,14 @@ class PBComb:
         nvm.reset_counters()
         # --- shared volatile variables -------------------------------- #
         self.request: List[RequestRec] = [RequestRec() for _ in range(n_threads)]
-        self.lock = AtomicInt(0, shared=True, counters=counters)
+        self._clock = nvm.clock
+        # Virtual time at which the last committed round's psync landed;
+        # waiters picking up a response merge it (Lamport hand-off).  A
+        # later round may overwrite it before a slow waiter reads it —
+        # merge is a max, so that only ever charges the waiter MORE.
+        self._round_end_vt = 0.0
+        self.lock = AtomicInt(0, shared=True, counters=counters,
+                              clock=nvm.clock)
         self.lockval = 0  # written only by the combiner, read by waiters
         # Combiner election (the line 8 CAS) as a non-blocking mutex
         # try-acquire: same atomicity, one C call instead of a guarded
@@ -124,6 +135,9 @@ class PBComb:
         req.func = func
         req.args = args
         req.activate = 1 - req.activate
+        clk = self._clock
+        if clk is not None:
+            req.vtime = clk.now()
         req.valid = 1
         if self.park_enabled and self._rng.random() < self.ANNOUNCE_PARK_PROB:
             time.sleep(self.ANNOUNCE_PARK_SECONDS)
@@ -134,6 +148,8 @@ class PBComb:
             if self.lock.load() % 2 == 0:
                 mindex = nvm.read(self.mindex_addr)
                 if req.activate == nvm.read(self._deact_addr(mindex, p)):
+                    if clk is not None:
+                        clk.merge(self._round_end_vt)
                     return nvm.read(self._retval_addr(mindex, p))
         return self._perform_request(p)
 
@@ -158,7 +174,8 @@ class PBComb:
         next operation arrives through the normal ``op`` path — not
         ``recover`` — still flips to a fresh parity."""
         self.request = [RequestRec() for _ in range(self.n)]
-        self.lock = AtomicInt(0, shared=True, counters=self._counters)
+        self.lock = AtomicInt(0, shared=True, counters=self._counters,
+                              clock=self.nvm.clock)
         self.lockval = 0
         self._elect = threading.Lock()   # may have been held at the crash
         for p in range(self.n):
@@ -192,12 +209,15 @@ class PBComb:
     # ---------------- Algorithm 2 ------------------------------------- #
     def _perform_request(self, p: int) -> Any:
         nvm = self.nvm
+        clk = self._clock
         while True:
             lval = self.lock.load()                          # line 6
             if lval % 2 == 0:                                # line 7
                 if self._elect.acquire(False):               # line 8 (CAS)
                     if self._counters is not None:
                         self._counters.cas_calls += 1
+                    if clk is not None:
+                        clk.advance(clk.profile.cas_ns)
                     # while _elect is held nobody else stores the lock,
                     # and its last writer left it even — re-read in case
                     # a whole round completed since the line 6 load
@@ -206,6 +226,8 @@ class PBComb:
                     break                                    # p is combiner
                 if self._counters is not None:
                     self._counters.cas_calls += 1
+                if clk is not None:
+                    clk.advance(clk.profile.cas_ns)
                 lval += 1                                    # line 9
             self._wait_while(lval)                           # line 10
             mindex = self._mindex()
@@ -213,6 +235,10 @@ class PBComb:
                 if self.lockval != lval:                     # line 12
                     # Served by an in-flight round: wait for its psync.
                     self._wait_while(lval + 2)
+                if clk is not None:
+                    # Lamport hand-off: the waiter's clock jumps to the
+                    # serving round's commit time (max, not sum).
+                    clk.merge(self._round_end_vt)
                 return nvm.read(self._retval_addr(self._mindex(), p))  # line 13
         return self._combine(p, lval + 1)
 
@@ -225,6 +251,9 @@ class PBComb:
         line 24 read and line 28 increment are plain arithmetic."""
         nvm = self.nvm
         wr = nvm.write
+        clk = self._clock
+        if clk is not None:
+            clk.advance(clk.profile.round_ns)   # round fusion bookkeeping
         mindex = nvm.read(self.mindex_addr)
         ind = 1 - mindex                                     # line 14
         base = self.mem_base[ind]
@@ -237,6 +266,8 @@ class PBComb:
         for q in range(self.n):                              # line 16
             req = request[q]
             if req.valid == 1 and req.activate != deacts[q]:  # line 17
+                if clk is not None:
+                    clk.merge(req.vtime)   # Lamport receive of q's announce
                 ret = self._apply(q, req.func, req.args, ind, p)       # lines 18-19
                 wr(retval_base + q, ret)                               # line 20
                 wr(deact_base + q, req.activate)                       # line 21
@@ -246,6 +277,8 @@ class PBComb:
         # durable effect, and crash-tick behavior — see NVM.commit_round)
         nvm.commit_round(base, self.rec_words, self.mindex_addr, ind,
                          pending=pending)
+        if clk is not None:
+            self._round_end_vt = clk.now()   # published before the unlock
         self._pre_unlock(ind, p)
         self.lock.store(lock_val + 1)                        # line 28
         self._elect.release()

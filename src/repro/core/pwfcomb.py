@@ -60,6 +60,7 @@ class _SRef:
         self._value = (value, 0)
         self._mutex = threading.Lock()
         self._counters = counters
+        self._clock = nvm.clock
         nvm.write(addr, value)
 
     def ll(self):
@@ -74,6 +75,8 @@ class _SRef:
         with self._mutex:
             if self._counters:
                 self._counters.cas_calls += 1
+            if self._clock is not None:
+                self._clock.advance(self._clock.profile.cas_ns)
             if self._value[1] == version:
                 self._value = (new_value, version + 1)
                 self.nvm.write(self.addr, new_value)
@@ -116,6 +119,10 @@ class PWFComb:
         nvm.reset_counters()
         # --- shared volatile ------------------------------------------ #
         self.request: List[RequestRec] = [RequestRec() for _ in range(n_threads)]
+        self._clock = nvm.clock
+        # Virtual time of the last durable publication (pwb(S)+psync);
+        # served threads merge it on pickup — see PBComb._round_end_vt.
+        self._round_end_vt = 0.0
         self.flush: List[int] = [0] * (n_threads + 1)
         self.comb_round = [[0] * n_threads for _ in range(n_threads + 1)]
         self._rng = random.Random(0xC0FFEE)
@@ -162,6 +169,8 @@ class PWFComb:
         req.func = func
         req.args = args
         req.activate = 1 - req.activate
+        if self._clock is not None:
+            req.vtime = self._clock.now()
         req.valid = 1
         # line 2 (backoff): a small random fraction of ops parks after
         # announcing so a concurrent pretend-combiner adopts the request
@@ -224,11 +233,14 @@ class PWFComb:
             nvm.pwb_sync(self.s_addr, 1)
             if lval == self.comb_round[s_pid][p]:
                 self._cas_flush(s_pid, lval, lval + 1)
+        if self._clock is not None:
+            self._clock.merge(self._round_end_vt)   # Lamport hand-off
         return True, rd(self._retval_addr(self.S.load(), p))
 
     def _perform_request(self, p: int) -> Any:
         nvm = self.nvm
         rd, wr = nvm.read, nvm.write
+        clk = self._clock
         my_slots = (self._slot_id(p, 0), self._slot_id(p, 1))
         sw, n = self.state_words, self.n
         for _attempt in range(2):                                # line 5
@@ -254,6 +266,8 @@ class PWFComb:
             for q in range(n):                                   # line 19
                 req = request[q]
                 if req.valid == 1 and req.activate != deacts[q]:  # line 20
+                    if clk is not None:
+                        clk.merge(req.vtime)   # Lamport receive (announce)
                     ret = self._apply(q, req.func, req.args, dst, p)    # lines 21-22
                     wr(retval_base + q, ret)                            # line 23
                     wr(deact_base + q, req.activate)                    # line 24
@@ -268,6 +282,9 @@ class PWFComb:
                 if self.S.sc(ver, dst):                          # line 31
                     nvm.pwb_sync(self.s_addr, 1)                 # lines 32-33
                     self._cas_flush(p, lval, lval + 1)           # line 34
+                    if clk is not None:
+                        clk.advance(clk.profile.round_ns)
+                        self._round_end_vt = clk.now()
                     # Hook runs after S is durable: safe point to recycle
                     # nodes the published round removed.
                     self._on_publish_success(dst, p)
@@ -282,6 +299,8 @@ class PWFComb:
             nvm.pwb_sync(self.s_addr, 1)                         # lines 44-46
             if lval == self.comb_round[s_pid][p]:
                 self._cas_flush(s_pid, lval, lval + 1)           # line 48
+        if clk is not None:
+            clk.merge(self._round_end_vt)                # Lamport hand-off
         return nvm.read(self._retval_addr(self.S.load(), p))     # line 50
 
     # ---------------- helpers ------------------------------------------ #

@@ -48,10 +48,18 @@ class LockDirectObject:
         nvm.psync()
         nvm.reset_counters()
         self._lock = threading.Lock()
+        # Virtual-clock release time of the last critical section: the
+        # next holder merges it, so modeled time reflects the full
+        # serialization a coarse lock imposes (no amortization).
+        self._lock_vt = 0.0
 
     def op(self, p: int, func: str, args: Any, seq: int) -> Any:
         nvm = self.nvm
         with self._lock:
+            clk = nvm.clock
+            if clk is not None:
+                clk.advance(clk.profile.cas_ns)      # lock acquire
+                clk.merge(self._lock_vt)             # serialized entry
             # persist only the touched lines when the object can name
             # them (the baselines' real scattered-persist cost shape);
             # small objects without a plan persist their whole state
@@ -65,6 +73,8 @@ class LockDirectObject:
                 nvm.persist_lines((base + off, n) for off, n in ranges)
             nvm.pfence()
             nvm.psync()
+            if clk is not None:
+                self._lock_vt = clk.now()
             return ret
 
     def reset_volatile(self) -> None:
@@ -92,10 +102,15 @@ class LockUndoLogObject:
         nvm.psync()
         nvm.reset_counters()
         self._lock = threading.Lock()
+        self._lock_vt = 0.0   # see LockDirectObject
 
     def op(self, p: int, func: str, args: Any, seq: int) -> Any:
         nvm = self.nvm
         with self._lock:
+            clk = nvm.clock
+            if clk is not None:
+                clk.advance(clk.profile.cas_ns)
+                clk.merge(self._lock_vt)
             plan = getattr(self.obj, "touch_plan", None)
             ranges = plan(nvm, self.st_base, func, args) if plan else None
             # 1. persist undo record: word-granular entries for the
@@ -138,6 +153,8 @@ class LockUndoLogObject:
             nvm.write(self.log_base + self.obj.state_words, 0)
             nvm.pwb(self.log_base + self.obj.state_words, 1)
             nvm.psync()
+            if clk is not None:
+                self._lock_vt = clk.now()
             return ret
 
     def reset_volatile(self) -> None:
@@ -198,8 +215,8 @@ class DurableMSQueue:
         nvm.pwb(self.tail_addr, 1)
         nvm.psync()
         nvm.reset_counters()
-        self.head = AtomicRef(dummy, shared=True)
-        self.tail = AtomicRef(dummy, shared=True)
+        self.head = AtomicRef(dummy, shared=True, clock=nvm.clock)
+        self.tail = AtomicRef(dummy, shared=True, clock=nvm.clock)
         self._link_mutex = threading.Lock()
 
     def enqueue(self, p: int, value: Any, seq: int) -> Any:
@@ -220,6 +237,8 @@ class DurableMSQueue:
                 # can erase a concurrent enqueuer's successful link and
                 # knot the list into a cycle).
                 with self._link_mutex:
+                    if nvm.clock is not None:
+                        nvm.clock.advance(nvm.clock.profile.cas_ns)
                     linked = nvm.read(last + 1) == NULL
                     if linked:
                         nvm.write(last + 1, node)
@@ -270,8 +289,8 @@ class DurableMSQueue:
         nvm.write(self.tail_addr, tail)
         nvm.pwb(self.tail_addr, 1)
         nvm.psync()
-        self.head = AtomicRef(head, shared=True)
-        self.tail = AtomicRef(tail, shared=True)
+        self.head = AtomicRef(head, shared=True, clock=nvm.clock)
+        self.tail = AtomicRef(tail, shared=True, clock=nvm.clock)
 
     def recover(self, p: int, func: str, args: Any, seq: int) -> Any:
         """Not detectable (the FHMP-class queue has no announcement log):
@@ -303,7 +322,11 @@ class DFCStack:
         nvm.pwb(self.top_addr, 1)
         nvm.psync()
         nvm.reset_counters()
-        self.lock = AtomicInt(0, shared=True)
+        self.lock = AtomicInt(0, shared=True, clock=nvm.clock)
+        # Virtual-clock announce times + last round's commit time (the
+        # combiner merges announces, served threads merge the commit).
+        self._ann_vt = [0.0] * n_threads
+        self._round_end_vt = 0.0
 
     def op(self, p: int, func: str, args: Any, seq: int) -> Any:
         nvm = self.nvm
@@ -313,8 +336,22 @@ class DFCStack:
         nvm.write(a + 2, seq)
         nvm.pwb(a, 3)                       # persist own announcement
         nvm.pfence()
+        if nvm.clock is not None:
+            self._ann_vt[p] = nvm.clock.now()
+        return self.perform(p)
+
+    def perform(self, p: int) -> Any:
+        """Serve p's already-persisted announcement (spin / combine) —
+        never re-announces, so the announce/perform split pays exactly
+        one announcement persist per op."""
+        nvm = self.nvm
+        clk = nvm.clock
+        a = self.ann_base[p]
+        seq = nvm.read(a + 2)
         while True:
             if nvm.read(a + 4) == seq:      # served?
+                if clk is not None:
+                    clk.merge(self._round_end_vt)
                 return nvm.read(a + 3)
             lval = self.lock.load()
             if lval % 2 == 0 and self.lock.cas(lval, lval + 1):
@@ -326,10 +363,15 @@ class DFCStack:
 
     def _combine(self) -> None:
         nvm = self.nvm
+        clk = nvm.clock
+        if clk is not None:
+            clk.advance(clk.profile.round_ns)
         for q in range(self.n):
             a = self.ann_base[q]
             seq = nvm.read(a + 2)
             if seq and nvm.read(a + 4) != seq:
+                if clk is not None:
+                    clk.merge(self._ann_vt[q])
                 func, args = nvm.read(a), nvm.read(a + 1)
                 if func == "PUSH":
                     node = self.pool.alloc(q)
@@ -352,6 +394,8 @@ class DFCStack:
                 nvm.pwb(a + 3, 2)                   # persist response alone
                 nvm.pfence()
         nvm.psync()
+        if clk is not None:
+            self._round_end_vt = clk.now()
 
     def drain(self) -> List[Any]:
         out, addr = [], self.nvm.read(self.top_addr)
@@ -362,8 +406,10 @@ class DFCStack:
 
     def reset_volatile(self) -> None:
         """Post-crash: only the combiner lock is volatile — announcements,
-        responses and done-marks live in NVMM (DFC's design)."""
-        self.lock = AtomicInt(0, shared=True)
+        responses and done-marks live in NVMM (DFC's design).  The
+        virtual-clock timestamps survive (logical time is monotone
+        across crashes; stale merges only ever charge more)."""
+        self.lock = AtomicInt(0, shared=True, clock=self.nvm.clock)
 
     def recover(self, p: int, func: str, args: Any, seq: int) -> Any:
         """Done-mark fast path: if the persisted done-mark carries this

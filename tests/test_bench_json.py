@@ -1,14 +1,18 @@
 """Bench pipeline smoke test: the machine-readable JSON emitter.
 
 Runs the full benchmark suite at tiny (--quick) sizes and validates the
-``bench.v1`` contract every future PR's trajectory depends on:
+``bench.v2`` contract every future PR's trajectory (and the CI perf
+gate) depends on:
 
-  * every row parses with the documented keys and sane values;
+  * every row parses with the documented keys and sane values — the
+    wall-clock v1 columns plus the virtual-clock ``modeled_*`` columns
+    (null only for rows without a deterministic replay);
   * combining-protocol rows (pbcomb/pwfcomb) spend at most ~one psync
     per operation — a combining ROUND issues one coalesced persist +
-    one psync however many requests it serves, so per-op psyncs can
-    never exceed 1 + eps (they drop below 1 exactly when combining
-    happens).
+    one psync however many requests it serves (they drop below 1
+    exactly when combining happens);
+  * the fully modeled Figure 8 reproduces the paper's relative ordering
+    at Optane latencies: PBComb < DFC < durable-MS.
 """
 
 import json
@@ -18,6 +22,10 @@ import sys
 import pytest
 
 EPS = 0.05
+
+V1_KEYS = {"name", "us_per_op", "pwbs_per_op", "psyncs_per_op"}
+V2_KEYS = V1_KEYS | {"modeled_us_per_op", "modeled_pwbs_per_op",
+                     "modeled_psyncs_per_op", "profile"}
 
 
 @pytest.fixture(scope="module")
@@ -32,27 +40,45 @@ def bench_doc(tmp_path_factory):
 
 
 def test_schema(bench_doc):
-    assert bench_doc["schema"] == "bench.v1"
+    assert bench_doc["schema"] == "bench.v2"
     assert bench_doc["quick"] is True
+    assert bench_doc["profile"] == "optane"
     rows = bench_doc["rows"]
     assert rows, "bench emitted no rows"
     names = set()
     for r in rows:
-        assert set(r) == {"name", "us_per_op", "pwbs_per_op",
-                          "psyncs_per_op"}, r
+        assert set(r) == V2_KEYS, r
         assert isinstance(r["name"], str) and "/" in r["name"]
         assert r["name"] not in names, f"duplicate row {r['name']}"
         names.add(r["name"])
         assert r["us_per_op"] >= 0
         assert r["pwbs_per_op"] >= 0
         assert r["psyncs_per_op"] >= 0
+        # modeled columns: all present or all null, consistently
+        modeled = [r["modeled_us_per_op"], r["modeled_pwbs_per_op"],
+                   r["modeled_psyncs_per_op"], r["profile"]]
+        if r["profile"] is None:
+            assert modeled == [None] * 4, r
+        else:
+            assert r["profile"] == bench_doc["profile"]
+            assert all(isinstance(v, (int, float)) and v >= 0
+                       for v in modeled[:3]), r
 
 
 def test_covers_figures_and_framework(bench_doc):
     tables = {r["name"].split("/", 1)[0] for r in bench_doc["rows"]}
     assert {"fig1_atomicfloat", "fig3_no_psync", "fig4_queues",
             "fig6_queues_no_pwb", "fig7a_stacks", "fig7b_heap",
-            "matrix", "checkpoint", "serving"} <= tables
+            "fig8_modeled", "matrix", "checkpoint", "serving"} <= tables
+
+
+def test_most_rows_carry_modeled_columns(bench_doc):
+    """Every figure/matrix row has a deterministic modeled replay; only
+    the framework rows without one (checkpoint/serving) carry nulls."""
+    for r in bench_doc["rows"]:
+        table = r["name"].split("/", 1)[0]
+        if table.startswith("fig") or table == "matrix":
+            assert r["profile"] is not None, r
 
 
 def test_combining_rows_one_psync_per_round(bench_doc):
@@ -64,6 +90,10 @@ def test_combining_rows_one_psync_per_round(bench_doc):
     assert len(comb) >= 4          # queue+stack x pbcomb+pwfcomb
     for r in comb:
         assert r["psyncs_per_op"] <= 1 + EPS, r
+        # the modeled pass stages rounds of degree 4: exactly one psync
+        # per round -> 0.25/op on the pb side; pwf dequeues may add a
+        # helping psync, still O(1) per round
+        assert r["modeled_psyncs_per_op"] <= 1 + EPS, r
     # PB*/PWF* figure rows ride the same protocols — same bound, with
     # one protocol-inherent exception: PWFQueue's dequeue side HELPS
     # persist the enqueue publication (pwb(S_E)+psync) before adopting
@@ -77,3 +107,20 @@ def test_combining_rows_one_psync_per_round(bench_doc):
                             "fig7b_heap/", "fig1_atomicfloat/PB")):
             bound = 2 if name.startswith("fig4_queues/PWFQueue") else 1
             assert r["psyncs_per_op"] <= bound + EPS, r
+
+
+def test_fig8_reproduces_paper_ordering(bench_doc):
+    """Modeled us/op at Optane latencies orders the implementations the
+    way the paper's Figures 4-7 do: combining wins, DFC pays its
+    per-thread announcement/response persists, per-op-persist last."""
+    rows = {r["name"].split("/", 1)[1]: r for r in bench_doc["rows"]
+            if r["name"].startswith("fig8_modeled/")}
+    pb = rows["PBStack"]["modeled_us_per_op"]
+    dfc = rows["DFCStack (flat-combining)"]["modeled_us_per_op"]
+    ms = rows["DurableMSQueue (FHMP-shape)"]["modeled_us_per_op"]
+    pbq = rows["PBQueue"]["modeled_us_per_op"]
+    assert pb < dfc < ms
+    assert pbq < ms
+    # fig8 is fully modeled: wall columns mirror the modeled ones
+    for r in rows.values():
+        assert r["us_per_op"] == r["modeled_us_per_op"]

@@ -1,0 +1,142 @@
+"""The CI perf gate (benchmarks/perf_gate.py) and the atomic bench-JSON
+writer: the machinery that turns the deterministic modeled columns into
+a real regression gate.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks import perf_gate
+from benchmarks.run import _atomic_write_json
+
+
+def _row(name, m_us=1.0, m_pwb=1.0, m_psync=0.25, profile="optane"):
+    return {"name": name, "us_per_op": 42.0, "pwbs_per_op": 1.0,
+            "psyncs_per_op": 1.0, "modeled_us_per_op": m_us,
+            "modeled_pwbs_per_op": m_pwb, "modeled_psyncs_per_op": m_psync,
+            "profile": profile}
+
+
+def _doc(rows):
+    return {"schema": "bench.v2", "tag": "t", "quick": True,
+            "profile": "optane", "rows": rows}
+
+
+BASE = _doc([_row("matrix/queue/pbcomb"),
+             _row("matrix/stack/dfc", m_us=2.0, m_pwb=3.5, m_psync=0.25),
+             _row("checkpoint/naive", profile=None)])
+
+
+def test_gate_passes_on_identical_docs():
+    failures, warnings, table = perf_gate.compare(BASE, BASE)
+    assert failures == []
+    assert warnings == []
+    assert len(table) == 2 + 2          # header + separator + 2 gated rows
+
+
+def test_gate_fails_on_injected_psync_regression():
+    cur = json.loads(json.dumps(BASE))
+    cur["rows"][0]["modeled_psyncs_per_op"] += 1.0
+    failures, _w, _t = perf_gate.compare(BASE, cur)
+    assert len(failures) == 1
+    assert "psyncs/op regressed" in failures[0]
+
+
+def test_gate_zero_tolerance_on_pwb_counter():
+    cur = json.loads(json.dumps(BASE))
+    cur["rows"][1]["modeled_pwbs_per_op"] += 0.001    # any growth fails
+    failures, _w, _t = perf_gate.compare(BASE, cur)
+    assert len(failures) == 1 and "pwbs/op regressed" in failures[0]
+
+
+def test_counter_improvement_warns_but_passes():
+    cur = json.loads(json.dumps(BASE))
+    cur["rows"][0]["modeled_psyncs_per_op"] = 0.125
+    failures, warnings, _t = perf_gate.compare(BASE, cur)
+    assert failures == []
+    assert any("improved" in w for w in warnings)
+
+
+def test_modeled_us_tolerance_band():
+    cur = json.loads(json.dumps(BASE))
+    cur["rows"][0]["modeled_us_per_op"] = 1.05       # +5% < 10% tol
+    failures, _w, _t = perf_gate.compare(BASE, cur, modeled_us_tol=0.10)
+    assert failures == []
+    cur["rows"][0]["modeled_us_per_op"] = 1.25       # +25% > 10% tol
+    failures, _w, _t = perf_gate.compare(BASE, cur, modeled_us_tol=0.10)
+    assert len(failures) == 1 and "modeled_us_per_op regressed" in failures[0]
+
+
+def test_zero_baseline_does_not_mask_regressions():
+    base = _doc([_row("matrix/x", m_us=0.0)])       # rounds to 0.000
+    cur = _doc([_row("matrix/x", m_us=50.0)])
+    failures, _w, _t = perf_gate.compare(base, cur)
+    assert len(failures) == 1 and "modeled_us_per_op regressed" in failures[0]
+    same = _doc([_row("matrix/x", m_us=0.0)])
+    failures, _w, _t = perf_gate.compare(base, same)
+    assert failures == []
+
+
+def test_lost_row_fails_new_row_warns():
+    cur = json.loads(json.dumps(BASE))
+    dropped = cur["rows"].pop(0)
+    cur["rows"].append(_row("matrix/heap/pbcomb"))
+    failures, warnings, _t = perf_gate.compare(BASE, cur)
+    assert any(dropped["name"] in f and "missing" in f for f in failures)
+    assert any("matrix/heap/pbcomb" in w for w in warnings)
+
+
+def test_unmodeled_rows_are_not_gated():
+    cur = json.loads(json.dumps(BASE))
+    cur["rows"][2]["us_per_op"] = 9999.0       # wall drift on null-profile
+    failures, warnings, _t = perf_gate.compare(BASE, cur)
+    assert failures == [] and warnings == []
+
+
+def test_check_identical_detects_any_modeled_drift():
+    assert perf_gate.check_identical(BASE, BASE) == []
+    cur = json.loads(json.dumps(BASE))
+    cur["rows"][0]["modeled_us_per_op"] += 1e-3
+    bad = perf_gate.check_identical(BASE, cur)
+    assert len(bad) == 1 and "modeled_us_per_op" in bad[0]
+
+
+def test_main_exit_codes_and_summary(tmp_path):
+    base_p = tmp_path / "base.json"
+    cur_p = tmp_path / "cur.json"
+    summary = tmp_path / "summary.md"
+    base_p.write_text(json.dumps(BASE))
+    cur = json.loads(json.dumps(BASE))
+    cur_p.write_text(json.dumps(cur))
+    assert perf_gate.main([str(base_p), str(cur_p),
+                           "--summary", str(summary)]) == 0
+    assert "Perf gate" in summary.read_text()
+    cur["rows"][0]["modeled_psyncs_per_op"] += 1.0   # injected regression
+    cur_p.write_text(json.dumps(cur))
+    assert perf_gate.main([str(base_p), str(cur_p)]) == 1
+    # determinism mode
+    assert perf_gate.main(["--identical", str(base_p), str(base_p)]) == 0
+    assert perf_gate.main(["--identical", str(base_p), str(cur_p)]) == 1
+
+
+# ------------------------------------------------------------------ #
+# Atomic --json writes (crash mid-suite must not clobber results)    #
+# ------------------------------------------------------------------ #
+def test_atomic_write_json_round_trip(tmp_path):
+    p = tmp_path / "BENCH_x.json"
+    _atomic_write_json(str(p), {"ok": 1})
+    assert json.loads(p.read_text()) == {"ok": 1}
+
+
+def test_atomic_write_preserves_existing_on_failure(tmp_path):
+    p = tmp_path / "BENCH_x.json"
+    p.write_text('{"good": true}')
+    with pytest.raises(TypeError):
+        _atomic_write_json(str(p), {"bad": object()})   # unserializable
+    assert json.loads(p.read_text()) == {"good": True}  # intact
+    assert list(tmp_path.iterdir()) == [p]              # no temp litter
