@@ -8,7 +8,10 @@ counters from the simulated NVMM, and averaged runs.
 
 from __future__ import annotations
 
+import json
+import os
 import random
+import tempfile
 import threading
 import time
 from typing import Any, Callable, Dict, List
@@ -87,3 +90,22 @@ def csv_rows(rows: List[Dict[str, Any]], table: str) -> List[str]:
     return [f"{table}/{r['name']},{r['us_per_op']:.2f},"
             f"pwb/op={r['pwb_per_op']:.2f};psync/op={r['psync_per_op']:.2f}"
             for r in rows]
+
+
+def atomic_write_json(path: str, doc: Any) -> None:
+    """Serialize fully into a sibling temp file, then rename over the
+    target: a crash mid-write (or an unserializable doc) can never
+    clobber a previous good result file with a truncated one."""
+    d = os.path.dirname(os.path.abspath(path)) or "."
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=".bench-", suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(doc, f, indent=1)
+            f.write("\n")
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise

@@ -20,6 +20,7 @@ from typing import Any, Dict, List
 import numpy as np
 
 from repro.api import CombiningRuntime, entries
+from repro.core import merge_degree_stats
 from repro.persist.sharded import (NaiveShardedCheckpointer,
                                    ShardedCheckpointer)
 from repro.persist.store import MemStore
@@ -44,6 +45,7 @@ def structure_matrix_bench(kinds=("queue", "stack"), n_threads: int = 4,
         for k, proto in entries(kind):
             total = 2 * n_threads * ops_per_thread
             times, pwbs, pfences, psyncs = [], [], [], []
+            degree_snaps = []
             for _run in range(runs):
                 rt = CombiningRuntime(n_threads=n_threads)
                 obj = rt.make(kind, proto)
@@ -72,14 +74,22 @@ def structure_matrix_bench(kinds=("queue", "stack"), n_threads: int = 4,
                 pwbs.append(c["pwb"])
                 pfences.append(c["pfence"])
                 psyncs.append(c["psync"])
+                degree_snaps.append(obj.adapter.degree_stats(obj.core))
+            degree = merge_degree_stats(degree_snaps)
             el = sorted(times)[runs // 2]
-            out.append({"name": f"{kind}/{proto}",
-                        "us_per_op": el / total * 1e6,
-                        "ops_per_s": total / el,
-                        "pwb_per_op": sum(pwbs) / runs / total,
-                        "pfence_per_op": sum(pfences) / runs / total,
-                        "psync_per_op": sum(psyncs) / runs / total,
-                        **modeled.modeled_cell(kind, proto)})
+            row = {"name": f"{kind}/{proto}",
+                   "us_per_op": el / total * 1e6,
+                   "ops_per_s": total / el,
+                   "pwb_per_op": sum(pwbs) / runs / total,
+                   "pfence_per_op": sum(pfences) / runs / total,
+                   "psync_per_op": sum(psyncs) / runs / total,
+                   **modeled.modeled_cell(kind, proto)}
+            if degree is not None and degree["rounds"]:
+                # measured combining degree (GIL pins wall runs near 1;
+                # mp_bench is where paper-scale degrees are measured)
+                row["degree_mean"] = degree["degree_mean"]
+                row["degree_max"] = degree["degree_max"]
+            out.append(row)
     return out
 
 

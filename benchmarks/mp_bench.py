@@ -1,0 +1,253 @@
+"""Multiprocess measured-degree benchmark: the structure matrix driven
+by fork()ed worker processes against the shared-memory backend.
+
+This is the measured counterpart of the modeled degree-4 staging: every
+(kind, protocol) registry cell runs the add/remove-pairs workload under
+2/4/8 true-parallel workers (``CombiningRuntime(backend="shm")`` +
+``spawn_workers``), recording wall us/op, pwbs/psyncs per op from the
+machine-wide shared counters, and the MEASURED combining degree
+(requests served per round) that CPython's GIL pins near 1 for the
+thread benches.  The deterministic modeled columns ride along per cell
+(same virtual-clock pass the perf gate diffs), so one row shows both
+sides of the reproduction.
+
+Run:  PYTHONPATH=src python -m benchmarks.mp_bench
+          [--quick] [--workers 2,4,8] [--json BENCH_mp.json] [--check]
+          [--park PROB:SECONDS] [--thread-probe]
+
+``--check`` enforces the paper's amortization measurably (the mp-smoke
+CI gate): with 4 workers queue/pbcomb must combine at degree_mean >= 2
+and every combining row's wall psync/op must be strictly below every
+per-op-persist baseline row's (lock-direct / lock-undo / durable-ms).
+
+``--thread-probe`` instead runs the same workload on the THREAD backend
+and prints its measured degree — the 3.13t CI scout uses it to detect
+when free-threaded CPython starts lifting the GIL ceiling without any
+fork machinery.
+
+JSON schema (``bench.mp.v1``)::
+
+    {"schema": "bench.mp.v1", "tag": str, "quick": bool,
+     "workers": [2, 4, 8], "park": [prob, seconds],
+     "rows": [{"name": "<kind>/<proto>", "workers": int,
+               "us_per_op": float, "pwbs_per_op": float,
+               "psyncs_per_op": float, "rounds": int|null,
+               "degree_mean": float|null, "degree_max": int|null,
+               "modeled_us_per_op": float|null,
+               "modeled_pwbs_per_op": float|null,
+               "modeled_psyncs_per_op": float|null,
+               "profile": str|null}, ...]}
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import threading
+
+sys.path.insert(0, "src")                      # repo-root invocation
+
+from repro.api import CombiningRuntime, entries
+
+from benchmarks import modeled
+from benchmarks.common import atomic_write_json
+
+#: per-op-persist competitors the --check gate compares psync/op against
+PER_OP_PERSIST = {"lock-direct", "lock-undo", "durable-ms"}
+COMBINING = {"pbcomb", "pwfcomb"}
+
+KINDS = ("queue", "stack")
+
+
+def bench_cell(kind: str, protocol: str, workers: int, pairs: int,
+               warmup: int = 20) -> dict:
+    """One matrix cell under ``workers`` processes; ``pairs``
+    add/remove pairs per worker in the measured window."""
+    rt = CombiningRuntime(n_threads=workers, backend="shm")
+    try:
+        obj = rt.make(kind, protocol)
+        with rt.spawn_workers(workers) as pool:
+            pool.run_pairs(obj, warmup)        # chunk allocs, caches
+            rt.nvm.reset_counters()
+            obj.adapter.reset_degree_stats(obj.core)
+            res = pool.run_pairs(obj, pairs)
+            c = rt.nvm.counters
+            pwb, psync = c["pwb"], c["psync"]
+            degree = obj.adapter.degree_stats(obj.core)
+        ops = res.ops_done
+        row = {"name": f"{kind}/{protocol}", "workers": workers,
+               "us_per_op": res.wall_s / ops * 1e6,
+               "pwbs_per_op": pwb / ops,
+               "psyncs_per_op": psync / ops,
+               "rounds": None, "degree_mean": None, "degree_max": None}
+        if degree is not None and degree["rounds"]:
+            row["rounds"] = degree["rounds"]
+            row["degree_mean"] = degree["ops_combined"] / degree["rounds"]
+            row["degree_max"] = degree["degree_max"]
+        return row
+    finally:
+        rt.close()
+
+
+def thread_probe(workers: int = 4, pairs: int = 200) -> dict:
+    """The same pairs workload on the THREAD backend (one process,
+    ``workers`` OS threads): measured degree under whatever parallelism
+    the interpreter gives us.  Under the GIL this sits near 1; on
+    free-threaded builds it should approach the mp numbers — the 3.13t
+    scout leg publishes it to the job summary."""
+    rt = CombiningRuntime(n_threads=workers)
+    obj = rt.make("queue", "pbcomb")
+    barrier = threading.Barrier(workers)
+
+    def worker(p):
+        b = rt.attach(p).bind(obj)
+        barrier.wait()
+        for i in range(pairs):
+            b.enqueue(p * 1_000_000 + i)
+            b.dequeue()
+
+    ts = [threading.Thread(target=worker, args=(p,))
+          for p in range(workers)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    d = obj.adapter.degree_stats(obj.core)
+    gil = getattr(sys, "_is_gil_enabled", lambda: True)()
+    return {"workers": workers, "gil_enabled": gil,
+            "degree_mean": d["ops_combined"] / max(1, d["rounds"]),
+            "degree_max": d["degree_max"],
+            "psyncs_per_op": rt.nvm.counters["psync"]
+            / (2 * workers * pairs)}
+
+
+def check_rows(rows, workers: int = 4) -> list:
+    """The mp-smoke acceptance gate; returns failure strings."""
+    failures = []
+    at_w = {r["name"]: r for r in rows if r["workers"] == workers}
+    qpb = at_w.get("queue/pbcomb")
+    if qpb is None:
+        return [f"no queue/pbcomb row at {workers} workers"]
+    if (qpb["degree_mean"] or 0) < 2.0:
+        failures.append(
+            f"queue/pbcomb@{workers}w measured degree_mean "
+            f"{qpb['degree_mean'] or 0.0:.2f} < 2.0 — true-parallel "
+            "combining is not happening")
+    for kind in KINDS:
+        baselines = [r for n, r in at_w.items()
+                     if n.startswith(f"{kind}/")
+                     and n.split("/")[1] in PER_OP_PERSIST]
+        floor = min((r["psyncs_per_op"] for r in baselines), default=None)
+        if floor is None:
+            continue
+        for n, r in at_w.items():
+            if (n.startswith(f"{kind}/")
+                    and n.split("/")[1] in COMBINING
+                    and r["psyncs_per_op"] >= floor):
+                failures.append(
+                    f"{n}@{workers}w psync/op {r['psyncs_per_op']:.3f} "
+                    f"not strictly below the per-op-persist floor "
+                    f"{floor:.3f} — amortization not measured")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Measured-degree multiprocess bench (shm backend)")
+    ap.add_argument("--quick", action="store_true",
+                    help="small sizes + 4-worker column only (CI)")
+    ap.add_argument("--workers", default=None,
+                    help="comma list of worker counts "
+                         "(default: 4 quick, 2,4,8 full)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write bench.mp.v1 results here")
+    ap.add_argument("--tag", default="mp")
+    ap.add_argument("--check", action="store_true",
+                    help="fail unless the 4-worker column shows "
+                         "degree>=2 on queue/pbcomb and comb psync/op "
+                         "below every per-op-persist baseline")
+    ap.add_argument("--park", default=None, metavar="PROB:SECONDS",
+                    help="override the shm entry backoff "
+                         "(e.g. 0.5:5e-5)")
+    ap.add_argument("--thread-probe", action="store_true",
+                    help="measure threaded (non-mp) degree instead "
+                         "and exit (3.13t scout)")
+    args = ap.parse_args(argv)
+
+    if args.thread_probe:
+        p = thread_probe()
+        print(f"thread-probe: workers={p['workers']} "
+              f"gil_enabled={p['gil_enabled']} "
+              f"degree_mean={p['degree_mean']:.2f} "
+              f"degree_max={p['degree_max']} "
+              f"psyncs/op={p['psyncs_per_op']:.3f}")
+        return 0
+
+    from repro.core.shm import ShmBackend
+    if args.park:
+        prob, secs = args.park.split(":")
+        ShmBackend.PARK_PROB = float(prob)
+        ShmBackend.PARK_SECONDS = float(secs)
+    park = [ShmBackend.PARK_PROB, ShmBackend.PARK_SECONDS]
+
+    if args.workers:
+        workers = [int(w) for w in args.workers.split(",")]
+    else:
+        workers = [4] if args.quick else [2, 4, 8]
+    pairs = 80 if args.quick else 300
+
+    rows = []
+    hdr = (f"{'cell':22s} {'w':>2s} {'us/op':>8s} {'pwb/op':>7s} "
+           f"{'psync/op':>8s} {'degree':>7s} {'max':>4s}")
+    print(f"## measured-degree matrix (shm backend, park={park})")
+    print(hdr)
+    for w in workers:
+        for kind in KINDS:
+            for _k, proto in entries(kind):
+                row = bench_cell(kind, proto, w, pairs)
+                rows.append(row)
+                d = ("-" if row["degree_mean"] is None
+                     else f"{row['degree_mean']:.2f}")
+                m = ("-" if row["degree_max"] is None
+                     else str(row["degree_max"]))
+                print(f"{row['name']:22s} {w:2d} "
+                      f"{row['us_per_op']:8.1f} {row['pwbs_per_op']:7.2f} "
+                      f"{row['psyncs_per_op']:8.3f} {d:>7s} {m:>4s}")
+
+    # deterministic modeled columns alongside (cached per cell)
+    cells = {}
+    for row in rows:
+        kind, proto = row["name"].split("/")
+        if (kind, proto) not in cells:
+            cells[(kind, proto)] = modeled.modeled_cell(kind, proto)
+        cell = cells[(kind, proto)]
+        row["modeled_us_per_op"] = round(cell["modeled_us_per_op"], 3)
+        row["modeled_pwbs_per_op"] = round(cell["modeled_pwb_per_op"], 3)
+        row["modeled_psyncs_per_op"] = round(cell["modeled_psync_per_op"], 3)
+        row["profile"] = cell["profile"]
+        row["us_per_op"] = round(row["us_per_op"], 3)
+        row["pwbs_per_op"] = round(row["pwbs_per_op"], 3)
+        row["psyncs_per_op"] = round(row["psyncs_per_op"], 3)
+        if row["degree_mean"] is not None:
+            row["degree_mean"] = round(row["degree_mean"], 3)
+
+    if args.json:
+        doc = {"schema": "bench.mp.v1", "tag": args.tag,
+               "quick": args.quick, "workers": workers, "park": park,
+               "rows": rows}
+        atomic_write_json(args.json, doc)
+        print(f"(wrote {len(rows)} rows to {args.json})")
+
+    if args.check:
+        failures = check_rows(rows, workers=4 if 4 in workers
+                              else workers[-1])
+        for msg in failures:
+            print(f"FAIL: {msg}")
+        if failures:
+            return 1
+        print("mp degree/amortization checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,7 +17,9 @@ JSON schema (``bench.v2``, superset of v1)::
                "modeled_us_per_op": float|null,     # virtual clock —
                "modeled_pwbs_per_op": float|null,   # deterministic,
                "modeled_psyncs_per_op": float|null, # byte-identical
-               "profile": "optane"|null}, ...]}     # across runs
+               "profile": "optane"|null,            # across runs
+               "degree_mean": float|null,   # measured combining degree
+               "degree_max": int|null}, ...]}       # (never gated)
 
 The ``modeled_*`` columns come from the fixed-schedule virtual-clock
 pass (benchmarks/modeled.py): byte-identical across runs and hosts,
@@ -37,10 +39,7 @@ op — one psync per combining ROUND.
 from __future__ import annotations
 
 import argparse
-import json
-import os
 import sys
-import tempfile
 
 sys.path.insert(0, "src")                      # repo-root invocation
 
@@ -48,7 +47,7 @@ from repro.core import PROFILES
 
 from benchmarks import framework_benches, modeled, paper_figures, \
     roofline_report
-from benchmarks.common import csv_rows, print_rows
+from benchmarks.common import atomic_write_json, csv_rows, print_rows
 
 
 def collect(quick: bool = False):
@@ -86,7 +85,13 @@ def collect(quick: bool = False):
              "modeled_psyncs_per_op":
                  None if "modeled_psync_per_op" not in r
                  else round(r["modeled_psync_per_op"], 3),
-             "profile": r.get("profile")}
+             "profile": r.get("profile"),
+             # measured combining degree (combining protocols only;
+             # host-noisy like the wall columns — never gated)
+             "degree_mean":
+                 None if "degree_mean" not in r
+                 else round(r["degree_mean"], 3),
+             "degree_max": r.get("degree_max")}
             for r in rows)
 
     add("fig1_atomicfloat",
@@ -128,23 +133,10 @@ def collect(quick: bool = False):
     return csv, json_rows
 
 
-def _atomic_write_json(path: str, doc) -> None:
-    """Serialize fully into a sibling temp file, then rename over the
-    target: a crash mid-write (or an unserializable doc) can never
-    clobber a previous good result file with a truncated one."""
-    d = os.path.dirname(os.path.abspath(path)) or "."
-    fd, tmp = tempfile.mkstemp(dir=d, prefix=".bench-", suffix=".tmp")
-    try:
-        with os.fdopen(fd, "w") as f:
-            json.dump(doc, f, indent=1)
-            f.write("\n")
-        os.replace(tmp, path)
-    except BaseException:
-        try:
-            os.unlink(tmp)
-        except OSError:
-            pass
-        raise
+# moved to benchmarks.common so the lean mp_bench entry point shares it
+# without importing this module's bench dependencies; the old name
+# stays importable (tests pin the atomic-write contract through it)
+_atomic_write_json = atomic_write_json
 
 
 def main(argv=None) -> None:

@@ -24,13 +24,15 @@ from .adapters import OpSpec, StructureAdapter
 from .board import AnnounceBoard, Announcement
 from .handle import (Bound, BoundCounter, BoundHeap, BoundQueue,
                      BoundStack, Handle)
+from .mp import PoolResult, WorkerPool, WorkerReport
 from .registry import entries, get_adapter, kinds, protocols_for
 from .runtime import CombiningRuntime, RecoverableObject, make_recoverable
 
 __all__ = [
     "AnnounceBoard", "Announcement",
     "Bound", "BoundCounter", "BoundHeap", "BoundQueue", "BoundStack",
-    "CombiningRuntime", "Handle", "OpSpec", "RecoverableObject",
-    "StructureAdapter", "entries", "get_adapter", "kinds",
+    "CombiningRuntime", "Handle", "OpSpec", "PoolResult",
+    "RecoverableObject", "StructureAdapter", "WorkerPool",
+    "WorkerReport", "entries", "get_adapter", "kinds",
     "make_recoverable", "protocols_for",
 ]

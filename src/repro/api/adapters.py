@@ -133,6 +133,18 @@ class StructureAdapter:
     def snapshot(self, core: Any) -> Any:
         raise NotImplementedError
 
+    # ---------------- measured-degree accounting ------------------------ #
+    def degree_stats(self, core: Any) -> Optional[dict]:
+        """Measured combining-degree counters (rounds / ops_combined /
+        degree_mean / degree_max) accumulated by the core since creation
+        (or the last ``reset_degree_stats``), or None for protocols that
+        do not combine (the per-op-persist baselines)."""
+        return None
+
+    def reset_degree_stats(self, core: Any) -> None:
+        """Zero the degree counters (benchmarks call this after their
+        warmup so degree_max reflects only the measured window)."""
+
 
 # --------------------------------------------------------------------- #
 # Combining-protocol adapters (PBComb / PWFComb families)               #
@@ -177,6 +189,21 @@ class _CombiningAdapter(StructureAdapter):
 
     def perform(self, core, p, op):
         return self._instance(core, op)._perform_request(p)
+
+    def _instances(self, core):
+        """The distinct combining instances behind this core (split
+        queues have two; everything else one)."""
+        return list({id(self._instance(core, op)): self._instance(core, op)
+                     for op in self.OPS}.values())
+
+    def degree_stats(self, core):
+        from ..core.backend import merge_degree_stats
+        return merge_degree_stats(
+            [inst.stats.snapshot() for inst in self._instances(core)])
+
+    def reset_degree_stats(self, core):
+        for inst in self._instances(core):
+            inst.stats.reset()
 
 
 def _pb_st(core: PBComb) -> int:
@@ -387,6 +414,13 @@ class DFCStackAdapter(_DirectOpAdapter):
 
     def perform(self, core, p, op):
         return core.perform(p)
+
+    def degree_stats(self, core):
+        from ..core.backend import merge_degree_stats
+        return merge_degree_stats([core.stats.snapshot()])
+
+    def reset_degree_stats(self, core):
+        core.stats.reset()
 
     def snapshot(self, core):
         return core.drain()

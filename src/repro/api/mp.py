@@ -1,0 +1,291 @@
+"""Worker-pool runner: per-process Handles driving the shared board.
+
+``CombiningRuntime.spawn_workers(n)`` forks ``n`` worker processes,
+each owning one logical thread id (a ``Handle``).  Everything the
+protocols share — NVM images, announcement boards, locks, degree
+counters — already lives in the runtime's shm backend, so the children
+inherit working views by fork; nothing structural crosses a pipe.
+
+Op dispatch is pickle-free: commands name objects and ops by STRING
+(plus primitive args), and each worker resolves them locally through
+``runtime.objects[name]`` + ``handle.invoker`` — i.e. through the same
+cached ``bind_op`` fast path the thread benches use.  Only primitive
+tuples travel over the queues.
+
+Crash protocol: a ``SimulatedCrash`` (armed countdown, or the shared
+``halted`` flag raised by a crash in another process) unwinds the
+worker's current command; the worker reports its in-flight records —
+``(obj_name, tid, op, args, seq)``, the paper's system-support
+contract — plus everything it completed, and waits for the next
+command.  The parent then calls ``runtime.recover(inflight=...)`` with
+the reported records and may keep using the same pool.
+
+Fork discipline: spawn AFTER every ``runtime.make`` call; objects
+created later would not exist in the children.
+"""
+
+from __future__ import annotations
+
+import multiprocessing
+import queue as queue_mod
+import threading
+import time
+import traceback
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from ..core.nvm import SimulatedCrash
+
+#: op-pair per kind for the canonical add/remove workload
+_PAIR_OPS = {"queue": ("enqueue", "dequeue"),
+             "stack": ("push", "pop"),
+             "heap": ("insert", "delete_min"),
+             "counter": ("fetch_add", "read")}
+
+
+@dataclass
+class WorkerReport:
+    """One worker's outcome for one pool command."""
+
+    tid: int
+    status: str                    # "done" | "crashed" | "error"
+    ops_done: int = 0
+    elapsed_s: float = 0.0
+    results: Optional[List[Tuple[str, Any, Any]]] = None
+    inflight: List[Tuple[str, int, str, Any, int]] = field(
+        default_factory=list)
+    error: Optional[str] = None
+
+
+@dataclass
+class PoolResult:
+    """Aggregate of one pool command across all workers."""
+
+    wall_s: float
+    reports: List[WorkerReport]
+
+    @property
+    def ops_done(self) -> int:
+        return sum(r.ops_done for r in self.reports)
+
+    @property
+    def crashed(self) -> List[WorkerReport]:
+        return [r for r in self.reports if r.status == "crashed"]
+
+    @property
+    def inflight(self) -> List[Tuple[str, int, str, Any, int]]:
+        """All in-flight records the workers reported (feed to
+        ``runtime.recover(inflight=...)``)."""
+        return [rec for r in self.reports for rec in r.inflight]
+
+    def results_by_tid(self) -> Dict[int, List[Tuple[str, Any, Any]]]:
+        return {r.tid: (r.results or []) for r in self.reports}
+
+
+def _collect_inflight(runtime) -> List[Tuple[str, int, str, Any, int]]:
+    recs = [(name, tid, op, args, seq)
+            for (name, tid), (op, args, seq) in runtime._inflight.items()]
+    runtime._inflight.clear()
+    return recs
+
+
+def _worker_main(runtime, tid: int, cmdq, resq, barrier) -> None:
+    handle = runtime.attach(tid)
+    invokers: Dict[Tuple[str, str], Any] = {}
+
+    def invoker(obj_name: str, op: str):
+        key = (obj_name, op)
+        fn = invokers.get(key)
+        if fn is None:
+            obj = runtime.objects[obj_name]
+            fn = handle.invoker(obj, op)      # bind_op fast path
+            invokers[key] = fn
+        return fn
+
+    while True:
+        cmd = cmdq.get()
+        kind = cmd[0]
+        if kind == "stop":
+            resq.put((tid, "stopped", None))
+            return
+        barrier.wait()
+        done = 0
+        results: Optional[list] = None
+        try:
+            if kind == "pairs":
+                _k, obj_name, add_op, rem_op, n_ops, base, collect = cmd
+                add = invoker(obj_name, add_op)
+                rem = invoker(obj_name, rem_op)
+                results = [] if collect else None
+                t0 = time.perf_counter()
+                for i in range(n_ops):
+                    # record each op the moment it returns: a crash in
+                    # the remove must not lose the completed (durable,
+                    # acked) add that preceded it
+                    v = base + i
+                    ra = add(v)
+                    done += 1
+                    if results is not None:
+                        results.append((add_op, v, ra))
+                    rr = rem(None)
+                    done += 1
+                    if results is not None:
+                        results.append((rem_op, None, rr))
+                elapsed = time.perf_counter() - t0
+            elif kind == "ops":
+                _k, obj_name, ops, collect = cmd
+                results = [] if collect else None
+                t0 = time.perf_counter()
+                for op, arg in ops:
+                    ret = invoker(obj_name, op)(arg)
+                    done += 1
+                    if results is not None:
+                        results.append((op, arg, ret))
+                elapsed = time.perf_counter() - t0
+            else:
+                raise ValueError(f"unknown pool command {kind!r}")
+            resq.put((tid, "done", {"ops": done, "elapsed": elapsed,
+                                    "results": results}))
+        except SimulatedCrash:
+            resq.put((tid, "crashed",
+                      {"ops": done, "results": results,
+                       "inflight": _collect_inflight(runtime)}))
+        except BaseException:
+            resq.put((tid, "error", traceback.format_exc()))
+
+
+class WorkerPool:
+    """``n`` fork()ed processes, each driving one Handle against the
+    runtime's shared-memory board.  See module docstring for the
+    command/crash protocol."""
+
+    def __init__(self, runtime, n_workers: int,
+                 tids: Optional[Sequence[int]] = None) -> None:
+        if n_workers < 1:
+            raise ValueError("need at least one worker")
+        if tids is None:
+            tids = range(n_workers)
+        tids = list(tids)
+        if len(tids) != n_workers:
+            raise ValueError("len(tids) != n_workers")
+        if max(tids) >= runtime.n_threads:
+            raise ValueError(f"tids {tids} exceed runtime.n_threads="
+                             f"{runtime.n_threads}")
+        self.runtime = runtime
+        self.tids = tids
+        ctx = multiprocessing.get_context("fork")
+        self._barrier = ctx.Barrier(n_workers + 1)
+        self._cmdqs = [ctx.SimpleQueue() for _ in tids]
+        # results ride a full mp.Queue (not SimpleQueue): its timeout-
+        # capable get lets _run notice a worker that died without
+        # reporting (OOM-kill, segfault) instead of blocking forever
+        self._resq = ctx.Queue()
+        # attach every handle BEFORE forking so parent and children
+        # agree on the handle objects (seq state then lives with the
+        # worker; the parent replays crashes from reported records)
+        for tid in tids:
+            runtime.attach(tid)
+        self._procs = [
+            ctx.Process(target=_worker_main,
+                        args=(runtime, tid, cmdq, self._resq,
+                              self._barrier),
+                        daemon=True)
+            for tid, cmdq in zip(tids, self._cmdqs)]
+        for p in self._procs:
+            p.start()
+        self._closed = False
+
+    # ------------------ command execution ------------------------------ #
+    def _run(self, cmds: List[tuple]) -> PoolResult:
+        if self._closed:
+            raise RuntimeError("pool is closed")
+        for cmdq, cmd in zip(self._cmdqs, cmds):
+            cmdq.put(cmd)
+        try:
+            # timed: a worker that dies before reaching the barrier
+            # must break it (and every waiter out) instead of hanging
+            # the parent past the dead-worker detection below
+            self._barrier.wait(timeout=60.0)
+        except threading.BrokenBarrierError:
+            dead = [t for t, p in zip(self.tids, self._procs)
+                    if not p.is_alive()]
+            raise RuntimeError(
+                f"worker(s) tid={dead or 'unknown'} never reached the "
+                "run barrier (died?); pool state is unrecoverable — "
+                "close() and respawn") from None
+        t0 = time.perf_counter()
+        reports: List[WorkerReport] = []
+        for _ in self.tids:
+            while True:
+                try:
+                    tid, status, payload = self._resq.get(timeout=5.0)
+                    break
+                except queue_mod.Empty:
+                    reported = {r.tid for r in reports}
+                    dead = [t for t, p in zip(self.tids, self._procs)
+                            if t not in reported and not p.is_alive()]
+                    if dead:
+                        raise RuntimeError(
+                            f"worker(s) tid={dead} died without "
+                            "reporting (killed?); pool state is "
+                            "unrecoverable — close() and respawn")
+            if status == "done":
+                reports.append(WorkerReport(
+                    tid, status, ops_done=payload["ops"],
+                    elapsed_s=payload["elapsed"],
+                    results=payload["results"]))
+            elif status == "crashed":
+                reports.append(WorkerReport(
+                    tid, status, ops_done=payload["ops"],
+                    results=payload["results"],
+                    inflight=payload["inflight"]))
+            else:
+                reports.append(WorkerReport(tid, "error", error=payload))
+        wall = time.perf_counter() - t0
+        reports.sort(key=lambda r: r.tid)
+        errors = [r for r in reports if r.status == "error"]
+        if errors:
+            raise RuntimeError("worker(s) failed:\n"
+                               + "\n".join(r.error for r in errors))
+        return PoolResult(wall_s=wall, reports=reports)
+
+    def run_pairs(self, obj, n_pairs: int, *, collect: bool = False,
+                  value_base: int = 1_000_000) -> PoolResult:
+        """Every worker runs ``n_pairs`` add/remove pairs against
+        ``obj`` (the structure-matrix workload), values disjoint per
+        worker.  Returns wall time measured across ALL workers."""
+        add_op, rem_op = _PAIR_OPS[obj.kind]
+        return self._run([
+            ("pairs", obj.name, add_op, rem_op, n_pairs,
+             tid * value_base, collect)
+            for tid in self.tids])
+
+    def run_ops(self, obj, ops_by_tid: Dict[int, List[Tuple[str, Any]]],
+                *, collect: bool = True) -> PoolResult:
+        """Explicit per-worker op lists: ``{tid: [(op, arg), ...]}``."""
+        return self._run([
+            ("ops", obj.name, list(ops_by_tid.get(tid, ())), collect)
+            for tid in self.tids])
+
+    # ------------------ lifecycle -------------------------------------- #
+    def close(self, timeout: float = 5.0) -> None:
+        """Stop the workers (idempotent).  Stragglers are terminated —
+        only after the join timeout, so a held shm lock is never left
+        dangling by a healthy worker."""
+        if self._closed:
+            return
+        self._closed = True
+        for cmdq in self._cmdqs:
+            cmdq.put(("stop",))
+        deadline = time.monotonic() + timeout
+        for p in self._procs:
+            p.join(max(0.1, deadline - time.monotonic()))
+            if p.is_alive():
+                p.terminate()
+                p.join(1.0)
+
+    def __enter__(self) -> "WorkerPool":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

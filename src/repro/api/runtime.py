@@ -72,16 +72,39 @@ class RecoverableObject:
 class CombiningRuntime:
     def __init__(self, nvm: Optional[NVM] = None, n_threads: int = 8,
                  counters: Optional[Counters] = None,
-                 nvm_words: int = 1 << 21,
-                 profile: Optional[Any] = None) -> None:
+                 nvm_words: Optional[int] = None,
+                 profile: Optional[Any] = None,
+                 backend: str = "threads") -> None:
         """``profile`` (a cost-profile name or ``CostProfile``) engages
         the virtual clock on the lazily created NVM; ignored when an
-        ``nvm`` is passed in (its own profile governs)."""
+        ``nvm`` is passed in (its own profile governs).
+
+        ``backend`` selects the execution substrate for the lazily
+        created NVM: ``"threads"`` (default, interpreter-heap volatile
+        state) or ``"shm"`` (everything shared lives in a
+        ``multiprocessing.shared_memory`` segment so
+        ``spawn_workers(n)`` can fork true-parallel workers against it;
+        DESIGN.md §7).  The shm backend has no virtual clock, so it
+        rejects ``profile``.  ``nvm_words`` defaults per backend
+        (2M words threads / 256K shm — the shm image is materialized
+        in /dev/shm, not grown lazily by the interpreter)."""
+        if backend not in ("threads", "shm"):
+            raise ValueError(f"unknown backend {backend!r}; "
+                             "expected 'threads' or 'shm'")
+        if backend == "shm" and profile is not None:
+            raise ValueError("the shm backend is wall-clock only: the "
+                             "virtual clock's Lamport merges would need "
+                             "cross-process clock state (use the thread "
+                             "backend for modeled runs)")
         self.nvm = nvm
         self.n_threads = n_threads
         self.counters = counters
         self._nvm_words = nvm_words
         self._profile = profile
+        self._backend_kind = backend
+        self._owns_nvm = nvm is None   # close() releases only what we made
+        self._closed = False
+        self._pools: list = []
         self.objects: Dict[str, RecoverableObject] = {}
         self.boards: Dict[str, AnnounceBoard] = {}
         self._handles: Dict[int, Handle] = {}
@@ -92,8 +115,15 @@ class CombiningRuntime:
     def _ensure_nvm(self) -> NVM:
         """The NVM is created lazily: runtimes that only hand out boards
         (e.g. the serving engine's) never allocate a memory image."""
+        if self._closed:
+            raise RuntimeError("runtime is closed")
         if self.nvm is None:
-            self.nvm = NVM(self._nvm_words, profile=self._profile)
+            if self._backend_kind == "shm":
+                from ..core.shm import ShmNVM
+                self.nvm = ShmNVM(self._nvm_words or 1 << 18)
+            else:
+                self.nvm = NVM(self._nvm_words or 1 << 21,
+                               profile=self._profile)
         return self.nvm
 
     def make(self, kind: str, protocol: str = "pbcomb",
@@ -138,6 +168,65 @@ class CombiningRuntime:
             self._handles[thread_id] = Handle(self, thread_id)
         return self._handles[thread_id]
 
+    def spawn_workers(self, n_workers: int, tids=None):
+        """Fork ``n_workers`` processes, each driving one per-process
+        Handle against this runtime's shared-memory board (repro.api.mp
+        — requires ``backend="shm"``).  Create every structure FIRST:
+        the children inherit the runtime by fork.
+
+            rt = CombiningRuntime(n_threads=4, backend="shm")
+            q = rt.make("queue", "pbcomb")
+            with rt.spawn_workers(4) as pool:
+                res = pool.run_pairs(q, 500)
+            print(q.adapter.degree_stats(q.core))   # measured degree
+        """
+        # check the REAL substrate (covers a pre-built nvm= passed to
+        # __init__ in either direction, not just the backend kwarg);
+        # reject the lazy thread case BEFORE materializing a ~2M-word
+        # NVM whose only purpose would be raising this error
+        if ((self.nvm is None and self._backend_kind != "shm")
+                or (self.nvm is not None
+                    and getattr(self.nvm.backend, "kind", None) != "shm")):
+            raise RuntimeError(
+                "spawn_workers needs a shared-memory NVM "
+                "(CombiningRuntime(backend='shm') or nvm=ShmNVM(...)): "
+                "thread-backend volatile state lives on the interpreter "
+                "heap and would be copied, not shared, by fork")
+        self._ensure_nvm()
+        from .mp import WorkerPool
+        pool = WorkerPool(self, n_workers, tids)
+        self._pools.append(pool)
+        return pool
+
+    def degree_stats(self) -> Dict[str, Any]:
+        """Measured combining-degree counters per registered object
+        (None for protocols that do not combine)."""
+        return {name: obj.adapter.degree_stats(obj.core)
+                for name, obj in self.objects.items()}
+
+    def close(self) -> None:
+        """Stop any worker pools and release backend resources (the shm
+        segment, if this runtime created it — an ``nvm=`` passed into
+        the constructor belongs to the caller and is left open).
+        Idempotent; the runtime rejects further use afterwards."""
+        if self._closed:
+            return
+        self._closed = True
+        for pool in self._pools:
+            pool.close()
+        self._pools.clear()
+        if self._owns_nvm:
+            nvm_close = getattr(self.nvm, "close", None)
+            if nvm_close is not None:
+                nvm_close()
+        self.nvm = None
+
+    def __enter__(self) -> "CombiningRuntime":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
     # ------------------ crash simulation ------------------------------- #
     def arm_crash(self, after_persist_ops: int, rng=None) -> None:
         """Arm a SimulatedCrash inside protocol code (crash-point
@@ -150,9 +239,17 @@ class CombiningRuntime:
         if self.nvm is not None:
             self.nvm.crash(rng)
 
-    def recover(self) -> Dict[Tuple[str, int], Any]:
+    def recover(self, inflight=None) -> Dict[Tuple[str, int], Any]:
         """One-call recovery for everything the runtime owns.  Returns
-        the replayed in-flight responses keyed (object name, tid)."""
+        the replayed in-flight responses keyed (object name, tid).
+
+        ``inflight``: extra in-flight records from OTHER processes —
+        ``[(obj_name, tid, op, args, seq), ...]`` as reported by a
+        crashed worker pool (``PoolResult.inflight``).  The runtime's
+        own records and the reported ones are replayed together; on the
+        shm backend ``disarm_crash`` also clears the machine-off flag,
+        so recovery is what powers the machine back on for every
+        surviving worker."""
         if self.nvm is not None:
             self.nvm.disarm_crash()
         for b in self.boards.values():
@@ -163,10 +260,12 @@ class CombiningRuntime:
         # at bind time, so reassigning it would orphan every bound proxy
         # created before the recover (their in-flight records would land
         # in a dead dict and never replay)
-        inflight = dict(self._inflight)
+        inflight_map = dict(self._inflight)
         self._inflight.clear()
+        for name, tid, op, args, seq in inflight or ():
+            inflight_map[(name, tid)] = (op, args, seq)
         responses: Dict[Tuple[str, int], Any] = {}
-        for (name, tid), (op, a, seq) in inflight.items():
+        for (name, tid), (op, a, seq) in inflight_map.items():
             obj = self.objects.get(name)
             if obj is None:
                 continue

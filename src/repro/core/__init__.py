@@ -7,6 +7,7 @@ concurrent objects.
 """
 
 from .atomics import AtomicInt, AtomicRef, Counters
+from .backend import (Cell, DegreeStats, ThreadBackend, merge_degree_stats)
 from .nvm import (LINE, NVM, PROFILES, CostProfile, SimulatedCrash, VClock,
                   resolve_profile)
 from .objects import (AtomicFloatObject, FetchAddObject, HeapObject,
@@ -16,6 +17,7 @@ from .pwfcomb import PWFComb
 
 __all__ = [
     "AtomicInt", "AtomicRef", "Counters",
+    "Cell", "DegreeStats", "ThreadBackend", "merge_degree_stats",
     "LINE", "NVM", "SimulatedCrash",
     "PROFILES", "CostProfile", "VClock", "resolve_profile",
     "AtomicFloatObject", "FetchAddObject", "HeapObject", "SeqObject",

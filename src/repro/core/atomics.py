@@ -10,6 +10,13 @@ O to avoid the ABA problem".
 Instrumentation: every object can be tagged ``shared=True`` so reads and
 writes on cache-shared locations are counted — this reproduces the
 Table 1 counters (stores/reads on cache lines in shared state).
+
+Backends: the classes here are the thread-execution implementations;
+the multiprocess backend provides the same interfaces over
+``multiprocessing.shared_memory`` words with lock-striped CAS emulation
+(``core/shm.py``: ShmAtomicInt / ShmAtomicRef / ShmSRef).  Protocol
+code obtains whichever variant fits the run through the ``nvm.backend``
+seam (``core/backend.py``) rather than constructing these directly.
 """
 
 from __future__ import annotations
@@ -93,17 +100,30 @@ class AtomicInt:
 class AtomicRef:
     """Versioned reference supporting LL/VL/SC (ABA-safe, as in paper §6).
     Instrumentation (counters, virtual clock) opt-in as for
-    ``AtomicInt``."""
+    ``AtomicInt``.
 
-    __slots__ = ("_value", "_mutex", "_count", "_clock")
+    ``mirror=(nvm, addr)`` keeps an NVM word in sync with the reference
+    *inside* the SC's critical section.  The durable-MS baseline needs
+    this: mirroring head/tail with a plain store after the SC returns
+    lets a slower loser overwrite a newer winner's mirror (the
+    lost-link race class — harmless under the GIL's coarse
+    interleavings in practice, routinely hit under true parallelism),
+    and a later pwb then snapshots the regressed pointer into NVMM.
+    """
+
+    __slots__ = ("_value", "_mutex", "_count", "_clock", "_mnvm", "_maddr")
 
     def __init__(self, value: Any, *, shared: bool = False,
                  counters: Optional[Counters] = None,
-                 clock: Optional[Any] = None) -> None:
+                 clock: Optional[Any] = None,
+                 mirror: Optional[Tuple[Any, int]] = None) -> None:
         self._value: Tuple[Any, int] = (value, 0)
         self._mutex = threading.Lock()
         self._count = counters if (shared and counters is not None) else None
         self._clock = clock
+        self._mnvm, self._maddr = mirror if mirror is not None else (None, 0)
+        if self._mnvm is not None:
+            self._mnvm.write(self._maddr, value)
 
     def ll(self) -> Tuple[Any, int]:
         """Load-linked: returns (value, version); version feeds VL/SC."""
@@ -118,7 +138,9 @@ class AtomicRef:
         return self._value[1] == version
 
     def sc(self, version: int, new_value: Any) -> bool:
-        """Store-conditional: succeeds iff no SC since the matching LL."""
+        """Store-conditional: succeeds iff no SC since the matching LL.
+        A configured NVM mirror is updated inside the critical section,
+        so mirror order always matches SC success order."""
         with self._mutex:
             if self._count is not None:
                 self._count.cas_calls += 1
@@ -126,6 +148,8 @@ class AtomicRef:
                 self._clock.advance(self._clock.profile.cas_ns)
             if self._value[1] == version:
                 self._value = (new_value, version + 1)
+                if self._mnvm is not None:
+                    self._mnvm.write(self._maddr, new_value)
                 if self._count is not None:
                     self._count.shared_writes += 1
                 return True

@@ -199,10 +199,17 @@ class VClock:
 
 
 class NVM:
+    #: Machine-off flag: False for the in-process NVM (a SimulatedCrash
+    #: unwinds every thread synchronously, so no one keeps running).
+    #: The multiprocess ShmNVM overrides this with a shared-memory flag
+    #: that surviving worker processes poll in their wait loops.
+    halted = False
+
     def __init__(self, n_words: int = 1 << 20, *, pwb_nop: bool = False,
                  psync_nop: bool = False,
                  persist_latency: float = 0.0,
-                 profile: Union[str, CostProfile, None] = None) -> None:
+                 profile: Union[str, CostProfile, None] = None,
+                 backend: Optional[Any] = None) -> None:
         """``persist_latency``: seconds a psync blocks the calling thread
         (models NVMM write-back latency, ~1-3us on Optane DCPMM; the
         benchmark harness sets it so the paper's cost trends — one psync
@@ -216,7 +223,16 @@ class NVM:
         thread's logical clock by the modeled cost instead of sleeping
         (``self.clock``; see module docs / DESIGN.md §6).  The NOP
         ablations compose: a nop'd instruction charges nothing.
+
+        ``backend``: the execution backend the protocols draw their
+        volatile shared primitives from (DESIGN.md §7); defaults to the
+        thread backend.  The multiprocess path constructs ``ShmNVM``
+        with a ``ShmBackend`` instead.
         """
+        if backend is None:
+            from .backend import ThreadBackend
+            backend = ThreadBackend()
+        self.backend = backend
         self.n_words = n_words
         self._vol: List[Any] = [0] * n_words        # volatile (cache) image
         self._dur: List[Any] = [0] * n_words        # durable (NVMM) image

@@ -29,13 +29,12 @@ StateRec NVM layout (contiguous, line-aligned):
 from __future__ import annotations
 
 import random
-import threading
 import time
 from dataclasses import dataclass
-from typing import Any, List, Optional
+from typing import Any, Optional
 
-from .atomics import AtomicInt, Counters
-from .nvm import NVM
+from .atomics import Counters
+from .nvm import NVM, SimulatedCrash
 from .objects import SeqObject
 
 
@@ -88,23 +87,46 @@ class PBComb:
         nvm.psync()
         nvm.reset_counters()
         # --- shared volatile variables -------------------------------- #
-        self.request: List[RequestRec] = [RequestRec() for _ in range(n_threads)]
+        # Everything shared between participants comes from the NVM's
+        # execution backend (DESIGN.md §7): interpreter-heap objects on
+        # the thread backend, shared-memory views on the multiprocess
+        # one.  Combiner-local scratch stays a plain attribute.
+        be = nvm.backend
+        self.request = be.request_board(n_threads)
         self._clock = nvm.clock
         # Virtual time at which the last committed round's psync landed;
         # waiters picking up a response merge it (Lamport hand-off).  A
         # later round may overwrite it before a slow waiter reads it —
         # merge is a max, so that only ever charges the waiter MORE.
         self._round_end_vt = 0.0
-        self.lock = AtomicInt(0, shared=True, counters=counters,
-                              clock=nvm.clock)
-        self.lockval = 0  # written only by the combiner, read by waiters
+        self.lock = be.atomic_int(0, shared=True, counters=counters,
+                                  clock=nvm.clock)
+        self._lockval = be.cell(0)  # written by the combiner, read by waiters
         # Combiner election (the line 8 CAS) as a non-blocking mutex
         # try-acquire: same atomicity, one C call instead of a guarded
         # compare under a Python-level mutex.  ``lock`` itself is then
         # written only by the elected combiner (plain GIL-atomic store).
-        self._elect = threading.Lock()
+        self._elect = be.mutex()
         self.park_enabled = park
+        # entry backoff, backend-tuned (wide under true parallelism)
+        self._park_prob, self._park_secs = be.announce_park(
+            self.ANNOUNCE_PARK_PROB, self.ANNOUNCE_PARK_SECONDS)
         self._rng = random.Random(0x9B5EED)   # seeded: runs reproducible
+        # Measured combining degree (requests served per committed
+        # round) — the wall-clock counterpart of the modeled degree-4
+        # staging; mp_bench and the matrix bench report it.
+        self.stats = be.degree_stats()
+        self._round_served = 0
+
+    # LockVal lives in a backend cell so a combiner process's write is
+    # visible to waiter processes; property keeps the paper's name.
+    @property
+    def lockval(self) -> int:
+        return self._lockval.value
+
+    @lockval.setter
+    def lockval(self, v: int) -> None:
+        self._lockval.value = v
 
     # ---------------- field address helpers --------------------------- #
     def _st_base(self, ind: int) -> int:
@@ -139,8 +161,8 @@ class PBComb:
         if clk is not None:
             req.vtime = clk.now()
         req.valid = 1
-        if self.park_enabled and self._rng.random() < self.ANNOUNCE_PARK_PROB:
-            time.sleep(self.ANNOUNCE_PARK_SECONDS)
+        if self.park_enabled and self._rng.random() < self._park_prob:
+            time.sleep(self._park_secs)
             # a combiner may have served the parked request: if its
             # round already psync'd (lock even), return the recorded
             # response without a round of our own (cf. Recover's path)
@@ -172,12 +194,20 @@ class PBComb:
         benchmark phases.  Request activate bits are re-seeded from the
         durable deactivate bits (``resync_request``) so a thread whose
         next operation arrives through the normal ``op`` path — not
-        ``recover`` — still flips to a fresh parity."""
-        self.request = [RequestRec() for _ in range(self.n)]
-        self.lock = AtomicInt(0, shared=True, counters=self._counters,
-                              clock=self.nvm.clock)
+        ``recover`` — still flips to a fresh parity.
+
+        All through the backend's reset methods: the thread backend
+        recreates the objects (the seed's behavior), the shm backend
+        resets the shared state in place so fork-inherited views in
+        worker processes stay attached."""
+        be = self.nvm.backend
+        self.request.reset()
+        self.lock = be.reset_atomic_int(self.lock, 0,
+                                        shared=True,
+                                        counters=self._counters,
+                                        clock=self.nvm.clock)
         self.lockval = 0
-        self._elect = threading.Lock()   # may have been held at the crash
+        self._elect = be.reset_mutex(self._elect)  # may be held at crash
         for p in range(self.n):
             self.resync_request(p)
 
@@ -201,8 +231,14 @@ class PBComb:
 
     def _wait_while(self, expected: int) -> None:
         lock = self.lock
+        nvm = self.nvm
         spins = 0
         while lock.load() == expected:
+            # Machine-off check: a crash in ANOTHER process cannot unwind
+            # this one, so waiters poll the shared halted flag instead of
+            # spinning on a lock word the dead combiner never releases.
+            if nvm.halted:
+                raise SimulatedCrash()
             spins += 1
             time.sleep(0 if spins <= self.SPIN_FAST else self.PARK_SECONDS)
 
@@ -258,25 +294,46 @@ class PBComb:
         ind = 1 - mindex                                     # line 14
         base = self.mem_base[ind]
         nvm.copy_range(base, self.mem_base[mindex], self.rec_words)  # line 15
+        self._round_served = 0
         self._begin_round(ind, p)
         retval_base = base + self.state_words
         deact_base = retval_base + self.n
         request = self.request
-        deacts = nvm.read_range(deact_base, self.n)   # one slice, n reads
-        for q in range(self.n):                              # line 16
-            req = request[q]
-            if req.valid == 1 and req.activate != deacts[q]:  # line 17
-                if clk is not None:
-                    clk.merge(req.vtime)   # Lamport receive of q's announce
-                ret = self._apply(q, req.func, req.args, ind, p)       # lines 18-19
-                wr(retval_base + q, ret)                               # line 20
-                wr(deact_base + q, req.activate)                       # line 21
+        served = 0
+        # Simulation loop (line 16), iterated to a fixpoint: one pass
+        # serves everything announced before it, and a further pass
+        # adopts announcements that landed WHILE it ran.  Under the GIL
+        # the second pass finds nothing (the scan isn't preempted) and
+        # this is the paper's single scan; under true parallelism it is
+        # where measured degree comes from — announcers overlap the
+        # combiner's applies and still ride this round's single psync.
+        # Bounded: a served thread blocks until the round commits, so
+        # each thread contributes at most one request per round (at
+        # most n passes, typically 2).
+        while True:
+            pass_served = 0
+            deacts = nvm.read_range(deact_base, self.n)  # one slice, n reads
+            for q in range(self.n):                          # line 16
+                req = request[q]
+                if req.valid == 1 and req.activate != deacts[q]:  # line 17
+                    if clk is not None:
+                        clk.merge(req.vtime)  # Lamport receive of announce
+                    ret = self._apply(q, req.func, req.args, ind, p)   # lines 18-19
+                    wr(retval_base + q, ret)                           # line 20
+                    wr(deact_base + q, req.activate)                   # line 21
+                    pass_served += 1
+            served += pass_served
+            if pass_served == 0:
+                break
         pending = self._post_simulation(ind, p)
         self.lockval = lock_val                              # line 24
         # lines 22-23 + 25-27 as one fused commit (identical counters,
         # durable effect, and crash-tick behavior — see NVM.commit_round)
         nvm.commit_round(base, self.rec_words, self.mindex_addr, ind,
                          pending=pending)
+        # Measured degree: requests this committed round served (the
+        # loop above plus any eliminated pairs _begin_round recorded).
+        self.stats.record(served + self._round_served)
         if clk is not None:
             self._round_end_vt = clk.now()   # published before the unlock
         self._pre_unlock(ind, p)

@@ -41,7 +41,7 @@ from __future__ import annotations
 import random
 import threading
 import time
-from typing import Any, List, Optional
+from typing import Any, Optional
 
 from .atomics import Counters
 from .nvm import NVM
@@ -111,23 +111,37 @@ class PWFComb:
         dummy = self._slot_id(n_threads, 0)
         for s in range(len(self.slot_base)):
             self._init_rec(s)
-        self.S = _SRef(nvm, self.s_addr, dummy, counters)
+        self.S = nvm.backend.sref(nvm, self.s_addr, dummy, counters)
         for s in range(len(self.slot_base)):
             nvm.pwb(self.slot_base[s], self.rec_words)
         nvm.pwb(self.s_addr, 1)
         nvm.psync()
         nvm.reset_counters()
         # --- shared volatile ------------------------------------------ #
-        self.request: List[RequestRec] = [RequestRec() for _ in range(n_threads)]
+        # Shared-between-participants state comes from the execution
+        # backend (DESIGN.md §7); per-thread scratch (rng, backoff
+        # windows) stays process-local.
+        be = nvm.backend
+        self.request = be.request_board(n_threads)
         self._clock = nvm.clock
         # Virtual time of the last durable publication (pwb(S)+psync);
         # served threads merge it on pickup — see PBComb._round_end_vt.
         self._round_end_vt = 0.0
-        self.flush: List[int] = [0] * (n_threads + 1)
-        self.comb_round = [[0] * n_threads for _ in range(n_threads + 1)]
+        self.flush = be.int_array(n_threads + 1)
+        self.comb_round = be.int_matrix(n_threads + 1, n_threads)
         self._rng = random.Random(0xC0FFEE)
         self._backoff_window = [1] * n_threads
-        self._flush_mutex = threading.Lock()
+        self._flush_mutex = be.mutex()
+        # entry backoff, backend-tuned (wide under true parallelism)
+        self._park_prob, self._park_secs = be.announce_park(
+            self.ANNOUNCE_PARK_PROB, self.ANNOUNCE_PARK_SECONDS)
+        # Measured combining degree: requests served per successful
+        # publication (the wait-free analogue of PBComb's round).
+        self.stats = be.degree_stats()
+        # per-thread count of requests a _begin_attempt hook served
+        # outside the scan (PWFStack's elimination) — attempts by
+        # different threads run concurrently, hence one slot per tid
+        self._attempt_served = [0] * n_threads
 
     # ---------------- layout helpers ---------------------------------- #
     def _slot_id(self, owner: int, ind: int) -> int:
@@ -177,8 +191,8 @@ class PWFComb:
         # into its round — _try_finish then returns the recorded
         # response without a publication of our own (cf. PBComb).
         if self.backoff_enabled:
-            if self._rng.random() < self.ANNOUNCE_PARK_PROB:
-                time.sleep(self.ANNOUNCE_PARK_SECONDS)
+            if self._rng.random() < self._park_prob:
+                time.sleep(self._park_secs)
             else:
                 self._backoff(p)
         return self._perform_request(p)
@@ -197,11 +211,14 @@ class PWFComb:
         ``Counters`` reference (synchronization-cost measurements must
         keep accumulating after a crash) and request activate bits are
         re-seeded from the published StateRec's deactivate bits."""
-        self.S = _SRef(self.nvm, self.s_addr, self.nvm.read(self.s_addr),
-                       self._counters)
-        self.request = [RequestRec() for _ in range(self.n)]
-        self.flush = [0] * (self.n + 1)
-        self.comb_round = [[0] * self.n for _ in range(self.n + 1)]
+        be = self.nvm.backend
+        self.S = be.reset_sref(self.S, self.nvm, self.s_addr,
+                               self.nvm.read(self.s_addr), self._counters)
+        self.request.reset()
+        self.flush.fill(0)
+        for row in self.comb_round:
+            row.fill(0)
+        self._flush_mutex = be.reset_mutex(self._flush_mutex)
         for p in range(self.n):
             self.resync_request(p)
 
@@ -257,11 +274,13 @@ class PWFComb:
             lval = lval + 1 if lval % 2 == 0 else lval + 2       # lines 16-17
             if not self.S.vl(ver):                               # line 18
                 continue
+            self._attempt_served[p] = 0
             self._begin_attempt(dst, p)
             retval_base = dst_base + sw
             deact_base = retval_base + n
             request = self.request
             comb_round = self.comb_round[p]
+            served = 0
             deacts = nvm.read_range(deact_base, n)    # one slice, n reads
             for q in range(n):                                   # line 19
                 req = request[q]
@@ -272,6 +291,7 @@ class PWFComb:
                     wr(retval_base + q, ret)                            # line 23
                     wr(deact_base + q, req.activate)                    # line 24
                     comb_round[q] = lval                                # line 25
+                    served += 1
             if self.S.vl(ver):                                   # line 26
                 index_addr = deact_base + n + p
                 wr(index_addr, 1 - rd(index_addr))               # line 27
@@ -282,6 +302,9 @@ class PWFComb:
                 if self.S.sc(ver, dst):                          # line 31
                     nvm.pwb_sync(self.s_addr, 1)                 # lines 32-33
                     self._cas_flush(p, lval, lval + 1)           # line 34
+                    # Measured degree: requests this publication served
+                    # in one pwb(S)+psync (scan + eliminated pairs).
+                    self.stats.record(served + self._attempt_served[p])
                     if clk is not None:
                         clk.advance(clk.profile.round_ns)
                         self._round_end_vt = clk.now()

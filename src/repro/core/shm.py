@@ -1,0 +1,1011 @@
+"""Shared-memory multiprocess execution backend (DESIGN.md §7).
+
+Under CPython's GIL the *measured* combining degree is pinned near 1 —
+only the modeled pass could stage paper-scale rounds (ROADMAP).  This
+module moves every word the protocols share into one
+``multiprocessing.shared_memory`` segment so fork()ed worker processes
+announce/combine against the same board with true parallelism:
+
+  * ``ShmNVM`` — the simulated NVMM (volatile + durable images, the
+    epoch write-back ring, pwb/pfence/psync counters, crash countdown
+    and the machine-off ``halted`` flag) entirely in shared memory,
+    guarded by one fork-inherited lock.  Same public interface and
+    crash semantics as ``NVM``; the fused persistence sentences fall
+    back to their discrete forms (``_fast_ok`` is False), which keeps
+    pwb/pfence/psync counter arithmetic identical to the in-thread
+    backend — that is what the replay-equivalence tests pin.
+  * ``ShmBackend`` — the ``core.backend`` seam over the same segment:
+    lock-striped CAS emulation for AtomicInt/AtomicRef/SRef, shared
+    request boards, cells, int arrays, degree counters.
+
+Word encoding: each simulated NVM word (and each board/cell slot) is
+``WORD_I64`` int64s — a tag plus 16 payload bytes — covering the value
+domain the recoverable structures actually store: ints, None, bools,
+floats, and short strings (op tags like "ENQ", responses like "ACK").
+Anything else raises ``TypeError`` with the offending value; rich
+payloads belong to the thread backend.
+
+Atomicity notes.  Aligned 8-byte loads/stores through a ``cast('q')``
+memoryview are single C-level stores; mutating operations (cas,
+fetch_add, SC) additionally serialize through a striped lock, and
+multi-i64 slots order payload-before-tag on write (tag-before-payload
+on read) with the protocols' own ``valid`` flags providing the
+publication barrier — the same discipline the GIL gave the thread
+backend for free.
+
+Fork discipline: create the runtime, its structures, and the worker
+pool IN THAT ORDER — mp primitives and shared views are inherited by
+fork, so everything shared must exist before ``spawn_workers``.
+"""
+
+from __future__ import annotations
+
+import multiprocessing
+import struct
+import time
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+from .atomics import Counters
+from .backend import ThreadBackend
+from .nvm import LINE, NVM, SimulatedCrash
+
+WORD_I64 = 3          # int64s per codec word: tag + 2 payload words
+
+# value tags
+_T_INT = 0
+_T_NONE = 1
+_T_FALSE = 2
+_T_TRUE = 3
+_T_FLOAT = 4
+_T_STR = 16           # tag = _T_STR + utf-8 byte length (0..16)
+_STR_MAX = 16
+
+_I64_MIN, _I64_MAX = -(1 << 63), (1 << 63) - 1
+
+
+def encode(value: Any) -> Tuple[int, int, int]:
+    """Python value -> (tag, payload_a, payload_b).  The supported
+    domain is exactly what the recoverable structures store in NVM
+    words; see module docstring."""
+    if value is None:
+        return _T_NONE, 0, 0
+    if value is True:
+        return _T_TRUE, 0, 0
+    if value is False:
+        return _T_FALSE, 0, 0
+    if type(value) is int:
+        if not _I64_MIN <= value <= _I64_MAX:
+            raise TypeError(f"int {value!r} exceeds the shm backend's "
+                            "64-bit word")
+        return _T_INT, value, 0
+    if type(value) is float:
+        return _T_FLOAT, struct.unpack("<q", struct.pack("<d", value))[0], 0
+    if type(value) is str:
+        raw = value.encode("utf-8")
+        if len(raw) > _STR_MAX:
+            raise TypeError(f"str {value!r} exceeds {_STR_MAX} utf-8 "
+                            "bytes (shm backend word)")
+        raw = raw.ljust(_STR_MAX, b"\0")
+        return (_T_STR + len(value.encode('utf-8')),
+                int.from_bytes(raw[:8], "little", signed=True),
+                int.from_bytes(raw[8:], "little", signed=True))
+    raise TypeError(
+        f"the shm backend stores ints, floats, bools, None and short "
+        f"strings in NVM words; got {type(value).__name__}: {value!r}")
+
+
+def decode(tag: int, a: int, b: int) -> Any:
+    if tag == _T_INT:
+        return a
+    if tag == _T_NONE:
+        return None
+    if tag == _T_TRUE:
+        return True
+    if tag == _T_FALSE:
+        return False
+    if tag == _T_FLOAT:
+        return struct.unpack("<d", struct.pack("<q", a))[0]
+    if _T_STR <= tag <= _T_STR + _STR_MAX:
+        raw = (a.to_bytes(8, "little", signed=True)
+               + b.to_bytes(8, "little", signed=True))
+        return raw[:tag - _T_STR].decode("utf-8")
+    raise ValueError(f"corrupt shm word tag {tag}")
+
+
+class _Words:
+    """Codec-word array view: word i lives at i64 offset
+    ``base + WORD_I64 * i`` of the backing memoryview."""
+
+    __slots__ = ("mv", "base")
+
+    def __init__(self, mv, base_i64: int) -> None:
+        self.mv = mv
+        self.base = base_i64
+
+    def get(self, i: int) -> Any:
+        o = self.base + WORD_I64 * i
+        mv = self.mv
+        return decode(mv[o], mv[o + 1], mv[o + 2])
+
+    def set(self, i: int, value: Any) -> None:
+        t, a, b = encode(value)
+        o = self.base + WORD_I64 * i
+        mv = self.mv
+        # payload before tag: a reader that sees the new tag sees the
+        # new payload (TSO); single-word int updates hinge on mv[o+1]
+        mv[o + 1] = a
+        mv[o + 2] = b
+        mv[o] = t
+
+    def get_range(self, i: int, n: int) -> List[Any]:
+        return [self.get(i + j) for j in range(n)]
+
+    def set_range(self, i: int, values) -> None:
+        for j, v in enumerate(values):
+            self.set(i + j, v)
+
+
+# --------------------------------------------------------------------- #
+# Backend primitives                                                    #
+# --------------------------------------------------------------------- #
+class ShmMutex:
+    """Mutex over a fork-inherited semaphore.  ``reset`` drains it back
+    to exactly one permit — a crashed holder can never be unwound from
+    another process, so post-crash recovery forces the released state."""
+
+    __slots__ = ("_sem",)
+
+    def __init__(self, ctx) -> None:
+        self._sem = ctx.Semaphore(1)
+
+    def acquire(self, blocking: bool = True) -> bool:
+        return self._sem.acquire(blocking)
+
+    def release(self) -> None:
+        self._sem.release()
+
+    def __enter__(self):
+        self._sem.acquire()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self._sem.release()
+
+    def reset(self) -> None:
+        while self._sem.acquire(False):
+            pass
+        self._sem.release()
+
+
+class ShmAtomicInt:
+    """AtomicInt over one shared int64: plain aligned load/store, CAS
+    and fetch&add emulated under a striped fork-inherited lock."""
+
+    __slots__ = ("_mv", "_off", "_lock", "_count", "_clock")
+
+    def __init__(self, backend: "ShmBackend", value: int = 0, *,
+                 shared: bool = False,
+                 counters: Optional[Counters] = None,
+                 clock: Optional[Any] = None) -> None:
+        self._mv = backend.mv
+        self._off = backend.aux_alloc(1)
+        self._lock = backend.stripe(self._off)
+        self._count = counters if (shared and counters is not None) else None
+        self._clock = clock          # always None in shm mode (no profile)
+        self._mv[self._off] = value
+
+    def load(self) -> int:
+        if self._count is not None:
+            self._count.shared_reads += 1
+        return self._mv[self._off]
+
+    def store(self, value: int) -> None:
+        if self._count is not None:
+            self._count.shared_writes += 1
+        self._mv[self._off] = value
+
+    def cas(self, old: int, new: int) -> bool:
+        with self._lock:
+            if self._count is not None:
+                self._count.cas_calls += 1
+            if self._mv[self._off] == old:
+                self._mv[self._off] = new
+                if self._count is not None:
+                    self._count.shared_writes += 1
+                return True
+            return False
+
+    def fetch_add(self, delta: int) -> int:
+        with self._lock:
+            old = self._mv[self._off]
+            self._mv[self._off] = old + delta
+            if self._count is not None:
+                self._count.shared_writes += 1
+            return old
+
+    def reset(self, value: int = 0) -> None:
+        self._mv[self._off] = value
+
+
+class ShmAtomicRef:
+    """Versioned LL/VL/SC reference over shared memory (codec value +
+    raw version word).  Supports the same ``mirror=(nvm, addr)`` as the
+    thread AtomicRef: the mirror write lands inside the SC's critical
+    section."""
+
+    __slots__ = ("_words", "_idx", "_mv", "_voff", "_lock", "_count",
+                 "_mnvm", "_maddr")
+
+    def __init__(self, backend: "ShmBackend", value: Any, *,
+                 shared: bool = False,
+                 counters: Optional[Counters] = None,
+                 clock: Optional[Any] = None,
+                 mirror: Optional[Tuple[Any, int]] = None) -> None:
+        off = backend.aux_alloc(WORD_I64 + 1)
+        self._words = _Words(backend.mv, off)
+        self._idx = 0
+        self._mv = backend.mv
+        self._voff = off + WORD_I64
+        self._lock = backend.stripe(off)
+        self._count = counters if (shared and counters is not None) else None
+        self._mnvm, self._maddr = mirror if mirror is not None else (None, 0)
+        self.reset(value)
+
+    def ll(self) -> Tuple[Any, int]:
+        if self._count is not None:
+            self._count.shared_reads += 1
+        # version first: if it is unchanged after the value read, the
+        # value belongs to that version (SC bumps version last)
+        ver = self._mv[self._voff]
+        return self._words.get(self._idx), ver
+
+    def vl(self, version: int) -> bool:
+        if self._count is not None:
+            self._count.shared_reads += 1
+        return self._mv[self._voff] == version
+
+    def sc(self, version: int, new_value: Any) -> bool:
+        with self._lock:
+            if self._count is not None:
+                self._count.cas_calls += 1
+            if self._mv[self._voff] == version:
+                self._words.set(self._idx, new_value)
+                if self._mnvm is not None:
+                    self._mnvm.write(self._maddr, new_value)
+                self._mv[self._voff] = version + 1
+                if self._count is not None:
+                    self._count.shared_writes += 1
+                return True
+            return False
+
+    def load(self) -> Any:
+        if self._count is not None:
+            self._count.shared_reads += 1
+        return self._words.get(self._idx)
+
+    def reset(self, value: Any) -> None:
+        with self._lock:
+            self._words.set(self._idx, value)
+            if self._mnvm is not None:
+                self._mnvm.write(self._maddr, value)
+            self._mv[self._voff] = 0
+
+
+class ShmSRef:
+    """PWFComb's S: versioned LL/VL/SC whose value is mirrored into an
+    NVM word inside the SC mutex (the shm variant of ``_SRef``)."""
+
+    __slots__ = ("nvm", "addr", "_mv", "_voff", "_soff", "_mutex",
+                 "_counters")
+
+    def __init__(self, backend: "ShmBackend", nvm: "ShmNVM", addr: int,
+                 value: int, counters: Optional[Counters] = None) -> None:
+        off = backend.aux_alloc(2)
+        self._mv = backend.mv
+        self._soff = off          # slot id (int, raw)
+        self._voff = off + 1      # version
+        self._mutex = backend.stripe(off)
+        self.nvm = nvm
+        self.addr = addr
+        self._counters = counters
+        self.reset(nvm, addr, value)
+
+    def ll(self):
+        if self._counters:
+            self._counters.shared_reads += 1
+        ver = self._mv[self._voff]
+        return self._mv[self._soff], ver
+
+    def vl(self, version: int) -> bool:
+        return self._mv[self._voff] == version
+
+    def sc(self, version: int, new_value: int) -> bool:
+        with self._mutex:
+            if self._counters:
+                self._counters.cas_calls += 1
+            if self._mv[self._voff] == version:
+                self._mv[self._soff] = new_value
+                self.nvm.write(self.addr, new_value)
+                self._mv[self._voff] = version + 1
+                return True
+            return False
+
+    def load(self) -> int:
+        return self._mv[self._soff]
+
+    def reset(self, nvm: "ShmNVM", addr: int, value: int) -> None:
+        with self._mutex:
+            self._mv[self._soff] = value
+            nvm.write(addr, value)
+            self._mv[self._voff] = 0
+
+
+class ShmCell:
+    """One shared codec word with a ``value`` attribute (LockVal,
+    oldTail).  Single-word plain loads/stores, like the thread Cell."""
+
+    __slots__ = ("_words",)
+
+    def __init__(self, backend: "ShmBackend", value: Any = None) -> None:
+        self._words = _Words(backend.mv, backend.aux_alloc(WORD_I64))
+        self._words.set(0, value)
+
+    @property
+    def value(self) -> Any:
+        return self._words.get(0)
+
+    @value.setter
+    def value(self, v: Any) -> None:
+        self._words.set(0, v)
+
+
+class ShmIntArray:
+    """Raw shared int64 array (PWFComb's Flush / CombRound rows)."""
+
+    __slots__ = ("_mv", "_off", "_n")
+
+    def __init__(self, mv, off: int, n: int, init: int = 0) -> None:
+        self._mv = mv
+        self._off = off
+        self._n = n
+        self.fill(init)
+
+    def __len__(self) -> int:
+        return self._n
+
+    def __getitem__(self, i: int) -> int:
+        return self._mv[self._off + i]
+
+    def __setitem__(self, i: int, v: int) -> None:
+        self._mv[self._off + i] = v
+
+    def fill(self, value: int) -> None:
+        mv, off = self._mv, self._off
+        for i in range(self._n):
+            mv[off + i] = value
+
+
+# Request-board field offsets (codec words per RequestRec slot).
+_RB_FUNC, _RB_ARGS, _RB_ACT, _RB_VALID, _RB_VTIME, _RB_WORDS = 0, 1, 2, 3, 4, 5
+
+
+class ShmRequestRec:
+    """View of one announcement slot; property-per-field so the
+    protocols' in-place announce sequence (valid=0 ... valid=1) hits
+    shared memory in program order."""
+
+    __slots__ = ("_w", "_b")
+
+    def __init__(self, words: _Words, base_word: int) -> None:
+        self._w = words
+        self._b = base_word
+
+    @property
+    def func(self):
+        return self._w.get(self._b + _RB_FUNC)
+
+    @func.setter
+    def func(self, v):
+        self._w.set(self._b + _RB_FUNC, v)
+
+    @property
+    def args(self):
+        return self._w.get(self._b + _RB_ARGS)
+
+    @args.setter
+    def args(self, v):
+        self._w.set(self._b + _RB_ARGS, v)
+
+    @property
+    def activate(self):
+        return self._w.get(self._b + _RB_ACT)
+
+    @activate.setter
+    def activate(self, v):
+        self._w.set(self._b + _RB_ACT, v)
+
+    @property
+    def valid(self):
+        return self._w.get(self._b + _RB_VALID)
+
+    @valid.setter
+    def valid(self, v):
+        self._w.set(self._b + _RB_VALID, v)
+
+    @property
+    def vtime(self):
+        return self._w.get(self._b + _RB_VTIME)
+
+    @vtime.setter
+    def vtime(self, v):
+        self._w.set(self._b + _RB_VTIME, v)
+
+
+class ShmRequestBoard(list):
+    """Announcement board in shared memory: ``board[p]`` is a live view;
+    assigning a RequestRec copies its fields (valid published last)."""
+
+    def __init__(self, backend: "ShmBackend", n_threads: int) -> None:
+        words = _Words(backend.mv,
+                       backend.aux_alloc(WORD_I64 * _RB_WORDS * n_threads))
+        super().__init__(ShmRequestRec(words, _RB_WORDS * p)
+                         for p in range(n_threads))
+        self.reset()
+
+    def __setitem__(self, p: int, rec: Any) -> None:
+        view = list.__getitem__(self, p)
+        view.valid = 0
+        view.func = rec.func
+        view.args = rec.args
+        view.activate = rec.activate
+        view.vtime = rec.vtime
+        view.valid = rec.valid
+
+    def reset(self) -> None:
+        for view in self:
+            view.valid = 0
+            view.func = None
+            view.args = None
+            view.activate = 0
+            view.vtime = 0.0
+
+
+class ShmDegreeStats:
+    """Measured-degree counters in shared memory — combiners in any
+    process accumulate into the same three words."""
+
+    __slots__ = ("_mv", "_off", "_lock")
+
+    def __init__(self, backend: "ShmBackend") -> None:
+        self._off = backend.aux_alloc(3)
+        self._mv = backend.mv
+        self._lock = backend.stripe(self._off)
+        self.reset()
+
+    def record(self, served: int) -> None:
+        mv, off = self._mv, self._off
+        with self._lock:
+            mv[off] += 1
+            mv[off + 1] += served
+            if served > mv[off + 2]:
+                mv[off + 2] = served
+
+    def snapshot(self) -> dict:
+        mv, off = self._mv, self._off
+        with self._lock:
+            return {"rounds": mv[off], "ops_combined": mv[off + 1],
+                    "degree_max": mv[off + 2]}
+
+    def reset(self) -> None:
+        mv, off = self._mv, self._off
+        with self._lock:
+            mv[off] = mv[off + 1] = mv[off + 2] = 0
+
+
+# --------------------------------------------------------------------- #
+# The backend                                                           #
+# --------------------------------------------------------------------- #
+# meta slot indexes (int64)
+_M_ALLOC = 0        # NVM word bump pointer
+_M_AUX = 1          # aux-area bump pointer (i64 units, relative)
+_M_COUNT = 2        # crash countdown (-1 = disarmed)
+_M_SEED = 3         # adversarial-drain seed (-1 = drain nothing)
+_M_HALT = 4         # machine-off flag
+_M_EPOCH = 5        # current epoch id
+_M_EFLAG = 6        # 1 iff the current epoch has queued entries
+_M_RING = 7         # ring used (i64 units, relative to ring base)
+_M_PWB, _M_PFENCE, _M_PSYNC, _M_CRASHES = 8, 9, 10, 11
+_M_SPILLS = 12      # ring-overflow early drains (visibility)
+_META_I64 = 16
+
+_CTR_SLOT = {"pwb": _M_PWB, "pfence": _M_PFENCE, "psync": _M_PSYNC,
+             "crashes": _M_CRASHES, "ring_spills": _M_SPILLS}
+
+
+class _ShmCounters:
+    """Dict-like view of the shared pwb/pfence/psync/crashes slots, so
+    ``nvm.counters["pwb"]`` reads the machine-wide count from any
+    process."""
+
+    __slots__ = ("_mv",)
+
+    def __init__(self, mv) -> None:
+        self._mv = mv
+
+    def __getitem__(self, key: str) -> int:
+        return self._mv[_CTR_SLOT[key]]
+
+    def __setitem__(self, key: str, value: int) -> None:
+        self._mv[_CTR_SLOT[key]] = value
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(_CTR_SLOT)
+
+    def keys(self):
+        return _CTR_SLOT.keys()
+
+    def snapshot(self) -> Dict[str, int]:
+        return {k: self._mv[v] for k, v in _CTR_SLOT.items()}
+
+    def __repr__(self) -> str:
+        return f"_ShmCounters({self.snapshot()})"
+
+
+class ShmBackend(ThreadBackend):
+    """``core.backend`` seam over one shared-memory segment.
+
+    Inherits the thread backend and overrides every factory whose
+    object must be visible across processes; the ``reset_*`` overrides
+    reset IN PLACE (fork-inherited views in workers must stay
+    attached).  All factories are create-before-fork: call them (i.e.
+    build runtimes/structures) before ``spawn_workers``.
+    """
+
+    kind = "shm"
+
+    #: striped-lock pool size: enough to make false sharing of stripes
+    #: unlikely at 8 workers, few enough to keep fd/semaphore count low.
+    N_STRIPES = 16
+
+    #: Entry backoff under true parallelism (see
+    #: ``ThreadBackend.announce_park``): park every announcement for
+    #: ~one round so a concurrent combiner adopts it — the measured
+    #: degree >= 2 the reproduction targets comes from this window.
+    #: Tunable per backend instance (mp_bench exposes --park).
+    PARK_PROB = 1.0
+    PARK_SECONDS = 1e-4
+
+    def __init__(self, data_words: int = 1 << 18, *,
+                 aux_i64: int = 1 << 16, ring_i64: int = 1 << 18) -> None:
+        from multiprocessing import shared_memory
+        self._ctx = multiprocessing.get_context("fork")
+        self.data_words = data_words
+        total = (_META_I64 + 2 * data_words * WORD_I64 + ring_i64
+                 + aux_i64)
+        self._shm = shared_memory.SharedMemory(create=True, size=total * 8)
+        self.mv = self._shm.buf.cast("q")
+        # fresh /dev/shm pages are zero-filled; meta needs two non-zeros
+        self.mv[_M_COUNT] = -1
+        self.mv[_M_SEED] = -1
+        self.vol_base = _META_I64
+        self.dur_base = self.vol_base + data_words * WORD_I64
+        self.ring_base = self.dur_base + data_words * WORD_I64
+        self.ring_cap = ring_i64
+        self.aux_base = self.ring_base + ring_i64
+        self.aux_cap = aux_i64
+        self._stripes = [self._ctx.Lock() for _ in range(self.N_STRIPES)]
+        self._alloc_lock = self._ctx.Lock()
+        self.nvm_lock = self._ctx.Lock()     # guards images/ring/counters
+        self.device_lock = self._ctx.Lock()  # wall persist_latency drains
+        self._closed = False
+
+    # ---------------- segment plumbing --------------------------------- #
+    def aux_alloc(self, n_i64: int) -> int:
+        """Bump-allocate ``n_i64`` aux slots; absolute i64 offset."""
+        with self._alloc_lock:
+            used = self.mv[_M_AUX]
+            if used + n_i64 > self.aux_cap:
+                raise MemoryError("shm backend aux area exhausted "
+                                  f"({self.aux_cap} i64)")
+            self.mv[_M_AUX] = used + n_i64
+            return self.aux_base + used
+
+    def stripe(self, off: int):
+        return self._stripes[off % self.N_STRIPES]
+
+    def close(self) -> None:
+        """Release the segment (call from the creating process, after
+        worker pools are joined).  Safe to call twice."""
+        if self._closed:
+            return
+        self._closed = True
+        mv, self.mv = self.mv, None
+        mv.release()
+        self._shm.close()
+        try:
+            self._shm.unlink()
+        except FileNotFoundError:
+            pass
+
+    # ---------------- factories ---------------------------------------- #
+    def mutex(self) -> ShmMutex:
+        return ShmMutex(self._ctx)
+
+    def cell(self, value: Any = None) -> ShmCell:
+        return ShmCell(self, value)
+
+    def atomic_int(self, value: int = 0, *, shared: bool = False,
+                   counters: Optional[Counters] = None,
+                   clock: Optional[Any] = None) -> ShmAtomicInt:
+        return ShmAtomicInt(self, value, shared=shared, counters=counters,
+                            clock=clock)
+
+    def atomic_ref(self, value: Any, *, shared: bool = False,
+                   counters: Optional[Counters] = None,
+                   clock: Optional[Any] = None,
+                   mirror: Optional[Tuple[Any, int]] = None) -> ShmAtomicRef:
+        return ShmAtomicRef(self, value, shared=shared, counters=counters,
+                            clock=clock, mirror=mirror)
+
+    def sref(self, nvm: Any, addr: int, value: int,
+             counters: Optional[Counters] = None) -> ShmSRef:
+        return ShmSRef(self, nvm, addr, value, counters)
+
+    def int_array(self, n: int, init: int = 0) -> ShmIntArray:
+        return ShmIntArray(self.mv, self.aux_alloc(n), n, init)
+
+    def int_matrix(self, rows: int, cols: int) -> List[ShmIntArray]:
+        return [self.int_array(cols) for _ in range(rows)]
+
+    def request_board(self, n_threads: int) -> ShmRequestBoard:
+        return ShmRequestBoard(self, n_threads)
+
+    def degree_stats(self) -> ShmDegreeStats:
+        return ShmDegreeStats(self)
+
+    def announce_park(self, prob: float, seconds: float
+                      ) -> Tuple[float, float]:
+        return self.PARK_PROB, self.PARK_SECONDS
+
+    # ---------------- in-place resets ----------------------------------- #
+    def reset_mutex(self, m: ShmMutex) -> ShmMutex:
+        m.reset()
+        return m
+
+    def reset_atomic_int(self, a: ShmAtomicInt, value: int = 0,
+                         **_kw) -> ShmAtomicInt:
+        a.reset(value)
+        return a
+
+    def reset_atomic_ref(self, a: ShmAtomicRef, value: Any, *,
+                         mirror: Optional[Tuple[Any, int]] = None,
+                         **_kw) -> ShmAtomicRef:
+        a.reset(value)
+        return a
+
+    def reset_sref(self, s: ShmSRef, nvm: Any, addr: int, value: int,
+                   counters: Optional[Counters] = None) -> ShmSRef:
+        s.reset(nvm, addr, value)
+        return s
+
+
+# --------------------------------------------------------------------- #
+# The NVM                                                               #
+# --------------------------------------------------------------------- #
+class ShmNVM(NVM):
+    """Simulated NVMM whose images, write-back ring, counters and crash
+    machinery live in the backend's shared segment.
+
+    Same interface and crash semantics as ``NVM`` with three
+    multiprocess-specific differences, all visible only to shm runs:
+
+      * fused persistence sentences always take the discrete path
+        (identical counters/durability — the fused forms are a
+        same-process lock elision that a cross-process lock cannot
+        reproduce), so the virtual clock/profile is unsupported here;
+      * ``crash()`` additionally raises the shared ``halted`` flag —
+        a SimulatedCrash only unwinds the process that hit it, so
+        survivors poll the flag from persistence instructions and wait
+        loops and stop as if their power was cut.  ``disarm_crash``
+        (called by ``CombiningRuntime.recover``) clears it;
+      * if the write-back ring fills, the oldest pending write-backs
+        are drained to the durable image early (counted in
+        ``ring_spills``).  Legal under explicit epoch persistency: the
+        lines were pwb'd, the hardware may complete them any time
+        before the psync.
+    """
+
+    def __init__(self, n_words: int = 1 << 18, *,
+                 backend: Optional[ShmBackend] = None,
+                 pwb_nop: bool = False, psync_nop: bool = False,
+                 persist_latency: float = 0.0) -> None:
+        if backend is None:
+            backend = ShmBackend(data_words=n_words)
+        if n_words > backend.data_words:
+            raise ValueError(f"n_words={n_words} exceeds backend segment "
+                             f"({backend.data_words} words)")
+        # deliberately NOT calling NVM.__init__: the images live in the
+        # segment, and every inherited method that touches them is
+        # overridden (the fused sentences dispatch through _fast_ok).
+        self.backend = backend
+        self.n_words = n_words
+        self._vol = _Words(backend.mv, backend.vol_base)
+        self._dur = _Words(backend.mv, backend.dur_base)
+        self._mv = backend.mv
+        self._lock = backend.nvm_lock
+        self.pwb_nop = pwb_nop
+        self.psync_nop = psync_nop
+        self.persist_latency = persist_latency
+        self.clock = None
+        self.force_discrete = False
+        self.counters = _ShmCounters(backend.mv)
+        self._crash_rng = None
+        mv = self._mv
+        with self._lock:
+            if mv[_M_ALLOC] == 0:
+                mv[_M_ALLOC] = LINE      # line 0 reserved (NULL)
+
+    # ------------------------------------------------------------------ #
+    @property
+    def halted(self) -> bool:
+        return self._mv[_M_HALT] != 0
+
+    def _fast_ok(self) -> bool:
+        return False        # fused sentences always take the discrete path
+
+    # ---------------- allocation --------------------------------------- #
+    def alloc(self, n_words: int, align_line: bool = True) -> int:
+        mv = self._mv
+        with self._lock:
+            ptr = mv[_M_ALLOC]
+            if align_line and ptr % LINE:
+                ptr += LINE - ptr % LINE
+            base = ptr
+            ptr += n_words
+            if ptr > self.n_words:
+                raise MemoryError("simulated (shm) NVMM exhausted")
+            mv[_M_ALLOC] = ptr
+            return base
+
+    # ---------------- volatile image ------------------------------------ #
+    def read(self, addr: int) -> Any:
+        return self._vol.get(addr)
+
+    def write(self, addr: int, value: Any) -> None:
+        self._vol.set(addr, value)
+
+    def read_range(self, addr: int, n: int) -> List[Any]:
+        return self._vol.get_range(addr, n)
+
+    def write_range(self, addr: int, values) -> None:
+        self._vol.set_range(addr, values)
+
+    def copy_range(self, dst: int, src: int, n: int) -> None:
+        mv = self._mv
+        a = self.backend.vol_base + WORD_I64 * src
+        d = self.backend.vol_base + WORD_I64 * dst
+        n3 = WORD_I64 * n
+        mv[d:d + n3] = mv[a:a + n3]
+
+    def durable_read(self, addr: int) -> Any:
+        return self._dur.get(addr)
+
+    # ---------------- write-back ring ------------------------------------ #
+    # Entry layout (i64): [epoch_id, first_line, n_lines,
+    #                      payload: n_lines * LINE * WORD_I64]
+    def _ring_append_locked(self, first: int, n_lines: int) -> None:
+        mv = self._mv
+        size = 3 + n_lines * LINE * WORD_I64
+        used = mv[_M_RING]
+        if used + size > self.backend.ring_cap:
+            # early completion of pending write-backs (see class doc)
+            self._drain_ring_locked()
+            mv[_M_SPILLS] += 1
+            used = 0
+            if size > self.backend.ring_cap:
+                raise MemoryError("shm write-back ring smaller than one "
+                                  f"pwb of {n_lines} lines")
+        o = self.backend.ring_base + used
+        mv[o] = mv[_M_EPOCH]
+        mv[o + 1] = first
+        mv[o + 2] = n_lines
+        src = self.backend.vol_base + WORD_I64 * first * LINE
+        n3 = n_lines * LINE * WORD_I64
+        mv[o + 3:o + 3 + n3] = mv[src:src + n3]
+        mv[_M_RING] = used + size
+        mv[_M_EFLAG] = 1
+
+    def _ring_entries_locked(self) -> List[Tuple[int, int, int, int]]:
+        """[(epoch, first_line, n_lines, payload_i64_offset)] in order."""
+        mv = self._mv
+        out = []
+        o = self.backend.ring_base
+        end = o + mv[_M_RING]
+        while o < end:
+            n_lines = mv[o + 2]
+            out.append((mv[o], mv[o + 1], n_lines, o + 3))
+            o += 3 + n_lines * LINE * WORD_I64
+        return out
+
+    def _drain_entry_locked(self, first: int, n_lines: int,
+                            payload: int) -> None:
+        mv = self._mv
+        dst = self.backend.dur_base + WORD_I64 * first * LINE
+        n3 = n_lines * LINE * WORD_I64
+        mv[dst:dst + n3] = mv[payload:payload + n3]
+
+    def _drain_ring_locked(self) -> List[Tuple[int, int]]:
+        drained = []
+        for _e, first, n_lines, payload in self._ring_entries_locked():
+            self._drain_entry_locked(first, n_lines, payload)
+            drained.append((first, n_lines))
+        self._mv[_M_RING] = 0
+        self._mv[_M_EFLAG] = 0
+        return drained
+
+    # ---------------- persistence instructions --------------------------- #
+    def _tick_crash_point(self) -> None:
+        mv = self._mv
+        if mv[_M_HALT]:
+            raise SimulatedCrash()
+        if mv[_M_COUNT] >= 0:
+            with self._lock:
+                cd = mv[_M_COUNT]
+                if cd < 0:           # another process just fired it
+                    fire = False
+                else:
+                    mv[_M_COUNT] = cd - 1
+                    fire = cd - 1 < 0
+                if fire:
+                    mv[_M_COUNT] = -1
+            if fire:
+                rng = self._crash_rng
+                if rng is None and mv[_M_SEED] >= 0:
+                    import random
+                    rng = random.Random(mv[_M_SEED])
+                self.crash(rng)
+                raise SimulatedCrash()
+
+    def _halt_check_locked(self) -> None:
+        """Raise before an instruction takes ANY shared effect on a
+        powered-off machine.  Must run under ``self._lock``: ``crash``
+        raises the flag under the same lock, so a surviving process can
+        never slip a ring append or counter bump past the cut."""
+        if self._mv[_M_HALT]:
+            raise SimulatedCrash()
+
+    def pwb(self, addr: int, n_words: int = 1) -> None:
+        first = addr // LINE
+        n_lines = (addr + n_words - 1) // LINE - first + 1
+        with self._lock:
+            self._halt_check_locked()
+            if not self.pwb_nop:
+                self._ring_append_locked(first, n_lines)
+            self._mv[_M_PWB] += n_lines
+        self._tick_crash_point()
+
+    pwb_range = pwb
+
+    def persist_lines(self, ranges) -> None:
+        if isinstance(ranges, list) and len(ranges) == 1:
+            addr, n_words = ranges[0]
+            self.pwb(addr, n_words)
+            return
+        runs = self._pending_lines(ranges)
+        if not runs:
+            return
+        n_total = sum(n for _first, n in runs)
+        with self._lock:
+            self._halt_check_locked()
+            if not self.pwb_nop:
+                for first, n_lines in runs:
+                    self._ring_append_locked(first, n_lines)
+            self._mv[_M_PWB] += n_total
+        self._tick_crash_point()
+
+    def pfence(self) -> None:
+        mv = self._mv
+        with self._lock:
+            self._halt_check_locked()
+            mv[_M_PFENCE] += 1
+            if mv[_M_EFLAG]:
+                mv[_M_EPOCH] += 1
+                mv[_M_EFLAG] = 0
+        self._tick_crash_point()
+
+    def psync(self) -> None:
+        drained: List[Tuple[int, int]] = []
+        with self._lock:
+            self._halt_check_locked()
+            self._mv[_M_PSYNC] += 1
+            if not self.psync_nop:
+                drained = self._drain_ring_locked()
+        if drained and self.persist_latency:
+            runs, total_lines = self._run_stats(drained)
+            cost = (self.persist_latency + runs * self.SEEK_COST
+                    + total_lines * self.STREAM_COST)
+            with self.backend.device_lock:
+                time.sleep(cost)
+        self._tick_crash_point()
+
+    # ---------------- crash / recovery ----------------------------------- #
+    def arm_crash(self, after_persist_ops: int, rng=None) -> None:
+        """Shared countdown: WHICHEVER process issues the
+        ``after_persist_ops``-th next persistence instruction crashes
+        the machine.  ``rng`` governs the adversarial drain when the
+        arming process itself trips the countdown; a different process
+        falls back to a seed captured here (same distribution, not the
+        same draw) — pass ``rng=None`` for the deterministic
+        drain-nothing cut either way."""
+        mv = self._mv
+        self._crash_rng = rng
+        mv[_M_SEED] = (-1 if rng is None
+                       else hash(rng.getstate()) & 0x7FFFFFFF)
+        mv[_M_COUNT] = after_persist_ops
+
+    def disarm_crash(self) -> None:
+        """Disarm any countdown AND clear the machine-off flag — the
+        runtime's ``recover`` calls this first, which is exactly when
+        the machine powers back on."""
+        mv = self._mv
+        mv[_M_COUNT] = -1
+        mv[_M_HALT] = 0
+        self._crash_rng = None
+
+    def crash(self, rng=None) -> None:
+        mv = self._mv
+        with self._lock:
+            mv[_M_CRASHES] += 1
+            entries = self._ring_entries_locked()
+            if rng is not None:
+                # mirror NVM.crash: epochs = distinct ids in order plus
+                # a trailing empty epoch when the current one is empty
+                distinct: List[int] = []
+                for e, _f, _n, _p in entries:
+                    if not distinct or distinct[-1] != e:
+                        distinct.append(e)
+                n_epochs = len(distinct) + (0 if mv[_M_EFLAG] else 1)
+                cut = rng.randint(0, n_epochs - 1)
+                for e, first, n_lines, payload in entries:
+                    if e in distinct[:cut]:
+                        self._drain_entry_locked(first, n_lines, payload)
+                if cut < len(distinct):
+                    cut_id = distinct[cut]
+                    cut_epoch: List[Tuple[int, int]] = []
+                    for e, first, n_lines, payload in entries:
+                        if e == cut_id:
+                            for j in range(n_lines):
+                                cut_epoch.append(
+                                    (first + j,
+                                     payload + j * LINE * WORD_I64))
+                    taken_upto: Dict[int, int] = {}
+                    for i, (line, _snap) in enumerate(cut_epoch):
+                        if rng.random() < 0.5:
+                            taken_upto[line] = i
+                    for i, (line, snap) in enumerate(cut_epoch):
+                        if i <= taken_upto.get(line, -1):
+                            self._drain_entry_locked(line, 1, snap)
+            mv[_M_RING] = 0
+            mv[_M_EFLAG] = 0
+            mv[_M_EPOCH] = 0
+            # volatile image lost: reset to the durable one (raw copy)
+            n3 = self.n_words * WORD_I64
+            mv[self.backend.vol_base:self.backend.vol_base + n3] = \
+                mv[self.backend.dur_base:self.backend.dur_base + n3]
+            mv[_M_COUNT] = -1
+            mv[_M_HALT] = 1          # machine off until disarm_crash
+
+    # ---------------- introspection -------------------------------------- #
+    def pending_lines(self) -> int:
+        with self._lock:
+            return sum(n for _e, _f, n, _p in self._ring_entries_locked())
+
+    def reset_counters(self) -> None:
+        mv = self._mv
+        for slot in _CTR_SLOT.values():
+            mv[slot] = 0
+
+    def close(self) -> None:
+        self._vol = self._dur = self._mv = None
+        self.counters = None
+        self.backend.close()

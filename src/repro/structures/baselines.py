@@ -26,12 +26,10 @@ directly comparable; with ``pwb_nop``/``psync_nop`` they reproduce the
 
 from __future__ import annotations
 
-import threading
 import time
-from typing import Any, List, Optional
+from typing import Any, List
 
-from ..core.atomics import AtomicInt, AtomicRef
-from ..core.nvm import NVM
+from ..core.nvm import NVM, SimulatedCrash
 from ..core.objects import SeqObject
 from .nodes import NODE_WORDS, NULL, NodePool
 
@@ -47,7 +45,7 @@ class LockDirectObject:
         nvm.pwb(self.st_base, obj.state_words)
         nvm.psync()
         nvm.reset_counters()
-        self._lock = threading.Lock()
+        self._lock = nvm.backend.mutex()
         # Virtual-clock release time of the last critical section: the
         # next holder merges it, so modeled time reflects the full
         # serialization a coarse lock imposes (no amortization).
@@ -81,7 +79,7 @@ class LockDirectObject:
         """Post-crash re-initialization: only the lock is volatile.  No
         rollback is possible — a crash mid-update can leave torn state
         (the failure mode the paper's combining protocols remove)."""
-        self._lock = threading.Lock()
+        self._lock = self.nvm.backend.reset_mutex(self._lock)
 
     def recover(self, p: int, func: str, args: Any, seq: int) -> Any:
         """Not detectable: an in-flight op is simply re-executed
@@ -101,7 +99,7 @@ class LockUndoLogObject:
         nvm.pwb(self.st_base, obj.state_words)
         nvm.psync()
         nvm.reset_counters()
-        self._lock = threading.Lock()
+        self._lock = nvm.backend.mutex()
         self._lock_vt = 0.0   # see LockDirectObject
 
     def op(self, p: int, func: str, args: Any, seq: int) -> Any:
@@ -162,7 +160,7 @@ class LockUndoLogObject:
         update from the persisted undo record (PMDK-style recovery).
         Both log layouts are handled: ranged entries for objects with a
         ``touch_plan``, full-state snapshot otherwise."""
-        self._lock = threading.Lock()
+        self._lock = self.nvm.backend.reset_mutex(self._lock)
         nvm = self.nvm
         if nvm.read(self.log_base + self.obj.state_words) == 1:
             if hasattr(self.obj, "touch_plan"):
@@ -196,6 +194,16 @@ class DurableMSQueue:
     predecessor's next pointer, and the head/tail word it swung — every
     thread runs its own persistence instructions (vs. one combiner),
     which is exactly the contrast the paper's Figures 4-5 measure.
+
+    The volatile head/tail refs MIRROR into their NVM words *inside*
+    the SC (``AtomicRef(mirror=...)``).  The seed mirrored with a plain
+    store after the SC returned, which races under real parallelism:
+    a loser of two back-to-back head swings could overwrite the
+    winner's mirror with the older pointer, and the subsequent pwb then
+    snapshots the REGRESSED head into NVMM — post-crash recovery
+    rebuilds head pointing at an already-dequeued node (duplicate
+    dequeue).  Same class as the PR 2 lost-link fix; found auditing the
+    baselines under the multiprocess harness.
     """
 
     def __init__(self, nvm: NVM, n_threads: int, chunk_nodes: int = 256) -> None:
@@ -215,9 +223,12 @@ class DurableMSQueue:
         nvm.pwb(self.tail_addr, 1)
         nvm.psync()
         nvm.reset_counters()
-        self.head = AtomicRef(dummy, shared=True, clock=nvm.clock)
-        self.tail = AtomicRef(dummy, shared=True, clock=nvm.clock)
-        self._link_mutex = threading.Lock()
+        be = nvm.backend
+        self.head = be.atomic_ref(dummy, shared=True, clock=nvm.clock,
+                                  mirror=(nvm, self.head_addr))
+        self.tail = be.atomic_ref(dummy, shared=True, clock=nvm.clock,
+                                  mirror=(nvm, self.tail_addr))
+        self._link_mutex = be.mutex()
 
     def enqueue(self, p: int, value: Any, seq: int) -> Any:
         nvm = self.nvm
@@ -246,12 +257,15 @@ class DurableMSQueue:
                     nvm.pwb(last + 1, 1)
                     nvm.pfence()
                     if self.tail.sc(ver, node):
-                        nvm.write(self.tail_addr, node)
+                        # mirror write happened inside the SC (no
+                        # stale-overwrite window); persist it here
                         nvm.pwb(self.tail_addr, 1)
                     nvm.psync()
                     return "ACK"
             else:
                 self.tail.sc(ver, nxt)         # help swing tail
+            if nvm.halted:
+                raise SimulatedCrash()
             time.sleep(0)
 
     def dequeue(self, p: int, seq: int) -> Any:
@@ -262,10 +276,14 @@ class DurableMSQueue:
             if nxt == NULL:
                 return None
             if self.head.sc(ver, nxt):
-                nvm.write(self.head_addr, nxt)
+                # head_addr mirrored inside the SC: mirror order always
+                # matches swing order, so the pwb snapshot can never
+                # regress the durable head (see class docstring)
                 nvm.pwb(self.head_addr, 1)
                 nvm.psync()
                 return nvm.read(nxt)
+            if nvm.halted:
+                raise SimulatedCrash()
             time.sleep(0)
 
     def drain(self) -> List[Any]:
@@ -289,8 +307,14 @@ class DurableMSQueue:
         nvm.write(self.tail_addr, tail)
         nvm.pwb(self.tail_addr, 1)
         nvm.psync()
-        self.head = AtomicRef(head, shared=True, clock=nvm.clock)
-        self.tail = AtomicRef(tail, shared=True, clock=nvm.clock)
+        be = nvm.backend
+        self.head = be.reset_atomic_ref(self.head, head, shared=True,
+                                        clock=nvm.clock,
+                                        mirror=(nvm, self.head_addr))
+        self.tail = be.reset_atomic_ref(self.tail, tail, shared=True,
+                                        clock=nvm.clock,
+                                        mirror=(nvm, self.tail_addr))
+        self._link_mutex = be.reset_mutex(self._link_mutex)
 
     def recover(self, p: int, func: str, args: Any, seq: int) -> Any:
         """Not detectable (the FHMP-class queue has no announcement log):
@@ -322,11 +346,14 @@ class DFCStack:
         nvm.pwb(self.top_addr, 1)
         nvm.psync()
         nvm.reset_counters()
-        self.lock = AtomicInt(0, shared=True, clock=nvm.clock)
+        self.lock = nvm.backend.atomic_int(0, shared=True, clock=nvm.clock)
         # Virtual-clock announce times + last round's commit time (the
         # combiner merges announces, served threads merge the commit).
         self._ann_vt = [0.0] * n_threads
         self._round_end_vt = 0.0
+        # measured degree: DFC combines too — its cost difference vs
+        # PBComb is WHERE it persists, not whether it batches
+        self.stats = nvm.backend.degree_stats()
 
     def op(self, p: int, func: str, args: Any, seq: int) -> Any:
         nvm = self.nvm
@@ -359,6 +386,8 @@ class DFCStack:
                 self.lock.store(self.lock.load() + 1)
                 if nvm.read(a + 4) == seq:
                     return nvm.read(a + 3)
+            if nvm.halted:
+                raise SimulatedCrash()
             time.sleep(0)
 
     def _combine(self) -> None:
@@ -366,6 +395,7 @@ class DFCStack:
         clk = nvm.clock
         if clk is not None:
             clk.advance(clk.profile.round_ns)
+        served = 0
         for q in range(self.n):
             a = self.ann_base[q]
             seq = nvm.read(a + 2)
@@ -393,7 +423,9 @@ class DFCStack:
                 nvm.write(a + 4, seq)
                 nvm.pwb(a + 3, 2)                   # persist response alone
                 nvm.pfence()
+                served += 1
         nvm.psync()
+        self.stats.record(served)
         if clk is not None:
             self._round_end_vt = clk.now()
 
@@ -409,7 +441,8 @@ class DFCStack:
         responses and done-marks live in NVMM (DFC's design).  The
         virtual-clock timestamps survive (logical time is monotone
         across crashes; stale merges only ever charge more)."""
-        self.lock = AtomicInt(0, shared=True, clock=self.nvm.clock)
+        self.lock = self.nvm.backend.reset_atomic_int(
+            self.lock, 0, shared=True, clock=self.nvm.clock)
 
     def recover(self, p: int, func: str, args: Any, seq: int) -> Any:
         """Done-mark fast path: if the persisted done-mark carries this

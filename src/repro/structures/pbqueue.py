@@ -136,13 +136,23 @@ class PBQueue:
         self.pool = NodePool(nvm, n_threads,
                              PerThreadFreeList(n_threads) if recycle else None,
                              chunk_nodes)
-        # Shared volatile variable (Alg 7 re-seeds it on recovery).
-        self.old_tail = self.dummy
+        # Shared volatile variable (Alg 7 re-seeds it on recovery) — a
+        # backend cell: the enqueue combiner that advances it and the
+        # dequeue combiner that reads it may live in different processes.
+        self._old_tail = nvm.backend.cell(self.dummy)
         self.enq = _EnqInstance(nvm, n_threads, _EnqState(self.dummy), self,
                                 counters=counters)
         self.deq = _DeqInstance(nvm, n_threads, _DeqState(self.dummy), self,
                                 counters=counters)
         nvm.reset_counters()
+
+    @property
+    def old_tail(self) -> int:
+        return self._old_tail.value
+
+    @old_tail.setter
+    def old_tail(self, v: int) -> None:
+        self._old_tail.value = v
 
     # -------------------- recovery (Algorithm 7) ------------------------ #
     def reset_volatile(self) -> None:

@@ -90,6 +90,9 @@ class PBStack(PBComb):
             nvm.write(self._deact_addr(ind, qp), req_push.activate)
             nvm.write(self._retval_addr(ind, qo), req_push.args)
             nvm.write(self._deact_addr(ind, qo), req_pop.activate)
+            # eliminated pairs are served by this round too: the main
+            # simulation loop skips them, so count them here
+            self._round_served += 2
 
     def _post_simulation(self, ind: int, combiner: int):
         # The round's new nodes persist before the StateRec as ONE

@@ -78,6 +78,9 @@ class PWFStack(PWFComb):
             nvm.write(self._deact_addr(slot, qp), req_push.activate)
             nvm.write(self._retval_addr(slot, qo), req_push.args)
             nvm.write(self._deact_addr(slot, qo), req_pop.activate)
+            # eliminated pairs are served by this attempt too: the main
+            # scan skips them, so count them for the measured degree
+            self._attempt_served[p] += 2
 
     def _pre_publish(self, slot: int, p: int):
         alloc = self._ctx[p].to_persist

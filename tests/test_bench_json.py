@@ -25,7 +25,8 @@ EPS = 0.05
 
 V1_KEYS = {"name", "us_per_op", "pwbs_per_op", "psyncs_per_op"}
 V2_KEYS = V1_KEYS | {"modeled_us_per_op", "modeled_pwbs_per_op",
-                     "modeled_psyncs_per_op", "profile"}
+                     "modeled_psyncs_per_op", "profile",
+                     "degree_mean", "degree_max"}
 
 
 @pytest.fixture(scope="module")
@@ -63,6 +64,12 @@ def test_schema(bench_doc):
             assert r["profile"] == bench_doc["profile"]
             assert all(isinstance(v, (int, float)) and v >= 0
                        for v in modeled[:3]), r
+        # measured-degree columns: both set (combining rows of the
+        # matrix bench) or both null; never negative
+        if r["degree_mean"] is None:
+            assert r["degree_max"] is None, r
+        else:
+            assert r["degree_mean"] >= 0 and r["degree_max"] >= 0, r
 
 
 def test_covers_figures_and_framework(bench_doc):
@@ -79,6 +86,22 @@ def test_most_rows_carry_modeled_columns(bench_doc):
         table = r["name"].split("/", 1)[0]
         if table.startswith("fig") or table == "matrix":
             assert r["profile"] is not None, r
+
+
+def test_matrix_degree_columns(bench_doc):
+    """Combining matrix rows carry the measured degree (GIL-pinned
+    near 1 for these threaded runs — mp_bench is where it grows);
+    per-op-persist baselines carry nulls (nothing combines)."""
+    for r in bench_doc["rows"]:
+        if not r["name"].startswith("matrix/"):
+            continue
+        proto = r["name"].rsplit("/", 1)[1]
+        if proto in ("pbcomb", "pwfcomb"):
+            assert r["degree_mean"] is not None, r
+            assert r["degree_mean"] >= 0.9, r
+            assert r["degree_max"] >= 1, r
+        elif proto in ("lock-direct", "lock-undo", "durable-ms"):
+            assert r["degree_mean"] is None, r
 
 
 def test_combining_rows_one_psync_per_round(bench_doc):

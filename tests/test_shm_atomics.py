@@ -1,0 +1,273 @@
+"""Shared-memory atomics layer (core/shm.py): value codec, lock-striped
+CAS emulation under real cross-process contention, and the ShmNVM's
+crash/replay equivalence with the in-thread backend.
+
+These tests fork real processes (the whole point of the layer); sizes
+are kept small so the suite stays fast on 2-core CI runners.
+"""
+
+import multiprocessing
+import random
+import threading
+
+import pytest
+
+from repro.api import CombiningRuntime
+from repro.core import NVM, SimulatedCrash
+from repro.core.shm import (ShmAtomicInt, ShmAtomicRef, ShmBackend,
+                            ShmMutex, ShmNVM, decode, encode)
+
+CTX = multiprocessing.get_context("fork")
+
+
+@pytest.fixture
+def be():
+    b = ShmBackend(data_words=1 << 12, aux_i64=1 << 12, ring_i64=1 << 14)
+    yield b
+    b.close()
+
+
+# --------------------------------------------------------------------- #
+# value codec                                                           #
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("value", [
+    0, 1, -1, 2**62, -(2**62), None, True, False, 1.5, -0.0, 3.14159,
+    "", "ACK", "ENQ", "HDELETEMIN", "sixteen-bytes-xy"])
+def test_codec_round_trip(value):
+    out = decode(*encode(value))
+    assert out == value and type(out) is type(value)
+
+
+def test_codec_rejects_out_of_domain():
+    with pytest.raises(TypeError):
+        encode((1, 2))                    # tuples don't fit a word
+    with pytest.raises(TypeError):
+        encode("seventeen bytes!!")       # > 16 utf-8 bytes
+    with pytest.raises(TypeError):
+        encode(2**64)                     # > int64
+
+
+def test_shm_nvm_word_domain(be):
+    nvm = ShmNVM(1 << 12, backend=be)
+    addr = nvm.alloc(8)
+    values = [7, None, "ACK", True, 2.5, -3]
+    nvm.write_range(addr, values)
+    assert nvm.read_range(addr, len(values)) == values
+    nvm.pwb(addr, len(values))
+    nvm.psync()
+    assert [nvm.durable_read(addr + i) for i in range(len(values))] \
+        == values
+
+
+# --------------------------------------------------------------------- #
+# cross-process CAS contention                                          #
+# --------------------------------------------------------------------- #
+def _cas_worker(a, n, done_q):
+    ok = 0
+    for _ in range(n):
+        while True:                       # CAS-increment retry loop
+            v = a.load()
+            if a.cas(v, v + 1):
+                ok += 1
+                break
+    done_q.put(ok)
+
+
+def test_atomic_int_cas_contention_across_processes(be):
+    n_procs, n_incr = 4, 400
+    a = ShmAtomicInt(be, 0)
+    q = CTX.SimpleQueue()
+    procs = [CTX.Process(target=_cas_worker, args=(a, n_incr, q))
+             for _ in range(n_procs)]
+    for p in procs:
+        p.start()
+    total = sum(q.get() for _ in procs)
+    for p in procs:
+        p.join()
+    # every CAS-increment that reported success is visible exactly once
+    assert total == n_procs * n_incr
+    assert a.load() == n_procs * n_incr
+
+
+def _faa_worker(a, n):
+    for _ in range(n):
+        a.fetch_add(1)
+
+
+def test_atomic_int_fetch_add_across_processes(be):
+    a = ShmAtomicInt(be, 0)
+    procs = [CTX.Process(target=_faa_worker, args=(a, 500))
+             for _ in range(4)]
+    for p in procs:
+        p.start()
+    for p in procs:
+        p.join()
+    assert a.load() == 2000
+
+
+def _sc_worker(ref, n, done_q):
+    wins = 0
+    for _ in range(n):
+        val, ver = ref.ll()
+        if ref.sc(ver, val + 1):
+            wins += 1
+    done_q.put(wins)
+
+
+def test_atomic_ref_sc_versioning_across_processes(be):
+    nvm = ShmNVM(1 << 12, backend=be)
+    mirror_addr = nvm.alloc(1)
+    ref = ShmAtomicRef(be, 0, mirror=(nvm, mirror_addr))
+    q = CTX.SimpleQueue()
+    procs = [CTX.Process(target=_sc_worker, args=(ref, 300, q))
+             for _ in range(4)]
+    for p in procs:
+        p.start()
+    wins = sum(q.get() for _ in procs)
+    for p in procs:
+        p.join()
+    # SC semantics: value advanced exactly once per successful SC, and
+    # the NVM mirror (written inside the SC) matches the final value —
+    # the lost-link-class guarantee the DurableMSQueue fix relies on
+    assert ref.load() == wins
+    assert nvm.read(mirror_addr) == wins
+
+
+def _mutex_worker(m, cell, n):
+    for _ in range(n):
+        with m:
+            cell.value = cell.value + 1   # non-atomic read-modify-write
+
+
+def test_mutex_excludes_across_processes(be):
+    m = ShmMutex(be._ctx)
+    cell = be.cell(0)
+    procs = [CTX.Process(target=_mutex_worker, args=(m, cell, 300))
+             for _ in range(4)]
+    for p in procs:
+        p.start()
+    for p in procs:
+        p.join()
+    assert cell.value == 1200             # no lost updates under the lock
+
+
+def test_mutex_reset_releases_dead_holder(be):
+    m = ShmMutex(be._ctx)
+    assert m.acquire(False)
+    # holder "died" without releasing; reset forces one free permit
+    m.reset()
+    assert m.acquire(False)
+    m.release()
+    m.reset()                             # reset of a free mutex: still one
+    assert m.acquire(False)
+    assert not m.acquire(False)
+    m.release()
+
+
+# --------------------------------------------------------------------- #
+# replay equivalence vs the in-thread backend                           #
+# --------------------------------------------------------------------- #
+def _scripted_run(backend, crash_after, protocol):
+    """Deterministic single-process op script with an armed crash;
+    returns (trace, replayed responses, post-recovery snapshot)."""
+    rt = CombiningRuntime(n_threads=2, backend=backend, nvm_words=1 << 16)
+    try:
+        obj = rt.make("queue", protocol)
+        bound = [rt.attach(p).bind(obj) for p in range(2)]
+        rt.nvm.arm_crash(crash_after)
+        trace = []
+        try:
+            for i in range(12):
+                trace.append(("enq", bound[i % 2].enqueue(i)))
+                if i % 3 == 2:
+                    trace.append(("deq", bound[(i + 1) % 2].dequeue()))
+        except SimulatedCrash:
+            trace.append("CRASH")
+        replay = rt.recover()
+        return trace, sorted(replay.items()), obj.snapshot()
+    finally:
+        rt.close()
+
+
+@pytest.mark.parametrize("protocol",
+                         ["pbcomb", "pwfcomb", "lock-undo", "durable-ms"])
+@pytest.mark.parametrize("crash_after", [3, 7, 11, 16, 25, 999])
+def test_replay_equivalence_threads_vs_shm(protocol, crash_after):
+    """The shm NVM must be indistinguishable from the in-thread one for
+    a deterministic schedule: same responses, same crash point, same
+    replayed recovery responses, same post-recovery state."""
+    assert _scripted_run("threads", crash_after, protocol) \
+        == _scripted_run("shm", crash_after, protocol)
+
+
+def test_counters_match_threads_vs_shm():
+    """pwb/pfence/psync arithmetic is identical across backends (the
+    shm discrete path mirrors the fused sentences' counter math)."""
+    def counters(backend):
+        rt = CombiningRuntime(n_threads=2, backend=backend,
+                              nvm_words=1 << 16)
+        try:
+            obj = rt.make("stack", "pbcomb")
+            b = rt.attach(0).bind(obj)
+            for i in range(10):
+                b.push(i)
+            for _ in range(5):
+                b.pop()
+            c = rt.nvm.counters
+            return {k: c[k] for k in ("pwb", "pfence", "psync")}
+        finally:
+            rt.close()
+
+    assert counters("threads") == counters("shm")
+
+
+def test_adversarial_crash_drain_shm():
+    """crash(rng) on the shm ring: epoch-prefix drains land in the
+    durable image; recovery from every cut is a consistent queue."""
+    for seed in range(6):
+        rt = CombiningRuntime(n_threads=2, backend="shm",
+                              nvm_words=1 << 16)
+        try:
+            obj = rt.make("queue", "pbcomb")
+            b = rt.attach(0).bind(obj)
+            for i in range(8):
+                b.enqueue(i)
+            rt.crash(random.Random(seed))
+            rt.recover()
+            snap = obj.snapshot()
+            # every completed enqueue was durable pre-crash: psync
+            # before respond — the adversary cannot lose them
+            assert snap == list(range(8))
+        finally:
+            rt.close()
+
+
+def test_ring_spill_is_legal_early_completion():
+    """Overflowing the write-back ring drains early instead of dying;
+    psync/crash semantics stay correct."""
+    be = ShmBackend(data_words=1 << 12, aux_i64=1 << 12,
+                    ring_i64=256)           # tiny ring: a few entries
+    try:
+        nvm = ShmNVM(1 << 12, backend=be)
+        addr = nvm.alloc(64)
+        for i in range(64):
+            nvm.write(addr + i, i)
+            nvm.pwb(addr + i, 1)
+        assert nvm.counters["ring_spills"] > 0
+        nvm.psync()
+        assert [nvm.durable_read(addr + i) for i in range(64)] \
+            == list(range(64))
+    finally:
+        be.close()
+
+
+def test_shm_rejects_profile():
+    with pytest.raises(ValueError):
+        CombiningRuntime(backend="shm", profile="optane")
+
+
+def test_thread_backend_unchanged_by_seam():
+    """The seam returns plain threading primitives for thread NVMs —
+    the gated modeled trajectory runs on exactly the seed's objects."""
+    nvm = NVM(1 << 12)
+    assert type(nvm.backend.mutex()) is type(threading.Lock())
