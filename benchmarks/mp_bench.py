@@ -1,5 +1,6 @@
-"""Multiprocess measured-degree benchmark: the structure matrix driven
-by fork()ed worker processes against the shared-memory backend.
+"""Multiprocess measured-degree benchmark: the structure matrix PLUS the
+serving/checkpoint workloads driven by fork()ed worker processes against
+the shared-memory backend.
 
 This is the measured counterpart of the modeled degree-4 staging: every
 (kind, protocol) registry cell runs the add/remove-pairs workload under
@@ -7,32 +8,49 @@ This is the measured counterpart of the modeled degree-4 staging: every
 ``spawn_workers``), recording wall us/op, pwbs/psyncs per op from the
 machine-wide shared counters, and the MEASURED combining degree
 (requests served per round) that CPython's GIL pins near 1 for the
-thread benches.  The deterministic modeled columns ride along per cell
-(same virtual-clock pass the perf gate diffs), so one row shows both
-sides of the reproduction.
+thread benches.  The deterministic modeled columns ride along per
+matrix cell (same virtual-clock pass the perf gate diffs), so one row
+shows both sides of the reproduction.
+
+New in bench.mp.v2 (DESIGN.md §8): the repo's richest scenarios run
+cross-process too —
+
+  * ``serving/*`` rows: each worker completes toy generations and
+    RECORDs the rich (blob-heap) responses into one shared durable
+    log; combining rounds persist d completions per psync.
+  * ``checkpoint/*`` rows: each worker announces persist-step-N with a
+    multi-word shard payload; newest step wins, d announcements ride
+    one psync.
+  * both run on a 2-segment (NUMA-ish) ShmNVM: per-segment psync
+    columns show each structure draining through its own modeled
+    device, and ``ring_spills`` surfaces early write-back completions
+    instead of folding them into the write-back counts.
 
 Run:  PYTHONPATH=src python -m benchmarks.mp_bench
           [--quick] [--workers 2,4,8] [--json BENCH_mp.json] [--check]
           [--park PROB:SECONDS] [--thread-probe]
 
 ``--check`` enforces the paper's amortization measurably (the mp-smoke
-CI gate): with 4 workers queue/pbcomb must combine at degree_mean >= 2
-and every combining row's wall psync/op must be strictly below every
-per-op-persist baseline row's (lock-direct / lock-undo / durable-ms).
+CI gate): with 4 workers queue/pbcomb, serving/pbcomb and
+checkpoint/pbcomb must combine at degree_mean >= 2 and every combining
+row's wall psync/op must be strictly below its per-op-persist floor
+(lock-direct / lock-undo / durable-ms rows of the same table).
 
 ``--thread-probe`` instead runs the same workload on the THREAD backend
 and prints its measured degree — the 3.13t CI scout uses it to detect
 when free-threaded CPython starts lifting the GIL ceiling without any
 fork machinery.
 
-JSON schema (``bench.mp.v1``)::
+JSON schema (``bench.mp.v2``, superset of v1)::
 
-    {"schema": "bench.mp.v1", "tag": str, "quick": bool,
+    {"schema": "bench.mp.v2", "tag": str, "quick": bool,
      "workers": [2, 4, 8], "park": [prob, seconds],
-     "rows": [{"name": "<kind>/<proto>", "workers": int,
+     "rows": [{"name": "<table>/<proto>", "workers": int,
                "us_per_op": float, "pwbs_per_op": float,
                "psyncs_per_op": float, "rounds": int|null,
                "degree_mean": float|null, "degree_max": int|null,
+               "segments": int, "seg_psyncs_per_op": [float, ...],
+               "ring_spills": int,
                "modeled_us_per_op": float|null,
                "modeled_pwbs_per_op": float|null,
                "modeled_psyncs_per_op": float|null,
@@ -58,6 +76,33 @@ COMBINING = {"pbcomb", "pwfcomb"}
 
 KINDS = ("queue", "stack")
 
+#: protocols benched for the serving/checkpoint tables (the lock row is
+#: the measured per-op-persist floor the gate compares against)
+WORKLOAD_PROTOS = ("pbcomb", "pwfcomb", "lock-direct")
+
+#: segments for the serving/checkpoint cells: response log and
+#: checkpoint state land on different modeled devices (round-robin)
+WORKLOAD_SEGMENTS = 2
+
+
+def _finish_row(rt, name: str, workers: int, res, degree) -> dict:
+    c = rt.nvm.counters
+    ops = res.ops_done
+    segs = rt.nvm.segment_counters()
+    row = {"name": name, "workers": workers,
+           "us_per_op": res.wall_s / ops * 1e6,
+           "pwbs_per_op": c["pwb"] / ops,
+           "psyncs_per_op": c["psync"] / ops,
+           "rounds": None, "degree_mean": None, "degree_max": None,
+           "segments": len(segs),
+           "seg_psyncs_per_op": [s["psync"] / ops for s in segs],
+           "ring_spills": c["ring_spills"]}
+    if degree is not None and degree["rounds"]:
+        row["rounds"] = degree["rounds"]
+        row["degree_mean"] = degree["ops_combined"] / degree["rounds"]
+        row["degree_max"] = degree["degree_max"]
+    return row
+
 
 def bench_cell(kind: str, protocol: str, workers: int, pairs: int,
                warmup: int = 20) -> dict:
@@ -71,20 +116,91 @@ def bench_cell(kind: str, protocol: str, workers: int, pairs: int,
             rt.nvm.reset_counters()
             obj.adapter.reset_degree_stats(obj.core)
             res = pool.run_pairs(obj, pairs)
-            c = rt.nvm.counters
-            pwb, psync = c["pwb"], c["psync"]
             degree = obj.adapter.degree_stats(obj.core)
-        ops = res.ops_done
-        row = {"name": f"{kind}/{protocol}", "workers": workers,
-               "us_per_op": res.wall_s / ops * 1e6,
-               "pwbs_per_op": pwb / ops,
-               "psyncs_per_op": psync / ops,
-               "rounds": None, "degree_mean": None, "degree_max": None}
-        if degree is not None and degree["rounds"]:
-            row["rounds"] = degree["rounds"]
-            row["degree_mean"] = degree["ops_combined"] / degree["rounds"]
-            row["degree_max"] = degree["degree_max"]
-        return row
+            return _finish_row(rt, f"{kind}/{protocol}", workers, res,
+                               degree)
+    finally:
+        rt.close()
+
+
+def bench_serving_cell(protocol: str, workers: int, reqs: int,
+                       gen_len: int = 16) -> dict:
+    """Serving completion path over shm: ``reqs`` toy generations per
+    worker, each RECORDed (rich blob payload) into one shared log."""
+    rt = CombiningRuntime(n_threads=workers, backend="shm",
+                          segments=WORKLOAD_SEGMENTS)
+    try:
+        log = rt.make("log", protocol, n_clients=workers)
+        with rt.spawn_workers(workers) as pool:
+            warm = max(4, reqs // 10)
+            pool.run_serving(log, warm, gen_len=gen_len)
+            rt.nvm.reset_counters()
+            log.adapter.reset_degree_stats(log.core)
+            res = pool.run_serving(log, reqs, gen_len=gen_len,
+                                   seq_base=warm)
+            degree = log.adapter.degree_stats(log.core)
+            return _finish_row(rt, f"serving/{protocol}", workers, res,
+                               degree)
+    finally:
+        rt.close()
+
+
+def bench_checkpoint_cell(protocol: str, workers: int, rounds: int,
+                          payload_words: int = 64) -> dict:
+    """Checkpoint commit path over shm: ``rounds`` persist-step
+    announcements per worker with a multi-word shard payload."""
+    rt = CombiningRuntime(n_threads=workers, backend="shm",
+                          segments=WORKLOAD_SEGMENTS)
+    try:
+        ck = rt.make("ckpt", protocol)
+        with rt.spawn_workers(workers) as pool:
+            warm = max(2, rounds // 10)
+            pool.run_checkpoint(ck, warm, payload_words=payload_words)
+            rt.nvm.reset_counters()
+            ck.adapter.reset_degree_stats(ck.core)
+            res = pool.run_checkpoint(ck, rounds,
+                                      payload_words=payload_words,
+                                      step_base=warm)
+            degree = ck.adapter.degree_stats(ck.core)
+            return _finish_row(rt, f"checkpoint/{protocol}", workers,
+                               res, degree)
+    finally:
+        rt.close()
+
+
+class _JoinedResult:
+    """ops/wall aggregate over successive pool commands (mixed cell)."""
+
+    def __init__(self, *results) -> None:
+        self.ops_done = sum(r.ops_done for r in results)
+        self.wall_s = sum(r.wall_s for r in results)
+
+
+def bench_mixed_cell(workers: int, reqs: int, rounds: int) -> dict:
+    """Serving AND checkpoint structures in ONE runtime, placed by the
+    round-robin affinity policy on different segments — the row whose
+    per-segment psync columns show both modeled devices engaged (the
+    single-device funnel the multi-segment NVM removes)."""
+    rt = CombiningRuntime(n_threads=workers, backend="shm",
+                          segments=WORKLOAD_SEGMENTS)
+    try:
+        log = rt.make("log", "pbcomb", n_clients=workers)   # segment 0
+        ck = rt.make("ckpt", "pbcomb")                      # segment 1
+        with rt.spawn_workers(workers) as pool:
+            warm_s, warm_c = max(4, reqs // 10), max(2, rounds // 10)
+            pool.run_serving(log, warm_s)
+            pool.run_checkpoint(ck, warm_c)
+            rt.nvm.reset_counters()
+            log.adapter.reset_degree_stats(log.core)
+            ck.adapter.reset_degree_stats(ck.core)
+            res = _JoinedResult(
+                pool.run_serving(log, reqs, seq_base=warm_s),
+                pool.run_checkpoint(ck, rounds, step_base=warm_c))
+            from repro.core import merge_degree_stats
+            degree = merge_degree_stats(
+                [log.adapter.degree_stats(log.core),
+                 ck.adapter.degree_stats(ck.core)])
+            return _finish_row(rt, "mixed/pbcomb", workers, res, degree)
     finally:
         rt.close()
 
@@ -125,23 +241,37 @@ def check_rows(rows, workers: int = 4) -> list:
     """The mp-smoke acceptance gate; returns failure strings."""
     failures = []
     at_w = {r["name"]: r for r in rows if r["workers"] == workers}
-    qpb = at_w.get("queue/pbcomb")
-    if qpb is None:
-        return [f"no queue/pbcomb row at {workers} workers"]
-    if (qpb["degree_mean"] or 0) < 2.0:
-        failures.append(
-            f"queue/pbcomb@{workers}w measured degree_mean "
-            f"{qpb['degree_mean'] or 0.0:.2f} < 2.0 — true-parallel "
-            "combining is not happening")
-    for kind in KINDS:
+
+    def gate_degree(name):
+        row = at_w.get(name)
+        if row is None:
+            failures.append(f"no {name} row at {workers} workers")
+            return
+        if (row["degree_mean"] or 0) < 2.0:
+            failures.append(
+                f"{name}@{workers}w measured degree_mean "
+                f"{row['degree_mean'] or 0.0:.2f} < 2.0 — true-parallel "
+                "combining is not happening")
+
+    gate_degree("queue/pbcomb")
+    gate_degree("serving/pbcomb")
+    gate_degree("checkpoint/pbcomb")
+
+    for table in KINDS + ("serving", "checkpoint"):
         baselines = [r for n, r in at_w.items()
-                     if n.startswith(f"{kind}/")
+                     if n.startswith(f"{table}/")
                      and n.split("/")[1] in PER_OP_PERSIST]
-        floor = min((r["psyncs_per_op"] for r in baselines), default=None)
+        # per-op-persist floor: the measured baseline rows when present
+        # (the serving/checkpoint tables carry a lock-direct row), else
+        # the definitional 1 psync per op
+        floor = min((r["psyncs_per_op"] for r in baselines),
+                    default=None)
+        if floor is None:
+            floor = 1.0 if table in ("serving", "checkpoint") else None
         if floor is None:
             continue
         for n, r in at_w.items():
-            if (n.startswith(f"{kind}/")
+            if (n.startswith(f"{table}/")
                     and n.split("/")[1] in COMBINING
                     and r["psyncs_per_op"] >= floor):
                 failures.append(
@@ -160,12 +290,13 @@ def main(argv=None) -> int:
                     help="comma list of worker counts "
                          "(default: 4 quick, 2,4,8 full)")
     ap.add_argument("--json", metavar="PATH",
-                    help="write bench.mp.v1 results here")
+                    help="write bench.mp.v2 results here")
     ap.add_argument("--tag", default="mp")
     ap.add_argument("--check", action="store_true",
                     help="fail unless the 4-worker column shows "
-                         "degree>=2 on queue/pbcomb and comb psync/op "
-                         "below every per-op-persist baseline")
+                         "degree>=2 on queue/serving/checkpoint pbcomb "
+                         "and comb psync/op below the per-op-persist "
+                         "floor of each table")
     ap.add_argument("--park", default=None, metavar="PROB:SECONDS",
                     help="override the shm entry backoff "
                          "(e.g. 0.5:5e-5)")
@@ -195,44 +326,71 @@ def main(argv=None) -> int:
     else:
         workers = [4] if args.quick else [2, 4, 8]
     pairs = 80 if args.quick else 300
+    reqs = 60 if args.quick else 240
+    ck_rounds = 40 if args.quick else 160
 
     rows = []
     hdr = (f"{'cell':22s} {'w':>2s} {'us/op':>8s} {'pwb/op':>7s} "
-           f"{'psync/op':>8s} {'degree':>7s} {'max':>4s}")
+           f"{'psync/op':>8s} {'degree':>7s} {'max':>4s} "
+           f"{'seg-psync/op':>16s} {'spill':>5s}")
+
+    def show(row, w):
+        rows.append(row)
+        d = ("-" if row["degree_mean"] is None
+             else f"{row['degree_mean']:.2f}")
+        m = ("-" if row["degree_max"] is None
+             else str(row["degree_max"]))
+        segp = "/".join(f"{v:.3f}" for v in row["seg_psyncs_per_op"])
+        print(f"{row['name']:22s} {w:2d} "
+              f"{row['us_per_op']:8.1f} {row['pwbs_per_op']:7.2f} "
+              f"{row['psyncs_per_op']:8.3f} {d:>7s} {m:>4s} "
+              f"{segp:>16s} {row['ring_spills']:5d}")
+
     print(f"## measured-degree matrix (shm backend, park={park})")
     print(hdr)
     for w in workers:
         for kind in KINDS:
             for _k, proto in entries(kind):
-                row = bench_cell(kind, proto, w, pairs)
-                rows.append(row)
-                d = ("-" if row["degree_mean"] is None
-                     else f"{row['degree_mean']:.2f}")
-                m = ("-" if row["degree_max"] is None
-                     else str(row["degree_max"]))
-                print(f"{row['name']:22s} {w:2d} "
-                      f"{row['us_per_op']:8.1f} {row['pwbs_per_op']:7.2f} "
-                      f"{row['psyncs_per_op']:8.3f} {d:>7s} {m:>4s}")
+                show(bench_cell(kind, proto, w, pairs), w)
+        # serving / checkpoint workloads (rich payloads over the blob
+        # heap, 2-segment NVM — the PR 5 tentpole rows)
+        for proto in WORKLOAD_PROTOS:
+            show(bench_serving_cell(proto, w, reqs), w)
+        for proto in WORKLOAD_PROTOS:
+            show(bench_checkpoint_cell(proto, w, ck_rounds), w)
+        show(bench_mixed_cell(w, reqs, ck_rounds), w)
 
-    # deterministic modeled columns alongside (cached per cell)
+    # deterministic modeled columns alongside (cached per matrix cell;
+    # the serving/checkpoint workloads have no modeled replay — nulls,
+    # like their bench.v2 counterparts)
     cells = {}
     for row in rows:
-        kind, proto = row["name"].split("/")
-        if (kind, proto) not in cells:
-            cells[(kind, proto)] = modeled.modeled_cell(kind, proto)
-        cell = cells[(kind, proto)]
-        row["modeled_us_per_op"] = round(cell["modeled_us_per_op"], 3)
-        row["modeled_pwbs_per_op"] = round(cell["modeled_pwb_per_op"], 3)
-        row["modeled_psyncs_per_op"] = round(cell["modeled_psync_per_op"], 3)
-        row["profile"] = cell["profile"]
+        table, proto = row["name"].split("/")
+        if table in KINDS:
+            if (table, proto) not in cells:
+                cells[(table, proto)] = modeled.modeled_cell(table, proto)
+            cell = cells[(table, proto)]
+            row["modeled_us_per_op"] = round(cell["modeled_us_per_op"], 3)
+            row["modeled_pwbs_per_op"] = \
+                round(cell["modeled_pwb_per_op"], 3)
+            row["modeled_psyncs_per_op"] = \
+                round(cell["modeled_psync_per_op"], 3)
+            row["profile"] = cell["profile"]
+        else:
+            row["modeled_us_per_op"] = None
+            row["modeled_pwbs_per_op"] = None
+            row["modeled_psyncs_per_op"] = None
+            row["profile"] = None
         row["us_per_op"] = round(row["us_per_op"], 3)
         row["pwbs_per_op"] = round(row["pwbs_per_op"], 3)
         row["psyncs_per_op"] = round(row["psyncs_per_op"], 3)
+        row["seg_psyncs_per_op"] = [round(v, 3)
+                                    for v in row["seg_psyncs_per_op"]]
         if row["degree_mean"] is not None:
             row["degree_mean"] = round(row["degree_mean"], 3)
 
     if args.json:
-        doc = {"schema": "bench.mp.v1", "tag": args.tag,
+        doc = {"schema": "bench.mp.v2", "tag": args.tag,
                "quick": args.quick, "workers": workers, "park": park,
                "rows": rows}
         atomic_write_json(args.json, doc)

@@ -19,7 +19,8 @@ JSON schema (``bench.v2``, superset of v1)::
                "modeled_psyncs_per_op": float|null, # byte-identical
                "profile": "optane"|null,            # across runs
                "degree_mean": float|null,   # measured combining degree
-               "degree_max": int|null}, ...]}       # (never gated)
+               "degree_max": int|null,              # (never gated)
+               "ring_spills": int|null}, ...]}      # shm rows only
 
 The ``modeled_*`` columns come from the fixed-schedule virtual-clock
 pass (benchmarks/modeled.py): byte-identical across runs and hosts,
@@ -91,7 +92,11 @@ def collect(quick: bool = False):
              "degree_mean":
                  None if "degree_mean" not in r
                  else round(r["degree_mean"], 3),
-             "degree_max": r.get("degree_max")}
+             "degree_max": r.get("degree_max"),
+             # ring-overflow early write-back completions, surfaced as
+             # their own column instead of folded into pwb counts (shm
+             # rows only; the thread NVM's epoch queue cannot spill)
+             "ring_spills": r.get("ring_spills")}
             for r in rows)
 
     add("fig1_atomicfloat",

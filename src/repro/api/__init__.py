@@ -22,15 +22,16 @@ remains: it is the interface the adapters are built on.
 
 from .adapters import OpSpec, StructureAdapter
 from .board import AnnounceBoard, Announcement
-from .handle import (Bound, BoundCounter, BoundHeap, BoundQueue,
-                     BoundStack, Handle)
+from .handle import (Bound, BoundCkpt, BoundCounter, BoundHeap, BoundLog,
+                     BoundQueue, BoundStack, Handle)
 from .mp import PoolResult, WorkerPool, WorkerReport
 from .registry import entries, get_adapter, kinds, protocols_for
 from .runtime import CombiningRuntime, RecoverableObject, make_recoverable
 
 __all__ = [
     "AnnounceBoard", "Announcement",
-    "Bound", "BoundCounter", "BoundHeap", "BoundQueue", "BoundStack",
+    "Bound", "BoundCkpt", "BoundCounter", "BoundHeap", "BoundLog",
+    "BoundQueue", "BoundStack",
     "CombiningRuntime", "Handle", "OpSpec", "PoolResult",
     "RecoverableObject", "StructureAdapter", "WorkerPool",
     "WorkerReport", "entries", "get_adapter", "kinds",

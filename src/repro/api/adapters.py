@@ -29,7 +29,8 @@ from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
 from ..core.atomics import Counters
 from ..core.nvm import NVM
-from ..core.objects import (FetchAddObject, HeapObject, SeqQueueObject,
+from ..core.objects import (CheckpointObject, FetchAddObject, HeapObject,
+                            ResponseLogObject, SeqQueueObject,
                             SeqStackObject)
 from ..core.pbcomb import PBComb, RequestRec
 from ..core.pwfcomb import PWFComb
@@ -53,6 +54,10 @@ HEAP_OPS = {"insert": OpSpec("HINSERT", "main"),
             "get_min": OpSpec("HGETMIN", "main")}
 COUNTER_OPS = {"fetch_add": OpSpec("FAA", "main", 1),
                "read": OpSpec("FAA", "main", 0)}
+LOG_OPS = {"record": OpSpec("RECORD", "main"),
+           "lookup": OpSpec("LOOKUP", "main")}
+CKPT_OPS = {"persist": OpSpec("CKPT", "main"),
+            "latest": OpSpec("CKPTGET", "main")}
 
 
 class StructureAdapter:
@@ -279,6 +284,98 @@ class PWFHeapAdapter(_CombiningAdapter):
         return sorted(core.nvm.read(base + 1 + i) for i in range(size))
 
 
+class _ObjSnapshotMixin:
+    """Snapshot through the wrapped SeqObject's own ``snapshot`` (the
+    log/checkpoint objects define one; the combining cores expose the
+    current StateRec base)."""
+
+    _st = staticmethod(_pb_st)
+
+    def snapshot(self, core):
+        return core.obj.snapshot(core.nvm, self._st(core))
+
+
+class PBLogAdapter(_ObjSnapshotMixin, _CombiningAdapter):
+    """Durable response log under PBComb — the serving engine's
+    completion path as a registry structure (DESIGN.md §8).
+
+    Crash replay is IDEMPOTENT re-execution instead of the per-thread
+    announce-parity Recover: a batched RECORD_MANY advances the handle
+    seq by the batch size, so seq parity no longer mirrors the announce
+    bit — but re-applying a RECORD with identical (client, seq,
+    response) is a no-op in effect, which gives the same exactly-once
+    *effect* guarantee the parity path provides."""
+
+    kind, protocol, OPS = "log", "pbcomb", LOG_OPS
+
+    def create(self, nvm, n_threads, counters=None, n_clients=None, **kw):
+        return PBComb(nvm, n_threads,
+                      ResponseLogObject(n_clients or n_threads),
+                      counters=counters)
+
+    def recover(self, core, p, op, args, seq):
+        spec = self._spec(op)
+        return self._instance(core, op).op(p, spec.func,
+                                           self._args(op, args), seq)
+
+    def recover_batch(self, core, p, calls):
+        triples = tuple(self._args(op, args) for op, args, _seq in calls)
+        return list(core.op(p, "RECORD_MANY", triples, calls[-1][2]))
+
+    def invoke_batch(self, core, p, calls):
+        """All completions of a round in ONE combining round — one
+        contiguous StateRec write, one psync (what the serving engine's
+        ``invoke_many`` completion path rides on)."""
+        if any(op != "record" for op, _a, _s in calls):
+            return [self.invoke(core, p, op, a, s) for op, a, s in calls]
+        triples = tuple(a for _op, a, _s in calls)
+        return list(core.op(p, "RECORD_MANY", triples, calls[-1][2]))
+
+    def last_record(self, core, client: int):
+        """(seq, response) currently logged for ``client`` — the
+        paper's Recover reads this to answer re-announced requests
+        without re-executing them."""
+        base = self._st(core)
+        return (core.nvm.read(base + 2 * client),
+                core.nvm.read(base + 2 * client + 1))
+
+
+class PWFLogAdapter(PBLogAdapter):
+    protocol = "pwfcomb"
+    _st = staticmethod(_pwf_st)
+
+    def create(self, nvm, n_threads, counters=None, n_clients=None, **kw):
+        return PWFComb(nvm, n_threads,
+                       ResponseLogObject(n_clients or n_threads),
+                       counters=counters, **kw)
+
+
+class PBCkptAdapter(_ObjSnapshotMixin, _CombiningAdapter):
+    """Checkpoint cell under PBComb: d announcers' persist requests ride
+    one combining round/psync; newest step wins.  Replay is idempotent
+    (the step guard), same reasoning as PBLogAdapter."""
+
+    kind, protocol, OPS = "ckpt", "pbcomb", CKPT_OPS
+
+    def create(self, nvm, n_threads, counters=None, **kw):
+        return PBComb(nvm, n_threads, CheckpointObject(),
+                      counters=counters)
+
+    def recover(self, core, p, op, args, seq):
+        spec = self._spec(op)
+        return self._instance(core, op).op(p, spec.func,
+                                           self._args(op, args), seq)
+
+
+class PWFCkptAdapter(PBCkptAdapter):
+    protocol = "pwfcomb"
+    _st = staticmethod(_pwf_st)
+
+    def create(self, nvm, n_threads, counters=None, **kw):
+        return PWFComb(nvm, n_threads, CheckpointObject(),
+                       counters=counters, **kw)
+
+
 class PBCounterAdapter(_CombiningAdapter):
     kind, protocol, OPS = "counter", "pbcomb", COUNTER_OPS
 
@@ -304,9 +401,11 @@ class PWFCounterAdapter(_CombiningAdapter):
 # Baseline adapters (Section 6 competitors)                             #
 # --------------------------------------------------------------------- #
 _SEQ_OBJ = {"queue": SeqQueueObject, "stack": SeqStackObject,
-            "heap": HeapObject, "counter": FetchAddObject}
+            "heap": HeapObject, "counter": FetchAddObject,
+            "log": ResponseLogObject, "ckpt": CheckpointObject}
 _KIND_OPS = {"queue": QUEUE_OPS, "stack": STACK_OPS,
-             "heap": HEAP_OPS, "counter": COUNTER_OPS}
+             "heap": HEAP_OPS, "counter": COUNTER_OPS,
+             "log": LOG_OPS, "ckpt": CKPT_OPS}
 
 
 class _DirectOpAdapter(StructureAdapter):
@@ -343,9 +442,15 @@ class LockAdapter(_DirectOpAdapter):
         self._cls = LockUndoLogObject if undo else LockDirectObject
         self._obj_cls = _SEQ_OBJ[kind]
 
-    def create(self, nvm, n_threads, counters=None, capacity=1024, **kw):
-        obj = self._obj_cls() if self._obj_cls is FetchAddObject \
-            else self._obj_cls(capacity)
+    def create(self, nvm, n_threads, counters=None, capacity=1024,
+               n_clients=None, **kw):
+        cls = self._obj_cls
+        if cls is FetchAddObject or cls is CheckpointObject:
+            obj = cls()
+        elif cls is ResponseLogObject:
+            obj = cls(n_clients or n_threads)
+        else:
+            obj = cls(capacity)
         return self._cls(nvm, n_threads, obj)
 
     def snapshot(self, core):

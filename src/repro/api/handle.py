@@ -294,8 +294,25 @@ class BoundCounter(Bound):
         self.read = handle.invoker(obj, "read", arity=0)
 
 
+class BoundLog(Bound):
+    def __init__(self, handle: Handle, obj: Any) -> None:
+        super().__init__(handle, obj)
+        # record takes ONE (client, seq, response) triple
+        self.record = handle.invoker(obj, "record", arity=1)
+        self.lookup = handle.invoker(obj, "lookup", arity=1)
+
+
+class BoundCkpt(Bound):
+    def __init__(self, handle: Handle, obj: Any) -> None:
+        super().__init__(handle, obj)
+        # persist takes ONE (step, payload) pair
+        self.persist = handle.invoker(obj, "persist", arity=1)
+        self.latest = handle.invoker(obj, "latest", arity=0)
+
+
 _BOUND_BY_KIND = {"queue": BoundQueue, "stack": BoundStack,
-                  "heap": BoundHeap, "counter": BoundCounter}
+                  "heap": BoundHeap, "counter": BoundCounter,
+                  "log": BoundLog, "ckpt": BoundCkpt}
 
 
 def bind(handle: Handle, obj: Any) -> Bound:

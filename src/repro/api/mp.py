@@ -42,6 +42,38 @@ _PAIR_OPS = {"queue": ("enqueue", "dequeue"),
              "heap": ("insert", "delete_min"),
              "counter": ("fetch_add", "read")}
 
+#: padding appended to rich pair values so they exceed the 16-byte
+#: inline word codec and exercise the blob heap (DESIGN.md §8)
+_RICH_PAD = "blob-payload-padding-" * 2
+
+
+def rich_value(tid: int, i: int):
+    """The rich (blob-sized) pair value: producer and index stay
+    extractable as value[0]/value[1] for the order checkers."""
+    return (tid, i, _RICH_PAD)
+
+
+def toy_tokens(client: int, seq: int, gen_len: int) -> List[int]:
+    """Deterministic toy generation for the serving workload — pure
+    function of (client, seq) so a checker can recompute the expected
+    response content of any record."""
+    t = (client * 31 + seq) % 97 or 1
+    out = []
+    for _ in range(gen_len):
+        out.append(t)
+        t = (t + 1) % 97 or 1
+    return out
+
+
+def serving_response(client: int, seq: int, gen_len: int) -> dict:
+    return {"client": client, "seq": seq,
+            "tokens": toy_tokens(client, seq, gen_len)}
+
+
+def checkpoint_payload(tid: int, step: int, payload_words: int) -> dict:
+    return {"step": step, "writer": tid,
+            "shard": [float(tid * 1000 + step)] * payload_words}
+
 
 @dataclass
 class WorkerReport:
@@ -113,7 +145,8 @@ def _worker_main(runtime, tid: int, cmdq, resq, barrier) -> None:
         results: Optional[list] = None
         try:
             if kind == "pairs":
-                _k, obj_name, add_op, rem_op, n_ops, base, collect = cmd
+                _k, obj_name, add_op, rem_op, n_ops, base, collect, \
+                    rich, start = cmd
                 add = invoker(obj_name, add_op)
                 rem = invoker(obj_name, rem_op)
                 results = [] if collect else None
@@ -122,7 +155,8 @@ def _worker_main(runtime, tid: int, cmdq, resq, barrier) -> None:
                     # record each op the moment it returns: a crash in
                     # the remove must not lose the completed (durable,
                     # acked) add that preceded it
-                    v = base + i
+                    v = rich_value(tid, start + i) if rich \
+                        else base + start + i
                     ra = add(v)
                     done += 1
                     if results is not None:
@@ -131,6 +165,38 @@ def _worker_main(runtime, tid: int, cmdq, resq, barrier) -> None:
                     done += 1
                     if results is not None:
                         results.append((rem_op, None, rr))
+                elapsed = time.perf_counter() - t0
+            elif kind == "serve":
+                # serving completion path: each request's toy generation
+                # is computed locally, its (rich) response RECORDed into
+                # the shared durable log — the op the engine's
+                # completion rounds combine (DESIGN.md §8)
+                _k, obj_name, n_reqs, gen_len, seq_base, collect = cmd
+                rec = invoker(obj_name, "record")
+                results = [] if collect else None
+                t0 = time.perf_counter()
+                for i in range(seq_base + 1, seq_base + n_reqs + 1):
+                    resp = serving_response(tid, i, gen_len)
+                    ret = rec((tid, i, resp))
+                    done += 1
+                    if results is not None:
+                        results.append(("record", (tid, i), ret))
+                elapsed = time.perf_counter() - t0
+            elif kind == "ckpt":
+                # checkpoint commit path: every worker announces
+                # "persist my step-r state" with a payload pytree;
+                # newest step wins, d announcements ride one psync
+                _k, obj_name, rounds, payload_words, step_base, \
+                    collect = cmd
+                per = invoker(obj_name, "persist")
+                results = [] if collect else None
+                t0 = time.perf_counter()
+                for r in range(step_base + 1, step_base + rounds + 1):
+                    payload = checkpoint_payload(tid, r, payload_words)
+                    ret = per((r, payload))
+                    done += 1
+                    if results is not None:
+                        results.append(("persist", r, ret))
                 elapsed = time.perf_counter() - t0
             elif kind == "ops":
                 _k, obj_name, ops, collect = cmd
@@ -250,15 +316,43 @@ class WorkerPool:
         return PoolResult(wall_s=wall, reports=reports)
 
     def run_pairs(self, obj, n_pairs: int, *, collect: bool = False,
-                  value_base: int = 1_000_000) -> PoolResult:
+                  value_base: int = 1_000_000, rich: bool = False,
+                  index_base: int = 0) -> PoolResult:
         """Every worker runs ``n_pairs`` add/remove pairs against
         ``obj`` (the structure-matrix workload), values disjoint per
-        worker.  Returns wall time measured across ALL workers."""
+        worker.  ``rich=True`` wraps each value in a blob-sized tuple
+        (``rich_value``) so the run exercises the shm blob heap;
+        ``index_base`` continues the per-producer index numbering
+        across successive commands (crash sweeps need distinct values
+        per case for the order checkers).  Returns wall time measured
+        across ALL workers."""
         add_op, rem_op = _PAIR_OPS[obj.kind]
         return self._run([
             ("pairs", obj.name, add_op, rem_op, n_pairs,
-             tid * value_base, collect)
+             tid * value_base, collect, rich, index_base)
             for tid in self.tids])
+
+    def run_serving(self, obj, n_reqs: int, *, gen_len: int = 16,
+                    seq_base: int = 0,
+                    collect: bool = False) -> PoolResult:
+        """Every worker completes ``n_reqs`` toy generations and
+        RECORDs the responses into the shared ``log`` structure — the
+        serving engine's durable completion path under true
+        parallelism.  ``seq_base`` continues a client's consecutive
+        seq numbering across successive commands."""
+        return self._run([
+            ("serve", obj.name, n_reqs, gen_len, seq_base, collect)
+            for _tid in self.tids])
+
+    def run_checkpoint(self, obj, rounds: int, *,
+                       payload_words: int = 32, step_base: int = 0,
+                       collect: bool = False) -> PoolResult:
+        """Every worker announces ``rounds`` checkpoint persists with a
+        ``payload_words``-word shard payload against the shared
+        ``ckpt`` structure (newest step wins)."""
+        return self._run([
+            ("ckpt", obj.name, rounds, payload_words, step_base, collect)
+            for _tid in self.tids])
 
     def run_ops(self, obj, ops_by_tid: Dict[int, List[Tuple[str, Any]]],
                 *, collect: bool = True) -> PoolResult:

@@ -1,7 +1,7 @@
 """Protocol registry: the (kind x protocol) matrix behind
 ``make_recoverable``.
 
-Kinds:      queue | stack | heap | counter
+Kinds:      queue | stack | heap | counter | log | ckpt
 Protocols:  pbcomb | pwfcomb | lock-direct | lock-undo | dfc | durable-ms
 
 Not every cell exists (DFC is a stack algorithm, the durable MS queue is
@@ -14,9 +14,11 @@ from __future__ import annotations
 from typing import Callable, Dict, List, Tuple
 
 from .adapters import (DFCStackAdapter, DurableMSQueueAdapter, LockAdapter,
-                       PBCounterAdapter, PBHeapAdapter, PBQueueAdapter,
-                       PBStackAdapter, PWFCounterAdapter, PWFHeapAdapter,
-                       PWFQueueAdapter, PWFStackAdapter, StructureAdapter)
+                       PBCkptAdapter, PBCounterAdapter, PBHeapAdapter,
+                       PBLogAdapter, PBQueueAdapter, PBStackAdapter,
+                       PWFCkptAdapter, PWFCounterAdapter, PWFHeapAdapter,
+                       PWFLogAdapter, PWFQueueAdapter, PWFStackAdapter,
+                       StructureAdapter)
 
 # (kind, protocol) -> zero-arg adapter factory
 REGISTRY: Dict[Tuple[str, str], Callable[[], StructureAdapter]] = {
@@ -38,6 +40,16 @@ REGISTRY: Dict[Tuple[str, str], Callable[[], StructureAdapter]] = {
     ("counter", "pwfcomb"): PWFCounterAdapter,
     ("counter", "lock-direct"): lambda: LockAdapter("counter", undo=False),
     ("counter", "lock-undo"): lambda: LockAdapter("counter", undo=True),
+    # serving/checkpoint workload structures (DESIGN.md §8): the
+    # response log and the checkpoint cell, combinable like any kind
+    ("log", "pbcomb"): PBLogAdapter,
+    ("log", "pwfcomb"): PWFLogAdapter,
+    ("log", "lock-direct"): lambda: LockAdapter("log", undo=False),
+    ("log", "lock-undo"): lambda: LockAdapter("log", undo=True),
+    ("ckpt", "pbcomb"): PBCkptAdapter,
+    ("ckpt", "pwfcomb"): PWFCkptAdapter,
+    ("ckpt", "lock-direct"): lambda: LockAdapter("ckpt", undo=False),
+    ("ckpt", "lock-undo"): lambda: LockAdapter("ckpt", undo=True),
 }
 
 

@@ -74,7 +74,8 @@ class CombiningRuntime:
                  counters: Optional[Counters] = None,
                  nvm_words: Optional[int] = None,
                  profile: Optional[Any] = None,
-                 backend: str = "threads") -> None:
+                 backend: str = "threads",
+                 segments: int = 1) -> None:
         """``profile`` (a cost-profile name or ``CostProfile``) engages
         the virtual clock on the lazily created NVM; ignored when an
         ``nvm`` is passed in (its own profile governs).
@@ -87,7 +88,13 @@ class CombiningRuntime:
         DESIGN.md §7).  The shm backend has no virtual clock, so it
         rejects ``profile``.  ``nvm_words`` defaults per backend
         (2M words threads / 256K shm — the shm image is materialized
-        in /dev/shm, not grown lazily by the interpreter)."""
+        in /dev/shm, not grown lazily by the interpreter).
+
+        ``segments`` (shm only, DESIGN.md §8): stripe the NVM into that
+        many NUMA-ish spans, one write-back ring + modeled sync device
+        each; ``make`` places structures round-robin across them (or
+        pass ``segment=`` explicitly) and ``segment_stats()`` reports
+        the per-device accounting."""
         if backend not in ("threads", "shm"):
             raise ValueError(f"unknown backend {backend!r}; "
                              "expected 'threads' or 'shm'")
@@ -96,12 +103,18 @@ class CombiningRuntime:
                              "virtual clock's Lamport merges would need "
                              "cross-process clock state (use the thread "
                              "backend for modeled runs)")
+        if segments != 1 and backend != "shm":
+            raise ValueError("multi-segment NVM is a property of the shm "
+                             "backend (the thread NVM models one DIMM)")
         self.nvm = nvm
         self.n_threads = n_threads
         self.counters = counters
         self._nvm_words = nvm_words
         self._profile = profile
         self._backend_kind = backend
+        self._segments = segments
+        self._next_segment = 0         # round-robin placement cursor
+        self._placement: Dict[str, int] = {}
         self._owns_nvm = nvm is None   # close() releases only what we made
         self._closed = False
         self._pools: list = []
@@ -120,25 +133,49 @@ class CombiningRuntime:
         if self.nvm is None:
             if self._backend_kind == "shm":
                 from ..core.shm import ShmNVM
-                self.nvm = ShmNVM(self._nvm_words or 1 << 18)
+                self.nvm = ShmNVM(self._nvm_words or 1 << 18,
+                                  segments=self._segments)
             else:
                 self.nvm = NVM(self._nvm_words or 1 << 21,
                                profile=self._profile)
         return self.nvm
 
     def make(self, kind: str, protocol: str = "pbcomb",
-             name: Optional[str] = None, **kw) -> RecoverableObject:
-        """Create + register a recoverable structure from the registry."""
+             name: Optional[str] = None, segment: Optional[int] = None,
+             **kw) -> RecoverableObject:
+        """Create + register a recoverable structure from the registry.
+
+        ``segment`` pins the structure's NVM allocations to one segment
+        of a multi-segment shm NVM; by default structures are placed
+        round-robin (the affinity policy — each structure's psyncs then
+        drain through its own modeled device, DESIGN.md §8)."""
         adapter = get_adapter(kind, protocol)
-        core = adapter.create(self._ensure_nvm(), self.n_threads,
-                              counters=self.counters, **kw)
+        nvm = self._ensure_nvm()
+        if nvm.segments > 1:
+            if segment is None:
+                segment = self._next_segment
+                self._next_segment = (segment + 1) % nvm.segments
+            with nvm.placement(segment):
+                core = adapter.create(nvm, self.n_threads,
+                                      counters=self.counters, **kw)
+        else:
+            if segment not in (None, 0):
+                raise ValueError(
+                    f"segment {segment} out of range: this runtime's "
+                    "NVM models a single device (construct with "
+                    "backend='shm', segments=N to get more)")
+            segment = 0
+            core = adapter.create(nvm, self.n_threads,
+                                  counters=self.counters, **kw)
         if name is None:
             base = f"{kind}/{protocol}"
             name, i = base, 1
             while name in self.objects:
                 i += 1
                 name = f"{base}#{i}"
-        return self.register(name, core, adapter)
+        obj = self.register(name, core, adapter)
+        self._placement[name] = segment
+        return obj
 
     def register(self, name: str, core: Any,
                  adapter: Any) -> RecoverableObject:
@@ -203,6 +240,14 @@ class CombiningRuntime:
         (None for protocols that do not combine)."""
         return {name: obj.adapter.degree_stats(obj.core)
                 for name, obj in self.objects.items()}
+
+    def segment_stats(self) -> Dict[str, Any]:
+        """Per-segment device accounting + the structure placement map
+        (which object allocates on which modeled DIMM)."""
+        nvm = self._ensure_nvm()
+        return {"segments": nvm.segments,
+                "counters": nvm.segment_counters(),
+                "placement": dict(self._placement)}
 
     def close(self) -> None:
         """Stop any worker pools and release backend resources (the shm

@@ -10,8 +10,9 @@ from .atomics import AtomicInt, AtomicRef, Counters
 from .backend import (Cell, DegreeStats, ThreadBackend, merge_degree_stats)
 from .nvm import (LINE, NVM, PROFILES, CostProfile, SimulatedCrash, VClock,
                   resolve_profile)
-from .objects import (AtomicFloatObject, FetchAddObject, HeapObject,
-                      SeqObject, SeqQueueObject, SeqStackObject)
+from .objects import (AtomicFloatObject, CheckpointObject, FetchAddObject,
+                      HeapObject, ResponseLogObject, SeqObject,
+                      SeqQueueObject, SeqStackObject)
 from .pbcomb import PBComb, RequestRec
 from .pwfcomb import PWFComb
 
@@ -20,7 +21,8 @@ __all__ = [
     "Cell", "DegreeStats", "ThreadBackend", "merge_degree_stats",
     "LINE", "NVM", "SimulatedCrash",
     "PROFILES", "CostProfile", "VClock", "resolve_profile",
-    "AtomicFloatObject", "FetchAddObject", "HeapObject", "SeqObject",
+    "AtomicFloatObject", "CheckpointObject", "FetchAddObject",
+    "HeapObject", "ResponseLogObject", "SeqObject",
     "SeqQueueObject", "SeqStackObject",
     "PBComb", "PWFComb", "RequestRec",
 ]

@@ -205,6 +205,12 @@ class NVM:
     #: that surviving worker processes poll in their wait loops.
     halted = False
 
+    #: Device topology: the in-thread NVM models ONE DIMM (a single
+    #: write-back device).  The multi-segment ShmNVM overrides this and
+    #: the segment accessors below (DESIGN.md §8); they exist here so
+    #: benches and the runtime's placement policy run backend-agnostic.
+    segments = 1
+
     def __init__(self, n_words: int = 1 << 20, *, pwb_nop: bool = False,
                  psync_nop: bool = False,
                  persist_latency: float = 0.0,
@@ -262,8 +268,14 @@ class NVM:
     # ------------------------------------------------------------------ #
     # Allocation                                                         #
     # ------------------------------------------------------------------ #
-    def alloc(self, n_words: int, align_line: bool = True) -> int:
-        """Bump-allocate ``n_words``; line-aligned so P3 layouts are real."""
+    def alloc(self, n_words: int, align_line: bool = True,
+              segment: Optional[int] = None) -> int:
+        """Bump-allocate ``n_words``; line-aligned so P3 layouts are real.
+        ``segment`` is accepted for interface parity with the
+        multi-segment ShmNVM (this NVM models one DIMM; only 0/None)."""
+        if segment not in (None, 0):
+            raise ValueError("the in-thread NVM models a single DIMM "
+                             f"(segment {segment} does not exist)")
         with self._lock:
             if align_line and self._alloc_ptr % LINE:
                 self._alloc_ptr += LINE - self._alloc_ptr % LINE
@@ -656,6 +668,26 @@ class NVM:
     def pending_lines(self) -> int:
         with self._lock:
             return sum(n for e in self._epochs for _first, n, _snap in e)
+
+    def current_segment(self) -> int:
+        """The segment new allocations default to (always 0 here; the
+        multi-segment ShmNVM returns its placement-context segment)."""
+        return 0
+
+    def placement(self, segment: int):
+        """Segment-affinity context manager (interface parity with the
+        multi-segment ShmNVM; the single-DIMM NVM only has segment 0)."""
+        if segment != 0:
+            raise ValueError("the in-thread NVM models a single DIMM "
+                             f"(segment {segment} does not exist)")
+        return contextmanager(lambda: iter([self]))()
+
+    def segment_counters(self) -> List[Dict[str, int]]:
+        """Per-segment device accounting; one entry for the single
+        modeled DIMM (mirrors ``ShmNVM.segment_counters``)."""
+        return [{"segment": 0, "pwb": self.counters["pwb"],
+                 "psync": self.counters["psync"], "ring_spills": 0,
+                 "words_used": self._alloc_ptr - LINE}]
 
     def modeled_time_us(self) -> float:
         """Virtual-clock makespan in microseconds (0.0 when no profile

@@ -9,7 +9,7 @@ sequential implementation" interface (Section 8).
 
 from __future__ import annotations
 
-from typing import Any, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 from .nvm import NVM
 
@@ -158,6 +158,120 @@ class SeqStackObject(SeqObject):
         size = nvm.read(st_base)
         return [nvm.read(st_base + 1 + i)
                 for i in range(size - 1, -1, -1)]   # top first
+
+
+class ResponseLogObject(SeqObject):
+    """Durable response log — the serving engine's completion path as a
+    sequential object (DESIGN.md §8).
+
+    State layout: client c owns words ``2c`` (last seq) and ``2c + 1``
+    (last response).  Responses are rich payloads (token lists, dicts):
+    on the shm backend they ride the blob heap; the thread backend's
+    Python-object words hold them natively.
+
+    Ops:
+      * ``RECORD (client, seq, response)`` — overwrite c's pair; returns
+        the response.  Idempotent: replaying a RECORD with the same
+        arguments is a no-op in effect, which is what makes the
+        adapter's crash replay exactly-once *in effect* without leaning
+        on the protocol's per-thread announce parity (a batched
+        RECORD_MANY advances the handle seq by more than one, so parity
+        detectability does not apply here).
+      * ``RECORD_MANY ((client, seq, response), ...)`` — one combining
+        round persists every completion of a serving round together
+        (one contiguous StateRec write, one psync).
+      * ``LOOKUP client`` — (seq, response) pair; the paper's Recover
+        reads this to answer re-announced requests from the log.
+    """
+
+    def __init__(self, n_clients: int = 8) -> None:
+        self.n_clients = n_clients
+        self.state_words = 2 * n_clients
+
+    def init_state(self, nvm: NVM, st_base: int) -> None:
+        nvm.write_range(st_base, [0, None] * self.n_clients)
+
+    def _record(self, nvm, st_base, client, seq, response) -> None:
+        if not 0 <= client < self.n_clients:
+            raise ValueError(f"client {client} out of range "
+                             f"(log has {self.n_clients} slots)")
+        # response before seq: a torn StateRec can never pair a new seq
+        # with an old response (same publication discipline as the words)
+        nvm.write(st_base + 2 * client + 1, response)
+        nvm.write(st_base + 2 * client, seq)
+
+    def apply(self, nvm, st_base, func, args, ctx=None):
+        if func == "RECORD":
+            client, seq, response = args
+            self._record(nvm, st_base, client, seq, response)
+            return response
+        if func == "RECORD_MANY":
+            for client, seq, response in args:
+                self._record(nvm, st_base, client, seq, response)
+            return tuple(r for _c, _s, r in args)
+        if func == "LOOKUP":
+            c = args
+            return (nvm.read(st_base + 2 * c),
+                    nvm.read(st_base + 2 * c + 1))
+        raise ValueError(f"unknown log op {func}")
+
+    def touch_plan(self, nvm: NVM, st_base: int, func: str,
+                   args: Any) -> List[Tuple[int, int]]:
+        if func == "RECORD":
+            return [(2 * args[0], 2)]
+        if func == "RECORD_MANY":
+            return [(2 * c, 2) for c, _s, _r in args]
+        return []
+
+    def snapshot(self, nvm: NVM, st_base: int) -> List[Tuple[int, Any]]:
+        return [(nvm.read(st_base + 2 * c), nvm.read(st_base + 2 * c + 1))
+                for c in range(self.n_clients)]
+
+
+class CheckpointObject(SeqObject):
+    """Checkpoint cell — the sharded-checkpoint commit as a sequential
+    object: one (step, payload) pair, newest step wins (exactly the
+    ``PBCombCheckpointer``'s object semantics, but living in NVM words
+    so the shm backend can combine checkpoint announcements from real
+    worker processes).
+
+    Ops:
+      * ``CKPT (step, payload)`` — install iff ``step`` advances the
+        durable step; response is the step now current (monotone, so
+        crash replay is idempotent: a replayed CKPT that already took
+        effect — or was superseded — changes nothing).
+      * ``CKPTGET`` — the (step, payload) pair.
+    """
+
+    state_words = 2
+
+    def init_state(self, nvm: NVM, st_base: int) -> None:
+        nvm.write_range(st_base, [0, None])
+
+    def apply(self, nvm, st_base, func, args, ctx=None):
+        if func == "CKPT":
+            step, payload = args
+            cur = nvm.read(st_base)
+            if step > cur:
+                # payload before step: a torn StateRec never pairs a
+                # new step with an old payload
+                nvm.write(st_base + 1, payload)
+                nvm.write(st_base, step)
+                return step
+            return cur
+        if func == "CKPTGET":
+            return (nvm.read(st_base), nvm.read(st_base + 1))
+        raise ValueError(f"unknown checkpoint op {func}")
+
+    def touch_plan(self, nvm: NVM, st_base: int, func: str,
+                   args: Any) -> List[Tuple[int, int]]:
+        if func == "CKPT" and args[0] > nvm.read(st_base):
+            return [(0, 2)]
+        return []
+
+    def snapshot(self, nvm: NVM, st_base: int) -> Dict[str, Any]:
+        return {"step": nvm.read(st_base),
+                "payload": nvm.read(st_base + 1)}
 
 
 class HeapObject(SeqObject):

@@ -48,6 +48,17 @@ class RequestRec:
     # request merges it Lamport-style, so a round's modeled latency is
     # the max over its participants (unused when no profile is engaged).
     vtime: float = 0.0
+    # Announce seqlock (volatile, costs no NVM instruction): odd while
+    # an in-place announce is rewriting the fields, bumped even when it
+    # publishes.  The paper's Request[p] is a single pointer store (one
+    # atomic publication); our field-per-field record needs this so a
+    # combiner scanning under TRUE parallelism can never adopt a MIXED
+    # record — func from one announcement, args from the next (caught
+    # by the mp heap stress: a torn HINSERT/None pair).  Scanners
+    # re-check the stamp after reading the fields and skip the record
+    # on a mismatch; the writer's announce is then simply "not yet
+    # published" for that pass.
+    stamp: int = 0
 
 
 class PBComb:
@@ -153,6 +164,8 @@ class PBComb:
         (func, args, activate) only after ``valid`` flips back to 1.
         """
         req = self.request[p]
+        st = req.stamp + 1
+        req.stamp = st          # odd: announce in progress (seqlock)
         req.valid = 0
         req.func = func
         req.args = args
@@ -161,6 +174,7 @@ class PBComb:
         if clk is not None:
             req.vtime = clk.now()
         req.valid = 1
+        req.stamp = st + 1      # even: published
         if self.park_enabled and self._rng.random() < self._park_prob:
             time.sleep(self._park_secs)
             # a combiner may have served the parked request: if its
@@ -315,13 +329,24 @@ class PBComb:
             deacts = nvm.read_range(deact_base, self.n)  # one slice, n reads
             for q in range(self.n):                          # line 16
                 req = request[q]
-                if req.valid == 1 and req.activate != deacts[q]:  # line 17
-                    if clk is not None:
-                        clk.merge(req.vtime)  # Lamport receive of announce
-                    ret = self._apply(q, req.func, req.args, ind, p)   # lines 18-19
-                    wr(retval_base + q, ret)                           # line 20
-                    wr(deact_base + q, req.activate)                   # line 21
-                    pass_served += 1
+                # seqlock snapshot: skip records mid-announce, and
+                # re-check the stamp after the field reads so a mixed
+                # (func from one announce, args from the next) record
+                # is never applied — a skipped record is adopted by a
+                # later fixpoint pass or the announcer's own round
+                s1 = req.stamp
+                act = req.activate
+                if s1 & 1 or req.valid != 1 or act == deacts[q]:  # line 17
+                    continue
+                func, args, vt = req.func, req.args, req.vtime
+                if req.stamp != s1:
+                    continue
+                if clk is not None:
+                    clk.merge(vt)         # Lamport receive of announce
+                ret = self._apply(q, func, args, ind, p)       # lines 18-19
+                wr(retval_base + q, ret)                           # line 20
+                wr(deact_base + q, act)                            # line 21
+                pass_served += 1
             served += pass_served
             if pass_served == 0:
                 break

@@ -176,9 +176,12 @@ class PWFComb:
         # Announce in place (line 1).  Mutating the existing RequestRec
         # is race-safe: p's previous request is already served (p was
         # inside _perform_request until then), so scanners skip it while
-        # ``valid`` is 0 and pick the new fields up atomically-enough
-        # once ``valid`` flips back to 1 under the GIL.
+        # ``valid`` is 0 — and the stamp seqlock (see RequestRec) keeps
+        # a truly-parallel scanner from adopting a half-rewritten
+        # record.
         req = self.request[p]
+        st = req.stamp + 1
+        req.stamp = st          # odd: announce in progress
         req.valid = 0
         req.func = func
         req.args = args
@@ -186,6 +189,7 @@ class PWFComb:
         if self._clock is not None:
             req.vtime = self._clock.now()
         req.valid = 1
+        req.stamp = st + 1      # even: published
         # line 2 (backoff): a small random fraction of ops parks after
         # announcing so a concurrent pretend-combiner adopts the request
         # into its round — _try_finish then returns the recorded
@@ -284,14 +288,23 @@ class PWFComb:
             deacts = nvm.read_range(deact_base, n)    # one slice, n reads
             for q in range(n):                                   # line 19
                 req = request[q]
-                if req.valid == 1 and req.activate != deacts[q]:  # line 20
-                    if clk is not None:
-                        clk.merge(req.vtime)   # Lamport receive (announce)
-                    ret = self._apply(q, req.func, req.args, dst, p)    # lines 21-22
-                    wr(retval_base + q, ret)                            # line 23
-                    wr(deact_base + q, req.activate)                    # line 24
-                    comb_round[q] = lval                                # line 25
-                    served += 1
+                # seqlock snapshot (see RequestRec.stamp): never apply
+                # a mixed record; a skipped mid-announce request is
+                # simply not-yet-announced for this attempt
+                s1 = req.stamp
+                act = req.activate
+                if s1 & 1 or req.valid != 1 or act == deacts[q]:  # line 20
+                    continue
+                func, args, vt = req.func, req.args, req.vtime
+                if req.stamp != s1:
+                    continue
+                if clk is not None:
+                    clk.merge(vt)          # Lamport receive (announce)
+                ret = self._apply(q, func, args, dst, p)        # lines 21-22
+                wr(retval_base + q, ret)                            # line 23
+                wr(deact_base + q, act)                             # line 24
+                comb_round[q] = lval                                # line 25
+                served += 1
             if self.S.vl(ver):                                   # line 26
                 index_addr = deact_base + n + p
                 wr(index_addr, 1 - rd(index_addr))               # line 27

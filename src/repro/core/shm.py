@@ -1,4 +1,4 @@
-"""Shared-memory multiprocess execution backend (DESIGN.md §7).
+"""Shared-memory multiprocess execution backend (DESIGN.md §7, §8).
 
 Under CPython's GIL the *measured* combining degree is pinned near 1 —
 only the modeled pass could stage paper-scale rounds (ROADMAP).  This
@@ -7,7 +7,7 @@ module moves every word the protocols share into one
 announce/combine against the same board with true parallelism:
 
   * ``ShmNVM`` — the simulated NVMM (volatile + durable images, the
-    epoch write-back ring, pwb/pfence/psync counters, crash countdown
+    epoch write-back rings, pwb/pfence/psync counters, crash countdown
     and the machine-off ``halted`` flag) entirely in shared memory,
     guarded by one fork-inherited lock.  Same public interface and
     crash semantics as ``NVM``; the fused persistence sentences fall
@@ -16,14 +16,28 @@ announce/combine against the same board with true parallelism:
     backend — that is what the replay-equivalence tests pin.
   * ``ShmBackend`` — the ``core.backend`` seam over the same segment:
     lock-striped CAS emulation for AtomicInt/AtomicRef/SRef, shared
-    request boards, cells, int arrays, degree counters.
+    request boards, cells, int arrays, degree counters, and the blob
+    heap below.
+  * ``BlobHeap`` — a slab/free-list allocator inside the segment for
+    variable-length pickled payloads (DESIGN.md §8).  Values that do
+    not fit the 16-byte inline word codec (tuples, dicts, long
+    strings, big ints, byte strings...) are stored as immutable,
+    generation-tagged, refcounted chunks; the word stores a blob REF.
+    Payload-before-tag publication order means a torn blob value is
+    never observable: readers validate the generation before and after
+    copying the bytes and retry the word read on a mismatch.
+  * multi-segment NVM (NUMA-ish, ROADMAP follow-up): the word space is
+    striped into ``segments`` equal spans, each with its own write-back
+    ring, modeled sync device, allocation pointer, and pwb/psync/spill
+    accounting.  Structures are placed on segments by the runtime's
+    affinity policy (``CombiningRuntime(backend="shm", segments=N)``).
 
 Word encoding: each simulated NVM word (and each board/cell slot) is
-``WORD_I64`` int64s — a tag plus 16 payload bytes — covering the value
-domain the recoverable structures actually store: ints, None, bools,
-floats, and short strings (op tags like "ENQ", responses like "ACK").
-Anything else raises ``TypeError`` with the offending value; rich
-payloads belong to the thread backend.
+``WORD_I64`` int64s — a tag plus 16 payload bytes — covering ints,
+None, bools, floats and short strings inline; anything richer goes to
+the blob heap when the word belongs to a backend (``_Words`` carries
+the heap), or raises ``TypeError`` through the bare module-level
+``encode`` (which has no heap to allocate from).
 
 Atomicity notes.  Aligned 8-byte loads/stores through a ``cast('q')``
 memoryview are single C-level stores; mutating operations (cas,
@@ -33,6 +47,17 @@ on read) with the protocols' own ``valid`` flags providing the
 publication barrier — the same discipline the GIL gave the thread
 backend for free.
 
+Blob durability model (DESIGN.md §8).  Chunks are immutable for the
+lifetime of one allocation (generation): the bytes a pwb would
+snapshot are by construction the bytes a later psync drains, so the
+epoch ring records blob REFS (pinned via the refcount) rather than
+byte copies, and charges the pwb counter with the chunk's cache-line
+footprint — payload layout is visible in the numbers, which is the
+point (MOD / Fatourou-et-al. FIFO-queue line of work).  A chunk is
+reclaimed onto its size-class free list only when no volatile word, no
+durable word and no pending ring entry references it, so a post-crash
+durable image can always decode every blob it names.
+
 Fork discipline: create the runtime, its structures, and the worker
 pool IN THAT ORDER — mp primitives and shared views are inherited by
 fork, so everything shared must exist before ``spawn_workers``.
@@ -41,6 +66,7 @@ fork, so everything shared must exist before ``spawn_workers``.
 from __future__ import annotations
 
 import multiprocessing
+import pickle
 import struct
 import time
 from typing import Any, Dict, Iterator, List, Optional, Tuple
@@ -57,16 +83,23 @@ _T_NONE = 1
 _T_FALSE = 2
 _T_TRUE = 3
 _T_FLOAT = 4
+_T_BLOB = 5           # payload a = blob byte offset, b = generation
 _T_STR = 16           # tag = _T_STR + utf-8 byte length (0..16)
 _STR_MAX = 16
 
 _I64_MIN, _I64_MAX = -(1 << 63), (1 << 63) - 1
 
+#: retries before a blob read declares the word permanently unstable
+#: (a torn word would mean a writer died mid-publication, which the
+#: payload-before-tag order makes impossible; this bounds the loop)
+_STALE_RETRIES = 10_000
+
 
 def encode(value: Any) -> Tuple[int, int, int]:
-    """Python value -> (tag, payload_a, payload_b).  The supported
-    domain is exactly what the recoverable structures store in NVM
-    words; see module docstring."""
+    """Python value -> (tag, payload_a, payload_b) for the INLINE word
+    domain: ints, None, bools, floats, short strings.  Backend words go
+    through ``_Words.set``, which falls back to the blob heap for
+    anything this function rejects."""
     if value is None:
         return _T_NONE, 0, 0
     if value is True:
@@ -76,7 +109,7 @@ def encode(value: Any) -> Tuple[int, int, int]:
     if type(value) is int:
         if not _I64_MIN <= value <= _I64_MAX:
             raise TypeError(f"int {value!r} exceeds the shm backend's "
-                            "64-bit word")
+                            "64-bit inline word")
         return _T_INT, value, 0
     if type(value) is float:
         return _T_FLOAT, struct.unpack("<q", struct.pack("<d", value))[0], 0
@@ -84,14 +117,15 @@ def encode(value: Any) -> Tuple[int, int, int]:
         raw = value.encode("utf-8")
         if len(raw) > _STR_MAX:
             raise TypeError(f"str {value!r} exceeds {_STR_MAX} utf-8 "
-                            "bytes (shm backend word)")
+                            "bytes (inline shm word)")
         raw = raw.ljust(_STR_MAX, b"\0")
         return (_T_STR + len(value.encode('utf-8')),
                 int.from_bytes(raw[:8], "little", signed=True),
                 int.from_bytes(raw[8:], "little", signed=True))
     raise TypeError(
-        f"the shm backend stores ints, floats, bools, None and short "
-        f"strings in NVM words; got {type(value).__name__}: {value!r}")
+        f"inline shm words store ints, floats, bools, None and short "
+        f"strings; got {type(value).__name__}: {value!r} (rich payloads "
+        "go through a backend word, which blob-encodes them)")
 
 
 def decode(tag: int, a: int, b: int) -> Any:
@@ -109,33 +143,216 @@ def decode(tag: int, a: int, b: int) -> Any:
         raw = (a.to_bytes(8, "little", signed=True)
                + b.to_bytes(8, "little", signed=True))
         return raw[:tag - _T_STR].decode("utf-8")
+    if tag == _T_BLOB:
+        raise ValueError("blob word needs its backend heap to decode "
+                         "(use _Words.get, not the bare decode)")
     raise ValueError(f"corrupt shm word tag {tag}")
+
+
+# --------------------------------------------------------------------- #
+# Blob heap                                                             #
+# --------------------------------------------------------------------- #
+_BLOB_GRANULE = 64        # bytes: smallest chunk class AND line size for
+_BLOB_LINE = 64           # the blob write-back accounting
+_BLOB_HDR = 16            # per-chunk in-image header: gen, nbytes
+_BLOB_CLASSES = 16        # 64B << 15 = 2MB largest chunk
+
+
+class BlobHeap:
+    """Slab/free-list allocator for variable-length payloads inside the
+    backend segment (DESIGN.md §8).
+
+    Chunks are power-of-two size classes (64B..2MB), carved from one
+    bump region; a freed chunk goes on its class free list and is only
+    re-handed-out there, so chunks never overlap and never change
+    class.  Each chunk carries an in-image header ``[gen, nbytes]``
+    and side metadata (refcount, authoritative generation, class, free
+    link) OUTSIDE the imaged areas, so crash restores never clobber
+    allocator state.
+
+    Invariants:
+      * a chunk's payload is immutable for the lifetime of one
+        generation — publication is alloc+write THEN word publish;
+      * ``rc`` counts every volatile word, durable word and pending
+        ring-entry reference; reclamation only at rc == 0;
+      * ``gen`` is bumped (under the alloc lock) BEFORE a reused
+        chunk's payload is rewritten, so a reader holding a stale ref
+        observes the mismatch no later than its post-copy check.
+    """
+
+    __slots__ = ("mv", "raw", "base_b", "cap_b", "_rc", "_gen", "_cls",
+                 "_nxt", "lock", "_meta_heads")
+
+    def __init__(self, backend: "ShmBackend") -> None:
+        self.mv = backend.mv
+        self.raw = backend.raw
+        self.base_b = backend.blob_base * 8       # absolute byte offset
+        self.cap_b = backend.blob_bytes
+        n_gran = backend.blob_bytes // _BLOB_GRANULE
+        side = backend.blob_side_base
+        self._rc = side
+        self._gen = side + n_gran
+        self._cls = side + 2 * n_gran
+        self._nxt = side + 3 * n_gran
+        self.lock = backend._alloc_lock
+        self._meta_heads = _M_CLASS0
+
+    # ------------- allocation ------------------------------------------ #
+    def alloc(self, data: bytes) -> Tuple[int, int]:
+        """Allocate a chunk, write header+payload, rc=1.  Returns
+        (byte offset, generation) — the word's (a, b) payload."""
+        mv = self.mv
+        need = _BLOB_HDR + len(data)
+        cls_b = max(_BLOB_GRANULE, 1 << (need - 1).bit_length())
+        ci = (cls_b // _BLOB_GRANULE).bit_length() - 1
+        if ci >= _BLOB_CLASSES or cls_b > self.cap_b:
+            raise TypeError(f"payload of {len(data)} bytes exceeds the "
+                            "blob heap's largest chunk class")
+        with self.lock:
+            head = mv[self._meta_heads + ci]
+            if head:
+                off = head - 1
+                g = off // _BLOB_GRANULE
+                mv[self._meta_heads + ci] = mv[self._nxt + g]
+            else:
+                off = mv[_M_BLOB_BUMP]
+                if off + cls_b > self.cap_b:
+                    raise MemoryError(
+                        f"shm blob heap exhausted ({self.cap_b} bytes)")
+                mv[_M_BLOB_BUMP] = off + cls_b
+                g = off // _BLOB_GRANULE
+                mv[self._cls + g] = cls_b
+            gen = mv[self._gen + g] + 1
+            mv[self._gen + g] = gen
+            mv[self._rc + g] = 1
+            mv[_M_BLOBBED] = 1
+            # gen first (stale readers of a reused chunk bail before the
+            # payload is overwritten), then length, then the bytes
+            qb = (self.base_b + off) // 8
+            mv[qb] = gen
+            mv[qb + 1] = len(data)
+            b0 = self.base_b + off + _BLOB_HDR
+            self.raw[b0:b0 + len(data)] = data
+            return off, gen
+
+    # ------------- read ------------------------------------------------ #
+    def read(self, off: int, gen: int) -> Optional[bytes]:
+        """Chunk payload for generation ``gen``, or None when the chunk
+        was reallocated since (the caller re-reads the word)."""
+        mv = self.mv
+        qb = (self.base_b + off) // 8
+        if mv[qb] != gen:
+            return None
+        n = mv[qb + 1]
+        b0 = self.base_b + off + _BLOB_HDR
+        data = bytes(self.raw[b0:b0 + n])
+        if mv[qb] != gen:          # reallocated mid-copy: bytes are torn
+            return None
+        return data
+
+    # ------------- refcounting ----------------------------------------- #
+    def inc(self, off: int) -> None:
+        with self.lock:
+            self.mv[self._rc + off // _BLOB_GRANULE] += 1
+
+    def try_pin(self, off: int, gen: int) -> bool:
+        """Validated pin: take a reference iff the chunk still carries
+        ``gen`` and is live.  Raw-copy paths (ring snapshots, StateRec
+        copies) use this instead of a blind ``inc`` — between their
+        word read and the pin, the word's writer may have released the
+        chunk and the allocator re-handed it out; (off, gen) pairs
+        never recur, so a stale pair is detected here and the caller
+        re-reads the word."""
+        with self.lock:
+            g = off // _BLOB_GRANULE
+            if self.mv[self._gen + g] == gen and self.mv[self._rc + g] > 0:
+                self.mv[self._rc + g] += 1
+                return True
+            return False
+
+    def dec(self, off: int) -> None:
+        mv = self.mv
+        with self.lock:
+            g = off // _BLOB_GRANULE
+            rc = mv[self._rc + g] - 1
+            mv[self._rc + g] = rc
+            if rc == 0:
+                cls_b = mv[self._cls + g]
+                ci = (cls_b // _BLOB_GRANULE).bit_length() - 1
+                mv[self._nxt + g] = mv[self._meta_heads + ci]
+                mv[self._meta_heads + ci] = off + 1
+
+    # ------------- accounting / introspection -------------------------- #
+    def lines(self, off: int) -> int:
+        """Cache-line footprint of the chunk's USED bytes (header +
+        payload) — what a pwb of a referencing word writes back."""
+        qb = (self.base_b + off) // 8
+        return (_BLOB_HDR + self.mv[qb + 1] + _BLOB_LINE - 1) // _BLOB_LINE
+
+    def chunks(self) -> List[Tuple[int, int, int, int]]:
+        """[(off, class_bytes, rc, gen)] for every chunk ever carved,
+        in address order (allocator-audit introspection for tests)."""
+        mv = self.mv
+        out = []
+        off = 0
+        while off < mv[_M_BLOB_BUMP]:
+            g = off // _BLOB_GRANULE
+            cls_b = mv[self._cls + g]
+            out.append((off, cls_b, mv[self._rc + g], mv[self._gen + g]))
+            off += cls_b
+        return out
 
 
 class _Words:
     """Codec-word array view: word i lives at i64 offset
-    ``base + WORD_I64 * i`` of the backing memoryview."""
+    ``base + WORD_I64 * i`` of the backing memoryview.  ``heap`` (when
+    attached to a backend) serves the rich-value fallback."""
 
-    __slots__ = ("mv", "base")
+    __slots__ = ("mv", "base", "heap")
 
-    def __init__(self, mv, base_i64: int) -> None:
+    def __init__(self, mv, base_i64: int,
+                 heap: Optional[BlobHeap] = None) -> None:
         self.mv = mv
         self.base = base_i64
+        self.heap = heap
 
     def get(self, i: int) -> Any:
         o = self.base + WORD_I64 * i
         mv = self.mv
-        return decode(mv[o], mv[o + 1], mv[o + 2])
+        for _ in range(_STALE_RETRIES):
+            t = mv[o]
+            if t != _T_BLOB:
+                return decode(t, mv[o + 1], mv[o + 2])
+            data = self.heap.read(mv[o + 1], mv[o + 2])
+            if data is not None:
+                return pickle.loads(data)
+            # chunk reallocated between the word read and the byte copy:
+            # the word necessarily changed too — re-read it
+        raise RuntimeError("shm blob word kept changing under the "
+                           "reader (writer died mid-publication?)")
 
     def set(self, i: int, value: Any) -> None:
-        t, a, b = encode(value)
         o = self.base + WORD_I64 * i
         mv = self.mv
+        heap = self.heap
+        old_off = mv[o + 1] if (heap is not None and mv[o] == _T_BLOB) \
+            else -1
+        try:
+            t, a, b = encode(value)
+        except TypeError:
+            if heap is None:
+                raise
+            a, b = heap.alloc(pickle.dumps(value, protocol=4))
+            t = _T_BLOB
         # payload before tag: a reader that sees the new tag sees the
-        # new payload (TSO); single-word int updates hinge on mv[o+1]
+        # new payload (TSO); single-word int updates hinge on mv[o+1].
+        # For blobs the chunk bytes were fully written by alloc() above,
+        # BEFORE this publication — old-or-new, never torn.
         mv[o + 1] = a
         mv[o + 2] = b
         mv[o] = t
+        if old_off >= 0:
+            heap.dec(old_off)
 
     def get_range(self, i: int, n: int) -> List[Any]:
         return [self.get(i + j) for j in range(n)]
@@ -242,7 +459,7 @@ class ShmAtomicRef:
                  clock: Optional[Any] = None,
                  mirror: Optional[Tuple[Any, int]] = None) -> None:
         off = backend.aux_alloc(WORD_I64 + 1)
-        self._words = _Words(backend.mv, off)
+        self._words = _Words(backend.mv, off, backend.heap)
         self._idx = 0
         self._mv = backend.mv
         self._voff = off + WORD_I64
@@ -347,7 +564,8 @@ class ShmCell:
     __slots__ = ("_words",)
 
     def __init__(self, backend: "ShmBackend", value: Any = None) -> None:
-        self._words = _Words(backend.mv, backend.aux_alloc(WORD_I64))
+        self._words = _Words(backend.mv, backend.aux_alloc(WORD_I64),
+                             backend.heap)
         self._words.set(0, value)
 
     @property
@@ -386,7 +604,8 @@ class ShmIntArray:
 
 
 # Request-board field offsets (codec words per RequestRec slot).
-_RB_FUNC, _RB_ARGS, _RB_ACT, _RB_VALID, _RB_VTIME, _RB_WORDS = 0, 1, 2, 3, 4, 5
+_RB_FUNC, _RB_ARGS, _RB_ACT, _RB_VALID, _RB_VTIME, _RB_STAMP, _RB_WORDS = \
+    0, 1, 2, 3, 4, 5, 6
 
 
 class ShmRequestRec:
@@ -440,34 +659,51 @@ class ShmRequestRec:
     def vtime(self, v):
         self._w.set(self._b + _RB_VTIME, v)
 
+    @property
+    def stamp(self):
+        return self._w.get(self._b + _RB_STAMP)
+
+    @stamp.setter
+    def stamp(self, v):
+        self._w.set(self._b + _RB_STAMP, v)
+
 
 class ShmRequestBoard(list):
     """Announcement board in shared memory: ``board[p]`` is a live view;
-    assigning a RequestRec copies its fields (valid published last)."""
+    assigning a RequestRec copies its fields under the announce seqlock
+    (stamp odd while rewriting, valid published before the even
+    stamp — see ``RequestRec.stamp``)."""
 
     def __init__(self, backend: "ShmBackend", n_threads: int) -> None:
         words = _Words(backend.mv,
-                       backend.aux_alloc(WORD_I64 * _RB_WORDS * n_threads))
+                       backend.aux_alloc(WORD_I64 * _RB_WORDS * n_threads),
+                       backend.heap)
         super().__init__(ShmRequestRec(words, _RB_WORDS * p)
                          for p in range(n_threads))
         self.reset()
 
     def __setitem__(self, p: int, rec: Any) -> None:
         view = list.__getitem__(self, p)
+        st = view.stamp + 1
+        view.stamp = st                 # odd: rewrite in progress
         view.valid = 0
         view.func = rec.func
         view.args = rec.args
         view.activate = rec.activate
         view.vtime = rec.vtime
         view.valid = rec.valid
+        view.stamp = st + 1             # even: published
 
     def reset(self) -> None:
         for view in self:
+            st = view.stamp + 1
+            view.stamp = st
             view.valid = 0
             view.func = None
             view.args = None
             view.activate = 0
             view.vtime = 0.0
+            view.stamp = st + 1
 
 
 class ShmDegreeStats:
@@ -505,21 +741,33 @@ class ShmDegreeStats:
 # --------------------------------------------------------------------- #
 # The backend                                                           #
 # --------------------------------------------------------------------- #
-# meta slot indexes (int64)
-_M_ALLOC = 0        # NVM word bump pointer
-_M_AUX = 1          # aux-area bump pointer (i64 units, relative)
-_M_COUNT = 2        # crash countdown (-1 = disarmed)
-_M_SEED = 3         # adversarial-drain seed (-1 = drain nothing)
-_M_HALT = 4         # machine-off flag
-_M_EPOCH = 5        # current epoch id
-_M_EFLAG = 6        # 1 iff the current epoch has queued entries
-_M_RING = 7         # ring used (i64 units, relative to ring base)
-_M_PWB, _M_PFENCE, _M_PSYNC, _M_CRASHES = 8, 9, 10, 11
-_M_SPILLS = 12      # ring-overflow early drains (visibility)
-_META_I64 = 16
+# machine meta slot indexes (int64)
+_M_AUX = 0          # aux-area bump pointer (i64 units, relative)
+_M_COUNT = 1        # crash countdown (-1 = disarmed)
+_M_SEED = 2         # adversarial-drain seed (-1 = drain nothing)
+_M_HALT = 3         # machine-off flag
+_M_PWB, _M_PFENCE, _M_PSYNC, _M_CRASHES = 4, 5, 6, 7
+_M_SPILLS = 8       # ring-overflow early drains (machine-wide)
+_M_BLOBBED = 9      # 1 iff the blob heap ever allocated (fast-path skip)
+_M_BLOB_BUMP = 10   # blob-area bump pointer (bytes, relative)
+_M_CLASS0 = 16      # blob class free-list heads (byte offset + 1; 0=nil)
+_META_I64 = _M_CLASS0 + _BLOB_CLASSES
+
+# per-segment meta slots (int64), at seg_meta + s * _SEG_I64
+_S_ALLOC = 0        # word bump pointer (absolute word index)
+_S_EPOCH = 1        # current epoch id
+_S_EFLAG = 2        # 1 iff the current epoch has queued entries
+_S_RING = 3         # ring used (i64, relative to this segment's ring)
+_S_PWB = 4          # lines written back through this segment's device
+_S_PSYNC = 5        # psyncs that ENGAGED this segment's device
+_S_SPILLS = 6       # ring-overflow early drains on this segment
+_SEG_I64 = 8
 
 _CTR_SLOT = {"pwb": _M_PWB, "pfence": _M_PFENCE, "psync": _M_PSYNC,
              "crashes": _M_CRASHES, "ring_spills": _M_SPILLS}
+
+# ring entry header: [epoch, first_line, n_lines, blob_lines]
+_ENT_HDR = 4
 
 
 class _ShmCounters:
@@ -540,6 +788,12 @@ class _ShmCounters:
 
     def __iter__(self) -> Iterator[str]:
         return iter(_CTR_SLOT)
+
+    def __contains__(self, key: str) -> bool:
+        return key in _CTR_SLOT
+
+    def get(self, key: str, default=None):
+        return self._mv[_CTR_SLOT[key]] if key in _CTR_SLOT else default
 
     def keys(self):
         return _CTR_SLOT.keys()
@@ -576,27 +830,55 @@ class ShmBackend(ThreadBackend):
     PARK_SECONDS = 1e-4
 
     def __init__(self, data_words: int = 1 << 18, *,
-                 aux_i64: int = 1 << 16, ring_i64: int = 1 << 18) -> None:
+                 aux_i64: int = 1 << 16, ring_i64: int = 1 << 18,
+                 segments: int = 1, blob_bytes: int = 1 << 20) -> None:
         from multiprocessing import shared_memory
+        if segments < 1:
+            raise ValueError(f"segments must be >= 1, got {segments}")
+        if blob_bytes % _BLOB_GRANULE:
+            raise ValueError("blob_bytes must be a multiple of "
+                             f"{_BLOB_GRANULE}")
         self._ctx = multiprocessing.get_context("fork")
-        self.data_words = data_words
-        total = (_META_I64 + 2 * data_words * WORD_I64 + ring_i64
-                 + aux_i64)
+        # equal line-aligned word spans per segment
+        per = -(-data_words // segments)
+        per += (-per) % LINE
+        self.data_words = data_words = per * segments
+        self.words_per_seg = per
+        self.segments = segments
+        self.ring_seg = max(_ENT_HDR + LINE * WORD_I64,
+                            ring_i64 // segments)
+        n_gran = blob_bytes // _BLOB_GRANULE
+        total = (_META_I64 + segments * _SEG_I64
+                 + 2 * data_words * WORD_I64
+                 + segments * self.ring_seg + aux_i64
+                 + 4 * n_gran + blob_bytes // 8)
         self._shm = shared_memory.SharedMemory(create=True, size=total * 8)
         self.mv = self._shm.buf.cast("q")
+        self.raw = self._shm.buf
         # fresh /dev/shm pages are zero-filled; meta needs two non-zeros
         self.mv[_M_COUNT] = -1
         self.mv[_M_SEED] = -1
-        self.vol_base = _META_I64
+        self.seg_meta = _META_I64
+        self.vol_base = self.seg_meta + segments * _SEG_I64
         self.dur_base = self.vol_base + data_words * WORD_I64
         self.ring_base = self.dur_base + data_words * WORD_I64
-        self.ring_cap = ring_i64
-        self.aux_base = self.ring_base + ring_i64
+        self.aux_base = self.ring_base + segments * self.ring_seg
         self.aux_cap = aux_i64
+        self.blob_side_base = self.aux_base + aux_i64
+        self.blob_bytes = blob_bytes
+        self.blob_base = self.blob_side_base + 4 * n_gran
+        # per-segment word allocation pointers (segment 0 reserves line
+        # 0: address 0 doubles as NULL for the linked structures)
+        for s in range(segments):
+            self.mv[self.seg_meta + s * _SEG_I64 + _S_ALLOC] = \
+                s * per if s else LINE
         self._stripes = [self._ctx.Lock() for _ in range(self.N_STRIPES)]
         self._alloc_lock = self._ctx.Lock()
-        self.nvm_lock = self._ctx.Lock()     # guards images/ring/counters
-        self.device_lock = self._ctx.Lock()  # wall persist_latency drains
+        self.nvm_lock = self._ctx.Lock()     # guards images/rings/counters
+        # one modeled write-back device per segment (wall persist_latency
+        # drains serialize per device, not machine-wide)
+        self.device_locks = [self._ctx.Lock() for _ in range(segments)]
+        self.heap = BlobHeap(self)
         self._closed = False
 
     # ---------------- segment plumbing --------------------------------- #
@@ -619,6 +901,8 @@ class ShmBackend(ThreadBackend):
         if self._closed:
             return
         self._closed = True
+        self.raw = None
+        self.heap = None
         mv, self.mv = self.mv, None
         mv.release()
         self._shm.close()
@@ -693,10 +977,10 @@ class ShmBackend(ThreadBackend):
 # The NVM                                                               #
 # --------------------------------------------------------------------- #
 class ShmNVM(NVM):
-    """Simulated NVMM whose images, write-back ring, counters and crash
+    """Simulated NVMM whose images, write-back rings, counters and crash
     machinery live in the backend's shared segment.
 
-    Same interface and crash semantics as ``NVM`` with three
+    Same interface and crash semantics as ``NVM`` with these
     multiprocess-specific differences, all visible only to shm runs:
 
       * fused persistence sentences always take the discrete path
@@ -708,19 +992,36 @@ class ShmNVM(NVM):
         survivors poll the flag from persistence instructions and wait
         loops and stop as if their power was cut.  ``disarm_crash``
         (called by ``CombiningRuntime.recover``) clears it;
-      * if the write-back ring fills, the oldest pending write-backs
+      * if a write-back ring fills, the oldest pending write-backs
         are drained to the durable image early (counted in
         ``ring_spills``).  Legal under explicit epoch persistency: the
         lines were pwb'd, the hardware may complete them any time
-        before the psync.
+        before the psync;
+      * NUMA-ish segmentation (DESIGN.md §8): the word space is striped
+        into ``segments`` spans, each with its own epoch ring, modeled
+        sync device, allocation pointer and per-segment accounting
+        (``segment_counters()``); ``alloc(..., segment=s)`` or the
+        ``placement(s)`` context manager pin a structure to a span;
+      * rich word values ride the backend's ``BlobHeap`` — blob-ref
+        words charge the referenced chunk's cache-line footprint to
+        every pwb that covers them, and the ring pins chunks (by
+        refcount) instead of copying their immutable bytes.
     """
 
     def __init__(self, n_words: int = 1 << 18, *,
                  backend: Optional[ShmBackend] = None,
+                 segments: int = 1,
                  pwb_nop: bool = False, psync_nop: bool = False,
                  persist_latency: float = 0.0) -> None:
         if backend is None:
-            backend = ShmBackend(data_words=n_words)
+            backend = ShmBackend(data_words=n_words, segments=segments)
+            n_words = backend.data_words
+        elif segments not in (1, backend.segments):
+            raise ValueError(
+                f"segments={segments} contradicts the supplied backend "
+                f"(built with segments={backend.segments}); segmentation "
+                "is a property of the segment layout, so pass it where "
+                "the backend is constructed")
         if n_words > backend.data_words:
             raise ValueError(f"n_words={n_words} exceeds backend segment "
                              f"({backend.data_words} words)")
@@ -728,9 +1029,11 @@ class ShmNVM(NVM):
         # segment, and every inherited method that touches them is
         # overridden (the fused sentences dispatch through _fast_ok).
         self.backend = backend
+        self.segments = backend.segments
+        self.words_per_seg = backend.words_per_seg
         self.n_words = n_words
-        self._vol = _Words(backend.mv, backend.vol_base)
-        self._dur = _Words(backend.mv, backend.dur_base)
+        self._vol = _Words(backend.mv, backend.vol_base, backend.heap)
+        self._dur = _Words(backend.mv, backend.dur_base, backend.heap)
         self._mv = backend.mv
         self._lock = backend.nvm_lock
         self.pwb_nop = pwb_nop
@@ -740,10 +1043,7 @@ class ShmNVM(NVM):
         self.force_discrete = False
         self.counters = _ShmCounters(backend.mv)
         self._crash_rng = None
-        mv = self._mv
-        with self._lock:
-            if mv[_M_ALLOC] == 0:
-                mv[_M_ALLOC] = LINE      # line 0 reserved (NULL)
+        self._default_seg = 0
 
     # ------------------------------------------------------------------ #
     @property
@@ -753,18 +1053,55 @@ class ShmNVM(NVM):
     def _fast_ok(self) -> bool:
         return False        # fused sentences always take the discrete path
 
+    def _seg_slot(self, s: int, field: int) -> int:
+        return self.backend.seg_meta + s * _SEG_I64 + field
+
+    def segment_of(self, addr: int) -> int:
+        return min(addr // self.words_per_seg, self.segments - 1)
+
     # ---------------- allocation --------------------------------------- #
-    def alloc(self, n_words: int, align_line: bool = True) -> int:
+    def current_segment(self) -> int:
+        return self._default_seg
+
+    def set_default_segment(self, segment: int) -> None:
+        if not 0 <= segment < self.segments:
+            raise ValueError(f"segment {segment} out of range "
+                             f"(0..{self.segments - 1})")
+        self._default_seg = segment
+
+    def placement(self, segment: int):
+        """Context manager: allocations inside run on ``segment`` (the
+        runtime's structure-affinity policy uses this)."""
+        from contextlib import contextmanager
+
+        @contextmanager
+        def _cm():
+            prev = self._default_seg
+            self.set_default_segment(segment)
+            try:
+                yield self
+            finally:
+                self._default_seg = prev
+        return _cm()
+
+    def alloc(self, n_words: int, align_line: bool = True,
+              segment: Optional[int] = None) -> int:
+        s = self._default_seg if segment is None else segment
+        if not 0 <= s < self.segments:
+            raise ValueError(f"segment {s} out of range")
         mv = self._mv
+        slot = self._seg_slot(s, _S_ALLOC)
+        limit = min(self.n_words, (s + 1) * self.words_per_seg)
         with self._lock:
-            ptr = mv[_M_ALLOC]
+            ptr = mv[slot]
             if align_line and ptr % LINE:
                 ptr += LINE - ptr % LINE
             base = ptr
             ptr += n_words
-            if ptr > self.n_words:
-                raise MemoryError("simulated (shm) NVMM exhausted")
-            mv[_M_ALLOC] = ptr
+            if ptr > limit:
+                raise MemoryError(
+                    f"simulated (shm) NVMM segment {s} exhausted")
+            mv[slot] = ptr
             return base
 
     # ---------------- volatile image ------------------------------------ #
@@ -782,65 +1119,164 @@ class ShmNVM(NVM):
 
     def copy_range(self, dst: int, src: int, n: int) -> None:
         mv = self._mv
-        a = self.backend.vol_base + WORD_I64 * src
-        d = self.backend.vol_base + WORD_I64 * dst
+        vb = self.backend.vol_base
+        if mv[_M_BLOBBED]:
+            # NOTE: _M_BLOBBED is machine-wide and sticky by design —
+            # a per-segment flag would be unsound here because a racy
+            # source (a PWFComb slot being rewritten mid-copy) can gain
+            # its first blob ref AFTER any pre-scan, and aux words have
+            # no segment to key a flag on.  The per-word cost is
+            # confined to runtimes that actually store rich values.
+            # a raw copy duplicates blob refs, so it goes word by word:
+            # each source blob ref is VALIDATED-pinned (try_pin) before
+            # the dst word is published over the old one — a concurrent
+            # writer releasing the source chunk mid-copy is caught by
+            # the generation check and that word re-read.  (Non-blob
+            # words keep the raw-copy tearing exposure the protocols
+            # already discard via their own validation.)
+            heap = self.backend.heap
+            for j in range(n):
+                so = vb + WORD_I64 * (src + j)
+                do = vb + WORD_I64 * (dst + j)
+                for _ in range(_STALE_RETRIES):
+                    t, a, b = mv[so], mv[so + 1], mv[so + 2]
+                    if t != _T_BLOB or heap.try_pin(a, b):
+                        break
+                else:
+                    raise RuntimeError("shm blob word kept changing "
+                                       "under copy_range")
+                old_off = mv[do + 1] if mv[do] == _T_BLOB else -1
+                mv[do + 1] = a
+                mv[do + 2] = b
+                mv[do] = t
+                if old_off >= 0:
+                    heap.dec(old_off)
+            return
+        a = vb + WORD_I64 * src
+        d = vb + WORD_I64 * dst
         n3 = WORD_I64 * n
         mv[d:d + n3] = mv[a:a + n3]
 
     def durable_read(self, addr: int) -> Any:
         return self._dur.get(addr)
 
-    # ---------------- write-back ring ------------------------------------ #
-    # Entry layout (i64): [epoch_id, first_line, n_lines,
-    #                      payload: n_lines * LINE * WORD_I64]
-    def _ring_append_locked(self, first: int, n_lines: int) -> None:
+    # ---------------- write-back rings ----------------------------------- #
+    # Per-segment entry layout (i64): [epoch_id, first_line, n_lines,
+    #   blob_lines, payload: n_lines * LINE * WORD_I64]
+    def _blob_refs_in(self, base_i64: int, n_words: int) -> List[int]:
+        """Blob offsets referenced by words at [base_i64, +n_words) of
+        the backing view, one per OCCURRENCE (callers dedupe for line
+        accounting, keep occurrences for refcounts)."""
         mv = self._mv
-        size = 3 + n_lines * LINE * WORD_I64
-        used = mv[_M_RING]
-        if used + size > self.backend.ring_cap:
+        return [mv[o + 1]
+                for o in range(base_i64, base_i64 + WORD_I64 * n_words,
+                               WORD_I64)
+                if mv[o] == _T_BLOB]
+
+    def _blob_lines(self, refs: List[int]) -> int:
+        heap = self.backend.heap
+        return sum(heap.lines(off) for off in set(refs))
+
+    def _ring_append_locked(self, s: int, first: int,
+                            n_lines: int) -> int:
+        """Append one entry to segment ``s``'s ring; returns the blob
+        line count charged on top of the word lines."""
+        mv = self._mv
+        size = _ENT_HDR + n_lines * LINE * WORD_I64
+        rslot = self._seg_slot(s, _S_RING)
+        used = mv[rslot]
+        if used + size > self.backend.ring_seg:
             # early completion of pending write-backs (see class doc)
-            self._drain_ring_locked()
+            self._drain_ring_locked(s)
             mv[_M_SPILLS] += 1
+            mv[self._seg_slot(s, _S_SPILLS)] += 1
             used = 0
-            if size > self.backend.ring_cap:
+            if size > self.backend.ring_seg:
                 raise MemoryError("shm write-back ring smaller than one "
                                   f"pwb of {n_lines} lines")
-        o = self.backend.ring_base + used
-        mv[o] = mv[_M_EPOCH]
+        o = self.backend.ring_base + s * self.backend.ring_seg + used
+        mv[o] = mv[self._seg_slot(s, _S_EPOCH)]
         mv[o + 1] = first
         mv[o + 2] = n_lines
         src = self.backend.vol_base + WORD_I64 * first * LINE
         n3 = n_lines * LINE * WORD_I64
-        mv[o + 3:o + 3 + n3] = mv[src:src + n3]
-        mv[_M_RING] = used + size
-        mv[_M_EFLAG] = 1
+        mv[o + _ENT_HDR:o + _ENT_HDR + n3] = mv[src:src + n3]
+        blob_lines = 0
+        if mv[_M_BLOBBED]:
+            # pin every referenced chunk per occurrence: the ring's
+            # snapshot words hold refs, not byte copies — the pin is
+            # what keeps the (immutable) bytes around until drain.
+            # Pins are VALIDATED (try_pin): a writer racing this pwb
+            # may have released the chunk between the slice copy above
+            # and here, in which case the fresh word is re-snapshotted
+            # (either value is a legal pwb-time capture).
+            heap = self.backend.heap
+            pinned = []
+            for w in range(n_lines * LINE):
+                so = o + _ENT_HDR + WORD_I64 * w
+                for _ in range(_STALE_RETRIES):
+                    if mv[so] != _T_BLOB:
+                        break
+                    if heap.try_pin(mv[so + 1], mv[so + 2]):
+                        pinned.append(mv[so + 1])
+                        break
+                    vo = src + WORD_I64 * w
+                    mv[so:so + WORD_I64] = mv[vo:vo + WORD_I64]
+                else:
+                    raise RuntimeError("shm blob word kept changing "
+                                       "under pwb snapshot")
+            if pinned:
+                blob_lines = self._blob_lines(pinned)
+        mv[o + 3] = blob_lines
+        mv[rslot] = used + size
+        mv[self._seg_slot(s, _S_EFLAG)] = 1
+        return blob_lines
 
-    def _ring_entries_locked(self) -> List[Tuple[int, int, int, int]]:
-        """[(epoch, first_line, n_lines, payload_i64_offset)] in order."""
+    def _ring_entries_locked(self, s: int
+                             ) -> List[Tuple[int, int, int, int, int]]:
+        """[(epoch, first_line, n_lines, blob_lines, payload_off)]."""
         mv = self._mv
         out = []
-        o = self.backend.ring_base
-        end = o + mv[_M_RING]
+        o = self.backend.ring_base + s * self.backend.ring_seg
+        end = o + mv[self._seg_slot(s, _S_RING)]
         while o < end:
             n_lines = mv[o + 2]
-            out.append((mv[o], mv[o + 1], n_lines, o + 3))
-            o += 3 + n_lines * LINE * WORD_I64
+            out.append((mv[o], mv[o + 1], n_lines, mv[o + 3],
+                        o + _ENT_HDR))
+            o += _ENT_HDR + n_lines * LINE * WORD_I64
         return out
 
     def _drain_entry_locked(self, first: int, n_lines: int,
                             payload: int) -> None:
+        """Install a snapshot span over the durable image.  The
+        snapshot's blob refs were pinned at append time; they become
+        the durable words' refs here, so only the refs of the durable
+        words being BURIED are released."""
         mv = self._mv
         dst = self.backend.dur_base + WORD_I64 * first * LINE
         n3 = n_lines * LINE * WORD_I64
+        if mv[_M_BLOBBED]:
+            heap = self.backend.heap
+            for off in self._blob_refs_in(dst, n_lines * LINE):
+                heap.dec(off)
         mv[dst:dst + n3] = mv[payload:payload + n3]
 
-    def _drain_ring_locked(self) -> List[Tuple[int, int]]:
+    def _discard_span_locked(self, payload: int, n_words: int) -> None:
+        """Release the pins of a snapshot span that will never drain
+        (crash dropped it)."""
+        if self._mv[_M_BLOBBED]:
+            heap = self.backend.heap
+            for off in self._blob_refs_in(payload, n_words):
+                heap.dec(off)
+
+    def _drain_ring_locked(self, s: int) -> List[Tuple[int, int]]:
         drained = []
-        for _e, first, n_lines, payload in self._ring_entries_locked():
+        for _e, first, n_lines, _bl, payload in \
+                self._ring_entries_locked(s):
             self._drain_entry_locked(first, n_lines, payload)
             drained.append((first, n_lines))
-        self._mv[_M_RING] = 0
-        self._mv[_M_EFLAG] = 0
+        self._mv[self._seg_slot(s, _S_RING)] = 0
+        self._mv[self._seg_slot(s, _S_EFLAG)] = 0
         return drained
 
     # ---------------- persistence instructions --------------------------- #
@@ -874,15 +1310,52 @@ class ShmNVM(NVM):
         if self._mv[_M_HALT]:
             raise SimulatedCrash()
 
+    def _split_runs(self, runs) -> List[Tuple[int, int, int]]:
+        """Split (first_line, n_lines) runs at segment boundaries:
+        [(segment, first_line, n_lines)] — each write-back entry lives
+        on exactly one device."""
+        if self.segments == 1:
+            return [(0, first, n) for first, n in runs]
+        lps = self.words_per_seg // LINE
+        out = []
+        for first, n in runs:
+            while n:
+                s = min(first // lps, self.segments - 1)
+                take = n if s == self.segments - 1 \
+                    else min(n, (s + 1) * lps - first)
+                out.append((s, first, take))
+                first += take
+                n -= take
+        return out
+
+    def _persist_runs(self, runs) -> None:
+        """Shared body of pwb/persist_lines: queue every (line) run on
+        its segment's ring, count word + blob lines."""
+        split = self._split_runs(runs)
+        mv = self._mv
+        with self._lock:
+            self._halt_check_locked()
+            total = 0
+            for s, first, n_lines in split:
+                if not self.pwb_nop:
+                    blob_lines = self._ring_append_locked(s, first,
+                                                          n_lines)
+                elif mv[_M_BLOBBED]:
+                    refs = self._blob_refs_in(
+                        self.backend.vol_base + WORD_I64 * first * LINE,
+                        n_lines * LINE)
+                    blob_lines = self._blob_lines(refs)
+                else:
+                    blob_lines = 0
+                mv[self._seg_slot(s, _S_PWB)] += n_lines + blob_lines
+                total += n_lines + blob_lines
+            mv[_M_PWB] += total
+        self._tick_crash_point()
+
     def pwb(self, addr: int, n_words: int = 1) -> None:
         first = addr // LINE
         n_lines = (addr + n_words - 1) // LINE - first + 1
-        with self._lock:
-            self._halt_check_locked()
-            if not self.pwb_nop:
-                self._ring_append_locked(first, n_lines)
-            self._mv[_M_PWB] += n_lines
-        self._tick_crash_point()
+        self._persist_runs([(first, n_lines)])
 
     pwb_range = pwb
 
@@ -894,38 +1367,40 @@ class ShmNVM(NVM):
         runs = self._pending_lines(ranges)
         if not runs:
             return
-        n_total = sum(n for _first, n in runs)
-        with self._lock:
-            self._halt_check_locked()
-            if not self.pwb_nop:
-                for first, n_lines in runs:
-                    self._ring_append_locked(first, n_lines)
-            self._mv[_M_PWB] += n_total
-        self._tick_crash_point()
+        self._persist_runs(runs)
 
     def pfence(self) -> None:
         mv = self._mv
         with self._lock:
             self._halt_check_locked()
             mv[_M_PFENCE] += 1
-            if mv[_M_EFLAG]:
-                mv[_M_EPOCH] += 1
-                mv[_M_EFLAG] = 0
+            for s in range(self.segments):
+                if mv[self._seg_slot(s, _S_EFLAG)]:
+                    mv[self._seg_slot(s, _S_EPOCH)] += 1
+                    mv[self._seg_slot(s, _S_EFLAG)] = 0
         self._tick_crash_point()
 
     def psync(self) -> None:
-        drained: List[Tuple[int, int]] = []
+        drained_by_seg: Dict[int, List[Tuple[int, int]]] = {}
+        mv = self._mv
         with self._lock:
             self._halt_check_locked()
-            self._mv[_M_PSYNC] += 1
+            mv[_M_PSYNC] += 1
             if not self.psync_nop:
-                drained = self._drain_ring_locked()
-        if drained and self.persist_latency:
-            runs, total_lines = self._run_stats(drained)
-            cost = (self.persist_latency + runs * self.SEEK_COST
-                    + total_lines * self.STREAM_COST)
-            with self.backend.device_lock:
-                time.sleep(cost)
+                for s in range(self.segments):
+                    if mv[self._seg_slot(s, _S_RING)]:
+                        drained_by_seg[s] = self._drain_ring_locked(s)
+                        # one device round trip per ENGAGED segment —
+                        # this is the per-segment psync accounting the
+                        # NUMA-ish model exists to expose
+                        mv[self._seg_slot(s, _S_PSYNC)] += 1
+        if drained_by_seg and self.persist_latency:
+            for s, drained in drained_by_seg.items():
+                runs, total_lines = self._run_stats(drained)
+                cost = (self.persist_latency + runs * self.SEEK_COST
+                        + total_lines * self.STREAM_COST)
+                with self.backend.device_locks[s]:
+                    time.sleep(cost)
         self._tick_crash_point()
 
     # ---------------- crash / recovery ----------------------------------- #
@@ -946,64 +1421,150 @@ class ShmNVM(NVM):
     def disarm_crash(self) -> None:
         """Disarm any countdown AND clear the machine-off flag — the
         runtime's ``recover`` calls this first, which is exactly when
-        the machine powers back on."""
+        the machine powers back on.
+
+        Powering on is also when the volatile word image is restored
+        from the durable one (with the blob refcount fix-up).  Doing it
+        here rather than in ``crash()`` is deliberate: at crash time
+        surviving worker processes may still be unwinding (plain stores
+        between two persistence instructions), so a restore racing them
+        could corrupt the blob refcounts; by the time the parent calls
+        ``recover`` every worker has reported and parked — the restore
+        scans run quiesced.  Until power-on, reads of the volatile
+        image are reads of a dead machine's RAM (nothing meaningful);
+        the durable image is fully resolved at crash time."""
         mv = self._mv
-        mv[_M_COUNT] = -1
-        mv[_M_HALT] = 0
+        with self._lock:
+            mv[_M_COUNT] = -1
+            if mv[_M_HALT]:
+                self._restore_volatile_locked()
+                mv[_M_HALT] = 0
         self._crash_rng = None
+
+    def _restore_volatile_locked(self) -> None:
+        """vol := dur, with the blob refs of the buried volatile words
+        released and the restored (durable) refs duplicated.  Chunks
+        are immutable while referenced, so the restored refs decode
+        against the very bytes the durable words were drained with —
+        no blob image copy exists or is needed."""
+        mv = self._mv
+        heap = self.backend.heap
+        blobbed = bool(mv[_M_BLOBBED])
+        if blobbed:
+            for s in range(self.segments):
+                start, end = self._seg_word_span(s)
+                for off in self._blob_refs_in(
+                        self.backend.vol_base + WORD_I64 * start,
+                        end - start):
+                    heap.dec(off)
+        n3 = self.backend.data_words * WORD_I64
+        mv[self.backend.vol_base:self.backend.vol_base + n3] = \
+            mv[self.backend.dur_base:self.backend.dur_base + n3]
+        if blobbed:
+            for s in range(self.segments):
+                start, end = self._seg_word_span(s)
+                for off in self._blob_refs_in(
+                        self.backend.vol_base + WORD_I64 * start,
+                        end - start):
+                    heap.inc(off)
+
+    def _seg_word_span(self, s: int) -> Tuple[int, int]:
+        """Allocated [start, end) word range of segment ``s`` (the only
+        words a blob-ref rescan needs to walk)."""
+        start = s * self.words_per_seg + (LINE if s == 0 else 0)
+        return start, self._mv[self._seg_slot(s, _S_ALLOC)]
 
     def crash(self, rng=None) -> None:
         mv = self._mv
         with self._lock:
             mv[_M_CRASHES] += 1
-            entries = self._ring_entries_locked()
-            if rng is not None:
-                # mirror NVM.crash: epochs = distinct ids in order plus
-                # a trailing empty epoch when the current one is empty
-                distinct: List[int] = []
-                for e, _f, _n, _p in entries:
-                    if not distinct or distinct[-1] != e:
-                        distinct.append(e)
-                n_epochs = len(distinct) + (0 if mv[_M_EFLAG] else 1)
-                cut = rng.randint(0, n_epochs - 1)
-                for e, first, n_lines, payload in entries:
-                    if e in distinct[:cut]:
-                        self._drain_entry_locked(first, n_lines, payload)
-                if cut < len(distinct):
-                    cut_id = distinct[cut]
-                    cut_epoch: List[Tuple[int, int]] = []
-                    for e, first, n_lines, payload in entries:
-                        if e == cut_id:
+            blobbed = bool(mv[_M_BLOBBED])
+            for s in range(self.segments):
+                entries = self._ring_entries_locked(s)
+                drained_snaps: set = set()      # payload line offsets
+                if rng is not None and entries:
+                    # mirror NVM.crash per segment: epochs = distinct
+                    # ids in order plus a trailing empty epoch when the
+                    # current one is empty
+                    distinct: List[int] = []
+                    for e, _f, _n, _bl, _p in entries:
+                        if not distinct or distinct[-1] != e:
+                            distinct.append(e)
+                    n_epochs = len(distinct) + \
+                        (0 if mv[self._seg_slot(s, _S_EFLAG)] else 1)
+                    cut = rng.randint(0, n_epochs - 1)
+                    for e, first, n_lines, _bl, payload in entries:
+                        if e in distinct[:cut]:
+                            self._drain_entry_locked(first, n_lines,
+                                                     payload)
                             for j in range(n_lines):
-                                cut_epoch.append(
-                                    (first + j,
-                                     payload + j * LINE * WORD_I64))
-                    taken_upto: Dict[int, int] = {}
-                    for i, (line, _snap) in enumerate(cut_epoch):
-                        if rng.random() < 0.5:
-                            taken_upto[line] = i
-                    for i, (line, snap) in enumerate(cut_epoch):
-                        if i <= taken_upto.get(line, -1):
-                            self._drain_entry_locked(line, 1, snap)
-            mv[_M_RING] = 0
-            mv[_M_EFLAG] = 0
-            mv[_M_EPOCH] = 0
-            # volatile image lost: reset to the durable one (raw copy)
-            n3 = self.n_words * WORD_I64
-            mv[self.backend.vol_base:self.backend.vol_base + n3] = \
-                mv[self.backend.dur_base:self.backend.dur_base + n3]
+                                drained_snaps.add(
+                                    payload + j * LINE * WORD_I64)
+                    if cut < len(distinct):
+                        cut_id = distinct[cut]
+                        cut_epoch: List[Tuple[int, int]] = []
+                        for e, first, n_lines, _bl, payload in entries:
+                            if e == cut_id:
+                                for j in range(n_lines):
+                                    cut_epoch.append(
+                                        (first + j,
+                                         payload + j * LINE * WORD_I64))
+                        taken_upto: Dict[int, int] = {}
+                        for i, (line, _snap) in enumerate(cut_epoch):
+                            if rng.random() < 0.5:
+                                taken_upto[line] = i
+                        for i, (line, snap) in enumerate(cut_epoch):
+                            if i <= taken_upto.get(line, -1):
+                                self._drain_entry_locked(line, 1, snap)
+                                drained_snaps.add(snap)
+                if blobbed:
+                    # release the pins of every snapshot line the
+                    # adversary dropped (drained lines transferred
+                    # their pins to the durable words)
+                    for _e, _first, n_lines, _bl, payload in entries:
+                        for j in range(n_lines):
+                            snap = payload + j * LINE * WORD_I64
+                            if snap not in drained_snaps:
+                                self._discard_span_locked(snap, LINE)
+                mv[self._seg_slot(s, _S_RING)] = 0
+                mv[self._seg_slot(s, _S_EFLAG)] = 0
+                mv[self._seg_slot(s, _S_EPOCH)] = 0
             mv[_M_COUNT] = -1
-            mv[_M_HALT] = 1          # machine off until disarm_crash
+            # machine off until disarm_crash — which is also where the
+            # volatile image restore (and its blob-ref fix-up) happens:
+            # surviving processes may still be mid-store right now, and
+            # power-on is the first quiesced point (see disarm_crash)
+            mv[_M_HALT] = 1
 
     # ---------------- introspection -------------------------------------- #
     def pending_lines(self) -> int:
         with self._lock:
-            return sum(n for _e, _f, n, _p in self._ring_entries_locked())
+            return sum(n + bl
+                       for s in range(self.segments)
+                       for _e, _f, n, bl, _p in
+                       self._ring_entries_locked(s))
+
+    def segment_counters(self) -> List[Dict[str, int]]:
+        """Per-segment device accounting: write-back lines, engaged
+        psyncs, ring spills, allocated words."""
+        mv = self._mv
+        out = []
+        for s in range(self.segments):
+            start, end = self._seg_word_span(s)
+            out.append({"segment": s,
+                        "pwb": mv[self._seg_slot(s, _S_PWB)],
+                        "psync": mv[self._seg_slot(s, _S_PSYNC)],
+                        "ring_spills": mv[self._seg_slot(s, _S_SPILLS)],
+                        "words_used": max(0, end - start)})
+        return out
 
     def reset_counters(self) -> None:
         mv = self._mv
         for slot in _CTR_SLOT.values():
             mv[slot] = 0
+        for s in range(self.segments):
+            for f in (_S_PWB, _S_PSYNC, _S_SPILLS):
+                mv[self._seg_slot(s, f)] = 0
 
     def close(self) -> None:
         self._vol = self._dur = self._mv = None

@@ -50,6 +50,20 @@ AnnounceRec = Announcement
 class PBCombCheckpointer:
     """Detectably-recoverable, double-buffered, combining checkpointer."""
 
+    @classmethod
+    def over_nvm(cls, nvm, n_announcers: int, payload_template: Any, *,
+                 segment: int = 0, lease_s: float = 5.0
+                 ) -> "PBCombCheckpointer":
+        """Checkpointer whose slot files live in simulated NVM words
+        (``NVMStore``) instead of a file-like store — pass a runtime's
+        ``ShmNVM`` to put the durable checkpoint state in the shared
+        segment, with its psyncs accounted on ``segment``'s device
+        (DESIGN.md §8)."""
+        from .store import NVMStore
+        ck = cls(NVMStore(nvm, segment=segment), n_announcers,
+                 payload_template, lease_s=lease_s)
+        return ck
+
     def __init__(self, store: Store, n_announcers: int,
                  payload_template: Any, *, lease_s: float = 5.0) -> None:
         self.store = store

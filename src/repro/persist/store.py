@@ -94,6 +94,66 @@ class MemStore(Store):
             self._epochs = [[]]
 
 
+class NVMStore(Store):
+    """Store facade over a simulated NVM (thread or shm backed).
+
+    Each name maps to ONE NVM word holding the file's bytes — the blob
+    heap (shm) or the Python-object word (threads) carries arbitrary
+    sizes — so ``pwb`` is a word write + ``nvm.pwb`` (charged with the
+    payload's cache-line footprint on shm), ``pfence``/``psync`` are
+    the NVM's own instructions, and ``read`` is a durable read.  This
+    is what wires ``PBCombCheckpointer`` through
+    ``CombiningRuntime(backend="shm")``: its slot files live in the
+    shared segment, crash/recovery rides ``nvm.crash``, and its psyncs
+    serialize through the owning segment's modeled device.
+
+    The name -> word directory is volatile Python state in the creating
+    process (the simulation's callers keep the store object across
+    simulated crashes, exactly like MemStore keeps ``_dur``).
+    """
+
+    def __init__(self, nvm, segment: int = 0) -> None:
+        self.nvm = nvm
+        self.segment = segment
+        self._words: Dict[str, int] = {}
+        self._lock = threading.Lock()
+
+    @property
+    def counters(self) -> Dict[str, int]:           # type: ignore[override]
+        c = self.nvm.counters
+        return {k: c[k] for k in ("pwb", "pfence", "psync", "crashes")}
+
+    def _word(self, name: str) -> int:
+        with self._lock:
+            addr = self._words.get(name)
+            if addr is None:
+                addr = self.nvm.alloc(1, segment=self.segment)
+                self._words[name] = addr
+            return addr
+
+    def pwb(self, name: str, data: bytes) -> None:
+        addr = self._word(name)
+        self.nvm.write(addr, bytes(data))
+        self.nvm.pwb(addr, 1)
+
+    def pfence(self) -> None:
+        self.nvm.pfence()
+
+    def psync(self) -> None:
+        self.nvm.psync()
+
+    def read(self, name: str) -> Optional[bytes]:
+        with self._lock:
+            addr = self._words.get(name)
+        if addr is None:
+            return None
+        data = self.nvm.durable_read(addr)
+        return data if isinstance(data, bytes) else None
+
+    def crash(self, rng: Optional[random.Random] = None) -> None:
+        self.nvm.crash(rng)
+
+
 class DirStore(Store):
     """Directory-backed store.
 

@@ -86,7 +86,20 @@ class CombiningEngine:
                  max_batch: int = 32,
                  store: Optional[Store] = None,
                  eos_token: int = 0,
-                 runtime: Optional[CombiningRuntime] = None) -> None:
+                 runtime: Optional[CombiningRuntime] = None,
+                 response_log: str = "auto") -> None:
+        """``response_log`` selects where completions persist:
+
+          * ``"store"`` — the file-like ``Store`` path (default for
+            thread runtimes): a ``PBCombCheckpointer`` whose StateRec
+            slot files live in ``store``.
+          * ``"nvm"`` — a registry ``log/pbcomb`` structure living in
+            the runtime's NVM words: on a shared-memory runtime the
+            durable response log (rich token payloads included — blob
+            heap, DESIGN.md §8) is then shared with forked worker
+            processes, and its psyncs account on its segment's device.
+          * ``"auto"`` — ``"nvm"`` iff the runtime's NVM is shm-backed.
+        """
         self.n = n_clients
         self.prefill_batch_fn = prefill_batch_fn
         self.decode_batch_fn = decode_batch_fn
@@ -97,15 +110,30 @@ class CombiningEngine:
         # crash/recovery umbrella.
         self.runtime = runtime or CombiningRuntime(n_threads=n_clients)
         self.board: AnnounceBoard = self.runtime.board("engine", n_clients)
-        self.store = store or MemStore()
-        # The engine's durable state is exactly the response log, which
-        # lives in the StateRec's ReturnVal/Deactivate fields — the
-        # payload pytree is empty.
-        self.ckpt = PBCombCheckpointer(self.store, n_clients,
-                                       payload_template={})
-        self.ckpt.initialize({})
-        self.log = self.runtime.register("engine/response-log", self.ckpt,
-                                         CheckpointAdapter())
+        if response_log == "auto":
+            response_log = "nvm" if self.runtime._backend_kind == "shm" \
+                or getattr(getattr(self.runtime.nvm, "backend", None),
+                           "kind", None) == "shm" else "store"
+        if response_log == "nvm":
+            self.store = None
+            self.ckpt = None
+            self.log = self.runtime.make("log", "pbcomb",
+                                         name="engine/response-log",
+                                         n_clients=n_clients)
+        elif response_log == "store":
+            self.store = store or MemStore()
+            # The engine's durable state is exactly the response log,
+            # which lives in the StateRec's ReturnVal/Deactivate fields
+            # — the payload pytree is empty.
+            self.ckpt = PBCombCheckpointer(self.store, n_clients,
+                                           payload_template={})
+            self.ckpt.initialize({})
+            self.log = self.runtime.register("engine/response-log",
+                                             self.ckpt,
+                                             CheckpointAdapter())
+        else:
+            raise ValueError(f"unknown response_log {response_log!r}; "
+                             "expected 'auto', 'store' or 'nvm'")
         self._log_handle = self.runtime.attach(0)
         # sequence table (the shared linked structure)
         self.live: Dict[int, LiveSeq] = {}
@@ -140,13 +168,25 @@ class CombiningEngine:
             raise TimeoutError(f"cancel {client}/{seq}")
         return rec.response
 
+    def cached_response(self, client: int, seq: int) -> Tuple[bool, Any]:
+        """(was_applied, response) for (client, seq) from the durable
+        response log, whichever backing it has."""
+        if self.ckpt is not None:
+            if self.ckpt.was_applied(client, seq):
+                return True, self.ckpt.response(client)
+            return False, None
+        logged_seq, resp = self.log.adapter.last_record(self.log.core,
+                                                        client)
+        return logged_seq == seq, resp
+
     def recover_request(self, client: int, prompt: Sequence[int],
                         max_tokens: int, seq: int,
                         timeout: float = 30.0) -> Any:
         """The paper's Recover: if (client, seq) completed before the
         crash, return the logged response; else re-execute."""
-        if self.ckpt.was_applied(client, seq):
-            return self.ckpt.response(client)
+        applied, resp = self.cached_response(client, seq)
+        if applied:
+            return resp
         return self.submit(client, prompt, max_tokens, seq,
                            timeout=timeout)
 

@@ -35,12 +35,18 @@ class ChunkAllocator:
                  chunk_nodes: int = 256) -> None:
         self.nvm = nvm
         self.chunk_nodes = chunk_nodes
+        # segment affinity is captured at construction (the runtime's
+        # placement context is active while the structure builds), so
+        # chunks refilled lazily mid-workload stay on the structure's
+        # modeled device (DESIGN.md §8)
+        self.segment = nvm.current_segment()
         self._cursor: List[int] = [0] * n_threads
         self._limit: List[int] = [0] * n_threads
 
     def alloc(self, p: int) -> int:
         if self._cursor[p] >= self._limit[p]:
-            base = self.nvm.alloc(self.chunk_nodes * NODE_WORDS)
+            base = self.nvm.alloc(self.chunk_nodes * NODE_WORDS,
+                                  segment=self.segment)
             self._cursor[p] = base
             self._limit[p] = base + self.chunk_nodes * NODE_WORDS
         addr = self._cursor[p]

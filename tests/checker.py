@@ -1,0 +1,271 @@
+"""Durable-linearizability history checker for crash-sweep runs.
+
+The mp worker pool already journals everything a checker needs, per the
+paper's system-support contract:
+
+  * every COMPLETED op, in per-thread program order, with its response
+    (``WorkerReport.results`` — recorded the moment the op returns, so
+    an op acked before a crash is in the journal even when the crash
+    lands one op later);
+  * every IN-FLIGHT op at a crash (``PoolResult.inflight`` — the
+    ``(obj, tid, op, args, seq)`` records recovery replays);
+  * the replayed responses (``runtime.recover(inflight=...)``).
+
+``HistoryChecker`` accumulates those into one history per structure —
+across any number of pool commands, crashes and recoveries — and checks
+it against the structure's sequential specification plus durability:
+
+  exact-once   every acked add appears exactly once among successful
+               removals + the final state; every successful removal
+               returns something that was actually added (all kinds).
+  FIFO         (queue) for each (consumer, producer) pair the removed
+               indices are strictly increasing — a FIFO queue can never
+               show one consumer producer-P values out of enqueue order
+               — the final drain is per-producer increasing, and no
+               remaining value precedes a removed one from the same
+               producer.
+  LIFO         (stack) the final drain (top first) is per-producer
+               DECREASING: a stack's residue holds each producer's
+               survivors newest-on-top.
+  heap-order   (heap) a quiescent post-recovery drain is non-decreasing
+               and equals the surviving multiset.
+
+A replayed in-flight op is appended at the TAIL of its thread's
+journal: its linearization point lies after every completion the same
+thread observed (program order), which is exactly where recovery
+replays it.
+
+Pair-workload values carry their producer and per-producer index
+(``repro.api.mp.rich_value`` tuples, or ``producer * BASE + index``
+ints), so the order checks need no global clock — only per-thread
+program order, which the journal preserves.
+
+Serving/checkpoint rows get their own checks (``check_log`` /
+``check_ckpt``): last-record equality with recomputable response
+content (a torn blob would fail the content equation) and checkpoint
+step/payload atomicity + monotone durability.
+"""
+
+from __future__ import annotations
+
+from collections import Counter, defaultdict
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+from repro.api.mp import checkpoint_payload, serving_response
+
+PRODUCER_BASE = 1_000_000
+
+ADD_OPS = {"enqueue", "push", "insert"}
+REM_OPS = {"dequeue", "pop", "delete_min"}
+_ACKS = ("ACK", True)
+
+
+def producer_index(value: Any) -> Tuple[int, int]:
+    """(producer, per-producer index) of a pairs-workload value."""
+    if isinstance(value, tuple):
+        return value[0], value[1]
+    return divmod(value, PRODUCER_BASE)
+
+
+def _acked(ret: Any) -> bool:
+    return any(ret is a or ret == a for a in _ACKS)
+
+
+class HistoryChecker:
+    """Accumulates one structure's multi-crash history; ``check`` raises
+    AssertionError listing every violated invariant."""
+
+    def __init__(self, kind: str) -> None:
+        self.kind = kind
+        self.events: Dict[int, List[Tuple[str, Any, Any]]] = \
+            defaultdict(list)
+
+    # ------------- journal construction -------------------------------- #
+    def extend(self, tid: int, results) -> None:
+        if results:
+            self.events[tid].extend(results)
+
+    def extend_pool(self, pool_result) -> None:
+        for rep in pool_result.reports:
+            self.extend(rep.tid, rep.results)
+
+    def apply_replay(self, inflight, replies: Dict[Tuple[str, int], Any]
+                     ) -> None:
+        """Append each replayed in-flight op to its thread's journal."""
+        for name, tid, op, args, _seq in inflight:
+            key = (name, tid)
+            if key in replies:
+                self.extend(tid, [(op, args, replies[key])])
+
+    # ------------- derived multisets ----------------------------------- #
+    def added(self) -> Counter:
+        return Counter(arg for evs in self.events.values()
+                       for op, arg, ret in evs
+                       if op in ADD_OPS and _acked(ret))
+
+    def removed(self) -> Counter:
+        return Counter(ret for evs in self.events.values()
+                       for op, _arg, ret in evs
+                       if op in REM_OPS and ret is not None)
+
+    # ------------- checks ----------------------------------------------- #
+    def check(self, final_state: Iterable[Any]) -> None:
+        """``final_state``: queue snapshot (head first), stack snapshot
+        (top first), or a heap's quiescent drain (delete_min until
+        empty)."""
+        final = list(final_state)
+        failures = []
+        added, removed = self.added(), self.removed()
+        remaining = Counter(final)
+
+        if added != removed + remaining:
+            lost = added - (removed + remaining)
+            conjured = (removed + remaining) - added
+            failures.append(
+                f"exact-once violated: lost={dict(lost)} "
+                f"duplicated-or-conjured={dict(conjured)}")
+
+        if self.kind == "queue":
+            failures += self._check_fifo(final, removed)
+        elif self.kind == "stack":
+            failures += self._check_lifo(final)
+        elif self.kind == "heap":
+            failures += self._check_heap(final)
+
+        if failures:
+            raise AssertionError(
+                f"{self.kind} history violates durable linearizability:\n"
+                + "\n".join(f"  - {f}" for f in failures))
+
+    def _by_producer(self, values) -> Dict[int, List[int]]:
+        out: Dict[int, List[int]] = defaultdict(list)
+        for v in values:
+            prod, idx = producer_index(v)
+            out[prod].append(idx)
+        return out
+
+    def _check_fifo(self, final, removed) -> List[str]:
+        failures = []
+        # per (consumer, producer): removed indices strictly increasing
+        for tid, evs in self.events.items():
+            seen: Dict[int, int] = {}
+            for op, _arg, ret in evs:
+                if op not in REM_OPS or ret is None:
+                    continue
+                prod, idx = producer_index(ret)
+                if idx <= seen.get(prod, -1):
+                    failures.append(
+                        f"consumer {tid} saw producer {prod} index {idx}"
+                        f" after index {seen[prod]} (FIFO inversion)")
+                seen[prod] = max(seen.get(prod, -1), idx)
+        # final drain per producer increasing
+        for prod, idxs in self._by_producer(final).items():
+            if idxs != sorted(idxs):
+                failures.append(
+                    f"remaining values of producer {prod} out of FIFO "
+                    f"order: {idxs}")
+        # nothing remaining may precede a removed value (same producer)
+        max_removed = {p: max(i) for p, i in
+                       self._by_producer(removed.elements()).items()}
+        for prod, idxs in self._by_producer(final).items():
+            if prod in max_removed and min(idxs) < max_removed[prod]:
+                failures.append(
+                    f"producer {prod}: index {min(idxs)} still queued "
+                    f"although index {max_removed[prod]} was dequeued")
+        return failures
+
+    def _check_lifo(self, final) -> List[str]:
+        failures = []
+        for prod, idxs in self._by_producer(final).items():
+            if idxs != sorted(idxs, reverse=True):
+                failures.append(
+                    f"stack residue of producer {prod} not "
+                    f"newest-on-top: {idxs}")
+        return failures
+
+    def _check_heap(self, final) -> List[str]:
+        if final != sorted(final):
+            return [f"heap drain not non-decreasing: {final[:10]}..."]
+        return []
+
+
+# --------------------------------------------------------------------- #
+# serving / checkpoint histories                                        #
+# --------------------------------------------------------------------- #
+def check_log(checker_events: Dict[int, List[Tuple[str, Any, Any]]],
+              snapshot: List[Tuple[int, Any]], gen_len: int) -> None:
+    """Durable response log history check.
+
+    Per client: acked seqs strictly increase (program order), the final
+    logged (seq, response) equals the client's LAST acked-or-replayed
+    record, and the response content equals the deterministic toy
+    generation for that seq — a torn blob publication (new seq with old
+    or partial response bytes) fails the content equation.  The
+    seq/response pair itself cannot tear: both words share one cache
+    line and the object writes response before seq."""
+    failures = []
+    last: Dict[int, int] = {}
+    for tid, evs in checker_events.items():
+        prev = 0
+        for op, arg, _ret in evs:
+            if op != "record":
+                continue
+            client, seq = arg[0], arg[1]
+            if client != tid:
+                failures.append(f"worker {tid} recorded for {client}")
+            if seq <= prev:
+                failures.append(
+                    f"client {tid} acked seq {seq} after {prev}")
+            prev = seq
+        if prev:
+            last[tid] = prev
+    for client, want_seq in last.items():
+        got_seq, got_resp = snapshot[client]
+        if got_seq != want_seq:
+            failures.append(
+                f"client {client}: durable seq {got_seq} != last "
+                f"acked/replayed {want_seq} (lost or phantom record)")
+        elif got_resp != serving_response(client, want_seq, gen_len):
+            failures.append(
+                f"client {client}: durable response content wrong for "
+                f"seq {want_seq} (torn payload?): {got_resp!r}")
+    if failures:
+        raise AssertionError(
+            "serving log history violates durable linearizability:\n"
+            + "\n".join(f"  - {f}" for f in failures))
+
+
+def check_ckpt(checker_events: Dict[int, List[Tuple[str, Any, Any]]],
+               snapshot: Dict[str, Any], payload_words: int) -> None:
+    """Checkpoint cell history check: the durable (step, payload) pair
+    is atomic (payload carries its own step — a torn pair fails the
+    equation), the payload content matches its writer's deterministic
+    shard, and the durable step covers every acked persist (response r
+    means state >= r was durable at the ack)."""
+    failures = []
+    step, payload = snapshot["step"], snapshot["payload"]
+    max_acked = 0
+    for _tid, evs in checker_events.items():
+        for op, _arg, ret in evs:
+            if op == "persist" and isinstance(ret, int):
+                max_acked = max(max_acked, ret)
+    if step:
+        if not isinstance(payload, dict) or payload.get("step") != step:
+            failures.append(
+                f"durable payload/step torn: step={step} "
+                f"payload={payload!r}")
+        else:
+            want = checkpoint_payload(payload["writer"], step,
+                                      payload_words)
+            if payload.get("shard") != want["shard"]:
+                failures.append(
+                    f"durable shard content wrong for step {step} "
+                    f"writer {payload['writer']}")
+    if step < max_acked:
+        failures.append(
+            f"durable step {step} < max acked persist {max_acked} "
+            "(acked checkpoint lost)")
+    if failures:
+        raise AssertionError(
+            "checkpoint history violates durable linearizability:\n"
+            + "\n".join(f"  - {f}" for f in failures))

@@ -29,6 +29,12 @@ def _ops_for(kind, bound, p):
     if kind == "heap":
         return lambda i: (bound.insert(p * 100000 + i),
                           bound.delete_min())
+    if kind == "log":
+        return lambda i: (bound.record((p, i + 1, ("resp", p, i + 1))),
+                          bound.lookup(p))
+    if kind == "ckpt":
+        return lambda i: (bound.persist((i + 1, {"step": i + 1, "w": p})),
+                          bound.latest())
     return lambda i: (bound.fetch_add(1), bound.read())
 
 
@@ -66,6 +72,13 @@ def test_workload_crash_recover_state_equality(kind, protocol):
     elif kind == "heap":
         b.insert(-1)
         assert b.get_min() == -1
+    elif kind == "log":
+        b.record((0, 999, "post"))
+        assert b.lookup(0) == (999, "post")
+    elif kind == "ckpt":
+        big = 10 ** 6
+        b.persist((big, {"step": big, "w": 0}))
+        assert b.latest() == (big, {"step": big, "w": 0})
     else:
         assert b.fetch_add(1) == pre
 
@@ -76,26 +89,36 @@ DETECTABLE = [e for e in entries()
               if get_adapter(*e).detectable and get_adapter(*e).can_announce]
 
 
+#: per-kind announce op + per-thread args for the in-flight crash test
+_ANNOUNCE = {"queue": ("enqueue", lambda p: f"v{p}"),
+             "stack": ("push", lambda p: f"v{p}"),
+             "heap": ("insert", lambda p: f"v{p}"),
+             "counter": ("fetch_add", lambda p: 1),
+             "log": ("record", lambda p: (p, 1, f"r{p}")),
+             "ckpt": ("persist", lambda p: (p + 1, {"step": p + 1,
+                                                    "w": p}))}
+
+
 @pytest.mark.parametrize("kind,protocol", DETECTABLE)
 @pytest.mark.parametrize("crash_at", [0, 2, 4, 6])
 def test_inflight_crash_replay_exactly_once(kind, protocol, crash_at):
     """Crash inside a combining round serving N announced requests, then
     recover the whole machine with one call: every in-flight op applied
-    exactly once, every response correct."""
+    exactly once (for the idempotent log/ckpt structures: exactly once
+    in effect), every response correct."""
     rt = CombiningRuntime(n_threads=N)
     obj = rt.make(kind, protocol)
     handles = [rt.attach(p) for p in range(N)]
-    add = {"queue": "enqueue", "stack": "push",
-           "heap": "insert", "counter": "fetch_add"}[kind]
-    # a committed prefix through the normal path
+    add, argfn = _ANNOUNCE[kind]
+    # a committed prefix through the normal path (container kinds)
     base = 0 if kind == "counter" else "base"
     if kind == "counter":
         assert handles[0].invoke(obj, add, 1) == 0
-    else:
+    elif kind in ("queue", "stack", "heap"):
         handles[0].invoke(obj, add, base)
     # N announced in-flight ops; the performing thread crashes mid-round
     for p in range(N):
-        handles[p].announce(obj, add, 1 if kind == "counter" else f"v{p}")
+        handles[p].announce(obj, add, argfn(p))
     rt.arm_crash(crash_at, random.Random(13))
     rets = {}
     try:
@@ -120,6 +143,15 @@ def test_inflight_crash_replay_exactly_once(kind, protocol, crash_at):
         assert all(r is True for r in rets.values())
         assert obj.snapshot() == sorted([base] + [f"v{p}"
                                                   for p in range(N)])
+    elif kind == "log":
+        assert rets == {p: f"r{p}" for p in range(N)}
+        assert obj.snapshot() == [(1, f"r{p}") for p in range(N)]
+    elif kind == "ckpt":
+        # newest step wins; every response is a step >= the announcer's
+        # own (monotone), and the durable pair is the max step's
+        assert all(p + 1 <= rets[p] <= N for p in range(N))
+        assert obj.snapshot() == {"step": N,
+                                  "payload": {"step": N, "w": N - 1}}
     else:
         assert all(r == "ACK" for r in rets.values())
         content = obj.snapshot()

@@ -26,7 +26,7 @@ EPS = 0.05
 V1_KEYS = {"name", "us_per_op", "pwbs_per_op", "psyncs_per_op"}
 V2_KEYS = V1_KEYS | {"modeled_us_per_op", "modeled_pwbs_per_op",
                      "modeled_psyncs_per_op", "profile",
-                     "degree_mean", "degree_max"}
+                     "degree_mean", "degree_max", "ring_spills"}
 
 
 @pytest.fixture(scope="module")
@@ -130,6 +130,79 @@ def test_combining_rows_one_psync_per_round(bench_doc):
                             "fig7b_heap/", "fig1_atomicfloat/PB")):
             bound = 2 if name.startswith("fig4_queues/PWFQueue") else 1
             assert r["psyncs_per_op"] <= bound + EPS, r
+
+
+MP_ROW_KEYS = V2_KEYS | {"workers", "rounds", "segments",
+                         "seg_psyncs_per_op"}
+
+
+def _mp_row(name, workers=4, degree=3.0, psync=0.3, segs=(0.3, 0.0)):
+    return {"name": name, "workers": workers, "us_per_op": 10.0,
+            "pwbs_per_op": 2.0, "psyncs_per_op": psync, "rounds": 10,
+            "degree_mean": degree, "degree_max": 4,
+            "segments": len(segs), "seg_psyncs_per_op": list(segs),
+            "ring_spills": 0, "modeled_us_per_op": None,
+            "modeled_pwbs_per_op": None, "modeled_psyncs_per_op": None,
+            "profile": None}
+
+
+def test_mp_serving_checkpoint_cells_emit_v2_rows():
+    """One tiny serving + checkpoint + mixed cell end-to-end: the
+    bench.mp.v2 row contract (per-segment psync columns, ring_spills,
+    nullable modeled columns) and measured combining degree > 1 on the
+    serving path."""
+    from benchmarks.mp_bench import (bench_checkpoint_cell,
+                                     bench_mixed_cell,
+                                     bench_serving_cell)
+    rows = [bench_serving_cell("pbcomb", 2, 12, gen_len=4),
+            bench_checkpoint_cell("pbcomb", 2, 10, payload_words=8),
+            bench_mixed_cell(2, 8, 6)]
+    for r in rows:
+        assert set(r) | {"modeled_us_per_op", "modeled_pwbs_per_op",
+                         "modeled_psyncs_per_op", "profile"} \
+            >= MP_ROW_KEYS - {"profile"}
+        assert r["workers"] == 2
+        assert r["segments"] == 2
+        assert len(r["seg_psyncs_per_op"]) == 2
+        assert r["ring_spills"] >= 0
+        assert r["psyncs_per_op"] < 1.0          # combining amortizes
+        assert (r["degree_mean"] or 0) > 1.0
+    # the mixed cell engages BOTH modeled devices
+    assert all(v > 0 for v in rows[2]["seg_psyncs_per_op"]), rows[2]
+
+
+def test_mp_check_rows_gate():
+    """The mp-smoke gate logic: passes on healthy rows, fires on low
+    degree and on psync/op at-or-above the per-op-persist floor."""
+    from benchmarks.mp_bench import check_rows
+    healthy = [_mp_row("queue/pbcomb"), _mp_row("queue/lock-direct",
+                                                degree=None, psync=1.0),
+               _mp_row("serving/pbcomb"),
+               _mp_row("serving/lock-direct", degree=None, psync=1.0),
+               _mp_row("checkpoint/pbcomb"), _mp_row("mixed/pbcomb")]
+    for r in healthy:
+        if r["degree_mean"] is None:
+            r["rounds"] = r["degree_max"] = None
+    assert check_rows(healthy, workers=4) == []
+    # low degree on the serving row
+    bad = [dict(r) for r in healthy]
+    bad[2] = dict(bad[2], degree_mean=1.2)
+    assert any("serving/pbcomb" in f and "degree_mean" in f
+               for f in check_rows(bad, workers=4))
+    # psync/op at the measured floor
+    bad = [dict(r) for r in healthy]
+    bad[0] = dict(bad[0], psyncs_per_op=1.0)
+    assert any("queue/pbcomb" in f and "floor" in f
+               for f in check_rows(bad, workers=4))
+    # checkpoint row gated against the definitional floor when no
+    # per-op-persist row is present
+    bad = [dict(r) for r in healthy]
+    bad[4] = dict(bad[4], psyncs_per_op=1.1)
+    assert any("checkpoint/pbcomb" in f
+               for f in check_rows(bad, workers=4))
+    # a missing gated row is itself a failure
+    assert any("no serving/pbcomb row" in f
+               for f in check_rows([_mp_row("queue/pbcomb")], workers=4))
 
 
 def test_fig8_reproduces_paper_ordering(bench_doc):

@@ -1,0 +1,255 @@
+"""Blob-heap shm codec (core/shm.py, DESIGN.md §8): round trips for
+rich payloads, allocator slab discipline, and crash-at-every-
+publication-point old-or-new durability.
+
+The deterministic tests below always run; the hypothesis properties
+(arbitrary nested payloads, randomized alloc/free churn, randomized
+crash cuts) ride the repo's optional-dependency convention.
+"""
+
+import random
+
+import pytest
+
+try:                                   # optional dep: `pip install .[test]`
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    given = settings = st = None
+
+from repro.core.shm import (_BLOB_GRANULE, _BLOB_HDR, BlobHeap, ShmBackend,
+                            ShmNVM, decode, encode)
+
+
+def _mk_nvm():
+    return ShmNVM(1 << 12)
+
+
+RICH_SAMPLES = [
+    (1, 2, "three"),
+    {"tokens": [1, 2, 3], "seq": 9},
+    b"\x00\xffbinary" * 7,
+    "long string payload " * 9,
+    2 ** 100, -(2 ** 77),
+    ("nested", ({"a": (1.5, None)}, [b"x", True])),
+    tuple(range(200)),
+    "",                         # inline, but keep in the matrix
+    None, True, 0, -1, 3.25, "ACK",
+]
+
+
+# --------------------------------------------------------------------- #
+# deterministic coverage (always runs)                                  #
+# --------------------------------------------------------------------- #
+def test_inline_codec_unchanged():
+    """The bare module-level codec still covers (only) the inline
+    domain — backend words add the blob fallback on top."""
+    for v in [0, 7, None, True, False, 1.5, "ACK"]:
+        assert decode(*encode(v)) == v
+    for v in [(1, 2), "x" * 17, 2 ** 64, b"bytes", [1]]:
+        with pytest.raises(TypeError):
+            encode(v)
+
+
+def test_blob_round_trip_volatile_and_durable():
+    nvm = _mk_nvm()
+    try:
+        a = nvm.alloc(len(RICH_SAMPLES))
+        nvm.write_range(a, RICH_SAMPLES)
+        got = nvm.read_range(a, len(RICH_SAMPLES))
+        assert got == RICH_SAMPLES
+        assert [type(g) for g in got] == [type(v) for v in RICH_SAMPLES]
+        nvm.pwb(a, len(RICH_SAMPLES))
+        nvm.psync()
+        assert [nvm.durable_read(a + i)
+                for i in range(len(RICH_SAMPLES))] == RICH_SAMPLES
+    finally:
+        nvm.close()
+
+
+def test_blob_pwb_charges_payload_lines():
+    """A pwb covering a blob-ref word charges the chunk's cache-line
+    footprint — payload layout is visible in the counters (the per-op
+    cost shape the serving/checkpoint benches measure)."""
+    nvm = _mk_nvm()
+    try:
+        a = nvm.alloc(1)
+        nvm.write(a, 7)
+        nvm.pwb(a, 1)
+        small = nvm.counters["pwb"]
+        nvm.write(a, "x" * 1000)      # ~1KB payload: 16 blob lines
+        nvm.pwb(a, 1)
+        big = nvm.counters["pwb"] - small
+        assert big >= 1 + (1000 + _BLOB_HDR) // 64
+    finally:
+        nvm.close()
+
+
+def test_allocator_reuses_freed_chunks_without_overlap():
+    nvm = _mk_nvm()
+    try:
+        heap = nvm.backend.heap
+        a = nvm.alloc(1)
+        for i in range(300):
+            nvm.write(a, ("payload", i, "z" * (i % 120)))
+        chunks = heap.chunks()
+        # chunks tile the bump region: no gaps, no overlap
+        off = 0
+        for c_off, c_len, _rc, _gen in chunks:
+            assert c_off == off
+            assert c_len >= _BLOB_GRANULE and c_len % _BLOB_GRANULE == 0
+            off += c_len
+        # ping-ponging one word across size classes must not grow the
+        # heap unboundedly: at most one live chunk per touched class
+        live = [c for c in chunks if c[2] > 0]
+        assert len(live) <= 4, live
+    finally:
+        nvm.close()
+
+
+def test_crash_at_every_publication_point_old_or_new():
+    """The satellite's torn-write sweep: arm the crash countdown at
+    EVERY persistence instruction of an overwrite sequence and resolve
+    the write-back ring adversarially; the durable value must decode as
+    exactly the old or the new payload, never a mix."""
+    old = ("old", "A" * 90, 1)
+    new = ("new", {"B": [2] * 40}, 2)
+    for countdown in range(1, 6):
+        for seed in range(4):
+            nvm = _mk_nvm()
+            try:
+                a = nvm.alloc(1)
+                nvm.write(a, old)
+                nvm.pwb(a, 1)
+                nvm.psync()                      # old is durable
+                nvm.arm_crash(countdown, random.Random(seed))
+                try:
+                    nvm.write(a, new)
+                    nvm.pwb(a, 1)
+                    nvm.pfence()
+                    nvm.psync()
+                except Exception:                # SimulatedCrash
+                    pass
+                nvm.disarm_crash()
+                assert nvm.durable_read(a) in (old, new)
+                # post-restore volatile view matches the durable one
+                assert nvm.read(a) == nvm.durable_read(a)
+            finally:
+                nvm.close()
+
+
+def test_stale_reader_retries_on_reuse():
+    """A reader holding a pre-overwrite word re-reads when the chunk
+    was reclaimed and re-handed out (generation mismatch)."""
+    nvm = _mk_nvm()
+    try:
+        a = nvm.alloc(1)
+        nvm.write(a, ("first", "x" * 40))
+        heap = nvm.backend.heap
+        (first_off, _l, _rc, first_gen), = \
+            [c for c in heap.chunks() if c[2] > 0]
+        # an overwrite allocates the new chunk BEFORE freeing the old
+        # (publication order), so the old slab is re-handed out on the
+        # write after next — with a bumped generation
+        nvm.write(a, ("second", "y" * 40))
+        nvm.write(a, ("third", "z" * 40))
+        live = [c for c in heap.chunks() if c[2] > 0]
+        assert [c[0] for c in live] == [first_off]
+        assert live[0][3] > first_gen                 # generation bumped
+        assert nvm.read(a) == ("third", "z" * 40)
+    finally:
+        nvm.close()
+
+
+# --------------------------------------------------------------------- #
+# hypothesis properties                                                 #
+# --------------------------------------------------------------------- #
+if st is not None:
+    payloads = st.recursive(
+        st.none() | st.booleans() | st.integers()
+        | st.floats(allow_nan=False) | st.text(max_size=40)
+        | st.binary(max_size=60),
+        lambda inner: st.lists(inner, max_size=4).map(tuple)
+        | st.lists(inner, max_size=4)
+        | st.dictionaries(st.text(max_size=8), inner, max_size=4),
+        max_leaves=12)
+
+    @settings(max_examples=60, deadline=None)
+    @given(values=st.lists(payloads, min_size=1, max_size=8))
+    def test_property_round_trip_arbitrary_payloads(values):
+        nvm = _mk_nvm()
+        try:
+            a = nvm.alloc(len(values))
+            nvm.write_range(a, values)
+            assert nvm.read_range(a, len(values)) == values
+            nvm.pwb(a, len(values))
+            nvm.psync()
+            assert [nvm.durable_read(a + i)
+                    for i in range(len(values))] == values
+        finally:
+            nvm.close()
+
+    @settings(max_examples=40, deadline=None)
+    @given(sizes=st.lists(st.integers(0, 800), min_size=1, max_size=40),
+           frees=st.lists(st.integers(0, 10 ** 6), max_size=40))
+    def test_property_allocator_never_overlaps(sizes, frees):
+        """Random alloc/free churn directly against the heap: live
+        chunks never overlap, freed chunks are re-handed out with a
+        fresh generation, and the layout walk always tiles."""
+        be = ShmBackend(data_words=1 << 10, aux_i64=1 << 10,
+                        ring_i64=1 << 10)
+        try:
+            heap: BlobHeap = be.heap
+            live = {}                     # off -> (len, gen)
+            for i, size in enumerate(sizes):
+                off, gen = heap.alloc(b"x" * size)
+                assert off % _BLOB_GRANULE == 0
+                assert off not in live, "re-handed a LIVE chunk"
+                chunk_len = next(l for o, l, _rc, _g in heap.chunks()
+                                 if o == off)
+                assert chunk_len >= size + _BLOB_HDR
+                for o2, (l2, _g2) in live.items():
+                    assert off >= o2 + l2 or o2 >= off + chunk_len, \
+                        "overlapping slabs handed out"
+                live[off] = (chunk_len, gen)
+                if frees and i < len(frees):
+                    victims = sorted(live)
+                    v = victims[frees[i] % len(victims)]
+                    heap.dec(v)
+                    del live[v]
+            for off, (_len, gen) in live.items():
+                chunk = next(c for c in heap.chunks() if c[0] == off)
+                assert chunk[2] > 0 and chunk[3] == gen
+        finally:
+            be.close()
+
+    @settings(max_examples=30, deadline=None)
+    @given(old=payloads, new=payloads,
+           countdown=st.integers(1, 5), seed=st.integers(0, 100))
+    def test_property_crash_leaves_old_or_new(old, new, countdown, seed):
+        nvm = _mk_nvm()
+        try:
+            a = nvm.alloc(1)
+            nvm.write(a, old)
+            nvm.pwb(a, 1)
+            nvm.psync()
+            nvm.arm_crash(countdown, random.Random(seed))
+            try:
+                nvm.write(a, new)
+                nvm.pwb(a, 1)
+                nvm.psync()
+            except Exception:
+                pass
+            nvm.disarm_crash()
+            got = nvm.durable_read(a)
+            assert got == old or got == new
+        finally:
+            nvm.close()
+else:
+    def test_property_round_trip_arbitrary_payloads():
+        pytest.importorskip("hypothesis")
+
+    def test_property_allocator_never_overlaps():
+        pytest.importorskip("hypothesis")
+
+    def test_property_crash_leaves_old_or_new():
+        pytest.importorskip("hypothesis")

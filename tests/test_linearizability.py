@@ -1,0 +1,239 @@
+"""Durable-linearizability crash sweeps through the history checker
+(tests/checker.py) — the machine-checked counterpart of the paper's
+durable-linearizability claims, on BOTH backends:
+
+  * multiprocess (shm): 4 fork()ed workers drive rich (blob-heap)
+    payloads against 2-segment ShmNVM structures while a shared crash
+    countdown halts the machine mid-workload; workers report their
+    in-flight ops and ``recover(inflight=...)`` replays them.  Every
+    tentpole path — blob codec publication, per-segment rings, the
+    serving/checkpoint structures — runs under the checker here.
+  * threads: the staged announce/perform harness crashes inside
+    combining rounds serving N announced requests (the only way to
+    enumerate in-round crash points deterministically in one process).
+
+Sizes are tuned for 2-core CI runners: the sweeps are many small
+commands against one long-lived runtime/pool, not many runtimes.
+"""
+
+import random
+
+import pytest
+
+from repro.api import CombiningRuntime
+from repro.core import SimulatedCrash
+
+from checker import HistoryChecker, check_ckpt, check_log
+
+#: (countdown, rng seed) cases; 24 for the serving/checkpoint rows (the
+#: acceptance gate) and a 12-case prefix for the matrix cells
+CASES_24 = [(cd, seed) for seed in (1, 2, 3)
+            for cd in (2, 3, 5, 7, 9, 11, 15, 21)]
+CASES_12 = CASES_24[:12]
+
+MP_CELLS = [("queue", "pbcomb"), ("queue", "pwfcomb"),
+            ("stack", "pbcomb"), ("stack", "pwfcomb"),
+            ("heap", "pbcomb"), ("heap", "pwfcomb")]
+
+_DRAIN_OP = {"queue": "dequeue", "stack": "pop", "heap": "delete_min"}
+
+
+def _drain_all(rt, obj):
+    """Quiescent post-recovery drain through a parent-process handle:
+    the structure's own remove op until empty — for a queue this IS the
+    FIFO order, for a stack the LIFO residue, for a heap the sorted
+    stream the heap-order check wants."""
+    fn = rt.attach(0).invoker(obj, _DRAIN_OP[obj.kind], arity=0)
+    out = []
+    while True:
+        v = fn()
+        if v is None:
+            break
+        out.append(v)
+    return out
+
+
+# --------------------------------------------------------------------- #
+# multiprocess sweeps                                                   #
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("kind,protocol", MP_CELLS)
+def test_mp_crash_sweep_matrix(kind, protocol):
+    """queue/stack/heap x pbcomb/pwfcomb under 4 real processes, rich
+    blob values, 2-segment NVM, crashes swept across countdowns."""
+    rt = CombiningRuntime(n_threads=4, backend="shm", segments=2)
+    chk = HistoryChecker(kind)
+    try:
+        obj = rt.make(kind, protocol)
+        pool = rt.spawn_workers(4)
+        for case_i, (cd, seed) in enumerate(CASES_12):
+            rt.nvm.arm_crash(cd, random.Random(seed))
+            res = pool.run_pairs(obj, 5, collect=True, rich=True,
+                                 index_base=case_i * 5)
+            chk.extend_pool(res)
+            if res.crashed:
+                replies = rt.recover(inflight=res.inflight)
+                chk.apply_replay(res.inflight, replies)
+            else:
+                rt.nvm.disarm_crash()
+        # one full machine crash + recovery, then the quiescent drain
+        rt.crash(random.Random(99))
+        rt.recover()
+        chk.check(_drain_all(rt, obj))
+    finally:
+        rt.close()
+
+
+@pytest.mark.parametrize("protocol", ["pbcomb", "pwfcomb",
+                                      "lock-direct"])
+def test_mp_crash_sweep_serving(protocol):
+    """The serving-over-shm row under the checker: 24 crash cases of
+    workers RECORDing rich responses into one shared log.  lock-direct
+    rides along: RECORD is idempotent and its (seq, response) pair
+    shares a cache line, so even the non-detectable baseline must keep
+    the log exact — what the gate's floor row relies on."""
+    gen_len = 6
+    rt = CombiningRuntime(n_threads=4, backend="shm", segments=2)
+    chk = HistoryChecker("log")
+    try:
+        log = rt.make("log", protocol, n_clients=4)
+        pool = rt.spawn_workers(4)
+        base = 0
+        for cd, seed in CASES_24:
+            rt.nvm.arm_crash(cd, random.Random(seed))
+            res = pool.run_serving(log, 3, gen_len=gen_len,
+                                   seq_base=base, collect=True)
+            chk.extend_pool(res)
+            if res.crashed:
+                replies = rt.recover(inflight=res.inflight)
+                chk.apply_replay(res.inflight, replies)
+            else:
+                rt.nvm.disarm_crash()
+            base += 3
+        rt.crash(random.Random(7))
+        rt.recover()
+        check_log(chk.events, log.snapshot(), gen_len)
+    finally:
+        rt.close()
+
+
+@pytest.mark.parametrize("protocol", ["pbcomb", "pwfcomb",
+                                      "lock-direct"])
+def test_mp_crash_sweep_checkpoint(protocol):
+    """The checkpoint-over-shm row under the checker: 24 crash cases of
+    workers persisting multi-word shard payloads; the durable
+    (step, payload) pair must stay atomic and cover every ack."""
+    words = 12
+    rt = CombiningRuntime(n_threads=4, backend="shm", segments=2)
+    chk = HistoryChecker("ckpt")
+    try:
+        ck = rt.make("ckpt", protocol)
+        pool = rt.spawn_workers(4)
+        base = 0
+        for cd, seed in CASES_24:
+            rt.nvm.arm_crash(cd, random.Random(seed))
+            res = pool.run_checkpoint(ck, 3, payload_words=words,
+                                      step_base=base, collect=True)
+            chk.extend_pool(res)
+            if res.crashed:
+                replies = rt.recover(inflight=res.inflight)
+                chk.apply_replay(res.inflight, replies)
+            else:
+                rt.nvm.disarm_crash()
+            base += 3
+        rt.crash(random.Random(13))
+        rt.recover()
+        check_ckpt(chk.events, ck.snapshot(), words)
+    finally:
+        rt.close()
+
+
+def test_mp_mixed_segments_under_checker():
+    """Serving AND checkpoint in one 2-segment runtime (the bench's
+    mixed row): both histories stay linearizable through interleaved
+    crashes, and each structure's psyncs accounted on its own device."""
+    gen_len, words = 6, 8
+    rt = CombiningRuntime(n_threads=4, backend="shm", segments=2)
+    log_chk, ck_chk = HistoryChecker("log"), HistoryChecker("ckpt")
+    try:
+        log = rt.make("log", "pbcomb", n_clients=4)
+        ck = rt.make("ckpt", "pbcomb")
+        assert rt.segment_stats()["placement"] == \
+            {"log/pbcomb": 0, "ckpt/pbcomb": 1}
+        pool = rt.spawn_workers(4)
+        base = 0
+        for cd, seed in CASES_24[:8]:
+            rt.nvm.arm_crash(cd, random.Random(seed))
+            res = pool.run_serving(log, 2, gen_len=gen_len,
+                                   seq_base=base, collect=True)
+            log_chk.extend_pool(res)
+            if res.crashed:
+                log_chk.apply_replay(
+                    res.inflight, rt.recover(inflight=res.inflight))
+            else:
+                rt.nvm.disarm_crash()
+            res = pool.run_checkpoint(ck, 2, payload_words=words,
+                                      step_base=base, collect=True)
+            ck_chk.extend_pool(res)
+            if res.crashed:
+                ck_chk.apply_replay(
+                    res.inflight, rt.recover(inflight=res.inflight))
+            base += 2
+        rt.crash(random.Random(5))
+        rt.recover()
+        check_log(log_chk.events, log.snapshot(), gen_len)
+        check_ckpt(ck_chk.events, ck.snapshot(), words)
+        segs = rt.nvm.segment_counters()
+        assert len(segs) == 2
+        assert all(s["psync"] > 0 for s in segs), segs
+    finally:
+        rt.close()
+
+
+# --------------------------------------------------------------------- #
+# thread-backend sweeps (staged in-round crash points)                  #
+# --------------------------------------------------------------------- #
+_STAGE_OPS = {"queue": ("enqueue", "dequeue"),
+              "stack": ("push", "pop"),
+              "heap": ("insert", "delete_min")}
+
+_PAD = "thread-blob-pad-" * 2
+
+
+@pytest.mark.parametrize("kind,protocol", MP_CELLS)
+def test_thread_crash_sweep_matrix(kind, protocol):
+    """The same checker over the thread backend: each case stages a
+    combining round serving N announced requests and crashes inside it
+    (announce/perform + armed countdown), alternating add and remove
+    rounds."""
+    n = 3
+    rt = CombiningRuntime(n_threads=n)
+    chk = HistoryChecker(kind)
+    obj = rt.make(kind, protocol)
+    handles = [rt.attach(p) for p in range(n)]
+    add_op, rem_op = _STAGE_OPS[kind]
+    idx = [0] * n
+    for case_i, (cd, seed) in enumerate(CASES_12):
+        adding = case_i % 2 == 0
+        args = {}
+        for p in range(n):
+            if adding:
+                args[p] = (p, idx[p], _PAD)
+                idx[p] += 1
+                handles[p].announce(obj, add_op, args[p])
+            else:
+                args[p] = None
+                handles[p].announce(obj, rem_op)
+        rt.arm_crash(cd, random.Random(seed))
+        op = add_op if adding else rem_op
+        try:
+            ret = handles[0].perform(obj)
+            chk.extend(0, [(op, args[0], ret)])
+        except SimulatedCrash:
+            pass
+        rt.nvm.disarm_crash()       # late countdowns must not fire in
+        replies = rt.recover()      # the replay below
+        for p in range(n):
+            key = (obj.name, p)
+            if key in replies:
+                chk.extend(p, [(op, args[p], replies[key])])
+    chk.check(_drain_all(rt, obj))

@@ -14,15 +14,15 @@ import pytest
 
 from repro.api import CombiningRuntime
 
-ADD_ACKED = {"enqueue", "push"}
-REM = {"dequeue", "pop"}
+ADD_ACKED = {"enqueue", "push", "insert"}
+REM = {"dequeue", "pop", "delete_min"}
 
 
 def _tally(results_iter):
     """(acked adds, non-empty removals) multisets over op results."""
     added, removed = Counter(), Counter()
     for op, arg, ret in results_iter:
-        if op in ADD_ACKED and ret == "ACK":
+        if op in ADD_ACKED and (ret == "ACK" or ret is True):
             added[arg] += 1
         elif op in REM and ret is not None:
             removed[ret] += 1
@@ -140,6 +140,49 @@ def test_crash_halts_every_worker_not_just_the_tripper():
 # --------------------------------------------------------------------- #
 # 4-process stress: the ROADMAP-flagged baseline race class             #
 # --------------------------------------------------------------------- #
+@pytest.mark.parametrize("protocol", ["pbcomb", "pwfcomb"])
+def test_heap_stress_four_processes(protocol):
+    """4-process stress for the recoverable HEAP — until this PR the
+    only structure with zero mp stress coverage.  Exact-once across
+    insert/delete_min pairs, plus a post-run quiescent drain that must
+    come out sorted (heap order survives true parallelism)."""
+    rt = CombiningRuntime(n_threads=4, backend="shm")
+    try:
+        h = rt.make("heap", protocol)
+        with rt.spawn_workers(4) as pool:
+            res = pool.run_pairs(h, 100, collect=True)
+        added, removed = _tally(r for rep in res.reports
+                                for r in rep.results)
+        drain = []
+        fn = rt.attach(0).invoker(h, "delete_min", arity=0)
+        while True:
+            v = fn()
+            if v is None:
+                break
+            drain.append(v)
+        assert drain == sorted(drain)
+        assert added == removed + Counter(drain)
+        assert res.ops_done == 4 * 2 * 100
+    finally:
+        rt.close()
+
+
+def test_heap_stress_rich_blob_values():
+    """The same heap stress with blob-sized tuple values — heap order
+    on tuples exercises blob decode on every sift comparison."""
+    rt = CombiningRuntime(n_threads=4, backend="shm")
+    try:
+        h = rt.make("heap", "pbcomb")
+        with rt.spawn_workers(4) as pool:
+            res = pool.run_pairs(h, 40, collect=True, rich=True)
+        added, removed = _tally(r for rep in res.reports
+                                for r in rep.results)
+        remaining = Counter(h.snapshot())
+        assert added == removed + remaining
+    finally:
+        rt.close()
+
+
 @pytest.mark.parametrize("protocol", ["durable-ms", "lock-undo"])
 def test_baseline_stress_four_processes(protocol):
     """Heavier pairs stress on the per-op-persist baselines whose races

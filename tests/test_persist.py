@@ -111,6 +111,63 @@ def test_checkpoint_lease_takeover():
     assert int(ck.recover()["step"]) == 9
 
 
+def test_nvmstore_roundtrip_and_epoch_semantics():
+    """NVMStore: the Store facade over simulated NVM words — pwb stages
+    (not durable), psync makes durable, crash drops the staged epoch."""
+    from repro.core import NVM
+    from repro.persist.store import NVMStore
+
+    store = NVMStore(NVM(1 << 14))
+    store.pwb("a", b"one")
+    assert store.read("a") is None          # staged, not durable
+    store.pfence()
+    store.pwb("b", b"two")
+    store.psync()
+    assert store.read("a") == b"one" and store.read("b") == b"two"
+    store.pwb("a", b"three")
+    store.crash(None)                       # drain-nothing cut
+    store.nvm.disarm_crash()
+    assert store.read("a") == b"one"        # staged write lost
+    assert store.counters["psync"] >= 1
+
+
+def test_checkpointer_over_shm_nvm():
+    """PBCombCheckpointer wired through a shared-memory NVM
+    (``over_nvm``): slot files live in the shm blob heap, psyncs land
+    on the chosen segment's device, recovery + detectability survive a
+    machine crash, and a crash mid-commit leaves old-or-new (the
+    torn-checkpoint impossibility, now over NVMStore)."""
+    from repro.core import SimulatedCrash
+    from repro.core.shm import ShmNVM
+
+    nvm = ShmNVM(1 << 14, segments=2)
+    try:
+        ck = PBCombCheckpointer.over_nvm(nvm, 3, TEMPLATE, segment=1)
+        ck.initialize(_payload(0))
+        ck.announce(0, _payload(7), 1)
+        ck.announce(1, _payload(7), 1)
+        assert ck.combine_once() == 2
+        assert ck.was_applied(0, 1) and ck.was_applied(1, 1)
+        segs = nvm.segment_counters()
+        assert segs[1]["psync"] >= 1 and segs[0]["psync"] == 0
+        nvm.crash(random.Random(3))
+        nvm.disarm_crash()
+        payload = ck.recover()
+        np.testing.assert_array_equal(payload["w"], _payload(7)["w"])
+        assert ck.was_applied(0, 1) and ck.was_applied(1, 1)
+        # crash mid-commit: recovery reads the index-named slot — the
+        # previous checkpoint, never a torn one
+        ck.announce(2, _payload(20), 1)
+        nvm.arm_crash(1)
+        with pytest.raises(SimulatedCrash):
+            ck.combine_once()
+        nvm.disarm_crash()
+        payload = ck.recover()
+        assert int(payload["step"]) in (7, 20)
+    finally:
+        nvm.close()
+
+
 def test_dirstore_roundtrip(tmp_path):
     store = DirStore(str(tmp_path))
     ck = PBCombCheckpointer(store, 1, TEMPLATE)

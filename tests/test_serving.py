@@ -11,7 +11,7 @@ from repro.serving.kv_cache import SlotAllocator
 from repro.serving.scheduler import RequestHeap
 
 
-def _toy_engine(n=8, slots=8, max_batch=4, slow=0.0):
+def _toy_engine(n=8, slots=8, max_batch=4, slow=0.0, runtime=None):
     def prefill_batch(prompts):
         if slow:
             time.sleep(slow)
@@ -23,7 +23,8 @@ def _toy_engine(n=8, slots=8, max_batch=4, slow=0.0):
 
     return CombiningEngine(n, prefill_batch_fn=prefill_batch,
                            decode_batch_fn=decode_batch, n_kv_slots=slots,
-                           max_batch=max_batch, eos_token=-1)
+                           max_batch=max_batch, eos_token=-1,
+                           runtime=runtime)
 
 
 def test_generate_and_batching():
@@ -45,6 +46,51 @@ def test_generate_and_batching():
     assert eng.stats["decode_batched"] > eng.stats["decode_rounds"]
     # one persist round can cover several completions (P1)
     assert eng.stats["persists"] <= 8
+
+
+def test_engine_over_shm_runtime_nvm_response_log():
+    """The engine wired through CombiningRuntime(backend="shm"): its
+    durable response log is a registry ``log/pbcomb`` structure whose
+    rich token payloads live in the shm blob heap (DESIGN.md §8) —
+    completion batching, crash recovery and detectability all work
+    unchanged over the shared segment."""
+    import random
+
+    from repro.api import CombiningRuntime
+
+    rt = CombiningRuntime(n_threads=4, backend="shm", segments=2)
+    try:
+        eng = _toy_engine(n=4, slots=4, runtime=rt)
+        assert eng.ckpt is None and eng.store is None
+        assert eng.log.protocol == "pbcomb" and eng.log.kind == "log"
+        eng.start()
+        results = {}
+
+        def client(c):
+            for seq in (1, 2):
+                results[(c, seq)] = eng.submit(c, [c, seq], max_tokens=5,
+                                               seq=seq, timeout=60)
+
+        ts = [threading.Thread(target=client, args=(c,))
+              for c in range(4)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        eng.stop()
+        psyncs = rt.nvm.counters["psync"]
+        assert psyncs <= 8           # combining amortized completions
+        # full machine crash: the shm NVM log survives, detectability
+        # answers re-announced requests from it
+        rt.crash(random.Random(11))
+        eng.restart_after_crash()
+        for c in range(4):
+            assert eng.recover_request(c, [c, 2], 5, seq=2) \
+                == results[(c, 2)]
+        applied, resp = eng.cached_response(0, 1)
+        assert not applied or resp == results[(0, 1)]
+    finally:
+        rt.close()
 
 
 def test_detectable_request_recovery():

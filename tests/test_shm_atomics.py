@@ -167,10 +167,11 @@ def test_mutex_reset_releases_dead_holder(be):
 # --------------------------------------------------------------------- #
 # replay equivalence vs the in-thread backend                           #
 # --------------------------------------------------------------------- #
-def _scripted_run(backend, crash_after, protocol):
+def _scripted_run(backend, crash_after, protocol, segments=1):
     """Deterministic single-process op script with an armed crash;
     returns (trace, replayed responses, post-recovery snapshot)."""
-    rt = CombiningRuntime(n_threads=2, backend=backend, nvm_words=1 << 16)
+    rt = CombiningRuntime(n_threads=2, backend=backend, nvm_words=1 << 16,
+                          segments=segments if backend == "shm" else 1)
     try:
         obj = rt.make("queue", protocol)
         bound = [rt.attach(p).bind(obj) for p in range(2)]
@@ -198,6 +199,16 @@ def test_replay_equivalence_threads_vs_shm(protocol, crash_after):
     replayed recovery responses, same post-recovery state."""
     assert _scripted_run("threads", crash_after, protocol) \
         == _scripted_run("shm", crash_after, protocol)
+
+
+@pytest.mark.parametrize("crash_after", [5, 11, 999])
+def test_replay_equivalence_multisegment(crash_after):
+    """A 2-segment shm NVM is indistinguishable from the single-DIMM
+    thread NVM for a deterministic schedule: the segment striping moves
+    write-backs onto per-segment rings/devices without changing any
+    observable response, crash point, or machine-wide counter."""
+    assert _scripted_run("threads", crash_after, "pbcomb") \
+        == _scripted_run("shm", crash_after, "pbcomb", segments=2)
 
 
 def test_counters_match_threads_vs_shm():
@@ -259,6 +270,46 @@ def test_ring_spill_is_legal_early_completion():
             == list(range(64))
     finally:
         be.close()
+
+
+def test_ring_spill_with_blob_payloads():
+    """Spill-drained entries carry blob PINS, not byte copies: the
+    early completion must still land the exact pinned payloads in the
+    durable image."""
+    be = ShmBackend(data_words=1 << 12, aux_i64=1 << 12, ring_i64=256)
+    try:
+        nvm = ShmNVM(1 << 12, backend=be)
+        addr = nvm.alloc(32)
+        vals = [("blob", i, "p" * 30) for i in range(32)]
+        for i, v in enumerate(vals):
+            nvm.write(addr + i, v)
+            nvm.pwb(addr + i, 1)
+        assert nvm.counters["ring_spills"] > 0
+        nvm.psync()
+        assert [nvm.durable_read(addr + i) for i in range(32)] == vals
+    finally:
+        be.close()
+
+
+def test_segment_counters_and_placement():
+    """Per-segment accounting: each structure's psyncs engage only its
+    own device; machine counters stay the totals."""
+    rt = CombiningRuntime(n_threads=2, backend="shm", segments=2)
+    try:
+        q0 = rt.make("queue", "pbcomb")     # placed on segment 0
+        q1 = rt.make("queue", "pwfcomb")    # placed on segment 1
+        assert rt.segment_stats()["placement"] == \
+            {"queue/pbcomb": 0, "queue/pwfcomb": 1}
+        b = rt.attach(0)
+        b.invoke(q0, "enqueue", 1)
+        segs = rt.nvm.segment_counters()
+        assert segs[0]["psync"] > 0 and segs[1]["psync"] == 0
+        b.invoke(q1, "enqueue", 2)
+        segs = rt.nvm.segment_counters()
+        assert segs[1]["psync"] > 0
+        assert rt.nvm.counters["psync"] == sum(s["psync"] for s in segs)
+    finally:
+        rt.close()
 
 
 def test_shm_rejects_profile():
