@@ -1,0 +1,300 @@
+"""Fleet bench: sharded open-loop serving over the shm backend.
+
+Drives a ``repro.fleet.Fleet`` (N shards × M fork()ed workers, each
+shard its own multi-segment ShmNVM + ingress queue + durable response
+log + checkpoint cell) through seeded open-loop traffic windows and
+reports the serving-fleet observables the paper's amortization argument
+predicts (DESIGN.md §9):
+
+  * coordinated-omission-free latency percentiles (p50/p99/p999 from
+    INTENDED arrival times — a backed-up shard inflates the recorded
+    tail instead of silently deferring load);
+  * the saturation KNEE: the offered rate ramps geometrically until
+    p99 blows the budget; the knee estimate brackets fleet capacity.
+    The ramp ends in a quasi-burst rate, so it always saturates and the
+    knee is always non-empty;
+  * per-shard measured combining degree, psync/op and per-segment
+    psync columns, plus the consistent-hash ``shard_skew``;
+  * a burst window (all arrivals at t=0 — the saturation regime where
+    combining amortization peaks) for pbcomb AND for the lock-direct
+    fleet, whose burst psync/op is the measured per-op-persist floor
+    the --check gate compares against.
+
+Schedules are pure functions of the seed (routing, arrival times,
+client identities, priorities); only the wall-clock measurements vary
+between runs.
+
+Run:  PYTHONPATH=src python -m benchmarks.fleet_bench
+          [--quick] [--shards 2] [--workers 4]
+          [--json BENCH_fleet.json] [--check]
+
+``--check`` enforces (the fleet-smoke CI gate):
+  * EVERY shard of the pbcomb burst window combines at
+    degree_mean >= 2 (true-parallel combining on each shard);
+  * pbcomb burst psync/op strictly below the lock-direct burst floor
+    (amortization measured fleet-wide);
+  * the knee is non-empty;
+  * every offered request completed, and the post-traffic consistent
+    cut committed on every shard.
+
+JSON schema (``bench.fleet.v1``)::
+
+    {"schema": "bench.fleet.v1", "tag": str, "quick": bool, "seed": int,
+     "config": {"n_shards": int, "workers_per_shard": int,
+                "n_clients": int, "segments": int, "gen_len": int,
+                "batch": int},
+     "rows": [{"name": "fleet/<proto>/<window>", "rate_rps": float|null,
+               "offered": int, "completed": int, "shard_skew": float,
+               "p50_us": float, "p99_us": float, "p999_us": float,
+               "psyncs_per_op": float, "pwbs_per_op": float,
+               "degree_mean": float|null,
+               "per_shard": [{"shard": int, "ops": int,
+                              "degree_mean": float|null,
+                              "degree_max": int|null,
+                              "psyncs_per_op": float,
+                              "seg_psyncs_per_op": [float, ...],
+                              "active_workers": int, ...}, ...]}, ...],
+     "knee": {"p99_budget_us": float, "knee_rate_rps": float|null,
+              "last_ok_rate_rps": float|null,
+              "first_saturated_rate_rps": float|null,
+              "saturated_at_floor": bool, "steps": [...]},
+     "checkpoint": {"step": int, "committed": int}}
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")                      # repo-root invocation
+
+from repro.fleet import Fleet, FleetConfig, LatencyRecorder, find_knee
+
+from benchmarks.common import atomic_write_json
+
+#: the ramp's closing rate — gaps of ~1us, indistinguishable from a
+#: burst, so the ramp ALWAYS ends saturated and the knee is non-empty
+QUASI_BURST_RPS = 1e6
+
+
+def run_window(fleet: Fleet, name: str, n_requests: int, *,
+               rate_rps=None, burst=False) -> dict:
+    """One traffic window on a started fleet: reset counters, schedule,
+    run, aggregate one bench row."""
+    fleet.reset_stats()
+    sched = fleet.make_wave(n_requests, rate_rps=rate_rps, burst=burst)
+    res = fleet.run_wave(sched)
+    rep = fleet.wave_report(res)
+    rec = LatencyRecorder()
+    for r in res.values():
+        rec.add(r.latencies)
+    lat = rec.summary()
+    return {"name": name,
+            "rate_rps": None if burst else rate_rps,
+            "offered": n_requests,
+            "completed": lat["n"],
+            "shard_skew": round(rep["shard_skew"], 4),
+            "p50_us": lat["p50_us"], "p99_us": lat["p99_us"],
+            "p999_us": lat["p999_us"],
+            "psyncs_per_op": rep["psyncs_per_op"],
+            "pwbs_per_op": rep["pwbs_per_op"],
+            "degree_mean": rep["degree_mean"] or None,
+            "per_shard": rep["per_shard"]}
+
+
+def show(row: dict) -> None:
+    r = ("burst" if row["rate_rps"] is None
+         else f"{row['rate_rps']:.0f}")
+    d = ("-" if row["degree_mean"] is None
+         else f"{row['degree_mean']:.2f}")
+    p99 = row["p99_us"]
+    print(f"{row['name']:28s} {r:>8s} {row['completed']:5d}"
+          f"/{row['offered']:<5d} "
+          f"{row['p50_us'] or 0:9.0f} {p99 or 0:9.0f} "
+          f"{row['psyncs_per_op']:8.3f} {d:>6s} "
+          f"{row['shard_skew']:6.3f}")
+
+
+def bench_fleet(cfg: FleetConfig, *, n_ramp: int, n_burst: int,
+                rates, p99_budget_us: float) -> dict:
+    """The pbcomb fleet: rate ramp (knee discovery) + burst window +
+    post-traffic consistent-cut checkpoint."""
+    rows = []
+    with Fleet(cfg) as fleet:
+        # unmeasured warmup wave: fork, invoker binding and blob-heap
+        # chunk allocation must not saturate the first ramp rate
+        fleet.run_wave(fleet.make_wave(max(16, n_ramp // 4),
+                                       burst=True))
+
+        def run_at(rate):
+            row = run_window(fleet, f"fleet/{cfg.protocol}/ramp",
+                             n_ramp, rate_rps=rate)
+            rows.append(row)
+            show(row)
+            return row
+        knee = find_knee(run_at, list(rates) + [QUASI_BURST_RPS],
+                         p99_budget_us)
+        burst_row = run_window(fleet, f"fleet/{cfg.protocol}/burst",
+                               n_burst, burst=True)
+        rows.append(burst_row)
+        show(burst_row)
+        step = fleet.checkpoint()
+        ck = {"step": step, "committed": fleet.committed_step()}
+    # the ramp rows already live in knee["steps"]; keep rows as the
+    # flat list too (schema consumers iterate one place)
+    return {"rows": rows, "knee": knee, "checkpoint": ck}
+
+
+def bench_floor(cfg: FleetConfig, n_burst: int) -> dict:
+    """The lock-direct fleet's burst window: every completion persists
+    individually — the measured per-op-persist floor."""
+    with Fleet(cfg) as fleet:
+        fleet.run_wave(fleet.make_wave(max(16, n_burst // 8),
+                                       burst=True))
+        row = run_window(fleet, f"fleet/{cfg.protocol}/burst", n_burst,
+                         burst=True)
+        show(row)
+        return row
+
+
+def check_results(doc: dict) -> list:
+    """The fleet-smoke acceptance gate; returns failure strings."""
+    failures = []
+    rows = {r["name"]: r for r in doc["rows"]}
+    comb = rows.get("fleet/pbcomb/burst")
+    floor = rows.get("fleet/lock-direct/burst")
+    if comb is None or floor is None:
+        return ["missing pbcomb/lock-direct burst rows"]
+
+    for s in comb["per_shard"]:
+        if (s["degree_mean"] or 0) < 2.0:
+            failures.append(
+                f"shard {s['shard']} burst degree_mean "
+                f"{s['degree_mean'] or 0.0:.2f} < 2.0 at "
+                f"{s['active_workers']} workers — per-shard combining "
+                "is not happening")
+    if comb["psyncs_per_op"] >= floor["psyncs_per_op"]:
+        failures.append(
+            f"pbcomb burst psync/op {comb['psyncs_per_op']:.3f} not "
+            f"strictly below the lock-direct floor "
+            f"{floor['psyncs_per_op']:.3f} — fleet amortization not "
+            "measured")
+    if doc["knee"]["knee_rate_rps"] is None:
+        failures.append("knee discovery returned no estimate "
+                        "(ramp never saturated)")
+    for r in doc["rows"]:
+        if r["completed"] != r["offered"]:
+            failures.append(
+                f"{r['name']} completed {r['completed']} of "
+                f"{r['offered']} offered — open-loop requests lost")
+    ck = doc["checkpoint"]
+    if ck["committed"] < ck["step"]:
+        failures.append(
+            f"consistent cut not committed on every shard "
+            f"(durable min {ck['committed']} < step {ck['step']})")
+    return failures
+
+
+def _round(doc: dict) -> None:
+    def rr(row):
+        for k in ("p50_us", "p99_us", "p999_us", "psyncs_per_op",
+                  "pwbs_per_op", "degree_mean"):
+            if row.get(k) is not None:
+                row[k] = round(row[k], 3)
+        for s in row.get("per_shard", ()):
+            for k in ("pwbs_per_op", "psyncs_per_op", "degree_mean"):
+                if s.get(k) is not None:
+                    s[k] = round(s[k], 3)
+            s["seg_psyncs_per_op"] = [round(v, 3)
+                                      for v in s["seg_psyncs_per_op"]]
+    for row in doc["rows"]:
+        rr(row)
+    for step in doc["knee"]["steps"]:
+        rr(step)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Sharded serving-fleet bench (open-loop, shm)")
+    ap.add_argument("--quick", action="store_true",
+                    help="small windows + short ramp (CI)")
+    ap.add_argument("--shards", type=int, default=2)
+    ap.add_argument("--workers", type=int, default=4,
+                    help="workers per shard")
+    ap.add_argument("--clients", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", metavar="PATH",
+                    help="write bench.fleet.v1 results here")
+    ap.add_argument("--tag", default="fleet")
+    ap.add_argument("--check", action="store_true",
+                    help="fail unless every shard combines at "
+                         "degree>=2 on the burst window, pbcomb "
+                         "psync/op beats the lock-direct floor, the "
+                         "knee is non-empty and no request was lost")
+    args = ap.parse_args(argv)
+
+    if args.quick:
+        n_ramp, n_burst = 60, 240
+        rates = [250.0, 1000.0, 4000.0]
+        budget_us = 25_000.0
+    else:
+        n_ramp, n_burst = 200, 480
+        rates = [125.0, 250.0, 500.0, 1000.0, 2000.0, 4000.0, 8000.0]
+        budget_us = 25_000.0
+
+    # admission window 8: the batched RECORD_MANY completion path
+    # persists a full window per combining round (§8 idiom), which is
+    # where the burst degree margin comes from
+    base = dict(n_shards=args.shards, workers_per_shard=args.workers,
+                n_clients=args.clients, seed=args.seed, batch=8)
+    print(f"## fleet bench ({args.shards} shards x {args.workers} "
+          f"workers, {args.clients} clients, seed={args.seed})")
+    print(f"{'window':28s} {'rate':>8s} {'done':>11s} "
+          f"{'p50us':>9s} {'p99us':>9s} {'psync/op':>8s} "
+          f"{'degree':>6s} {'skew':>6s}")
+
+    res = bench_fleet(FleetConfig(protocol="pbcomb", **base),
+                      n_ramp=n_ramp, n_burst=n_burst, rates=rates,
+                      p99_budget_us=budget_us)
+    floor_row = bench_floor(FleetConfig(protocol="lock-direct", **base),
+                            n_burst)
+
+    k = res["knee"]
+    knee_s = ("-" if k["knee_rate_rps"] is None
+              else f"{k['knee_rate_rps']:.0f} rps")
+    print(f"knee: {knee_s} (last ok {k['last_ok_rate_rps']}, first "
+          f"saturated {k['first_saturated_rate_rps']}, budget "
+          f"p99<={budget_us/1000:.0f}ms"
+          + (", saturated at floor rate" if k["saturated_at_floor"]
+             else "") + ")")
+
+    cfg = FleetConfig(**base)
+    doc = {"schema": "bench.fleet.v1", "tag": args.tag,
+           "quick": args.quick, "seed": args.seed,
+           "config": {"n_shards": cfg.n_shards,
+                      "workers_per_shard": cfg.workers_per_shard,
+                      "n_clients": cfg.n_clients,
+                      "segments": cfg.segments,
+                      "gen_len": cfg.gen_len,
+                      "batch": cfg.batch},
+           "rows": res["rows"] + [floor_row],
+           "knee": res["knee"],
+           "checkpoint": res["checkpoint"]}
+    _round(doc)
+
+    if args.json:
+        atomic_write_json(args.json, doc)
+        print(f"(wrote {len(doc['rows'])} rows to {args.json})")
+
+    if args.check:
+        failures = check_results(doc)
+        for msg in failures:
+            print(f"FAIL: {msg}")
+        if failures:
+            return 1
+        print("fleet degree/amortization/knee checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

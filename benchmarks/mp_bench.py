@@ -31,10 +31,11 @@ Run:  PYTHONPATH=src python -m benchmarks.mp_bench
           [--park PROB:SECONDS] [--thread-probe]
 
 ``--check`` enforces the paper's amortization measurably (the mp-smoke
-CI gate): with 4 workers queue/pbcomb, serving/pbcomb and
-checkpoint/pbcomb must combine at degree_mean >= 2 and every combining
-row's wall psync/op must be strictly below its per-op-persist floor
-(lock-direct / lock-undo / durable-ms rows of the same table).
+CI gate): with 4 workers the queue/stack/heap pbcomb cells plus
+serving/pbcomb and checkpoint/pbcomb must combine at degree_mean >= 2
+and every combining row's wall psync/op must be strictly below its
+per-op-persist floor (lock-direct / lock-undo / durable-ms rows of the
+same table).
 
 ``--thread-probe`` instead runs the same workload on the THREAD backend
 and prints its measured degree — the 3.13t CI scout uses it to detect
@@ -74,7 +75,7 @@ from benchmarks.common import atomic_write_json
 PER_OP_PERSIST = {"lock-direct", "lock-undo", "durable-ms"}
 COMBINING = {"pbcomb", "pwfcomb"}
 
-KINDS = ("queue", "stack")
+KINDS = ("queue", "stack", "heap")
 
 #: protocols benched for the serving/checkpoint tables (the lock row is
 #: the measured per-op-persist floor the gate compares against)
@@ -254,6 +255,8 @@ def check_rows(rows, workers: int = 4) -> list:
                 "combining is not happening")
 
     gate_degree("queue/pbcomb")
+    gate_degree("stack/pbcomb")
+    gate_degree("heap/pbcomb")
     gate_degree("serving/pbcomb")
     gate_degree("checkpoint/pbcomb")
 
@@ -294,9 +297,9 @@ def main(argv=None) -> int:
     ap.add_argument("--tag", default="mp")
     ap.add_argument("--check", action="store_true",
                     help="fail unless the 4-worker column shows "
-                         "degree>=2 on queue/serving/checkpoint pbcomb "
-                         "and comb psync/op below the per-op-persist "
-                         "floor of each table")
+                         "degree>=2 on the queue/stack/heap/serving/"
+                         "checkpoint pbcomb rows and comb psync/op "
+                         "below the per-op-persist floor of each table")
     ap.add_argument("--park", default=None, metavar="PROB:SECONDS",
                     help="override the shm entry backoff "
                          "(e.g. 0.5:5e-5)")

@@ -138,12 +138,6 @@ def collect(quick: bool = False):
     return csv, json_rows
 
 
-# moved to benchmarks.common so the lean mp_bench entry point shares it
-# without importing this module's bench dependencies; the old name
-# stays importable (tests pin the atomic-write contract through it)
-_atomic_write_json = atomic_write_json
-
-
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(
         description="Persistent-software-combining benchmark suite")
@@ -189,7 +183,7 @@ def main(argv=None) -> None:
                 else stem
         doc = {"schema": "bench.v2", "tag": tag, "quick": args.quick,
                "profile": args.profile, "rows": json_rows}
-        _atomic_write_json(args.json, doc)
+        atomic_write_json(args.json, doc)
         print(f"\n(wrote {len(json_rows)} rows to {args.json})")
 
 

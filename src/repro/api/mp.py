@@ -87,6 +87,10 @@ class WorkerReport:
     inflight: List[Tuple[str, int, str, Any, int]] = field(
         default_factory=list)
     error: Optional[str] = None
+    #: per-request end-to-end latencies (seconds) of the open-loop
+    #: command, measured from each request's INTENDED arrival time —
+    #: coordinated-omission-free (None for other commands)
+    latencies: Optional[List[float]] = None
 
 
 @dataclass
@@ -109,6 +113,12 @@ class PoolResult:
         """All in-flight records the workers reported (feed to
         ``runtime.recover(inflight=...)``)."""
         return [rec for r in self.reports for rec in r.inflight]
+
+    @property
+    def latencies(self) -> List[float]:
+        """All open-loop request latencies (seconds from intended
+        arrival to durable completion) across workers."""
+        return [v for r in self.reports for v in (r.latencies or ())]
 
     def results_by_tid(self) -> Dict[int, List[Tuple[str, Any, Any]]]:
         return {r.tid: (r.results or []) for r in self.reports}
@@ -143,6 +153,7 @@ def _worker_main(runtime, tid: int, cmdq, resq, barrier) -> None:
         barrier.wait()
         done = 0
         results: Optional[list] = None
+        latencies: Optional[list] = None
         try:
             if kind == "pairs":
                 _k, obj_name, add_op, rem_op, n_ops, base, collect, \
@@ -208,13 +219,105 @@ def _worker_main(runtime, tid: int, cmdq, resq, barrier) -> None:
                     if results is not None:
                         results.append((op, arg, ret))
                 elapsed = time.perf_counter() - t0
+            elif kind == "openloop":
+                # open-loop serving leg (DESIGN.md §9): enqueue each
+                # scheduled request into the shard ingress at its
+                # INTENDED arrival time, pull a small admission window
+                # back out, serve most-urgent-first (deadline heap from
+                # serving/scheduler), RECORD the response into the
+                # durable log.  Latency is measured from the intended
+                # arrival carried INSIDE the request value, so a
+                # backed-up worker inflates the recorded tail instead of
+                # silently deferring load (coordinated-omission-free).
+                from ..serving.scheduler import PriorityAdmission
+                _k, ingress_name, log_name, schedule, gen_len, batch, \
+                    collect = cmd
+                enq = invoker(ingress_name, "enqueue")
+                deq = invoker(ingress_name, "dequeue")
+                log_obj = runtime.objects[log_name]
+                admission = PriorityAdmission(window=batch)
+                results = [] if collect else None
+                latencies = []
+                # all workers share the barrier release as the schedule
+                # epoch; perf_counter is CLOCK_MONOTONIC (system-wide on
+                # Linux), so cross-worker latency attribution only sees
+                # the barrier-release skew
+                t0 = time.perf_counter()
+
+                def pull_and_serve(limit: int) -> int:
+                    nonlocal done
+                    pulled = 0
+                    while pulled < limit:
+                        v = deq()
+                        done += 1
+                        if results is not None:
+                            results.append(("dequeue", None, v))
+                        if v is None:
+                            break
+                        admission.offer(v)
+                        pulled += 1
+                    # serve the admitted window most-urgent-first and
+                    # RECORD every completion in ONE batched call —
+                    # invoke_many's RECORD_MANY path, so one combining
+                    # round persists the whole window's completions
+                    # (the serving engine's completion idiom, §8)
+                    admitted = list(admission.admit())
+                    if admitted:
+                        calls = [(log_obj, "record",
+                                  (r[0], r[1],
+                                   serving_response(r[0], r[1],
+                                                    gen_len)))
+                                 for r in admitted]
+                        rets = handle.invoke_many(calls)
+                        now = time.perf_counter() - t0
+                        for r, ret in zip(admitted, rets):
+                            done += 1
+                            if results is not None:
+                                results.append(("record",
+                                                (r[0], r[1]), ret))
+                            latencies.append(now - r[2])
+                    return pulled
+
+                for i, (t_rel, client, seq, prio) in enumerate(schedule):
+                    now = time.perf_counter() - t0
+                    if t_rel > now:
+                        time.sleep(t_rel - now)
+                    req = (client, seq, t_rel, prio)
+                    ra = enq(req)
+                    done += 1
+                    if results is not None:
+                        results.append(("enqueue", req, ra))
+                    # keep ingesting while the next arrival is already
+                    # due: a burst runs as an enqueue storm (maximum
+                    # combining) and serving catches up in the drain —
+                    # open-loop semantics put the backlog into the
+                    # measured latency either way
+                    if (i + 1 >= len(schedule)
+                            or schedule[i + 1][0]
+                            > time.perf_counter() - t0):
+                        pull_and_serve(batch)
+                # drain the residual backlog (including requests
+                # enqueued by slower peers); a few consecutive empty
+                # polls means this worker sees a quiesced ingress.
+                # An EMPTY schedule means this worker has elastically
+                # left the shard: it must not serve at all.
+                empties = 0
+                while schedule and empties < 3:
+                    if pull_and_serve(batch) == 0:
+                        empties += 1
+                        time.sleep(1e-3)
+                    else:
+                        empties = 0
+                elapsed = time.perf_counter() - t0
             else:
                 raise ValueError(f"unknown pool command {kind!r}")
             resq.put((tid, "done", {"ops": done, "elapsed": elapsed,
-                                    "results": results}))
+                                    "results": results,
+                                    "latencies": latencies}))
         except SimulatedCrash:
             resq.put((tid, "crashed",
                       {"ops": done, "results": results,
+                       "latencies": latencies,
                        "inflight": _collect_inflight(runtime)}))
         except BaseException:
             resq.put((tid, "error", traceback.format_exc()))
@@ -299,11 +402,13 @@ class WorkerPool:
                 reports.append(WorkerReport(
                     tid, status, ops_done=payload["ops"],
                     elapsed_s=payload["elapsed"],
-                    results=payload["results"]))
+                    results=payload["results"],
+                    latencies=payload["latencies"]))
             elif status == "crashed":
                 reports.append(WorkerReport(
                     tid, status, ops_done=payload["ops"],
                     results=payload["results"],
+                    latencies=payload["latencies"],
                     inflight=payload["inflight"]))
             else:
                 reports.append(WorkerReport(tid, "error", error=payload))
@@ -359,6 +464,26 @@ class WorkerPool:
         """Explicit per-worker op lists: ``{tid: [(op, arg), ...]}``."""
         return self._run([
             ("ops", obj.name, list(ops_by_tid.get(tid, ())), collect)
+            for tid in self.tids])
+
+    def run_open_loop(self, ingress, log,
+                      schedules: Dict[int, List[Tuple[float, int, int,
+                                                      float]]],
+                      *, gen_len: int = 8, batch: int = 4,
+                      collect: bool = False) -> PoolResult:
+        """Open-loop traffic window (the fleet's serving leg): each
+        worker executes its ``[(t_rel, client, seq, priority), ...]``
+        schedule — ENQUEUE into ``ingress`` at the intended arrival
+        offset, admit up to ``batch`` pending requests by deadline
+        priority, serve each (toy generation) and RECORD the response
+        into ``log`` — then drains the residual backlog.  Workers
+        absent from ``schedules`` run an empty schedule and serve
+        NOTHING this window, which is how the fleet expresses elastic
+        leave without respawning the pool.  ``PoolResult.latencies``
+        carries the coordinated-omission-free per-request latencies."""
+        return self._run([
+            ("openloop", ingress.name, log.name,
+             list(schedules.get(tid, ())), gen_len, batch, collect)
             for tid in self.tids])
 
     # ------------------ lifecycle -------------------------------------- #

@@ -1,0 +1,21 @@
+"""repro.fleet — sharded serving fleet + open-loop traffic harness.
+
+N ``CombiningRuntime(backend="shm")`` shards behind a consistent-hash
+router, driven by seeded open-loop arrival processes; latency measured
+from intended arrival times (coordinated-omission-free), saturation
+knee discovered by rate ramp, fleet state checkpointed as a consistent
+cut across shards.  DESIGN.md §9.
+"""
+
+from .fleet import Fleet, FleetConfig, Shard
+from .recorder import LatencyRecorder, find_knee, percentile
+from .router import ConsistentHashRouter, shard_skew
+from .traffic import (PRIORITY_BUDGETS, assign_clients, burst_schedule,
+                      poisson_schedule, trace_schedule)
+
+__all__ = [
+    "ConsistentHashRouter", "Fleet", "FleetConfig", "LatencyRecorder",
+    "PRIORITY_BUDGETS", "Shard", "assign_clients", "burst_schedule",
+    "find_knee", "percentile", "poisson_schedule", "shard_skew",
+    "trace_schedule",
+]

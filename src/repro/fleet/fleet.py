@@ -1,0 +1,384 @@
+"""Sharded serving fleet: N shm runtimes × M workers under open-loop
+traffic (DESIGN.md §9).
+
+A ``Fleet`` owns ``n_shards`` independent ``CombiningRuntime``s on the
+shared-memory backend — each with its own (multi-segment) ShmNVM, its
+own fork()ed worker pool, and three recoverable structures:
+
+  * ``ingress``  — per-shard request queue (``kind="queue"``; pbcomb by
+    default — *Highly-Efficient Persistent FIFO Queues* is the backbone
+    reference): the structure every request passes through, where
+    combining amortizes enqueue/dequeue persistence under load;
+  * ``log``      — durable response log (the KV-cache serving engine's
+    completion path), one slot per client the router placed on this
+    shard;
+  * ``ckpt``     — the shard's checkpoint cell, target of the
+    fleet-wide consistent-cut PERSIST.
+
+Clients are placed onto shards once, by consistent hash of their
+identity (``router.ConsistentHashRouter``), and keep their placement
+for the fleet's lifetime; within a shard a client is pinned to one
+ACTIVE worker per wave, which preserves per-client FIFO enqueue order
+(what the durable-linearizability checker's per-producer checks key
+on).
+
+Traffic runs in WAVES: ``make_wave`` turns a seeded arrival process
+into per-(shard, worker) schedules of ``(t_rel, client, seq,
+deadline)`` requests; ``run_wave`` drives every shard's pool
+concurrently through the ``openloop`` command.  Wave boundaries are the
+fleet's quiescent points — where the consistent-cut checkpoint, elastic
+rescales (``runtime/elastic.ElasticCoordinator``), and crash recovery
+happen.
+
+Consistent-cut checkpoint: between waves no operation is executing on
+any shard, so persisting each shard's ``ckpt`` with the same fleet step
+(plus that shard's durable per-client progress) is a consistent cut of
+fleet state.  The step is COMMITTED only once every shard acked it;
+``committed_step()`` reads the durable minimum back, so a crash of any
+shard subset can only reveal a step every surviving and recovered
+shard already persisted.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from ..api import CombiningRuntime, PoolResult
+from ..runtime.elastic import ElasticCoordinator, RescalePlan
+from .router import ConsistentHashRouter, shard_skew
+from .traffic import (assign_clients, burst_schedule, poisson_schedule,
+                      trace_schedule)
+
+#: schedule entry: (t_rel seconds, shard-LOCAL client id, seq, deadline)
+ScheduleEntry = Tuple[float, int, int, float]
+
+
+@dataclass
+class FleetConfig:
+    n_shards: int = 2
+    workers_per_shard: int = 4
+    n_clients: int = 16
+    protocol: str = "pbcomb"
+    segments: int = 2               # per-shard NUMA-ish NVM striping
+    gen_len: int = 8                # toy generation length (serving op)
+    batch: int = 4                  # admission window per dequeue tick
+    seed: int = 0
+    nvm_words: Optional[int] = None
+    heartbeat_timeout: float = 30.0  # parent-driven beats are per-wave;
+                                     # membership changes are explicit
+                                     # (leave/join), not timing races
+
+
+class Shard:
+    """One runtime shard: shm NVM + ingress/log/ckpt + worker pool."""
+
+    def __init__(self, index: int, cfg: FleetConfig,
+                 clients: Sequence[int]) -> None:
+        self.index = index
+        self.clients = list(clients)          # global ids; order = slot
+        self.local = {c: i for i, c in enumerate(self.clients)}
+        self.rt = CombiningRuntime(
+            n_threads=cfg.workers_per_shard, backend="shm",
+            segments=cfg.segments, nvm_words=cfg.nvm_words)
+        self.ingress = self.rt.make("queue", cfg.protocol, name="ingress")
+        self.log = self.rt.make("log", cfg.protocol, name="log",
+                                n_clients=max(1, len(self.clients)))
+        self.ckpt = self.rt.make("ckpt", cfg.protocol, name="ckpt")
+        self.pool = None
+        self.active_tids = list(range(cfg.workers_per_shard))
+
+    def start(self, n_workers: int) -> None:
+        self.pool = self.rt.spawn_workers(n_workers)
+
+    # ------------- accounting ----------------------------------------- #
+    def reset_stats(self) -> None:
+        self.rt.nvm.reset_counters()
+        for obj in (self.ingress, self.log, self.ckpt):
+            obj.adapter.reset_degree_stats(obj.core)
+
+    def degree(self) -> Dict[str, Any]:
+        from ..core import merge_degree_stats
+        return merge_degree_stats(
+            [obj.adapter.degree_stats(obj.core)
+             for obj in (self.ingress, self.log, self.ckpt)])
+
+    def report(self, ops: int) -> Dict[str, Any]:
+        """Per-shard bench columns over ``ops`` completed pool ops."""
+        c = self.rt.nvm.counters
+        segs = self.rt.nvm.segment_counters()
+        d = self.degree() or {"rounds": 0, "ops_combined": 0,
+                              "degree_max": 0}
+        ops = max(1, ops)
+        return {
+            "shard": self.index,
+            "clients": len(self.clients),
+            "active_workers": len(self.active_tids),
+            "ops": ops,
+            "pwbs_per_op": c["pwb"] / ops,
+            "psyncs_per_op": c["psync"] / ops,
+            "seg_psyncs_per_op": [s["psync"] / ops for s in segs],
+            "ring_spills": c["ring_spills"],
+            "rounds": d["rounds"] or None,
+            "degree_mean": (d["ops_combined"] / d["rounds"]
+                            if d["rounds"] else None),
+            "degree_max": d["degree_max"] if d["rounds"] else None,
+        }
+
+
+class Fleet:
+    def __init__(self, config: Optional[FleetConfig] = None,
+                 **kw) -> None:
+        cfg = config or FleetConfig(**kw)
+        if config is not None and kw:
+            raise ValueError("pass FleetConfig or kwargs, not both")
+        self.cfg = cfg
+        self.router = ConsistentHashRouter(cfg.n_shards, seed=cfg.seed)
+        placement = self.router.assign(
+            f"client-{c}" for c in range(cfg.n_clients))
+        # client key "client-<c>" -> shard; keep the global->local map
+        by_shard = {s: [int(k.split("-")[1]) for k in keys]
+                    for s, keys in placement.items()}
+        self.shards = [Shard(i, cfg, by_shard[i])
+                       for i in range(cfg.n_shards)]
+        self._shard_of_client = {
+            c: s for s in range(cfg.n_shards) for c in by_shard[s]}
+        self.elastic = ElasticCoordinator(
+            cfg.n_shards * cfg.workers_per_shard,
+            heartbeat_timeout=cfg.heartbeat_timeout)
+        self._seq = {c: 0 for c in range(cfg.n_clients)}
+        self._wave = 0
+        self._step = 0                 # last checkpoint step ATTEMPTED
+        self._committed = 0            # last step acked by EVERY shard
+        self._started = False
+
+    # ------------------ lifecycle -------------------------------------- #
+    def start(self) -> "Fleet":
+        """Fork every shard's worker pool (structures are registered at
+        construction, so the children inherit them)."""
+        if not self._started:
+            for s in self.shards:
+                s.start(self.cfg.workers_per_shard)
+            self._started = True
+        return self
+
+    def close(self) -> None:
+        for s in self.shards:
+            s.rt.close()               # closes the pool too
+
+    def __enter__(self) -> "Fleet":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------ elastic membership ----------------------------- #
+    def host_id(self, shard: int, tid: int) -> int:
+        return shard * self.cfg.workers_per_shard + tid
+
+    def leave(self, shard: int, tid: int) -> RescalePlan:
+        """Worker ``tid`` of ``shard`` leaves the serving set; takes
+        effect from the next wave (a rescale plan is combined from the
+        coordinator's announcements, fleet-wide, like every other
+        decision in this repo)."""
+        self.elastic.leave(self.host_id(shard, tid))
+        return self.rescale()
+
+    def join(self, shard: int, tid: int) -> RescalePlan:
+        """Worker rejoins (elastic scale-up) from the next wave."""
+        self.elastic.join(self.host_id(shard, tid))
+        return self.rescale()
+
+    def rescale(self) -> RescalePlan:
+        plan = self.elastic.rescale(self._committed)
+        self._apply_plan(plan)
+        return plan
+
+    def _apply_plan(self, plan: RescalePlan) -> None:
+        w = self.cfg.workers_per_shard
+        for s in self.shards:
+            tids = [h - s.index * w for h in plan.hosts
+                    if s.index * w <= h < (s.index + 1) * w]
+            if not tids:
+                raise RuntimeError(
+                    f"rescale plan leaves shard {s.index} with no "
+                    "workers; keep at least one per shard")
+            s.active_tids = tids
+
+    # ------------------ traffic ---------------------------------------- #
+    def make_wave(self, n_requests: int, *,
+                  rate_rps: Optional[float] = None,
+                  trace: Optional[Sequence[float]] = None,
+                  burst: bool = False,
+                  seed: Optional[int] = None
+                  ) -> Dict[int, Dict[int, List[ScheduleEntry]]]:
+        """Seeded open-loop schedules for the next wave:
+        ``{shard: {tid: [(t_rel, local_client, seq, deadline), ...]}}``.
+
+        Exactly one of ``rate_rps`` (Poisson), ``trace`` (explicit
+        offsets) or ``burst`` selects the arrival process.  Per-client
+        seq numbering continues across waves (the durable log's
+        sequence contract), and each client is pinned to one ACTIVE
+        worker of its shard for the wave."""
+        if sum((rate_rps is not None, trace is not None, burst)) != 1:
+            raise ValueError("pick exactly one of rate_rps, trace, burst")
+        seed = (self.cfg.seed * 1000 + self._wave if seed is None
+                else seed)
+        if burst:
+            arrivals = burst_schedule(n_requests)
+        elif trace is not None:
+            arrivals = trace_schedule(trace)
+        else:
+            arrivals = poisson_schedule(rate_rps, n_requests, seed)
+        sched: Dict[int, Dict[int, List[ScheduleEntry]]] = {
+            s.index: {tid: [] for tid in s.active_tids}
+            for s in self.shards}
+        for t, client, deadline in assign_clients(
+                arrivals, self.cfg.n_clients, seed):
+            s = self.shards[self._shard_of_client[client]]
+            self._seq[client] += 1
+            local = s.local[client]
+            tid = s.active_tids[local % len(s.active_tids)]
+            sched[s.index][tid].append(
+                (t, local, self._seq[client], deadline))
+        return sched
+
+    def run_wave(self, schedules: Dict[int, Dict[int,
+                                                 List[ScheduleEntry]]],
+                 *, collect: bool = False) -> Dict[int, PoolResult]:
+        """Drive every shard's pool through one open-loop window
+        CONCURRENTLY (one dispatcher thread per shard); returns the
+        per-shard ``PoolResult``.  Crashed shards are reported, not
+        raised — recover them with ``recover_shards`` before the next
+        wave.  Worker heartbeats land on the elastic coordinator as
+        each report comes back."""
+        if not self._started:
+            raise RuntimeError("fleet not started")
+        results: Dict[int, PoolResult] = {}
+        errors: Dict[int, BaseException] = {}
+
+        def drive(s: Shard) -> None:
+            try:
+                results[s.index] = s.pool.run_open_loop(
+                    s.ingress, s.log, schedules.get(s.index, {}),
+                    gen_len=self.cfg.gen_len, batch=self.cfg.batch,
+                    collect=collect)
+            except BaseException as e:          # pool-level failure
+                errors[s.index] = e
+
+        threads = [threading.Thread(target=drive, args=(s,))
+                   for s in self.shards]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        if errors:
+            raise RuntimeError(
+                f"shard dispatch failed: { {i: str(e) for i, e in errors.items()} }")
+        self._wave += 1
+        for i, res in results.items():
+            for rep in res.reports:
+                self.elastic.heartbeat(self.host_id(i, rep.tid),
+                                       self._wave)
+        return results
+
+    def recover_shards(self, results: Dict[int, PoolResult]
+                       ) -> Dict[int, Dict[Tuple[str, int], Any]]:
+        """Recover every shard that reported a crash in ``results``:
+        replay its workers' in-flight records and power the shard back
+        on.  Returns the replayed responses per shard (feed to the
+        checker's ``apply_replay``)."""
+        replies: Dict[int, Dict[Tuple[str, int], Any]] = {}
+        for i, res in results.items():
+            if res.crashed:
+                replies[i] = self.shards[i].rt.recover(
+                    inflight=res.inflight)
+        return replies
+
+    def arm_crash(self, shard: int, after_persist_ops: int,
+                  rng=None) -> None:
+        """Arm a crash countdown on ONE shard's NVM — the next wave
+        halts that shard mid-traffic while the rest keep serving."""
+        self.shards[shard].rt.nvm.arm_crash(after_persist_ops, rng)
+
+    def crash_shard(self, shard: int, rng=None) -> None:
+        """Full power-off of one shard (adversarial write-back drain)."""
+        self.shards[shard].rt.crash(rng)
+
+    def recover_shard(self, shard: int, inflight=None
+                      ) -> Dict[Tuple[str, int], Any]:
+        return self.shards[shard].rt.recover(inflight=inflight)
+
+    # ------------------ consistent-cut checkpoint ---------------------- #
+    def checkpoint(self) -> int:
+        """Fleet-wide consistent cut: one PERSIST per shard ``ckpt`` at
+        the next step, between waves (quiescent, so the cut is
+        consistent by construction).  The step is committed — and
+        returned — only once EVERY shard acked it; a crash racing the
+        persist is recovered (the in-flight PERSIST replays) before the
+        commit decision."""
+        step = self._step + 1
+        for s in self.shards:
+            h = s.rt.attach(0)        # workers are idle between waves
+            payload = {
+                "step": step,
+                "shard": s.index,
+                "wave": self._wave,
+                # durable per-client progress: the consistent cut's
+                # content (recomputable from the shard's own log)
+                "served": [seq for seq, _resp in s.log.snapshot()],
+            }
+            try:
+                h.invoke(s.ckpt, "persist", (step, payload))
+            except Exception as e:
+                from ..core import SimulatedCrash
+                if not isinstance(e, SimulatedCrash):
+                    raise
+                # crash landed inside the persist: recovery replays it
+                # (idempotent — newest step wins), then verify
+                s.rt.recover()
+                snap = s.ckpt.snapshot()
+                if snap["step"] < step:
+                    h.invoke(s.ckpt, "persist", (step, payload))
+        self._step = step
+        self._committed = step
+        return step
+
+    def committed_step(self) -> int:
+        """The durable fleet checkpoint step: the MINIMUM over shards of
+        each ckpt cell's durable step — the newest cut every shard is
+        guaranteed to hold, whatever subset just crashed."""
+        return min(s.ckpt.snapshot()["step"] for s in self.shards)
+
+    # ------------------ accounting ------------------------------------- #
+    def reset_stats(self) -> None:
+        for s in self.shards:
+            s.reset_stats()
+
+    def wave_report(self, results: Dict[int, PoolResult]
+                    ) -> Dict[str, Any]:
+        """Fleet-level bench columns for one wave: per-shard reports,
+        request skew, aggregate psync/op."""
+        per_shard = [self.shards[i].report(res.ops_done)
+                     for i, res in sorted(results.items())]
+        reqs = [sum(len(r.latencies or ()) for r in res.reports)
+                for _i, res in sorted(results.items())]
+        ops = sum(res.ops_done for res in results.values())
+        psyncs = sum(self.shards[i].rt.nvm.counters["psync"]
+                     for i in results)
+        pwbs = sum(self.shards[i].rt.nvm.counters["pwb"]
+                   for i in results)
+        return {
+            "per_shard": per_shard,
+            "requests_per_shard": reqs,
+            "shard_skew": shard_skew(reqs),
+            "ops": ops,
+            "psyncs_per_op": psyncs / max(1, ops),
+            "pwbs_per_op": pwbs / max(1, ops),
+            "degree_mean": (
+                sum(r["degree_mean"] * r["rounds"] for r in per_shard
+                    if r["rounds"])
+                / max(1, sum(r["rounds"] for r in per_shard
+                             if r["rounds"]))),
+        }

@@ -1,0 +1,97 @@
+"""Latency/throughput recorder + saturation-knee discovery.
+
+Latencies arriving here were measured from INTENDED arrival times
+(repro.api.mp ``openloop`` command), so the percentiles are
+coordinated-omission-free by construction: the recorder never has to
+correct for deferred sends because nothing was deferred — lateness is
+already inside every sample.
+
+Knee discovery ramps the offered arrival rate geometrically and stops
+at the first window whose p99 blows through the latency budget: below
+capacity, open-loop p99 tracks service time; past capacity the backlog
+grows for the whole window and p99 diverges with it.  The knee estimate
+is the geometric mean of the last compliant and first saturated rates
+(the true capacity lies between them).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence
+
+
+def percentile(sorted_values: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile (q in [0, 1]) over an ASCENDING list."""
+    if not sorted_values:
+        return 0.0
+    if not 0.0 <= q <= 1.0:
+        raise ValueError("q must be in [0, 1]")
+    rank = max(1, math.ceil(q * len(sorted_values)))
+    return sorted_values[min(rank, len(sorted_values)) - 1]
+
+
+class LatencyRecorder:
+    """Accumulates per-request latencies (seconds) across workers and
+    shards; summarizes in microseconds."""
+
+    def __init__(self) -> None:
+        self._lat: List[float] = []
+
+    def add(self, latencies: Iterable[float]) -> None:
+        self._lat.extend(latencies)
+
+    def __len__(self) -> int:
+        return len(self._lat)
+
+    def summary(self) -> Dict[str, Any]:
+        lat = sorted(self._lat)
+        if not lat:
+            return {"n": 0, "p50_us": None, "p99_us": None,
+                    "p999_us": None, "max_us": None, "mean_us": None}
+        return {
+            "n": len(lat),
+            "p50_us": percentile(lat, 0.50) * 1e6,
+            "p99_us": percentile(lat, 0.99) * 1e6,
+            "p999_us": percentile(lat, 0.999) * 1e6,
+            "max_us": lat[-1] * 1e6,
+            "mean_us": sum(lat) / len(lat) * 1e6,
+        }
+
+
+def find_knee(run_at: Callable[[float], Dict[str, Any]],
+              rates: Sequence[float],
+              p99_budget_us: float) -> Dict[str, Any]:
+    """Ramp ``rates`` (ascending, requests/s) through ``run_at`` until
+    p99 exceeds ``p99_budget_us``; returns the ramp steps plus the knee
+    estimate.
+
+    ``run_at(rate)`` runs one open-loop window and must return a dict
+    containing ``p99_us``.  The ramp stops at the first saturated
+    window (no point measuring deeper into collapse).  If even the
+    first rate saturates, the knee is reported AT that rate with
+    ``saturated_at_floor`` set — still a non-empty estimate, just an
+    upper bound."""
+    steps: List[Dict[str, Any]] = []
+    last_ok: Optional[float] = None
+    first_sat: Optional[float] = None
+    for rate in rates:
+        s = dict(run_at(rate))
+        s["rate_rps"] = rate
+        s["saturated"] = s["p99_us"] is None or s["p99_us"] > p99_budget_us
+        steps.append(s)
+        if s["saturated"]:
+            first_sat = rate
+            break
+        last_ok = rate
+    if first_sat is None:
+        knee = None                     # ramp never saturated
+    elif last_ok is None:
+        knee = first_sat                # saturated at the floor rate
+    else:
+        knee = math.sqrt(last_ok * first_sat)
+    return {"p99_budget_us": p99_budget_us,
+            "last_ok_rate_rps": last_ok,
+            "first_saturated_rate_rps": first_sat,
+            "saturated_at_floor": first_sat is not None and last_ok is None,
+            "knee_rate_rps": knee,
+            "steps": steps}

@@ -1,0 +1,72 @@
+"""Open-loop arrival processes: Poisson, trace-driven, burst.
+
+Open-loop means the generator's intent does not depend on the system's
+completions: every request has an INTENDED arrival time fixed up front
+by the arrival process, and latency is always measured from that
+intended time (wrk2-style).  When a worker falls behind, the backlog
+shows up as measured latency instead of silently stretching the
+arrival gaps — the coordinated-omission failure mode of closed-loop
+``us/op`` benches, and the reason the fleet harness exists.
+
+All processes are seeded and deterministic: a bench run's schedule is
+a pure function of (seed, rate, n), so ``bench.fleet.v1`` tables are
+reproducible modulo wall-clock measurement noise.
+"""
+
+from __future__ import annotations
+
+import random
+from typing import Iterable, List, Sequence, Tuple
+
+#: latency budgets (seconds) mixed into request priorities: a request's
+#: priority is its absolute DEADLINE (intended arrival + budget), so
+#: the admission heap serves interactive-class requests before
+#: batch-class ones dequeued in the same window
+PRIORITY_BUDGETS = (0.002, 0.010, 0.050)
+
+
+def poisson_schedule(rate_rps: float, n_requests: int, seed: int,
+                     start: float = 0.0) -> List[float]:
+    """``n_requests`` arrival offsets (seconds) of a Poisson process at
+    ``rate_rps``: i.i.d. exponential gaps, seeded."""
+    if rate_rps <= 0:
+        raise ValueError("rate_rps must be positive")
+    rng = random.Random(seed)
+    t, out = start, []
+    for _ in range(n_requests):
+        t += rng.expovariate(rate_rps)
+        out.append(t)
+    return out
+
+
+def burst_schedule(n_requests: int, start: float = 0.0) -> List[float]:
+    """All arrivals intended at the same instant — the saturation
+    (infinite-rate) window used for the degree/psync-floor gate rows."""
+    return [start] * n_requests
+
+
+def trace_schedule(arrivals: Iterable[float]) -> List[float]:
+    """Trace-driven arrivals: validate and normalize an explicit offset
+    list (sorted, non-negative) — replayed production traces plug in
+    here."""
+    out = sorted(float(t) for t in arrivals)
+    if out and out[0] < 0:
+        raise ValueError("trace arrival offsets must be non-negative")
+    return out
+
+
+def assign_clients(arrivals: Sequence[float], n_clients: int,
+                   seed: int) -> List[Tuple[float, int, float]]:
+    """Attach a (seeded) client identity and deadline priority to each
+    arrival: returns ``[(t_rel, client, priority), ...]`` in arrival
+    order.  Clients are drawn uniformly — millions-of-users traffic is
+    many independent streams multiplexed onto one arrival process."""
+    if n_clients < 1:
+        raise ValueError("need at least one client")
+    rng = random.Random(seed ^ 0x9E3779B9)
+    out = []
+    for t in arrivals:
+        client = rng.randrange(n_clients)
+        deadline = t + rng.choice(PRIORITY_BUDGETS)
+        out.append((t, client, deadline))
+    return out

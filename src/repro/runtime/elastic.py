@@ -76,6 +76,19 @@ class ElasticCoordinator:
             self.status[host] = HostStatus(host,
                                            last_seen=time.monotonic())
 
+    def leave(self, host: int) -> None:
+        """Voluntary departure (elastic scale-down): the host is
+        excluded from the next rescale immediately instead of waiting
+        out the heartbeat timeout.  ``join`` brings it back."""
+        with self._lock:
+            st = self.status.get(host)
+            if st is not None:
+                st.alive = False
+
+    def alive_hosts(self) -> List[int]:
+        with self._lock:
+            return sorted(h for h, s in self.status.items() if s.alive)
+
     # ------------- combiner path --------------------------------------- #
     def stragglers(self) -> List[int]:
         now = time.monotonic()

@@ -43,7 +43,9 @@ program order, which the journal preserves.
 Serving/checkpoint rows get their own checks (``check_log`` /
 ``check_ckpt``): last-record equality with recomputable response
 content (a torn blob would fail the content equation) and checkpoint
-step/payload atomicity + monotone durability.
+step/payload atomicity + monotone durability.  Fleet histories — where
+any worker serves any client — use ``check_fleet_log`` instead of
+``check_log``.
 """
 
 from __future__ import annotations
@@ -232,6 +234,69 @@ def check_log(checker_events: Dict[int, List[Tuple[str, Any, Any]]],
     if failures:
         raise AssertionError(
             "serving log history violates durable linearizability:\n"
+            + "\n".join(f"  - {f}" for f in failures))
+
+
+def check_fleet_log(checker_events: Dict[int, List[Tuple[str, Any, Any]]],
+                    snapshot: List[Tuple[int, Any]],
+                    gen_len: int) -> None:
+    """Durable response log check for FLEET histories.
+
+    Weaker than ``check_log`` by design: in the fleet any worker may
+    serve any client (requests are dequeued from the shard ingress), so
+    neither client==tid nor per-journal seq monotonicity holds, and the
+    log's last-writer-wins RECORD means the durable seq is not
+    necessarily the client's maximum acked seq when two workers raced.
+    What MUST hold per client:
+
+      * every acked/replayed record's response equals the deterministic
+        toy generation for its (client, seq) — content equation over
+        the whole history;
+      * the durable (seq, response) pair is either the initial (0,
+        None) or some acked-or-replayed record — a pair nobody wrote is
+        a phantom (and a torn publication fails the content equation,
+        since response is written before seq on one cache line).
+
+    ``__batch__`` journal entries (replayed ``invoke_many`` RECORD_MANY
+    batches — the openloop completion path) are expanded into their
+    individual records."""
+    failures = []
+    acked: Dict[int, set] = defaultdict(set)
+
+    def one(arg, ret):
+        client, seq = arg[0], arg[1]
+        want = serving_response(client, seq, gen_len)
+        if ret != want:
+            failures.append(
+                f"client {client} seq {seq}: acked response content "
+                f"wrong (torn payload?): {ret!r}")
+        acked[client].add(seq)
+
+    for _tid, evs in checker_events.items():
+        for op, arg, ret in evs:
+            if op == "record":
+                one(arg, ret)
+            elif op == "__batch__":
+                for (bop, barg, _seq), bret in zip(arg, ret):
+                    if bop == "record":
+                        one(barg, bret)
+    for client, (got_seq, got_resp) in enumerate(snapshot):
+        if got_seq == 0:
+            if got_resp is not None:
+                failures.append(
+                    f"client {client}: durable response without a seq")
+            continue
+        if got_seq not in acked[client]:
+            failures.append(
+                f"client {client}: durable seq {got_seq} was never "
+                f"acked or replayed (phantom record)")
+        elif got_resp != serving_response(client, got_seq, gen_len):
+            failures.append(
+                f"client {client}: durable response content wrong for "
+                f"seq {got_seq} (torn payload?): {got_resp!r}")
+    if failures:
+        raise AssertionError(
+            "fleet log history violates durable linearizability:\n"
             + "\n".join(f"  - {f}" for f in failures))
 
 

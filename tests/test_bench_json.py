@@ -177,6 +177,7 @@ def test_mp_check_rows_gate():
     from benchmarks.mp_bench import check_rows
     healthy = [_mp_row("queue/pbcomb"), _mp_row("queue/lock-direct",
                                                 degree=None, psync=1.0),
+               _mp_row("stack/pbcomb"), _mp_row("heap/pbcomb"),
                _mp_row("serving/pbcomb"),
                _mp_row("serving/lock-direct", degree=None, psync=1.0),
                _mp_row("checkpoint/pbcomb"), _mp_row("mixed/pbcomb")]
@@ -186,7 +187,7 @@ def test_mp_check_rows_gate():
     assert check_rows(healthy, workers=4) == []
     # low degree on the serving row
     bad = [dict(r) for r in healthy]
-    bad[2] = dict(bad[2], degree_mean=1.2)
+    bad[4] = dict(bad[4], degree_mean=1.2)
     assert any("serving/pbcomb" in f and "degree_mean" in f
                for f in check_rows(bad, workers=4))
     # psync/op at the measured floor
@@ -197,7 +198,7 @@ def test_mp_check_rows_gate():
     # checkpoint row gated against the definitional floor when no
     # per-op-persist row is present
     bad = [dict(r) for r in healthy]
-    bad[4] = dict(bad[4], psyncs_per_op=1.1)
+    bad[6] = dict(bad[6], psyncs_per_op=1.1)
     assert any("checkpoint/pbcomb" in f
                for f in check_rows(bad, workers=4))
     # a missing gated row is itself a failure

@@ -53,6 +53,53 @@ def test_join_after_rescale():
     assert plan.epoch == 2
 
 
+def test_leave_and_alive_hosts():
+    co = ElasticCoordinator(3, heartbeat_timeout=10.0)
+    assert co.alive_hosts() == [0, 1, 2]
+    co.leave(1)                    # voluntary scale-down: immediate
+    assert co.alive_hosts() == [0, 2]
+    plan = co.rescale(committed_step=7)
+    assert plan.hosts == (0, 2)
+    assert plan.restore_step == 7
+    co.join(1)
+    assert co.alive_hosts() == [0, 1, 2]
+    plan = co.rescale(committed_step=7)
+    assert plan.hosts == (0, 1, 2)
+
+
+def test_elastic_leave_join_shm_fleet():
+    """join/leave against REAL fork()ed workers on the shm backend: a
+    departed worker serves nothing while the survivors carry the whole
+    wave; rejoin restores it (the fleet applies coordinator plans as
+    per-shard active worker sets)."""
+    from repro.fleet import Fleet, FleetConfig
+
+    cfg = FleetConfig(n_shards=2, workers_per_shard=2, n_clients=8,
+                      seed=11)
+    with Fleet(cfg) as f:
+        res = f.run_wave(f.make_wave(16, rate_rps=4000.0))
+        assert sum(len(r.latencies) for r in res.values()) == 16
+
+        plan = f.leave(1, 1)           # shard 1 loses worker tid 1
+        assert f.host_id(1, 1) not in plan.hosts
+        assert f.shards[1].active_tids == [0]
+        assert f.shards[0].active_tids == [0, 1]
+
+        res = f.run_wave(f.make_wave(16, rate_rps=4000.0))
+        assert sum(len(r.latencies) for r in res.values()) == 16
+        # the departed worker ran an empty schedule: served nothing
+        by_tid = {r.tid: r for r in res[1].reports}
+        assert not by_tid[1].latencies
+        assert by_tid[1].ops_done == 0
+
+        plan2 = f.join(1, 1)           # elastic scale-up
+        assert plan2.epoch == plan.epoch + 1
+        assert f.host_id(1, 1) in plan2.hosts
+        assert f.shards[1].active_tids == [0, 1]
+        res = f.run_wave(f.make_wave(16, rate_rps=4000.0))
+        assert sum(len(r.latencies) for r in res.values()) == 16
+
+
 def test_coordinator_takeover_lease():
     co = ElasticCoordinator(3, heartbeat_timeout=10.0, lease_s=0.05)
     co.heartbeat(0, 1)             # coordinator alive

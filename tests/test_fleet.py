@@ -1,0 +1,301 @@
+"""Sharded serving fleet (repro.fleet): router, traffic, recorder and
+the Fleet orchestration — including the acceptance scenario: crash of
+one shard mid-traffic, consistent-cut recovery, per-shard durable
+linearizability (DESIGN.md §9)."""
+
+import random
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from repro.fleet import (ConsistentHashRouter, Fleet, FleetConfig,
+                         LatencyRecorder, burst_schedule, find_knee,
+                         percentile, poisson_schedule, shard_skew,
+                         trace_schedule)
+
+from checker import HistoryChecker, check_fleet_log
+
+
+# ------------------------------------------------------------------ #
+# router                                                             #
+# ------------------------------------------------------------------ #
+def test_router_deterministic_and_total():
+    r1 = ConsistentHashRouter(4, seed=3)
+    r2 = ConsistentHashRouter(4, seed=3)
+    keys = [f"client-{i}" for i in range(200)]
+    assert [r1.shard_for(k) for k in keys] == \
+        [r2.shard_for(k) for k in keys]
+    groups = r1.assign(keys)
+    assert sorted(groups) == [0, 1, 2, 3]
+    assert sum(len(v) for v in groups.values()) == 200
+
+
+def test_router_seed_changes_mapping():
+    keys = [f"client-{i}" for i in range(100)]
+    a = [ConsistentHashRouter(4, seed=0).shard_for(k) for k in keys]
+    b = [ConsistentHashRouter(4, seed=1).shard_for(k) for k in keys]
+    assert a != b
+
+
+def test_router_stability_under_shard_removal():
+    """Removing the last shard only moves the keys it owned — every
+    other key keeps its placement (the consistent-hash property the
+    per-shard logs rely on)."""
+    keys = [f"client-{i}" for i in range(300)]
+    big = ConsistentHashRouter(4, seed=0)
+    small = ConsistentHashRouter(3, seed=0)
+    moved = stayed = 0
+    for k in keys:
+        was = big.shard_for(k)
+        now = small.shard_for(k)
+        if was == 3:
+            moved += 1
+        else:
+            assert now == was, f"{k} moved {was}->{now} gratuitously"
+            stayed += 1
+    assert moved and stayed
+
+
+def test_router_balance():
+    r = ConsistentHashRouter(4, replicas=64, seed=0)
+    counts = [len(v) for v in
+              r.assign(f"k{i}" for i in range(4000)).values()]
+    assert shard_skew(counts) < 0.5     # replicas smooth the arcs
+
+
+def test_shard_skew():
+    assert shard_skew([10, 10]) == 0.0
+    assert shard_skew([20, 10, 0]) == pytest.approx(1.0)
+    assert shard_skew([]) == 0.0
+    assert shard_skew([0, 0]) == 0.0
+
+
+# ------------------------------------------------------------------ #
+# traffic                                                            #
+# ------------------------------------------------------------------ #
+def test_poisson_schedule_seeded_and_monotone():
+    a = poisson_schedule(1000.0, 50, seed=7)
+    b = poisson_schedule(1000.0, 50, seed=7)
+    assert a == b
+    assert a == sorted(a)
+    assert len(a) == 50
+    assert poisson_schedule(1000.0, 50, seed=8) != a
+    with pytest.raises(ValueError):
+        poisson_schedule(0.0, 10, seed=0)
+
+
+def test_burst_and_trace_schedules():
+    assert burst_schedule(4) == [0.0] * 4
+    assert trace_schedule([0.3, 0.1, 0.2]) == [0.1, 0.2, 0.3]
+    with pytest.raises(ValueError):
+        trace_schedule([-0.1, 0.2])
+
+
+# ------------------------------------------------------------------ #
+# recorder                                                           #
+# ------------------------------------------------------------------ #
+def test_percentile_nearest_rank():
+    vals = sorted([10.0, 20.0, 30.0, 40.0])
+    assert percentile(vals, 0.50) == 20.0
+    assert percentile(vals, 0.99) == 40.0
+    assert percentile(vals, 0.0) == 10.0
+    assert percentile([], 0.5) == 0.0
+
+
+def test_latency_recorder_summary():
+    rec = LatencyRecorder()
+    rec.add([0.001] * 99)
+    rec.add([0.1])
+    s = rec.summary()
+    assert s["n"] == 100
+    assert s["p50_us"] == pytest.approx(1000.0)
+    assert s["p99_us"] == pytest.approx(1000.0)
+    assert s["p999_us"] == pytest.approx(100_000.0)
+    assert s["max_us"] == pytest.approx(100_000.0)
+    assert LatencyRecorder().summary()["p99_us"] is None
+
+
+def test_find_knee_brackets_capacity():
+    p99 = {100.0: 1000.0, 200.0: 2000.0, 400.0: 50_000.0}
+    k = find_knee(lambda r: {"p99_us": p99[r]}, [100.0, 200.0, 400.0],
+                  p99_budget_us=10_000.0)
+    assert k["last_ok_rate_rps"] == 200.0
+    assert k["first_saturated_rate_rps"] == 400.0
+    assert k["knee_rate_rps"] == pytest.approx((200.0 * 400.0) ** 0.5)
+    assert not k["saturated_at_floor"]
+    assert len(k["steps"]) == 3        # ramp stops at first saturation
+
+
+def test_find_knee_edge_cases():
+    k = find_knee(lambda r: {"p99_us": 1.0}, [100.0, 200.0], 10.0)
+    assert k["knee_rate_rps"] is None  # never saturated
+    k = find_knee(lambda r: {"p99_us": 99.0}, [100.0, 200.0], 10.0)
+    assert k["saturated_at_floor"]
+    assert k["knee_rate_rps"] == 100.0
+    assert len(k["steps"]) == 1
+
+
+# ------------------------------------------------------------------ #
+# fleet end-to-end (shm worker pools)                                #
+# ------------------------------------------------------------------ #
+def _shard_checkers(fleet):
+    return {s.index: HistoryChecker("queue") for s in fleet.shards}
+
+
+def _feed(checkers, results):
+    for i, res in results.items():
+        checkers[i].extend_pool(res)
+
+
+def _check_all(fleet, checkers):
+    """Every shard's ingress FIFO/exact-once + fleet log invariants."""
+    for s in fleet.shards:
+        checkers[s.index].check(s.ingress.snapshot())
+        check_fleet_log(checkers[s.index].events, s.log.snapshot(),
+                        fleet.cfg.gen_len)
+
+
+def test_fleet_open_loop_smoke():
+    cfg = FleetConfig(n_shards=2, workers_per_shard=2, n_clients=8,
+                      seed=5)
+    with Fleet(cfg) as f:
+        checkers = _shard_checkers(f)
+        res = f.run_wave(f.make_wave(40, rate_rps=4000.0),
+                         collect=True)
+        assert sum(len(r.latencies) for r in res.values()) == 40
+        assert all(lat >= 0 for r in res.values()
+                   for lat in r.latencies)
+        _feed(checkers, res)
+        # trace-driven wave rides the same machinery
+        res = f.run_wave(
+            f.make_wave(10, trace=[i * 0.001 for i in range(10)]),
+            collect=True)
+        assert sum(len(r.latencies) for r in res.values()) == 10
+        _feed(checkers, res)
+        _check_all(f, checkers)
+        step = f.checkpoint()
+        assert f.committed_step() == step
+
+
+def test_fleet_wave_determinism():
+    """Same seed, same config -> identical schedules (routing, arrival
+    times, client identities, seqs, deadlines)."""
+    def schedules():
+        cfg = FleetConfig(n_shards=2, workers_per_shard=2,
+                          n_clients=8, seed=9)
+        f = Fleet(cfg)          # no start(): scheduling is pure
+        try:
+            return f.make_wave(50, rate_rps=2000.0)
+        finally:
+            f.close()
+    assert schedules() == schedules()
+
+
+def test_fleet_shard_crash_mid_traffic_consistent_cut():
+    """The acceptance scenario: one shard crashes mid-traffic, the rest
+    keep serving; recovery replays the crashed shard's in-flight ops,
+    the next consistent cut commits fleet-wide, and every shard's
+    history stays durably linearizable."""
+    cfg = FleetConfig(n_shards=2, workers_per_shard=2, n_clients=8,
+                      seed=13)
+    with Fleet(cfg) as f:
+        checkers = _shard_checkers(f)
+        _feed(checkers, f.run_wave(f.make_wave(30, rate_rps=4000.0),
+                                   collect=True))
+        step1 = f.checkpoint()
+
+        f.arm_crash(0, 40, random.Random(2))
+        res = f.run_wave(f.make_wave(30, rate_rps=4000.0),
+                         collect=True)
+        assert res[0].crashed            # shard 0 went down mid-wave
+        assert not res[1].crashed        # shard 1 kept serving
+        _feed(checkers, res)
+        replies = f.recover_shards(res)
+        assert 0 in replies
+        checkers[0].apply_replay(res[0].inflight, replies[0])
+
+        # the committed cut survives the crash of a shard subset
+        assert f.committed_step() >= step1
+
+        # traffic continues after recovery; the next cut commits
+        _feed(checkers, f.run_wave(f.make_wave(30, rate_rps=4000.0),
+                                   collect=True))
+        step2 = f.checkpoint()
+        assert step2 > step1
+        assert f.committed_step() == step2
+        _check_all(f, checkers)
+
+        # the durable cut payload names its shard and step
+        for s in f.shards:
+            snap = s.ckpt.snapshot()
+            assert snap["step"] == step2
+            assert snap["payload"]["shard"] == s.index
+            assert snap["payload"]["step"] == step2
+
+
+def test_fleet_requires_worker_per_shard():
+    cfg = FleetConfig(n_shards=2, workers_per_shard=1, n_clients=4)
+    f = Fleet(cfg)
+    try:
+        with pytest.raises(RuntimeError):
+            f.leave(1, 0)          # would empty shard 1
+    finally:
+        f.close()
+
+
+def test_fleet_config_validation():
+    with pytest.raises(ValueError):
+        Fleet(FleetConfig(n_shards=2), n_shards=3)   # both forms
+    f = Fleet(FleetConfig(n_shards=1, workers_per_shard=1,
+                          n_clients=2))
+    try:
+        with pytest.raises(ValueError):
+            f.make_wave(4)                           # no arrival process
+        with pytest.raises(ValueError):
+            f.make_wave(4, rate_rps=100.0, burst=True)
+        with pytest.raises(RuntimeError):
+            f.run_wave({})                           # not started
+    finally:
+        f.close()
+
+
+# ------------------------------------------------------------------ #
+# fleet_bench gates                                                  #
+# ------------------------------------------------------------------ #
+def _bench_doc(comb_degrees=(2.5, 2.4), comb_psync=0.4,
+               floor_psync=1.0, knee=500.0, completed=None):
+    def row(name, psync, degrees):
+        return {"name": name, "rate_rps": None, "offered": 100,
+                "completed": 100 if completed is None else completed,
+                "shard_skew": 0.1, "p50_us": 1.0, "p99_us": 2.0,
+                "p999_us": 3.0, "psyncs_per_op": psync,
+                "pwbs_per_op": 1.0, "degree_mean": 2.0,
+                "per_shard": [
+                    {"shard": i, "degree_mean": d, "degree_max": 4,
+                     "active_workers": 4}
+                    for i, d in enumerate(degrees)]}
+    return {"rows": [row("fleet/pbcomb/burst", comb_psync,
+                         comb_degrees),
+                     row("fleet/lock-direct/burst", floor_psync,
+                         (None, None))],
+            "knee": {"knee_rate_rps": knee},
+            "checkpoint": {"step": 3, "committed": 3}}
+
+
+def test_fleet_bench_check_passes_and_fails():
+    from benchmarks.fleet_bench import check_results
+    assert check_results(_bench_doc()) == []
+    assert any("degree" in m for m in
+               check_results(_bench_doc(comb_degrees=(2.5, 1.5))))
+    assert any("floor" in m for m in
+               check_results(_bench_doc(comb_psync=1.0)))
+    assert any("knee" in m for m in
+               check_results(_bench_doc(knee=None)))
+    assert any("lost" in m for m in
+               check_results(_bench_doc(completed=90)))
+    doc = _bench_doc()
+    doc["checkpoint"]["committed"] = 2
+    assert any("cut" in m for m in check_results(doc))

@@ -12,7 +12,7 @@ import pytest
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 from benchmarks import perf_gate
-from benchmarks.run import _atomic_write_json
+from benchmarks.common import atomic_write_json
 
 
 def _row(name, m_us=1.0, m_pwb=1.0, m_psync=0.25, profile="optane"):
@@ -129,7 +129,7 @@ def test_main_exit_codes_and_summary(tmp_path):
 # ------------------------------------------------------------------ #
 def test_atomic_write_json_round_trip(tmp_path):
     p = tmp_path / "BENCH_x.json"
-    _atomic_write_json(str(p), {"ok": 1})
+    atomic_write_json(str(p), {"ok": 1})
     assert json.loads(p.read_text()) == {"ok": 1}
 
 
@@ -137,6 +137,6 @@ def test_atomic_write_preserves_existing_on_failure(tmp_path):
     p = tmp_path / "BENCH_x.json"
     p.write_text('{"good": true}')
     with pytest.raises(TypeError):
-        _atomic_write_json(str(p), {"bad": object()})   # unserializable
+        atomic_write_json(str(p), {"bad": object()})   # unserializable
     assert json.loads(p.read_text()) == {"good": True}  # intact
     assert list(tmp_path.iterdir()) == [p]              # no temp litter
