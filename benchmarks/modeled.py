@@ -33,6 +33,13 @@ from repro.structures import LockDirectObject, LockUndoLogObject
 #: Profile used when callers pass none; ``run.py --profile`` overrides
 #: it (read at call time, so mutating the module global is effective).
 DEFAULT_PROFILE = "optane"
+#: ``run.py --audit`` flips this: every modeled (and wall) NVM is then
+#: built with ``audit=True`` so the rows carry the minimality metric
+#: (``redundant_pwbs_per_op``).  Off by default — the audited NVM pins
+#: ``force_discrete``, whose counters and modeled costs are
+#: property-tested identical, but the gated trajectory is produced with
+#: the audit fully absent.
+AUDIT = False
 #: Fixed modeled sizes — independent of --quick so a baseline captured
 #: in CI gates full local runs identically.
 N_THREADS = 4
@@ -56,7 +63,7 @@ _SCHEDULES: Dict[str, List[Tuple[str, Any]]] = {
 def _summarize(nvm: NVM, t0_ns: float, total_ops: int,
                profile: str) -> Dict[str, Any]:
     c = nvm.counters
-    return {
+    out = {
         "modeled_us_per_op": (nvm.clock.max_time_ns() - t0_ns)
         / 1e3 / total_ops,
         "modeled_pwb_per_op": c["pwb"] / total_ops,
@@ -64,6 +71,13 @@ def _summarize(nvm: NVM, t0_ns: float, total_ops: int,
         "modeled_psync_per_op": c["psync"] / total_ops,
         "profile": profile,
     }
+    aud = nvm.audit
+    if aud is not None:
+        # reset_counters() also zeroed the audit's metric counters, so
+        # this covers exactly the measured window — deterministic like
+        # every other modeled column
+        out["redundant_pwb_per_op"] = aud.redundant_pwbs / total_ops
+    return out
 
 
 def modeled_cell(kind: str, protocol: str, *,
@@ -82,7 +96,9 @@ def modeled_cell(kind: str, protocol: str, *,
     can never inflate the measured window.
     """
     profile = profile or DEFAULT_PROFILE
-    nvm = NVM(NVM_WORDS, profile=profile, **(nvm_kw or {}))
+    nvm_kw = dict(nvm_kw or {})
+    nvm_kw.setdefault("audit", AUDIT)
+    nvm = NVM(NVM_WORDS, profile=profile, **nvm_kw)
     rt = CombiningRuntime(nvm=nvm, n_threads=n_threads)
     obj = rt.make(kind, protocol, **(mk_kw or {}))
     handles = [rt.attach(p) for p in range(n_threads)]
@@ -137,7 +153,9 @@ def modeled_fig1(name: str, *, n_threads: int = N_THREADS,
                  nvm_kw: Optional[dict] = None) -> Dict[str, Any]:
     """Modeled metrics for one Figure 1 AtomicFloat implementation."""
     profile = profile or DEFAULT_PROFILE
-    nvm = NVM(NVM_WORDS, profile=profile, **(nvm_kw or {}))
+    nvm_kw = dict(nvm_kw or {})
+    nvm_kw.setdefault("audit", AUDIT)
+    nvm = NVM(NVM_WORDS, profile=profile, **nvm_kw)
     inst = FIG1_IMPLS[name](nvm, n_threads)
     nvm.reset_counters()
     clk = nvm.clock

@@ -55,7 +55,13 @@ JSON schema (``bench.mp.v2``, superset of v1)::
                "modeled_us_per_op": float|null,
                "modeled_pwbs_per_op": float|null,
                "modeled_psyncs_per_op": float|null,
-               "profile": str|null}, ...]}
+               "profile": str|null,
+               "redundant_pwbs_per_op": float|null}, ...]}
+
+``redundant_pwbs_per_op`` comes from the persist audit attached to each
+matrix cell's modeled replay (deterministic; serving/checkpoint rows
+carry null) — ``--check`` additionally asserts the pbcomb/pwfcomb rows
+report 0, the paper's minimality claim machine-checked.
 """
 
 from __future__ import annotations
@@ -281,6 +287,15 @@ def check_rows(rows, workers: int = 4) -> list:
                     f"{n}@{workers}w psync/op {r['psyncs_per_op']:.3f} "
                     f"not strictly below the per-op-persist floor "
                     f"{floor:.3f} — amortization not measured")
+
+    # minimality (paper P2): the combining protocols' modeled replays
+    # must report ZERO redundant persistence instructions
+    for n, r in at_w.items():
+        red = r.get("redundant_pwbs_per_op")
+        if n.split("/")[1] in COMBINING and red:
+            failures.append(
+                f"{n}@{workers}w reports {red} redundant pwbs/op — "
+                "the minimality claim (P2) is violated")
     return failures
 
 
@@ -371,7 +386,11 @@ def main(argv=None) -> int:
         table, proto = row["name"].split("/")
         if table in KINDS:
             if (table, proto) not in cells:
-                cells[(table, proto)] = modeled.modeled_cell(table, proto)
+                # always audited: the replay is deterministic, so the
+                # minimality metric is too (force_discrete counters are
+                # property-tested identical to the fused paths)
+                cells[(table, proto)] = modeled.modeled_cell(
+                    table, proto, nvm_kw={"audit": True})
             cell = cells[(table, proto)]
             row["modeled_us_per_op"] = round(cell["modeled_us_per_op"], 3)
             row["modeled_pwbs_per_op"] = \
@@ -379,11 +398,14 @@ def main(argv=None) -> int:
             row["modeled_psyncs_per_op"] = \
                 round(cell["modeled_psync_per_op"], 3)
             row["profile"] = cell["profile"]
+            row["redundant_pwbs_per_op"] = \
+                round(cell["redundant_pwb_per_op"], 3)
         else:
             row["modeled_us_per_op"] = None
             row["modeled_pwbs_per_op"] = None
             row["modeled_psyncs_per_op"] = None
             row["profile"] = None
+            row["redundant_pwbs_per_op"] = None
         row["us_per_op"] = round(row["us_per_op"], 3)
         row["pwbs_per_op"] = round(row["pwbs_per_op"], 3)
         row["psyncs_per_op"] = round(row["psyncs_per_op"], 3)

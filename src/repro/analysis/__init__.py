@@ -1,0 +1,31 @@
+"""repro.analysis — persist-ordering race detector + protocol lint.
+
+Two cooperating passes over the repo's correctness invariants
+(DESIGN.md §10):
+
+* :mod:`repro.analysis.audit` — the dynamic persist-ordering detector.
+  ``NVM(..., audit=True)`` / ``ShmNVM(..., audit=True)`` attach a
+  :class:`PersistAudit` that tracks every cache line through the
+  flush-state lattice (CLEAN -> DIRTY -> PENDING -> CLEAN) and checks
+  happens-before via the existing VClock: unflushed-dirty-at-commit,
+  psync-order races, post-crash reads of un-ordered lines, and the
+  minimality metric (redundant pwbs / pfences).
+
+* :mod:`repro.analysis.lint` — the static AST lint over the protocol
+  and structure modules: shared mutable state must come from the
+  ``nvm.backend`` seam, modeled paths must be wall-clock and
+  unseeded-randomness free, and raw durable stores must be paired with
+  a flush in the same round body.
+
+* :mod:`repro.analysis.sweep` — drives the detector over the full
+  registry (kind, protocol) matrix on both backends; the CI
+  ``analysis-smoke`` job fails on any non-allowlisted finding.
+
+Both passes share one allowlist file (``allowlist.txt`` next to this
+package) so every justified exception is written down exactly once.
+"""
+
+from .audit import Finding, PersistAudit
+from .lint import lint_paths, load_allowlist
+
+__all__ = ["Finding", "PersistAudit", "lint_paths", "load_allowlist"]

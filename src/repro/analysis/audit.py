@@ -1,0 +1,300 @@
+"""Dynamic persist-ordering detector (DESIGN.md §10).
+
+``NVM(..., audit=True)`` attaches a :class:`PersistAudit` to the
+simulated NVMM.  Every cache line is tracked through the flush-state
+lattice::
+
+    CLEAN --write--> DIRTY --pwb--> PENDING --drain(psync)--> CLEAN
+
+and every transition is stamped with the issuing thread plus its
+virtual-clock time (when the NVM has a :class:`~repro.core.nvm.VClock`
+engaged).  From those stamps the audit flags:
+
+``unflushed-at-commit``  (gating)
+    At a psync by thread T, a line is still DIRTY and its last writer
+    is T: the thread "committed" durable state it never covered with a
+    pwb.  (Lines dirtied by *other* threads are judged at those
+    threads' own commits — flushing another thread's line is legal,
+    hardware write-backs are per-line, not per-writer.)
+
+``psync-order-race``  (gating)
+    A psync drains a pwb issued by another thread whose issue stamp is
+    LARGER than the syncer's clock.  The VClock is a Lamport clock, so
+    ``stamp > now`` proves no happens-before path orders the pwb
+    before the sync: the "durability" of that line is a race outcome,
+    not a guarantee.  The line is tainted until it is rewritten or
+    drained with proper ordering.  (Sound, not complete: requires a
+    clock; the clockless shm NVM audits the flush-state classes only.)
+
+``post-crash-unordered-read``  (gating)
+    After a crash, a read of a line whose durability was tainted by a
+    psync-order-race: recovery is consuming state that was persisted
+    by luck.
+
+``redundant-pwb`` / ``redundant-pfence``  (metric, non-gating)
+    The paper's minimality claim, machine-checked: a pwb on a CLEAN
+    line whose previous pwb came from the same thread (an intra-thread
+    duplicate — re-flushing after another thread's flush is the normal
+    helping pattern and is NOT counted), and a pfence with no pwb
+    pending in the current epoch.  Surfaced per protocol as
+    ``redundant_pwbs_per_op`` in bench.v2 / bench.mp.v2 rows.
+
+The audit never mutates NVM state and is consulted only behind
+``if nvm._audit is not None`` branches plus instance-level wrappers for
+the hot volatile accessors — with ``audit=False`` (the default) the
+modeled trajectory is byte-identical to an un-instrumented run, and
+with ``audit=True`` the NVM pins ``force_discrete`` so the fused
+persistence sentences take their counter-identical discrete fallbacks
+(the equivalence the property tests already gate).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import threading
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+from ..core.nvm import LINE
+
+#: Frames inside these files are simulator/primitive internals — the
+#: offending *protocol* site is the first frame outside them.
+_INTERNAL_FILES = ("nvm.py", "shm.py", "atomics.py", "audit.py")
+_INTERNAL_DIRS = (os.sep + "core" + os.sep, os.sep + "analysis" + os.sep)
+
+
+def _site() -> Tuple[str, str]:
+    """(``file.py:lineno``, ``file.py::qualname``) of the nearest frame
+    outside the simulator internals — the call site a finding blames."""
+    f = sys._getframe(2)
+    while f is not None:
+        fn = f.f_code.co_filename
+        base = os.path.basename(fn)
+        if not (base in _INTERNAL_FILES
+                and any(d in fn for d in _INTERNAL_DIRS)):
+            break
+        f = f.f_back
+    if f is None:                                  # pragma: no cover
+        return "<unknown>", "<unknown>"
+    code = f.f_code
+    base = os.path.basename(code.co_filename)
+    qual = getattr(code, "co_qualname", code.co_name)
+    return f"{base}:{f.f_lineno}", f"{base}::{qual}"
+
+
+class Finding:
+    """One detector finding, deduped on (rule, site_key)."""
+
+    __slots__ = ("rule", "site", "site_key", "line", "thread", "detail",
+                 "gating", "count")
+
+    def __init__(self, rule: str, site: str, site_key: str, line: int,
+                 thread: Any, detail: str, gating: bool) -> None:
+        self.rule = rule
+        self.site = site            # file.py:lineno of the first hit
+        self.site_key = site_key    # file.py::qualname (allowlist key)
+        self.line = line            # cache line of the first hit
+        self.thread = thread
+        self.detail = detail
+        self.gating = gating
+        self.count = 1
+
+    def __repr__(self) -> str:
+        return (f"<{self.rule} at {self.site} [{self.site_key}] "
+                f"line={self.line} x{self.count}: {self.detail}>")
+
+
+class PersistAudit:
+    """Per-NVM flush-state tracker; all hooks are thread-safe."""
+
+    def __init__(self, nvm: Any) -> None:
+        self._nvm = nvm
+        self._lock = threading.Lock()
+        # line -> [writer_key, write_site, write_site_key, reported]
+        self._dirty: Dict[int, list] = {}
+        # line -> (issuer_key, issue_stamp_ns, pwb_site)
+        self._pending: Dict[int, Tuple[Any, float, str]] = {}
+        # line -> issuer_key of the most recent pwb covering it
+        self._last_pwb: Dict[int, Any] = {}
+        # line -> detail of the order race that "durabilized" it
+        self._tainted: Dict[int, str] = {}
+        self._post_crash = False
+        self.redundant_pwbs = 0
+        self.redundant_pfences = 0
+        self.findings: List[Finding] = []
+        self._dedup: Dict[Tuple[str, str], Finding] = {}
+
+    # ---------------- identity / time ---------------------------------- #
+    def _key(self) -> Any:
+        clock = self._nvm.clock
+        if clock is not None:
+            return clock._key()      # honors VClock.bind(logical_id)
+        return threading.get_ident()
+
+    def _now(self) -> float:
+        clock = self._nvm.clock
+        return clock.now() if clock is not None else 0.0
+
+    # ---------------- finding plumbing --------------------------------- #
+    def _flag(self, rule: str, site: str, site_key: str, line: int,
+              detail: str, gating: bool) -> None:
+        k = (rule, site_key)
+        f = self._dedup.get(k)
+        if f is not None:
+            f.count += 1
+            return
+        f = Finding(rule, site, site_key, line, self._key(), detail,
+                    gating)
+        self._dedup[k] = f
+        self.findings.append(f)
+
+    # ---------------- hooks (called by NVM / ShmNVM) -------------------- #
+    def on_write(self, addr: int, n_words: int) -> None:
+        site, site_key = _site()
+        key = self._key()
+        first = addr // LINE
+        last = (addr + max(n_words, 1) - 1) // LINE
+        with self._lock:
+            dirty = self._dirty
+            for line in range(first, last + 1):
+                d = dirty.get(line)
+                if d is None or d[0] != key:
+                    dirty[line] = [key, site, site_key, False]
+                if self._tainted:
+                    self._tainted.pop(line, None)   # rewritten: untainted
+
+    def on_read(self, addr: int, n_words: int = 1) -> None:
+        if not self._post_crash or not self._tainted:
+            return
+        first = addr // LINE
+        last = (addr + max(n_words, 1) - 1) // LINE
+        hits: List[Tuple[int, str]] = []
+        with self._lock:
+            for line in range(first, last + 1):
+                detail = self._tainted.pop(line, None)
+                if detail is not None:
+                    hits.append((line, detail))
+        if hits:
+            site, site_key = _site()
+            for line, detail in hits:
+                self._flag("post-crash-unordered-read", site, site_key,
+                           line,
+                           f"recovery read of a line whose durability "
+                           f"was a race outcome ({detail})", gating=True)
+
+    def on_pwb(self, runs: Iterable[Tuple[int, int]]) -> None:
+        site, site_key = _site()
+        key = self._key()
+        stamp = self._now()
+        with self._lock:
+            dirty, pending, last = \
+                self._dirty, self._pending, self._last_pwb
+            for first, n_lines in runs:
+                for line in range(first, first + n_lines):
+                    if dirty.pop(line, None) is None \
+                            and last.get(line) == key:
+                        self.redundant_pwbs += 1
+                        self._flag(
+                            "redundant-pwb", site, site_key, line,
+                            "pwb of a clean line this thread already "
+                            "flushed (minimality P2 miss)", gating=False)
+                    pending[line] = (key, stamp, site)
+                    last[line] = key
+
+    def on_spill(self, runs: Iterable[Tuple[int, int]]) -> None:
+        """Ring-overflow early write-back completion: the hardware may
+        drain a pwb'd line any time before the psync, so this clears
+        PENDING without any ordering judgment."""
+        with self._lock:
+            for first, n_lines in runs:
+                for line in range(first, first + n_lines):
+                    self._pending.pop(line, None)
+
+    def on_pfence(self, had_pending: bool) -> None:
+        if had_pending:
+            return
+        site, site_key = _site()
+        with self._lock:
+            self.redundant_pfences += 1
+        self._flag("redundant-pfence", site, site_key, -1,
+                   "pfence with no pwb pending in the current epoch",
+                   gating=False)
+
+    def on_psync(self, drained: Iterable[Tuple[int, int]],
+                 sync_now: float) -> None:
+        """``sync_now`` is the syncer's clock BEFORE the drain advance —
+        comparing post-advance time would hide every race behind the
+        psync's own device cost."""
+        site, site_key = _site()
+        key = self._key()
+        races: List[Tuple[int, Tuple[Any, float, str]]] = []
+        stale: List[list] = []
+        with self._lock:
+            pending, tainted = self._pending, self._tainted
+            for first, n_lines in drained:
+                for line in range(first, first + n_lines):
+                    p = pending.pop(line, None)
+                    if p is None:
+                        continue
+                    if p[0] != key and p[1] > sync_now:
+                        races.append((line, p))
+                        tainted[line] = (f"pwb at {p[2]} (t={p[1]:.0f}ns)"
+                                         f" vs psync at {site} "
+                                         f"(t={sync_now:.0f}ns)")
+                    else:
+                        tainted.pop(line, None)     # ordered: clean bill
+            for line, d in self._dirty.items():
+                if d[0] == key and not d[3]:
+                    d[3] = True
+                    stale.append([line] + d)
+        for line, p in races:
+            self._flag("psync-order-race", site, site_key, line,
+                       f"drains pwb issued at {p[2]} with stamp "
+                       f"{p[1]:.0f}ns > syncer clock {sync_now:.0f}ns — "
+                       "no happens-before orders the flush before this "
+                       "sync", gating=True)
+        for line, _key, wsite, wsite_key, _rep in stale:
+            self._flag("unflushed-at-commit", wsite, wsite_key, line,
+                       f"durable word written here was never pwb'd "
+                       f"before the committing psync at {site}",
+                       gating=True)
+
+    def on_crash(self) -> None:
+        with self._lock:
+            self._dirty.clear()      # volatile image is lost
+            self._pending.clear()    # queue resolved by the adversary
+            self._post_crash = True  # taints now fail reads
+
+    # ---------------- reporting ---------------------------------------- #
+    def gating_findings(self, allow=None) -> List[Finding]:
+        """Findings that should fail a sweep: gating rules minus the
+        allowlist (``allow`` is a loaded allowlist, see lint.py)."""
+        out = []
+        for f in self.findings:
+            if not f.gating:
+                continue
+            if allow is not None and allow.allowed(f.rule, f.site_key):
+                continue
+            out.append(f)
+        return out
+
+    def reset_metrics(self) -> None:
+        """Zero the minimality counters and drop their (non-gating)
+        findings — benches call this with ``nvm.reset_counters`` so the
+        metric covers the measured window only.  Gating findings and
+        the line-state tables survive: correctness findings from any
+        phase stay reported."""
+        with self._lock:
+            self.redundant_pwbs = 0
+            self.redundant_pfences = 0
+            kept = [f for f in self.findings if f.gating]
+            self.findings = kept
+            self._dedup = {(f.rule, f.site_key): f for f in kept}
+
+    def report(self) -> Dict[str, Any]:
+        return {
+            "findings": list(self.findings),
+            "gating": [f for f in self.findings if f.gating],
+            "redundant_pwbs": self.redundant_pwbs,
+            "redundant_pfences": self.redundant_pfences,
+        }

@@ -1,0 +1,378 @@
+"""Static protocol-invariant lint (DESIGN.md §10) + CLI.
+
+Run::
+
+    PYTHONPATH=src python -m repro.analysis.lint [paths...]
+        [--allowlist PATH] [--summary PATH]
+
+Scope (when no paths are given): the protocol/structure modules —
+``core/pbcomb.py``, ``core/pwfcomb.py``, ``structures/*.py``,
+``api/*.py``.  Pure stdlib (``ast``); rules:
+
+``raw-lock``
+    Constructing ``threading.Lock``/``RLock``/``Condition``/``Event``/
+    ``Semaphore``/``Barrier`` directly.  Shared mutable state must come
+    from the ``nvm.backend`` seam (DESIGN.md §7) so the same protocol
+    code runs on the thread AND shared-memory backends; a raw lock is
+    invisible to the shm backend and silently breaks process mode.
+
+``module-global``
+    A module-level assignment of a mutable container (list/dict/set or
+    their constructors).  Module globals are shared across every
+    runtime in the process and survive crash/recover — exactly the
+    hidden channel the seam exists to eliminate.
+
+``wall-clock``
+    ``time.time``/``monotonic``/``perf_counter``/``datetime.now`` and
+    friends in modeled paths: the virtual clock is the only time
+    source the deterministic perf gate tolerates.  (``time.sleep`` is
+    allowed — backoff changes scheduling, never modeled results.)
+
+``unseeded-random``
+    Module-level ``random.*`` calls (the interpreter-global RNG) or
+    ``random.Random()`` with no seed: modeled trajectories must be
+    byte-identical across runs, so every RNG must be explicitly
+    seeded.
+
+``unflushed-store``
+    A function body performs a raw durable store (``nvm.write`` /
+    ``write_range`` / ``copy_range``, directly or via a local alias)
+    with NO persistence call (pwb family, ``persist_lines``, fused
+    sentences, ``psync``) in the same body.  Methods named ``apply`` /
+    ``init_state`` are exempt by contract: a ``SeqObject`` mutates the
+    combiner's PRIVATE copy and the enclosing round's commit persists
+    it (persistence principle P3).
+
+Justified exceptions live in ``allowlist.txt`` next to this module:
+``<rule> <site-glob>  # one-line justification`` — the glob matches
+``file.py::qualname`` (same key the dynamic audit uses), so one file
+documents every exception of both passes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import fnmatch
+import glob
+import os
+import sys
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+#: Default lint scope, relative to the ``repro`` package directory.
+DEFAULT_SCOPE = ("core/pbcomb.py", "core/pwfcomb.py",
+                 "structures/*.py", "api/*.py")
+
+_LOCK_NAMES = {"Lock", "RLock", "Condition", "Event", "Semaphore",
+               "BoundedSemaphore", "Barrier"}
+_WALL_CLOCK_TIME = {"time", "time_ns", "monotonic", "monotonic_ns",
+                    "perf_counter", "perf_counter_ns"}
+_WALL_CLOCK_DT = {"now", "utcnow", "today"}
+_RANDOM_FNS = {"random", "randint", "randrange", "choice", "choices",
+               "shuffle", "sample", "uniform", "getrandbits", "gauss"}
+_MUTABLE_CTORS = {"list", "dict", "set", "deque", "defaultdict",
+                  "OrderedDict", "Counter", "bytearray"}
+_WRITE_FNS = {"write", "write_range", "copy_range"}
+_PERSIST_FNS = {"pwb", "pwb_range", "persist_lines", "pwb_fence",
+                "pwb_sync", "commit_round", "psync"}
+#: SeqObject contract: these methods mutate the combiner's private
+#: copy; the round's commit persists it (see module docstring).
+_EXEMPT_METHODS = {"apply", "init_state"}
+
+
+class LintFinding:
+    __slots__ = ("rule", "path", "lineno", "qual", "site_key", "message")
+
+    def __init__(self, rule: str, path: str, lineno: int, qual: str,
+                 message: str) -> None:
+        self.rule = rule
+        self.path = path
+        self.lineno = lineno
+        self.qual = qual
+        self.site_key = f"{os.path.basename(path)}::{qual}"
+        self.message = message
+
+    def __repr__(self) -> str:
+        return (f"<{self.rule} {self.path}:{self.lineno} "
+                f"[{self.site_key}] {self.message}>")
+
+
+# --------------------------------------------------------------------- #
+# Allowlist (shared with the dynamic audit)                             #
+# --------------------------------------------------------------------- #
+class Allowlist:
+    """Parsed ``allowlist.txt``: (rule, site-glob, justification)."""
+
+    def __init__(self, entries: Sequence[Tuple[str, str, str]]) -> None:
+        self.entries = list(entries)
+
+    def allowed(self, rule: str, site_key: str) -> bool:
+        return any(r == rule and fnmatch.fnmatch(site_key, pat)
+                   for r, pat, _j in self.entries)
+
+
+def load_allowlist(path: Optional[str] = None) -> Allowlist:
+    if path is None:
+        path = os.path.join(os.path.dirname(__file__), "allowlist.txt")
+    entries: List[Tuple[str, str, str]] = []
+    if os.path.exists(path):
+        with open(path, encoding="utf-8") as fh:
+            for raw in fh:
+                line = raw.strip()
+                if not line or line.startswith("#"):
+                    continue
+                body, _, just = line.partition("#")
+                parts = body.split()
+                if len(parts) != 2:
+                    raise ValueError(
+                        f"malformed allowlist line (want "
+                        f"'<rule> <site-glob>  # why'): {raw!r}")
+                entries.append((parts[0], parts[1], just.strip()))
+    return Allowlist(entries)
+
+
+# --------------------------------------------------------------------- #
+# The linter                                                            #
+# --------------------------------------------------------------------- #
+class _Linter(ast.NodeVisitor):
+    def __init__(self, path: str) -> None:
+        self.path = path
+        self.findings: List[LintFinding] = []
+        self._qual: List[str] = []
+        self._from_threading: set = set()
+
+    # -------- helpers -------------------------------------------------- #
+    def _q(self, name: str = "") -> str:
+        parts = self._qual + ([name] if name else [])
+        return ".".join(parts) or "<module>"
+
+    def _flag(self, rule: str, node: ast.AST, message: str,
+              qual: Optional[str] = None) -> None:
+        self.findings.append(LintFinding(
+            rule, self.path, getattr(node, "lineno", 0),
+            qual if qual is not None else self._q(), message))
+
+    # -------- structure ------------------------------------------------ #
+    def visit_Module(self, node: ast.Module) -> None:
+        for stmt in node.body:
+            self._check_module_global(stmt)
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        if node.module == "threading":
+            self._from_threading.update(
+                a.asname or a.name for a in node.names
+                if a.name in _LOCK_NAMES)
+        self.generic_visit(node)
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self._qual.append(node.name)
+        self.generic_visit(node)
+        self._qual.pop()
+
+    def visit_FunctionDef(self, node) -> None:
+        self._qual.append(node.name)
+        self._check_unflushed_store(node)
+        self.generic_visit(node)
+        self._qual.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    # -------- module-global -------------------------------------------- #
+    def _is_mutable_value(self, value: ast.AST) -> bool:
+        if isinstance(value, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                              ast.DictComp, ast.SetComp)):
+            return True
+        if isinstance(value, ast.Call):
+            fn = value.func
+            name = fn.id if isinstance(fn, ast.Name) else \
+                fn.attr if isinstance(fn, ast.Attribute) else None
+            return name in _MUTABLE_CTORS
+        return False
+
+    def _check_module_global(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, ast.Assign):
+            targets, value = stmt.targets, stmt.value
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            targets, value = [stmt.target], stmt.value
+        else:
+            return
+        if not self._is_mutable_value(value):
+            return
+        for t in targets:
+            if isinstance(t, ast.Name) and t.id != "__all__":
+                self._flag("module-global", stmt,
+                           f"module-level mutable global '{t.id}' — "
+                           "shared state must come from the "
+                           "nvm.backend seam", qual=t.id)
+
+    # -------- call-pattern rules --------------------------------------- #
+    def visit_Call(self, node: ast.Call) -> None:
+        fn = node.func
+        if isinstance(fn, ast.Attribute):
+            base = fn.value
+            base_name = base.id if isinstance(base, ast.Name) else None
+            if base_name == "threading" and fn.attr in _LOCK_NAMES:
+                self._flag("raw-lock", node,
+                           f"threading.{fn.attr}() — use the "
+                           "nvm.backend seam")
+            elif base_name == "time" and fn.attr in _WALL_CLOCK_TIME:
+                self._flag("wall-clock", node,
+                           f"time.{fn.attr}() in a modeled path — the "
+                           "virtual clock is the only tolerated time "
+                           "source")
+            elif fn.attr in _WALL_CLOCK_DT and (
+                    base_name == "datetime"
+                    or (isinstance(base, ast.Attribute)
+                        and base.attr == "datetime")):
+                self._flag("wall-clock", node,
+                           f"datetime {fn.attr}() in a modeled path")
+            elif base_name == "random" and fn.attr in _RANDOM_FNS:
+                self._flag("unseeded-random", node,
+                           f"random.{fn.attr}() uses the interpreter-"
+                           "global RNG — seed an explicit "
+                           "random.Random(seed)")
+            elif fn.attr == "Random" and base_name == "random" \
+                    and not node.args and not node.keywords:
+                self._flag("unseeded-random", node,
+                           "random.Random() without a seed")
+        elif isinstance(fn, ast.Name):
+            if fn.id in self._from_threading:
+                self._flag("raw-lock", node,
+                           f"{fn.id}() (from threading) — use the "
+                           "nvm.backend seam")
+            elif fn.id == "Random" and not node.args \
+                    and not node.keywords:
+                self._flag("unseeded-random", node,
+                           "Random() without a seed")
+        self.generic_visit(node)
+
+    # -------- unflushed-store ------------------------------------------ #
+    def _check_unflushed_store(self, fn_node) -> None:
+        if fn_node.name in _EXEMPT_METHODS:
+            return
+        aliases: dict = {}
+        first_write: Optional[ast.AST] = None
+        write_attr = ""
+        has_persist = False
+
+        def body_nodes():
+            # the function body WITHOUT descending into nested defs
+            # (each nested def is linted on its own visit)
+            stack = list(fn_node.body)
+            while stack:
+                n = stack.pop()
+                if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+                    continue
+                yield n
+                stack.extend(ast.iter_child_nodes(n))
+
+        for n in body_nodes():
+            if isinstance(n, ast.Assign) and len(n.targets) == 1 \
+                    and isinstance(n.targets[0], ast.Name) \
+                    and isinstance(n.value, ast.Attribute):
+                attr = n.value.attr
+                if attr in _WRITE_FNS or attr in _PERSIST_FNS:
+                    aliases[n.targets[0].id] = attr
+        for n in body_nodes():
+            if not isinstance(n, ast.Call):
+                continue
+            f = n.func
+            attr = f.attr if isinstance(f, ast.Attribute) else \
+                aliases.get(f.id) if isinstance(f, ast.Name) else None
+            if attr in _PERSIST_FNS:
+                has_persist = True
+            elif attr in _WRITE_FNS:
+                if first_write is None or \
+                        n.lineno < first_write.lineno:
+                    first_write, write_attr = n, attr
+        if first_write is not None and not has_persist:
+            self._flag("unflushed-store", first_write,
+                       f".{write_attr}(...) with no pwb/psync in the "
+                       "same body — a raw durable store must be paired "
+                       "with its flush in the round that issues it")
+
+
+def lint_file(path: str) -> List[LintFinding]:
+    with open(path, encoding="utf-8") as fh:
+        tree = ast.parse(fh.read(), filename=path)
+    linter = _Linter(path)
+    linter.visit(tree)
+    return linter.findings
+
+
+def default_scope(root: Optional[str] = None) -> List[str]:
+    """Expand the default scope globs under the repro package dir."""
+    if root is None:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out: List[str] = []
+    for pat in DEFAULT_SCOPE:
+        out.extend(sorted(glob.glob(os.path.join(root, pat))))
+    return out
+
+
+def lint_paths(paths: Optional[Iterable[str]] = None,
+               root: Optional[str] = None) -> List[LintFinding]:
+    files = list(paths) if paths else default_scope(root)
+    findings: List[LintFinding] = []
+    for path in files:
+        findings.extend(lint_file(path))
+    return findings
+
+
+# --------------------------------------------------------------------- #
+# CLI                                                                   #
+# --------------------------------------------------------------------- #
+def render_summary(findings: List[LintFinding],
+                   allow: Allowlist) -> List[str]:
+    lines = ["## repro.analysis.lint", "",
+             "| rule | site | status | message |",
+             "|---|---|---|---|"]
+    for f in findings:
+        status = ("allowlisted" if allow.allowed(f.rule, f.site_key)
+                  else "**VIOLATION**")
+        lines.append(f"| {f.rule} | `{f.path.split('/repro/')[-1]}:"
+                     f"{f.lineno}` ({f.qual}) | {status} | "
+                     f"{f.message} |")
+    if not findings:
+        lines.append("| - | - | clean | no findings |")
+    return lines
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="Protocol-invariant AST lint (DESIGN.md §10)")
+    ap.add_argument("paths", nargs="*",
+                    help="files to lint (default: the protocol scope)")
+    ap.add_argument("--root", default=None,
+                    help="repro package dir the default scope globs "
+                         "resolve under")
+    ap.add_argument("--allowlist", default=None,
+                    help="allowlist file (default: the package's "
+                         "allowlist.txt)")
+    ap.add_argument("--summary", default=None,
+                    help="append a markdown findings table here "
+                         "(e.g. $GITHUB_STEP_SUMMARY)")
+    args = ap.parse_args(argv)
+
+    allow = load_allowlist(args.allowlist)
+    findings = lint_paths(args.paths or None, root=args.root)
+    bad = 0
+    for f in findings:
+        ok = allow.allowed(f.rule, f.site_key)
+        bad += 0 if ok else 1
+        tag = "allow" if ok else "FAIL "
+        print(f"[{tag}] {f.rule:16s} {f.path}:{f.lineno} "
+              f"({f.qual}) — {f.message}")
+    print(f"lint: {len(findings)} finding(s), {bad} non-allowlisted, "
+          f"{len(allow.entries)} allowlist entr(y/ies)")
+    if args.summary:
+        with open(args.summary, "a", encoding="utf-8") as fh:
+            fh.write("\n".join(render_summary(findings, allow)) + "\n")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,268 @@
+"""Detector sweep over the full (kind, protocol) registry matrix.
+
+Drives every registry entry through a staged deterministic workload —
+announce from the non-combining logical threads, invoke from thread 0,
+then an adversarial crash, recovery, a snapshot, and post-crash rounds —
+on an audited NVM (``audit=True``), on both execution backends:
+
+* ``threads``: the in-process NVM with the ``optane`` cost profile, so
+  the VClock is engaged and the happens-before (psync-order) checks run.
+* ``shm``: the shared-memory NVM driven in-process.  It has no virtual
+  clock, so the sweep checks the flush-state classes only (the audit
+  disables order checks by stamping everything 0) — but it exercises
+  the completely separate ShmNVM write-back ring / drain plumbing.
+
+The staged schedule is single-OS-thread deterministic: every finding it
+raises is reproducible and triagable, which is what lets the CI
+``analysis-smoke`` job FAIL on any non-allowlisted gating finding
+instead of merely reporting it.  (Free-running threaded workloads can
+interleave helping patterns into one-off apparent races; those belong
+in the threaded stress tests, not in a gate.)
+
+CLI::
+
+    python -m repro.analysis.sweep [--quick] [--backend threads|shm|both]
+                                   [--json PATH] [--summary PATH]
+                                   [--allowlist PATH]
+
+Exit status 1 when any cell raises a non-allowlisted gating finding (or
+fails to drive at all).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from .lint import Allowlist, load_allowlist
+
+N_THREADS = 4
+ROUNDS = 8
+POST_CRASH_ROUNDS = 2
+CRASH_SEED = 1234
+
+#: per-kind op schedule: round r runs sched[r % len] on every thread
+SCHEDULES: Dict[str, List[Tuple[str, Optional[Callable[[int, int], Any]]]]] = {
+    "queue": [("enqueue", lambda p, r: p * 1_000_000 + r),
+              ("dequeue", None)],
+    "stack": [("push", lambda p, r: p * 1_000_000 + r),
+              ("pop", None)],
+    "heap": [("insert", lambda p, r: (p * 31 + r) % 1_000_000),
+             ("delete_min", None)],
+    "counter": [("fetch_add", lambda p, r: 1)],
+    "log": [("record", lambda p, r: (p, r + 1, ("resp", p, r + 1))),
+            ("lookup", lambda p, r: p)],
+    "ckpt": [("persist", lambda p, r: (r + 1, {"step": r + 1, "w": p})),
+             ("latest", None)],
+}
+
+
+def _make_nvm(backend: str):
+    if backend == "shm":
+        from ..core.shm import ShmNVM
+        return ShmNVM(1 << 18, audit=True)
+    from ..core.nvm import NVM
+    return NVM(1 << 22, profile="optane", audit=True)
+
+
+def sweep_cell(kind: str, protocol: str, backend: str = "threads",
+               rounds: int = ROUNDS,
+               post_crash_rounds: int = POST_CRASH_ROUNDS) -> Dict[str, Any]:
+    """Drive one (kind, protocol) cell on an audited NVM and return its
+    audit report plus op accounting.  Deterministic: one OS thread,
+    combining rounds staged via announce + a single invoke."""
+    import random
+
+    from ..api import CombiningRuntime
+
+    nvm = _make_nvm(backend)
+    rt = CombiningRuntime(nvm=nvm, n_threads=N_THREADS)
+    ops = 0
+    try:
+        obj = rt.make(kind, protocol)
+        handles = [rt.attach(p) for p in range(N_THREADS)]
+        bounds = [h.bind(obj) for h in handles]
+        combining = obj.adapter.can_announce
+        sched = SCHEDULES[kind]
+
+        def run_round(r: int, staged: bool) -> None:
+            nonlocal ops
+            op, argfn = sched[r % len(sched)]
+            if staged:
+                for p in range(1, N_THREADS):
+                    if argfn is None:
+                        handles[p].announce(obj, op)
+                    else:
+                        handles[p].announce(obj, op, argfn(p, r))
+                fn = getattr(bounds[0], op)
+                fn(*(() if argfn is None else (argfn(0, r),)))
+            else:
+                for p in range(N_THREADS):
+                    fn = getattr(bounds[p], op)
+                    fn(*(() if argfn is None else (argfn(p, r),)))
+            ops += N_THREADS
+
+        for r in range(rounds):
+            run_round(r, combining)
+        rt.crash(random.Random(CRASH_SEED))
+        rt.recover()
+        obj.snapshot()
+        for r in range(rounds, rounds + post_crash_rounds):
+            run_round(r, False)
+
+        aud = nvm.audit
+        return {
+            "kind": kind, "protocol": protocol, "backend": backend,
+            "ops": ops,
+            "findings": list(aud.findings),
+            "redundant_pwbs": aud.redundant_pwbs,
+            "redundant_pfences": aud.redundant_pfences,
+            "error": None,
+        }
+    except Exception as e:                         # driver failure: hard
+        return {
+            "kind": kind, "protocol": protocol, "backend": backend,
+            "ops": ops, "findings": [], "redundant_pwbs": 0,
+            "redundant_pfences": 0,
+            "error": f"{type(e).__name__}: {e}",
+        }
+    finally:
+        rt.close()
+        if backend == "shm":
+            nvm.close()        # rt only closes NVMs it created itself
+
+
+def run_sweep(backends: Tuple[str, ...] = ("threads", "shm"),
+              quick: bool = False,
+              allow: Optional[Allowlist] = None) -> Dict[str, Any]:
+    """Sweep every registry entry on each backend; classify findings
+    against the allowlist.  Returns ``{"cells": [...], "failures": N}``
+    where ``failures`` counts non-allowlisted gating findings plus
+    driver errors."""
+    from ..api import entries
+
+    rounds = 4 if quick else ROUNDS
+    post = 1 if quick else POST_CRASH_ROUNDS
+    cells: List[Dict[str, Any]] = []
+    failures = 0
+    for backend in backends:
+        for kind, protocol in entries():
+            cell = sweep_cell(kind, protocol, backend,
+                              rounds=rounds, post_crash_rounds=post)
+            gating, allowed = [], []
+            for f in cell.pop("findings"):
+                if not f.gating:
+                    continue
+                if allow is not None and allow.allowed(f.rule, f.site_key):
+                    allowed.append(f)
+                else:
+                    gating.append(f)
+            cell["gating"] = gating
+            cell["allowed"] = allowed
+            if cell["error"] is not None or gating:
+                failures += 1
+            cells.append(cell)
+    return {"cells": cells, "failures": failures}
+
+
+# ---------------- rendering ------------------------------------------- #
+def _finding_row(cell: Dict[str, Any], f) -> str:
+    return (f"| {cell['kind']}/{cell['protocol']} | {cell['backend']} "
+            f"| {f.rule} | `{f.site}` | `{f.site_key}` | {f.count} "
+            f"| {f.detail} |")
+
+
+def render_summary(result: Dict[str, Any]) -> str:
+    """GitHub-flavored markdown: a violations table (if any) plus the
+    per-cell matrix with the minimality metric."""
+    out = ["## Persist-ordering sweep", ""]
+    viol = [(c, f) for c in result["cells"] for f in c["gating"]]
+    errs = [c for c in result["cells"] if c["error"]]
+    if viol or errs:
+        out += ["### Violations (non-allowlisted)", "",
+                "| cell | backend | rule | site | site key | hits "
+                "| detail |",
+                "|---|---|---|---|---|---|---|"]
+        out += [_finding_row(c, f) for c, f in viol]
+        out += [f"| {c['kind']}/{c['protocol']} | {c['backend']} "
+                f"| driver-error | — | — | — | {c['error']} |"
+                for c in errs]
+        out.append("")
+    else:
+        out += ["No non-allowlisted violations.", ""]
+    allowed = [(c, f) for c in result["cells"] for f in c["allowed"]]
+    if allowed:
+        out += ["### Allowlisted findings", "",
+                "| cell | backend | rule | site | site key | hits "
+                "| detail |",
+                "|---|---|---|---|---|---|---|"]
+        out += [_finding_row(c, f) for c, f in allowed]
+        out.append("")
+    out += ["### Matrix", "",
+            "| cell | backend | ops | gating | redundant pwbs "
+            "| redundant pfences |",
+            "|---|---|---|---|---|---|"]
+    for c in result["cells"]:
+        out.append(f"| {c['kind']}/{c['protocol']} | {c['backend']} "
+                   f"| {c['ops']} | {len(c['gating'])} "
+                   f"| {c['redundant_pwbs']} | {c['redundant_pfences']} |")
+    out.append("")
+    return "\n".join(out)
+
+
+def _to_json(result: Dict[str, Any]) -> Dict[str, Any]:
+    def fd(f):
+        return {"rule": f.rule, "site": f.site, "site_key": f.site_key,
+                "line": f.line, "count": f.count, "detail": f.detail}
+
+    return {
+        "schema": "analysis.sweep.v1",
+        "failures": result["failures"],
+        "cells": [{**{k: c[k] for k in ("kind", "protocol", "backend",
+                                        "ops", "redundant_pwbs",
+                                        "redundant_pfences", "error")},
+                   "gating": [fd(f) for f in c["gating"]],
+                   "allowed": [fd(f) for f in c["allowed"]]}
+                  for c in result["cells"]],
+    }
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.sweep",
+        description="persist-ordering detector sweep over the registry "
+                    "matrix (fails on non-allowlisted gating findings)")
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer rounds per cell (CI smoke)")
+    ap.add_argument("--backend", choices=["threads", "shm", "both"],
+                    default="both")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the machine-readable report here")
+    ap.add_argument("--summary", metavar="PATH",
+                    help="append the markdown summary here "
+                    "(e.g. $GITHUB_STEP_SUMMARY)")
+    ap.add_argument("--allowlist", metavar="PATH",
+                    help="override the package allowlist file")
+    args = ap.parse_args(argv)
+
+    backends = (("threads", "shm") if args.backend == "both"
+                else (args.backend,))
+    allow = load_allowlist(args.allowlist)
+    result = run_sweep(backends=backends, quick=args.quick, allow=allow)
+
+    text = render_summary(result)
+    print(text)
+    if args.summary:
+        with open(args.summary, "a", encoding="utf-8") as fh:
+            fh.write(text + "\n")
+    if args.json:
+        import json as _json
+        with open(args.json, "w", encoding="utf-8") as fh:
+            _json.dump(_to_json(result), fh, indent=2, sort_keys=True)
+            fh.write("\n")
+    return 1 if result["failures"] else 0
+
+
+if __name__ == "__main__":                         # pragma: no cover
+    sys.exit(main())

@@ -215,7 +215,8 @@ class NVM:
                  psync_nop: bool = False,
                  persist_latency: float = 0.0,
                  profile: Union[str, CostProfile, None] = None,
-                 backend: Optional[Any] = None) -> None:
+                 backend: Optional[Any] = None,
+                 audit: bool = False) -> None:
         """``persist_latency``: seconds a psync blocks the calling thread
         (models NVMM write-back latency, ~1-3us on Optane DCPMM; the
         benchmark harness sets it so the paper's cost trends — one psync
@@ -234,6 +235,15 @@ class NVM:
         volatile shared primitives from (DESIGN.md §7); defaults to the
         thread backend.  The multiprocess path constructs ``ShmNVM``
         with a ``ShmBackend`` instead.
+
+        ``audit``: opt-in persist-ordering detector (DESIGN.md §10) —
+        attaches a ``repro.analysis.audit.PersistAudit`` tracking
+        per-line flush state and happens-before, exposed as
+        ``self.audit``.  Pins ``force_discrete`` so the fused
+        persistence sentences take their counter-identical discrete
+        fallbacks: counters and modeled costs stay byte-identical to a
+        non-audited run.  Silently disabled under the pwb/psync NOP
+        ablations (there is no real persistence to audit there).
         """
         if backend is None:
             from .backend import ThreadBackend
@@ -264,6 +274,54 @@ class NVM:
         # Crash-point injection: countdown on persistence "events".
         self._crash_countdown: Optional[int] = None
         self._crash_rng: Optional[random.Random] = None
+        self._audit = None
+        if audit and not (pwb_nop or psync_nop):
+            from ..analysis.audit import PersistAudit   # lazy: no cycle
+            self._audit = PersistAudit(self)
+            self.force_discrete = True
+            self._install_audit_hooks()
+
+    @property
+    def audit(self):
+        """The attached ``PersistAudit`` (None when auditing is off)."""
+        return self._audit
+
+    def _install_audit_hooks(self) -> None:
+        """Shadow the hot volatile accessors with auditing wrappers as
+        INSTANCE attributes: the default path (audit off) keeps the bare
+        class methods, so auditing costs nothing when not engaged.
+        Wrapping the *bound* methods resolves subclass overrides
+        (ShmNVM) for free."""
+        aud = self._audit
+        read, write = self.read, self.write
+        read_range, write_range = self.read_range, self.write_range
+        copy_range = self.copy_range
+
+        def read_a(addr):
+            aud.on_read(addr)
+            return read(addr)
+
+        def read_range_a(addr, n):
+            aud.on_read(addr, n)
+            return read_range(addr, n)
+
+        def write_a(addr, value):
+            write(addr, value)
+            aud.on_write(addr, 1)
+
+        def write_range_a(addr, values):
+            write_range(addr, values)
+            aud.on_write(addr, len(values))
+
+        def copy_range_a(dst, src, n):
+            copy_range(dst, src, n)
+            aud.on_write(dst, n)
+
+        self.read = read_a
+        self.read_range = read_range_a
+        self.write = write_a
+        self.write_range = write_range_a
+        self.copy_range = copy_range_a
 
     # ------------------------------------------------------------------ #
     # Allocation                                                         #
@@ -333,6 +391,8 @@ class NVM:
             self.counters["pwb"] += n_lines
         if self.clock is not None and not self.pwb_nop:
             self.clock.advance(n_lines * self.clock.profile.pwb_ns)
+        if self._audit is not None:
+            self._audit.on_pwb(((first, n_lines),))
         self._tick_crash_point()
 
     # Explicit alias: round persistence paths call this so the intent —
@@ -366,15 +426,21 @@ class NVM:
             self.counters["pwb"] += n_total
         if self.clock is not None and not self.pwb_nop:
             self.clock.advance(n_total * self.clock.profile.pwb_ns)
+        if self._audit is not None:
+            self._audit.on_pwb(runs)
         self._tick_crash_point()
 
     def pfence(self) -> None:
+        had_pending = False
         with self._lock:
             self.counters["pfence"] += 1
             if self._epochs[-1]:
+                had_pending = True
                 self._epochs.append([])
         if self.clock is not None:
             self.clock.advance(self.clock.profile.pfence_ns)
+        if self._audit is not None:
+            self._audit.on_pfence(had_pending)
         self._tick_crash_point()
 
     # ---------------- fused round-commit paths ------------------------ #
@@ -391,7 +457,7 @@ class NVM:
     def _fast_ok(self) -> bool:
         return (self._crash_countdown is None and not self.pwb_nop
                 and not self.psync_nop and not self.persist_latency
-                and not self.force_discrete)
+                and not self.force_discrete and self._audit is None)
 
     def _pending_lines(self, pending) -> List[Tuple[int, int]]:
         """Dedupe/merge (addr, n_words) ranges to [first, n_lines] runs
@@ -585,6 +651,9 @@ class NVM:
                 + total_lines * prof.line_ns)
 
     def psync(self) -> None:
+        aud = self._audit
+        sync_now = (self.clock.now()
+                    if aud is not None and self.clock is not None else 0.0)
         drained: List[Tuple[int, int]] = []
         with self._lock:
             self.counters["psync"] += 1
@@ -597,6 +666,8 @@ class NVM:
                 self._epochs = [[]]
         if self.clock is not None and not self.psync_nop:
             self.clock.sync_device(self._drain_cost_ns(drained))
+        if aud is not None:
+            aud.on_psync(drained, sync_now)
         if drained and self.persist_latency:
             # wall-clock cost model (sleep): same shape as the virtual
             # one, bounded below by host sleep granularity (~250us here,
@@ -658,6 +729,8 @@ class NVM:
             self._epochs = [[]]
             self._vol = list(self._dur)
             self._crash_countdown = None
+        if self._audit is not None:
+            self._audit.on_crash()
 
     # ------------------------------------------------------------------ #
     # Introspection                                                      #
@@ -697,3 +770,5 @@ class NVM:
     def reset_counters(self) -> None:
         for k in self.counters:
             self.counters[k] = 0
+        if self._audit is not None:
+            self._audit.reset_metrics()

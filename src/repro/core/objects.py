@@ -18,6 +18,14 @@ class SeqObject:
     """A sequential object whose state lives in ``state_words`` NVM words."""
 
     state_words: int = 1
+    #: ops guaranteed never to write state.  The lock baselines skip
+    #: the whole persistence sentence for these (nothing to flush, and
+    #: the response only depends on state already psync'd under the
+    #: same lock).  Ops that merely MAY be no-ops (stale CKPT, DEQ on
+    #: empty) are not listed: the per-op-persist baselines pay their
+    #: unconditional fence+psync there — the wasted work the audit's
+    #: redundancy metric exists to expose.
+    READ_ONLY: frozenset = frozenset()
 
     def init_state(self, nvm: NVM, st_base: int) -> None:
         raise NotImplementedError
@@ -184,6 +192,8 @@ class ResponseLogObject(SeqObject):
         reads this to answer re-announced requests from the log.
     """
 
+    READ_ONLY = frozenset({"LOOKUP"})
+
     def __init__(self, n_clients: int = 8) -> None:
         self.n_clients = n_clients
         self.state_words = 2 * n_clients
@@ -244,6 +254,7 @@ class CheckpointObject(SeqObject):
     """
 
     state_words = 2
+    READ_ONLY = frozenset({"CKPTGET"})
 
     def init_state(self, nvm: NVM, st_base: int) -> None:
         nvm.write_range(st_base, [0, None])
@@ -280,6 +291,8 @@ class HeapObject(SeqObject):
     State layout: word 0 = current size, words 1..capacity = the array.
     Supports HINSERT / HDELETEMIN / HGETMIN.
     """
+
+    READ_ONLY = frozenset({"HGETMIN"})
 
     def __init__(self, capacity: int) -> None:
         self.capacity = capacity

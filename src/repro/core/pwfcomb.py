@@ -61,7 +61,12 @@ class _SRef:
         self._mutex = threading.Lock()
         self._counters = counters
         self._clock = nvm.clock
-        nvm.write(addr, value)
+        # Recovery rebuilds the mirror from the durable word itself
+        # (reset_sref passes nvm.read(addr) back in); rewriting the
+        # identical value would dirty the line with nothing new to
+        # persist before the recovery psync.
+        if nvm.read(addr) != value:
+            nvm.write(addr, value)
 
     def ll(self):
         if self._counters:

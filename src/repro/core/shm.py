@@ -503,7 +503,10 @@ class ShmAtomicRef:
     def reset(self, value: Any) -> None:
         with self._lock:
             self._words.set(self._idx, value)
-            if self._mnvm is not None:
+            # construction / post-crash reset seeds the ref with the
+            # mirror word's own durable value — rewriting it would dirty
+            # the line with nothing new to persist (see _SRef.__init__)
+            if self._mnvm is not None and self._mnvm.read(self._maddr) != value:
                 self._mnvm.write(self._maddr, value)
             self._mv[self._voff] = 0
 
@@ -553,7 +556,11 @@ class ShmSRef:
     def reset(self, nvm: "ShmNVM", addr: int, value: int) -> None:
         with self._mutex:
             self._mv[self._soff] = value
-            nvm.write(addr, value)
+            # Post-crash reset passes the durable word's own value back
+            # in — rewriting it would dirty the line with nothing new
+            # to persist (see _SRef.__init__).
+            if nvm.read(addr) != value:
+                nvm.write(addr, value)
             self._mv[self._voff] = 0
 
 
@@ -1012,7 +1019,8 @@ class ShmNVM(NVM):
                  backend: Optional[ShmBackend] = None,
                  segments: int = 1,
                  pwb_nop: bool = False, psync_nop: bool = False,
-                 persist_latency: float = 0.0) -> None:
+                 persist_latency: float = 0.0,
+                 audit: bool = False) -> None:
         if backend is None:
             backend = ShmBackend(data_words=n_words, segments=segments)
             n_words = backend.data_words
@@ -1044,6 +1052,17 @@ class ShmNVM(NVM):
         self.counters = _ShmCounters(backend.mv)
         self._crash_rng = None
         self._default_seg = 0
+        # Persist-ordering audit (DESIGN.md §10): per-PROCESS state —
+        # sound and complete for in-process drivers (the deterministic
+        # analysis sweep); worker processes each see only their own
+        # instructions.  The shm NVM has no VClock, so the audit covers
+        # the flush-state classes (unflushed/redundant), not order
+        # races.  Disabled under the NOP ablations, like the thread NVM.
+        self._audit = None
+        if audit and not (pwb_nop or psync_nop):
+            from ..analysis.audit import PersistAudit   # lazy: no cycle
+            self._audit = PersistAudit(self)
+            self._install_audit_hooks()
 
     # ------------------------------------------------------------------ #
     @property
@@ -1178,16 +1197,20 @@ class ShmNVM(NVM):
         return sum(heap.lines(off) for off in set(refs))
 
     def _ring_append_locked(self, s: int, first: int,
-                            n_lines: int) -> int:
+                            n_lines: int, spill_out=None) -> int:
         """Append one entry to segment ``s``'s ring; returns the blob
-        line count charged on top of the word lines."""
+        line count charged on top of the word lines.  ``spill_out``
+        collects the line runs of any overflow early-drain so the audit
+        can retire them without an ordering judgment."""
         mv = self._mv
         size = _ENT_HDR + n_lines * LINE * WORD_I64
         rslot = self._seg_slot(s, _S_RING)
         used = mv[rslot]
         if used + size > self.backend.ring_seg:
             # early completion of pending write-backs (see class doc)
-            self._drain_ring_locked(s)
+            drained = self._drain_ring_locked(s)
+            if spill_out is not None:
+                spill_out.extend(drained)
             mv[_M_SPILLS] += 1
             mv[self._seg_slot(s, _S_SPILLS)] += 1
             used = 0
@@ -1332,6 +1355,8 @@ class ShmNVM(NVM):
         """Shared body of pwb/persist_lines: queue every (line) run on
         its segment's ring, count word + blob lines."""
         split = self._split_runs(runs)
+        aud = self._audit
+        spilled: Optional[list] = [] if aud is not None else None
         mv = self._mv
         with self._lock:
             self._halt_check_locked()
@@ -1339,7 +1364,8 @@ class ShmNVM(NVM):
             for s, first, n_lines in split:
                 if not self.pwb_nop:
                     blob_lines = self._ring_append_locked(s, first,
-                                                          n_lines)
+                                                          n_lines,
+                                                          spilled)
                 elif mv[_M_BLOBBED]:
                     refs = self._blob_refs_in(
                         self.backend.vol_base + WORD_I64 * first * LINE,
@@ -1350,6 +1376,10 @@ class ShmNVM(NVM):
                 mv[self._seg_slot(s, _S_PWB)] += n_lines + blob_lines
                 total += n_lines + blob_lines
             mv[_M_PWB] += total
+        if aud is not None:
+            if spilled:
+                aud.on_spill(spilled)
+            aud.on_pwb([(first, n) for _s, first, n in split])
         self._tick_crash_point()
 
     def pwb(self, addr: int, n_words: int = 1) -> None:
@@ -1371,13 +1401,17 @@ class ShmNVM(NVM):
 
     def pfence(self) -> None:
         mv = self._mv
+        had_pending = False
         with self._lock:
             self._halt_check_locked()
             mv[_M_PFENCE] += 1
             for s in range(self.segments):
                 if mv[self._seg_slot(s, _S_EFLAG)]:
+                    had_pending = True
                     mv[self._seg_slot(s, _S_EPOCH)] += 1
                     mv[self._seg_slot(s, _S_EFLAG)] = 0
+        if self._audit is not None:
+            self._audit.on_pfence(had_pending)
         self._tick_crash_point()
 
     def psync(self) -> None:
@@ -1394,6 +1428,11 @@ class ShmNVM(NVM):
                         # this is the per-segment psync accounting the
                         # NUMA-ish model exists to expose
                         mv[self._seg_slot(s, _S_PSYNC)] += 1
+        if self._audit is not None:
+            # no VClock on the shm NVM: sync_now=0 disables the order
+            # check, leaving the flush-state classes active
+            self._audit.on_psync(
+                [r for d in drained_by_seg.values() for r in d], 0.0)
         if drained_by_seg and self.persist_latency:
             for s, drained in drained_by_seg.items():
                 runs, total_lines = self._run_stats(drained)
@@ -1535,6 +1574,8 @@ class ShmNVM(NVM):
             # surviving processes may still be mid-store right now, and
             # power-on is the first quiesced point (see disarm_crash)
             mv[_M_HALT] = 1
+        if self._audit is not None:
+            self._audit.on_crash()
 
     # ---------------- introspection -------------------------------------- #
     def pending_lines(self) -> int:
@@ -1565,6 +1606,8 @@ class ShmNVM(NVM):
         for s in range(self.segments):
             for f in (_S_PWB, _S_PSYNC, _S_SPILLS):
                 mv[self._seg_slot(s, f)] = 0
+        if self._audit is not None:
+            self._audit.reset_metrics()
 
     def close(self) -> None:
         self._vol = self._dur = self._mv = None

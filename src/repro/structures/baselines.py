@@ -64,6 +64,13 @@ class LockDirectObject:
             plan = getattr(self.obj, "touch_plan", None)
             ranges = plan(nvm, self.st_base, func, args) if plan else None
             ret = self.obj.apply(nvm, self.st_base, func, args)
+            if func in self.obj.READ_ONLY:
+                # declared read-only: nothing written, and the response
+                # depends only on state already psync'd under this lock
+                # — fencing an empty epoch would be pure waste
+                if clk is not None:
+                    self._lock_vt = clk.now()
+                return ret
             if ranges is None:
                 nvm.pwb_range(self.st_base, self.obj.state_words)
             elif ranges:
@@ -111,6 +118,17 @@ class LockUndoLogObject:
                 clk.merge(self._lock_vt)
             plan = getattr(self.obj, "touch_plan", None)
             ranges = plan(nvm, self.st_base, func, args) if plan else None
+            if func in self.obj.READ_ONLY:
+                # declared read-only: no stores to log or roll back (a
+                # PMDK transaction with no stores writes no log), and
+                # prior ops drained their epochs before releasing the
+                # lock.  Ops that merely MAY be no-ops (stale CKPT) are
+                # not exempt: this baseline's documented shape pays its
+                # unconditional log + fence + psync there.
+                ret = self.obj.apply(nvm, self.st_base, func, args)
+                if clk is not None:
+                    self._lock_vt = clk.now()
+                return ret
             # 1. persist undo record: word-granular entries for the
             #    words about to change (PMDK logs ranges, not the whole
             #    object); objects without a plan snapshot full state.

@@ -1,0 +1,362 @@
+"""Persist-ordering detector (repro.analysis.audit, DESIGN.md §10).
+
+Seeded-violation fixtures — tiny hand-written instruction sequences
+that each plant exactly one class of persist-ordering bug and assert
+the detector flags it AT THE OFFENDING SITE:
+
+  * drop the pwb        -> unflushed-at-commit
+  * reorder the psync   -> psync-order-race (Lamport clock proof)
+  * read the raced line
+    after a crash       -> post-crash-unordered-read
+  * flush twice         -> redundant-pwb (the minimality metric)
+  * fence an empty
+    epoch               -> redundant-pfence
+
+plus the no-false-positive direction: a textbook persist sentence
+raises nothing, and the full registry matrix (every structure x every
+protocol, both backends, through the same crash/recover schedule the
+54-case protocol-matrix test drives) comes back clean against the
+checked-in allowlist.
+"""
+
+import random
+import threading
+
+import pytest
+
+from repro.analysis import load_allowlist
+from repro.analysis import sweep as sweep_mod
+from repro.analysis.audit import Finding
+from repro.analysis.sweep import run_sweep, sweep_cell
+from repro.core.nvm import LINE, NVM
+from repro.core.shm import ShmNVM
+
+HERE = "test_analysis_audit.py"
+
+
+def _nvm():
+    """Audited thread NVM with the virtual clock engaged (profile) so
+    the happens-before checks run."""
+    return NVM(1 << 12, profile="optane", audit=True)
+
+
+def _one(findings, rule):
+    hits = [f for f in findings if f.rule == rule]
+    assert len(hits) == 1, findings
+    return hits[0]
+
+
+# --------------------------------------------------------------------- #
+# seeded violations                                                     #
+# --------------------------------------------------------------------- #
+def test_dropped_pwb_is_unflushed_at_commit():
+    nvm = _nvm()
+    a = nvm.alloc(1)
+    nvm.write(a, 7)            # <- the offending store (never flushed)
+    nvm.psync()                # commit point
+    f = _one(nvm.audit.findings, "unflushed-at-commit")
+    assert f.gating
+    # blamed at the WRITE site in this file, not inside the simulator
+    assert f.site.startswith(HERE + ":")
+    assert f.site_key == HERE + "::test_dropped_pwb_is_unflushed_at_commit"
+    assert f.line == a // LINE
+    # ... and it is exactly once even though psync runs again
+    nvm.psync()
+    assert len(nvm.audit.findings) == 1
+
+
+def test_other_threads_dirty_lines_not_blamed_at_my_commit():
+    """A psync only judges lines the SYNCING thread dirtied: another
+    thread's in-flight store is judged at that thread's own commit."""
+    nvm = _nvm()
+    a, b = nvm.alloc(1), nvm.alloc(1)
+    with nvm.clock.bind(1):
+        nvm.write(a, 1)        # thread 1 leaves a dirty (no commit yet)
+    with nvm.clock.bind(2):
+        nvm.write(b, 2)
+        nvm.pwb(b)
+        nvm.psync()            # thread 2's commit: its own line is clean
+    assert nvm.audit.findings == []
+    with nvm.clock.bind(1):
+        nvm.psync()            # now thread 1 commits -> flagged
+    assert _one(nvm.audit.findings, "unflushed-at-commit").line == a // LINE
+
+
+def test_double_flush_is_redundant_pwb():
+    nvm = _nvm()
+    a = nvm.alloc(1)
+    nvm.write(a, 1)
+    nvm.pwb(a)
+    nvm.pwb(a)                 # <- same thread re-flushes, nothing new
+    nvm.psync()
+    nvm.pwb(a)                 # <- and again on the drained line
+    aud = nvm.audit
+    assert aud.redundant_pwbs == 2
+    f = _one(aud.findings, "redundant-pwb")
+    assert not f.gating and f.count == 2
+    assert f.site.startswith(HERE + ":")
+    # non-gating: the sweep would not fail on it
+    assert aud.gating_findings() == []
+    rep = aud.report()
+    assert rep["redundant_pwbs"] == 2 and rep["gating"] == []
+
+
+def test_helping_reflush_is_not_redundant():
+    """Re-flushing a line LAST FLUSHED BY ANOTHER THREAD is the normal
+    helping pattern (pwfcomb recovery) and must not count."""
+    nvm = _nvm()
+    a = nvm.alloc(1)
+    with nvm.clock.bind(1):
+        nvm.write(a, 1)
+        nvm.pwb(a)
+        nvm.psync()
+    with nvm.clock.bind(2):
+        nvm.pwb(a)             # helper covers the same (clean) line
+    assert nvm.audit.redundant_pwbs == 0
+    assert nvm.audit.findings == []
+
+
+def test_empty_epoch_pfence_is_redundant():
+    nvm = _nvm()
+    nvm.pfence()               # <- nothing pwb'd in this epoch
+    aud = nvm.audit
+    assert aud.redundant_pfences == 1
+    f = _one(aud.findings, "redundant-pfence")
+    assert not f.gating
+    assert f.site.startswith(HERE + ":")
+
+
+def test_reordered_psync_is_an_order_race_and_taints_recovery():
+    """Thread 1 pwbs at a large clock stamp; thread 2 — whose clock
+    never caught up, i.e. NO happens-before path reaches the pwb —
+    psyncs it to the durable image.  That drain is a race outcome, and
+    a post-crash read of the line is flagged as consuming it."""
+    nvm = _nvm()
+    a = nvm.alloc(1)
+    with nvm.clock.bind(1):
+        # advance thread 1's clock past zero with a full sentence...
+        nvm.write(a, 1)
+        nvm.pwb(a)
+        nvm.psync()
+        assert nvm.clock.now() > 0.0
+        # ...then leave a pwb in flight with stamp > 0
+        nvm.write(a, 2)
+        nvm.pwb(a)
+    with nvm.clock.bind(2):
+        assert nvm.clock.now() == 0.0
+        nvm.psync()            # <- drains thread 1's pwb unordered
+    f = _one(nvm.audit.findings, "psync-order-race")
+    assert f.gating and f.line == a // LINE
+    assert f.site_key == \
+        HERE + "::test_reordered_psync_is_an_order_race_and_taints_recovery"
+
+    nvm.crash(random.Random(7))
+    nvm.read(a)                # recovery consumes the raced line
+    f = _one(nvm.audit.findings, "post-crash-unordered-read")
+    assert f.gating and f.line == a // LINE
+    assert f.site.startswith(HERE + ":")
+
+
+def test_ordered_handoff_is_not_a_race():
+    """Same shape, but the syncer's clock has seen the pwb stamp
+    (merge models the acquire edge): no finding."""
+    nvm = _nvm()
+    a = nvm.alloc(1)
+    with nvm.clock.bind(1):
+        nvm.write(a, 1)
+        nvm.pwb(a)
+        stamp = nvm.clock.now()
+    with nvm.clock.bind(2):
+        nvm.clock.merge(stamp + 1.0)   # happens-before edge observed
+        nvm.psync()
+    assert nvm.audit.findings == []
+
+
+def test_rewrite_clears_the_taint():
+    """A raced line that recovery REWRITES before reading is untainted:
+    the race outcome was never consumed."""
+    nvm = _nvm()
+    a = nvm.alloc(1)
+    with nvm.clock.bind(1):
+        nvm.write(a, 1)
+        nvm.pwb(a)
+        nvm.psync()
+        nvm.write(a, 2)
+        nvm.pwb(a)
+    with nvm.clock.bind(2):
+        nvm.psync()            # race (flagged above-style)
+    nvm.crash(random.Random(7))
+    nvm.write(a, 0)            # recovery reinitializes the word
+    nvm.read(a)
+    rules = {f.rule for f in nvm.audit.findings}
+    assert "post-crash-unordered-read" not in rules
+
+
+# --------------------------------------------------------------------- #
+# no false positives                                                    #
+# --------------------------------------------------------------------- #
+def test_textbook_sentence_is_clean():
+    nvm = _nvm()
+    a = nvm.alloc(2 * LINE)
+    for i in range(4):
+        nvm.write(a + i, i)
+        nvm.pwb(a + i)
+    nvm.pfence()
+    nvm.write(a + LINE, 99)    # second epoch
+    nvm.pwb(a + LINE)
+    nvm.psync()
+    aud = nvm.audit
+    assert aud.findings == []
+    assert aud.redundant_pwbs == 0 and aud.redundant_pfences == 0
+
+
+def test_audit_keeps_counters_identical():
+    """audit=True must not move the persistence counters (it pins
+    force_discrete, whose equivalence the property tests gate)."""
+    def drive(nvm):
+        a = nvm.alloc(8)
+        for i in range(8):
+            nvm.write(a + i, i)
+        nvm.pwb(a, 8)
+        nvm.pfence()
+        nvm.psync()
+        return dict(nvm.counters)
+
+    plain = drive(NVM(1 << 12, profile="optane"))
+    audited = drive(_nvm())
+    assert plain == audited
+
+
+def test_reset_metrics_drops_metric_not_gating():
+    nvm = _nvm()
+    a = nvm.alloc(1)
+    nvm.write(a, 1)
+    nvm.pwb(a)
+    nvm.pwb(a)                 # redundant (metric)
+    b = nvm.alloc(1)
+    nvm.write(b, 2)
+    nvm.psync()                # unflushed-at-commit on b (gating)
+    nvm.reset_counters()       # benches zero the measured window here
+    aud = nvm.audit
+    assert aud.redundant_pwbs == 0
+    assert {f.rule for f in aud.findings} == {"unflushed-at-commit"}
+
+
+# --------------------------------------------------------------------- #
+# the shm NVM (flush-state classes; no clock, so no order checks)       #
+# --------------------------------------------------------------------- #
+def test_shm_nvm_flags_flush_state_classes():
+    nvm = ShmNVM(1 << 14, audit=True)
+    try:
+        a, b = nvm.alloc(1), nvm.alloc(1)
+        nvm.write(a, 1)
+        nvm.psync()            # dropped pwb
+        nvm.write(b, 2)
+        nvm.pwb(b)
+        nvm.pwb(b)             # double flush
+        nvm.pfence()
+        nvm.psync()
+        aud = nvm.audit
+        assert _one(aud.findings, "unflushed-at-commit").line == a // LINE
+        assert aud.redundant_pwbs == 1
+        rules = {f.rule for f in aud.findings}
+        assert "psync-order-race" not in rules      # clockless: disabled
+    finally:
+        nvm.close()
+
+
+def test_shm_threaded_keys_are_per_thread():
+    """Without a clock the audit keys on the OS thread: another
+    thread's dirty line is not blamed at this thread's commit."""
+    nvm = ShmNVM(1 << 14, audit=True)
+    try:
+        a = nvm.alloc(1)
+
+        def writer():
+            nvm.write(a, 5)    # dirty, never committed by this thread
+
+        t = threading.Thread(target=writer)
+        t.start()
+        t.join()
+        nvm.psync()            # main thread's commit
+        assert nvm.audit.findings == []
+    finally:
+        nvm.close()
+
+
+# --------------------------------------------------------------------- #
+# registry-matrix sweep: zero non-allowlisted findings                  #
+# --------------------------------------------------------------------- #
+def test_sweep_cell_reports_and_cleans_up():
+    cell = sweep_cell("queue", "pbcomb", "threads",
+                      rounds=2, post_crash_rounds=1)
+    assert cell["error"] is None
+    assert cell["ops"] == 3 * sweep_mod.N_THREADS
+    assert [f for f in cell["findings"] if f.gating] == []
+    assert cell["redundant_pwbs"] == 0          # paper P2, as a number
+
+
+def test_sweep_cell_surfaces_driver_errors():
+    cell = sweep_cell("queue", "no-such-protocol", "threads", rounds=1)
+    assert cell["error"] is not None
+    assert cell["findings"] == []
+
+
+def test_full_matrix_sweep_no_false_positives():
+    """The tentpole gate, in-process: every registry (kind, protocol)
+    cell on BOTH backends through announce/invoke rounds + adversarial
+    crash + recovery + snapshot + post-crash rounds — the same schedule
+    shape as the 54-case protocol-matrix crash test — raises zero
+    non-allowlisted gating findings, and the combining protocols
+    report zero redundant persists."""
+    allow = load_allowlist()
+    res = run_sweep(backends=("threads", "shm"), quick=True, allow=allow)
+    assert res["failures"] == 0, [
+        (c["kind"], c["protocol"], c["backend"], c["error"], c["gating"])
+        for c in res["cells"] if c["error"] or c["gating"]]
+    from repro.api import entries
+    assert len(res["cells"]) == 2 * len(list(entries()))   # both backends
+    for c in res["cells"]:
+        if c["protocol"] in ("pbcomb", "pwfcomb"):
+            assert c["redundant_pwbs"] == 0, c
+
+
+# --------------------------------------------------------------------- #
+# sweep rendering + CLI plumbing (run_sweep monkeypatched: cheap)       #
+# --------------------------------------------------------------------- #
+def _fake_result(with_violation: bool):
+    f = Finding("unflushed-at-commit", "x.py:3", "x.py::X.op", 4,
+                thread=1, detail="seeded", gating=True)
+    cell = {"kind": "queue", "protocol": "pbcomb", "backend": "threads",
+            "ops": 12, "redundant_pwbs": 0, "redundant_pfences": 0,
+            "error": None, "allowed": [],
+            "gating": [f] if with_violation else []}
+    return {"cells": [cell], "failures": 1 if with_violation else 0}
+
+
+def test_sweep_summary_and_json_render():
+    good = sweep_mod.render_summary(_fake_result(False))
+    assert "No non-allowlisted violations." in good
+    bad = sweep_mod.render_summary(_fake_result(True))
+    assert "unflushed-at-commit" in bad and "`x.py::X.op`" in bad
+    doc = sweep_mod._to_json(_fake_result(True))
+    assert doc["schema"] == "analysis.sweep.v1"
+    assert doc["failures"] == 1
+    assert doc["cells"][0]["gating"][0]["site_key"] == "x.py::X.op"
+
+
+@pytest.mark.parametrize("violation,code", [(False, 0), (True, 1)])
+def test_sweep_cli_exit_codes(monkeypatch, tmp_path, capsys,
+                              violation, code):
+    monkeypatch.setattr(sweep_mod, "run_sweep",
+                        lambda **kw: _fake_result(violation))
+    out_json = tmp_path / "sweep.json"
+    out_md = tmp_path / "summary.md"
+    rc = sweep_mod.main(["--quick", "--backend", "threads",
+                         "--json", str(out_json),
+                         "--summary", str(out_md)])
+    assert rc == code
+    assert "Persist-ordering sweep" in capsys.readouterr().out
+    assert "Matrix" in out_md.read_text()
+    import json
+    assert json.loads(out_json.read_text())["failures"] == (1 if code else 0)

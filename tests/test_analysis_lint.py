@@ -1,0 +1,229 @@
+"""Static protocol-invariant lint (repro.analysis.lint, DESIGN.md §10).
+
+Synthetic single-rule fixtures (tmp_path modules that each violate
+exactly one invariant), the allowlist parser/matcher, the CLI exit
+codes, and the repo-level gate: linting the real protocol scope yields
+zero non-allowlisted findings against the checked-in allowlist.
+"""
+
+import pytest
+
+from repro.analysis.lint import (Allowlist, default_scope, lint_paths,
+                                 load_allowlist, main, render_summary)
+
+
+def _lint(tmp_path, source, name="mod.py"):
+    p = tmp_path / name
+    p.write_text(source)
+    return p, lint_paths([str(p)])
+
+
+def _rules(findings):
+    return [f.rule for f in findings]
+
+
+# --------------------------------------------------------------------- #
+# one fixture per rule                                                  #
+# --------------------------------------------------------------------- #
+def test_raw_lock_via_module_attribute(tmp_path):
+    _, fs = _lint(tmp_path, """
+import threading
+
+class Q:
+    def __init__(self):
+        self.lock = threading.Lock()
+""")
+    f, = fs
+    assert f.rule == "raw-lock"
+    assert f.site_key == "mod.py::Q.__init__"
+    assert f.lineno == 6
+
+
+def test_raw_lock_via_from_import(tmp_path):
+    _, fs = _lint(tmp_path, """
+from threading import RLock as L
+
+def make():
+    return L()
+""")
+    assert _rules(fs) == ["raw-lock"]
+    assert fs[0].site_key == "mod.py::make"
+
+
+def test_module_global_mutable(tmp_path):
+    _, fs = _lint(tmp_path, """
+REGISTRY = {}
+CACHE: dict = dict()
+__all__ = ["REGISTRY"]
+FROZEN = ("a", "b")
+LIMIT = 8
+
+def f():
+    local = {}          # locals are fine
+    return local
+""")
+    assert sorted(_rules(fs)) == ["module-global", "module-global"]
+    assert {f.site_key for f in fs} == {"mod.py::REGISTRY", "mod.py::CACHE"}
+
+
+def test_wall_clock(tmp_path):
+    _, fs = _lint(tmp_path, """
+import time
+import datetime
+
+def stamp():
+    return time.perf_counter()
+
+def day():
+    return datetime.datetime.now()
+
+def backoff():
+    time.sleep(0.001)   # scheduling, not modeled time: allowed
+""")
+    assert _rules(fs) == ["wall-clock", "wall-clock"]
+    assert {f.qual for f in fs} == {"stamp", "day"}
+
+
+def test_unseeded_random(tmp_path):
+    _, fs = _lint(tmp_path, """
+import random
+from random import Random
+
+def flaky():
+    return random.random()
+
+def also_flaky():
+    return Random()
+
+def fine(seed):
+    return random.Random(seed).randint(0, 3)
+""")
+    assert _rules(fs) == ["unseeded-random", "unseeded-random"]
+    assert {f.qual for f in fs} == {"flaky", "also_flaky"}
+
+
+def test_unflushed_store(tmp_path):
+    _, fs = _lint(tmp_path, """
+class S:
+    def bad(self, nvm, a):
+        nvm.write(a, 1)
+
+    def bad_alias(self, nvm, a):
+        w = nvm.write_range
+        w(a, [1, 2])
+
+    def good(self, nvm, a):
+        nvm.write(a, 1)
+        nvm.pwb(a)
+
+    def good_alias(self, nvm, a):
+        flush = nvm.pwb_range
+        nvm.copy_range(a, a + 8, 4)
+        flush(a, 4)
+
+    def apply(self, nvm, base, func, args):
+        nvm.write(base, 1)          # exempt: round commit persists it
+
+    def init_state(self, nvm, base):
+        nvm.write_range(base, [0])  # exempt likewise
+""")
+    assert _rules(fs) == ["unflushed-store", "unflushed-store"]
+    assert {f.site_key for f in fs} == {"mod.py::S.bad", "mod.py::S.bad_alias"}
+
+
+def test_clean_module_has_no_findings(tmp_path):
+    _, fs = _lint(tmp_path, """
+from repro.core.nvm import NVM
+
+class Obj:
+    def op(self, nvm, a):
+        nvm.write(a, 1)
+        nvm.pwb(a)
+        nvm.psync()
+""")
+    assert fs == []
+
+
+# --------------------------------------------------------------------- #
+# allowlist                                                             #
+# --------------------------------------------------------------------- #
+def test_allowlist_parse_and_match(tmp_path):
+    p = tmp_path / "allow.txt"
+    p.write_text("""\
+# comment line
+
+raw-lock mod.py::Q.*        # constructor seam, justified
+module-global other.py::REG # frozen at import
+""")
+    allow = load_allowlist(str(p))
+    assert len(allow.entries) == 2
+    assert allow.allowed("raw-lock", "mod.py::Q.__init__")
+    assert not allow.allowed("raw-lock", "mod.py::R.__init__")
+    assert not allow.allowed("wall-clock", "mod.py::Q.__init__")  # per-rule
+    assert allow.allowed("module-global", "other.py::REG")
+
+
+def test_allowlist_rejects_malformed(tmp_path):
+    p = tmp_path / "allow.txt"
+    p.write_text("raw-lock\n")
+    with pytest.raises(ValueError, match="malformed"):
+        load_allowlist(str(p))
+
+
+def test_allowlist_missing_file_is_empty(tmp_path):
+    allow = load_allowlist(str(tmp_path / "nope.txt"))
+    assert allow.entries == []
+    assert not allow.allowed("raw-lock", "x.py::y")
+
+
+# --------------------------------------------------------------------- #
+# repo gate: the real scope is clean against the real allowlist         #
+# --------------------------------------------------------------------- #
+def test_repo_scope_zero_non_allowlisted():
+    allow = load_allowlist()
+    scope = default_scope()
+    assert len(scope) >= 4          # pbcomb, pwfcomb, structures, api
+    bad = [f for f in lint_paths(scope) if not allow.allowed(f.rule,
+                                                            f.site_key)]
+    assert bad == [], bad
+
+
+def test_every_allowlist_entry_is_justified():
+    for rule, pat, why in load_allowlist().entries:
+        assert why, f"allowlist entry '{rule} {pat}' has no justification"
+
+
+# --------------------------------------------------------------------- #
+# CLI                                                                   #
+# --------------------------------------------------------------------- #
+def test_cli_fails_on_violation_and_passes_with_allowlist(tmp_path,
+                                                          capsys):
+    bad = tmp_path / "proto.py"
+    bad.write_text("import threading\n"
+                   "def f():\n"
+                   "    return threading.Lock()\n")
+    assert main([str(bad)]) == 1
+    out = capsys.readouterr().out
+    assert "[FAIL" in out and "raw-lock" in out
+
+    allow = tmp_path / "allow.txt"
+    allow.write_text("raw-lock proto.py::f  # fixture\n")
+    summary = tmp_path / "summary.md"
+    assert main([str(bad), "--allowlist", str(allow),
+                 "--summary", str(summary)]) == 0
+    assert "allowlisted" in summary.read_text()
+
+
+def test_cli_clean_default_scope(capsys):
+    assert main([]) == 0
+    assert "non-allowlisted" in capsys.readouterr().out
+
+
+def test_render_summary_flags_violations(tmp_path):
+    p = tmp_path / "m.py"
+    p.write_text("import threading\nL = threading.Lock()\n")
+    found = lint_paths([str(p)])
+    lines = render_summary(found, Allowlist([]))
+    assert any("VIOLATION" in ln for ln in lines)
+    lines = render_summary([], Allowlist([]))
+    assert any("clean" in ln for ln in lines)

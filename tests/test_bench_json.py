@@ -26,7 +26,8 @@ EPS = 0.05
 V1_KEYS = {"name", "us_per_op", "pwbs_per_op", "psyncs_per_op"}
 V2_KEYS = V1_KEYS | {"modeled_us_per_op", "modeled_pwbs_per_op",
                      "modeled_psyncs_per_op", "profile",
-                     "degree_mean", "degree_max", "ring_spills"}
+                     "degree_mean", "degree_max", "ring_spills",
+                     "redundant_pwbs_per_op"}
 
 
 @pytest.fixture(scope="module")
@@ -70,6 +71,9 @@ def test_schema(bench_doc):
             assert r["degree_max"] is None, r
         else:
             assert r["degree_mean"] >= 0 and r["degree_max"] >= 0, r
+        # minimality metric comes only from --audit runs; this
+        # fixture's run (the gated shape) must leave it null
+        assert r["redundant_pwbs_per_op"] is None, r
 
 
 def test_covers_figures_and_framework(bench_doc):
@@ -158,8 +162,11 @@ def test_mp_serving_checkpoint_cells_emit_v2_rows():
             bench_checkpoint_cell("pbcomb", 2, 10, payload_words=8),
             bench_mixed_cell(2, 8, 6)]
     for r in rows:
+        # modeled columns + the audit metric are filled in (nullable)
+        # at the main() level, not by the cell functions
         assert set(r) | {"modeled_us_per_op", "modeled_pwbs_per_op",
-                         "modeled_psyncs_per_op", "profile"} \
+                         "modeled_psyncs_per_op", "profile",
+                         "redundant_pwbs_per_op"} \
             >= MP_ROW_KEYS - {"profile"}
         assert r["workers"] == 2
         assert r["segments"] == 2
@@ -204,6 +211,15 @@ def test_mp_check_rows_gate():
     # a missing gated row is itself a failure
     assert any("no serving/pbcomb row" in f
                for f in check_rows([_mp_row("queue/pbcomb")], workers=4))
+    # a combining row reporting redundant persists violates minimality
+    bad = [dict(r) for r in healthy]
+    bad[0] = dict(bad[0], redundant_pwbs_per_op=0.5)
+    assert any("queue/pbcomb" in f and "redundant" in f
+               for f in check_rows(bad, workers=4))
+    # ... but a per-op-persist baseline reporting some is tolerated
+    ok = [dict(r) for r in healthy]
+    ok[1] = dict(ok[1], redundant_pwbs_per_op=0.5)
+    assert check_rows(ok, workers=4) == []
 
 
 def test_fig8_reproduces_paper_ordering(bench_doc):
