@@ -59,6 +59,8 @@ JSON schema (``bench.fleet.v1``)::
               "first_saturated_rate_rps": float|null,
               "saturated_at_floor": bool, "steps": [...]},
      "checkpoint": {"step": int, "committed": int}}
+
+Full column contract: docs/BENCH_SCHEMAS.md.
 """
 
 from __future__ import annotations

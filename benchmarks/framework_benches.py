@@ -93,6 +93,85 @@ def structure_matrix_bench(kinds=("queue", "stack"), n_threads: int = 4,
     return out
 
 
+def vector_round_bench(kinds=("counter", "heap", "log"),
+                       degrees=(16, 256, 4096), iters: int = 60,
+                       runs: int = 5) -> List[Dict[str, Any]]:
+    """Combining-round body, vectorized vs per-op, across batch sizes.
+
+    Times exactly what the VectorApply seam replaces (DESIGN.md §11):
+    one committed round's simulation pass over ``d`` homogeneous
+    announced requests, ``obj.vector_apply`` (one jitted kernel) against
+    the identical per-op ``obj.apply`` loop, on the same sequential
+    object and state words.  Announce/seqlock/persistence costs are
+    deliberately excluded — they are identical on both sides and at
+    paper-scale degrees they drown the signal being measured.
+
+    The degree sweep is the honest result: on a CPU host the jitted
+    kernel pays a fixed dispatch cost (~tens of us), so the per-op loop
+    wins at paper-scale degrees (d≈threads) and the kernel wins once
+    rounds batch hundreds-to-thousands of requests (the fleet admission
+    window / RECORD_MANY shape).  Both sides of the crossover are
+    checked in so the trend is visible in every trajectory.
+
+    Rows are wall-only (``vector_apply`` column; ``profile`` absent →
+    never gated).  The seam does no persistence — the round body is
+    pure volatile compute, its persistence sentence happens outside the
+    measured region — so the pwb/pfence/psync columns are exactly 0.
+    """
+    from repro.core import NVM
+    from repro.core.objects import (FetchAddObject, HeapObject,
+                                    ResponseLogObject)
+
+    def mk(kind, d):
+        # each entry: (object, [(func, args)...] making one state-neutral
+        # iteration — heap pairs an insert round with a delete round)
+        if kind == "counter":
+            return FetchAddObject(), [("FAA", [1] * d)]
+        if kind == "heap":
+            return (HeapObject(max(1024, 2 * d)),
+                    [("HINSERT", [(i * 31) % 100_000 for i in range(d)]),
+                     ("HDELETEMIN", [None] * d)])
+        return (ResponseLogObject(max(256, d)),
+                [("RECORD", [(i % max(256, d), i + 1, i)
+                             for i in range(d)])])
+
+    out = []
+    for kind in kinds:
+        for d in degrees:
+            obj, batches = mk(kind, d)
+            nvm = NVM(1 << 22)
+            base = nvm.alloc(obj.state_words)
+            obj.init_state(nvm, base)
+            if any(obj.vector_apply(nvm, base, f, a) is None
+                   for f, a in batches):
+                continue                     # env without jax: no rows
+            ops = d * len(batches)
+            for vec in (False, True):
+                times = []
+                for _run in range(runs):
+                    gc.collect()
+                    t0 = time.perf_counter()
+                    if vec:
+                        for _ in range(iters):
+                            for f, a in batches:
+                                obj.vector_apply(nvm, base, f, a)
+                    else:
+                        for _ in range(iters):
+                            for f, batch in batches:
+                                for a in batch:
+                                    obj.apply(nvm, base, f, a)
+                    times.append(time.perf_counter() - t0)
+                el = sorted(times)[runs // 2] / iters
+                out.append({"name": f"{kind}/d{d}/"
+                                    f"{'vector' if vec else 'per-op'}",
+                            "us_per_op": el / ops * 1e6,
+                            "ops_per_s": ops / el,
+                            "pwb_per_op": 0.0, "pfence_per_op": 0.0,
+                            "psync_per_op": 0.0,
+                            "vector_apply": vec})
+    return out
+
+
 def checkpoint_bench(n_hosts: int = 8, rounds: int = 20,
                      shard_kb: int = 256) -> List[Dict[str, Any]]:
     payload = {"w": np.zeros(shard_kb * 256, np.float32)}  # shard_kb KiB

@@ -20,6 +20,12 @@ resulting ``modeled_us_per_op`` / ``modeled_pwbs_per_op`` /
 ``modeled_psyncs_per_op`` are byte-identical across runs, hosts, and
 --quick settings — they are the perf trajectory CI's gate diffs, and
 the counters are gated at ZERO tolerance.
+
+Run as a CLI (``python -m benchmarks.modeled``) this module emits the
+full-registry modeled matrix — deep fixed-round cells fast-forwarded
+by the scan-replay engine (kernels/scan_replay.py, DESIGN.md §11) —
+gated in CI against benchmarks/MODELED_baseline.json.  Column
+contract: docs/BENCH_SCHEMAS.md.
 """
 
 from __future__ import annotations
@@ -57,7 +63,17 @@ _SCHEDULES: Dict[str, List[Tuple[str, Any]]] = {
     "heap": [("insert", lambda p, r: (p * 31 + r) % 1_000_000),
              ("delete_min", None)],
     "counter": [("fetch_add", lambda p, r: 1)],
+    "log": [("record", lambda p, r: (p, r + 1, p * 1_000_000 + r))],
+    "ckpt": [("persist", lambda p, r: (r + 1, r))],
 }
+
+#: Kinds whose steady state allocates no NVM nodes — their modeled pass
+#: is exactly periodic, so the scan replay engine (kernels.scan_replay)
+#: may fast-forward it.  Node-pool kinds (queue/stack/durable-ms/dfc)
+#: hit chunk-refill rounds at long, capacity-dependent periods that a
+#: bounded verification window cannot rule out, so they always run the
+#: eager simulator under ``engine="auto"``.
+_SCAN_SAFE_KINDS = frozenset({"counter", "heap", "log", "ckpt"})
 
 
 def _summarize(nvm: NVM, t0_ns: float, total_ops: int,
@@ -85,8 +101,8 @@ def modeled_cell(kind: str, protocol: str, *,
                  profile: Optional[str] = None,
                  nvm_kw: Optional[dict] = None,
                  mk_kw: Optional[dict] = None,
-                 prefill: Optional[List[Tuple[str, Any]]] = None
-                 ) -> Dict[str, Any]:
+                 prefill: Optional[List[Tuple[str, Any]]] = None,
+                 engine: str = "eager") -> Dict[str, Any]:
     """Modeled metrics for one registry (kind, protocol) cell.
 
     ``prefill``: (op, arg) calls issued by logical thread 0 before the
@@ -94,6 +110,14 @@ def modeled_cell(kind: str, protocol: str, *,
     excluded by baselining at ``t0`` rather than resetting the clock —
     logical time is monotone, so stale hand-off stamps from the prefill
     can never inflate the measured window.
+
+    ``engine``: ``"eager"`` runs every round through the simulator;
+    ``"scan"`` hands the round loop to the periodic replay engine
+    (kernels/scan_replay.py) which fast-forwards the steady state and
+    is exact-or-fallback, so the modeled columns are byte-identical
+    either way; ``"auto"`` uses scan only for allocation-free kinds
+    (``_SCAN_SAFE_KINDS``).  Non-eager results carry the engine that
+    actually ran in a ``replay_engine`` key.
     """
     profile = profile or DEFAULT_PROFILE
     nvm_kw = dict(nvm_kw or {})
@@ -109,7 +133,8 @@ def modeled_cell(kind: str, protocol: str, *,
     t0 = nvm.clock.max_time_ns()
     schedule = _SCHEDULES[kind]
     combining = obj.adapter.can_announce
-    for r in range(rounds):
+
+    def run_round(r: int) -> None:
         op, argfn = schedule[r % len(schedule)]
         if combining:
             for p in range(1, n_threads):
@@ -123,7 +148,18 @@ def modeled_cell(kind: str, protocol: str, *,
             for p in range(n_threads):
                 fn = getattr(bounds[p], op)
                 fn(*(() if argfn is None else (argfn(p, r),)))
-    return _summarize(nvm, t0, rounds * n_threads, profile)
+
+    if engine == "scan" or (engine == "auto" and kind in _SCAN_SAFE_KINDS):
+        from repro.kernels.scan_replay import periodic_run
+        info = periodic_run(nvm, run_round, rounds, len(schedule))
+    else:
+        for r in range(rounds):
+            run_round(r)
+        info = None
+    out = _summarize(nvm, t0, rounds * n_threads, profile)
+    if info is not None:
+        out["replay_engine"] = info["engine"]
+    return out
 
 
 # ------------------------------------------------------------------ #
@@ -174,3 +210,98 @@ def modeled_fig1(name: str, *, n_threads: int = N_THREADS,
                 with clk.bind(p):
                     inst.op(p, "MUL", 1.000001, seq)
     return _summarize(nvm, t0, rounds * n_threads, profile)
+
+
+# ------------------------------------------------------------------ #
+# Full-registry modeled matrix (CLI; CI perf-smoke gates this)       #
+# ------------------------------------------------------------------ #
+#: Matrix rounds per cell.  Scan-safe kinds afford a much deeper run
+#: because the replay engine fast-forwards the periodic steady state;
+#: node-pool kinds stay on the eager simulator at a smaller (still
+#: deterministic) depth.  Both are independent of --quick, so a
+#: baseline captured in CI gates full local runs identically.
+MATRIX_ROUNDS = 16384
+MATRIX_ROUNDS_EAGER = 1024
+
+
+def modeled_matrix(*, engine: str = "auto",
+                   profile: Optional[str] = None) -> List[Dict[str, Any]]:
+    """Modeled columns for EVERY registry (kind, protocol) cell —
+    bench.v2-shaped rows named ``modeled_matrix/<kind>/<protocol>``.
+
+    The wall columns are null (nothing here is wall-timed) and the
+    modeled columns are deterministic, so ``perf_gate`` gates every
+    row.  ``replay_engine`` records which engine produced the row —
+    the columns are byte-identical across engines by the scan-replay
+    exactness contract (tests/test_modeled_scan.py).
+    """
+    from repro.api import registry
+    rows = []
+    for kind in registry.kinds():
+        for proto in registry.protocols_for(kind):
+            rounds = (MATRIX_ROUNDS if kind in _SCAN_SAFE_KINDS
+                      else MATRIX_ROUNDS_EAGER)
+            m = modeled_cell(kind, proto, rounds=rounds, engine=engine,
+                             profile=profile)
+            rows.append({
+                "name": f"modeled_matrix/{kind}/{proto}",
+                "us_per_op": None, "pwbs_per_op": None,
+                "psyncs_per_op": None,
+                "modeled_us_per_op": round(m["modeled_us_per_op"], 3),
+                "modeled_pwbs_per_op": round(m["modeled_pwb_per_op"], 3),
+                "modeled_psyncs_per_op": round(m["modeled_psync_per_op"], 3),
+                "profile": m["profile"],
+                "rounds": rounds,
+                "replay_engine": m.get("replay_engine", "eager"),
+            })
+    return rows
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    from benchmarks.common import atomic_write_json
+
+    from repro.core.nvm import PROFILES
+
+    ap = argparse.ArgumentParser(
+        description="Deterministic modeled matrix over the full "
+                    "structure registry (virtual-clock costs only)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write bench.v2-shaped results here, e.g. "
+                         "MODELED_ci.json")
+    ap.add_argument("--quick", action="store_true",
+                    help="accepted for CI symmetry with run.py; modeled "
+                         "sizes are fixed regardless, so the emitted "
+                         "rows are identical with and without it")
+    ap.add_argument("--engine", default="auto",
+                    choices=("auto", "eager", "scan"),
+                    help="round-loop engine (default auto: scan replay "
+                         "for allocation-free kinds, eager elsewhere); "
+                         "the modeled columns are byte-identical "
+                         "across engines")
+    ap.add_argument("--profile", default=None, choices=sorted(PROFILES),
+                    help="virtual-clock cost profile (default: "
+                         f"{DEFAULT_PROFILE})")
+    ap.add_argument("--tag", default="modeled-matrix")
+    args = ap.parse_args(argv)
+
+    rows = modeled_matrix(engine=args.engine, profile=args.profile)
+    width = max(len(r["name"]) for r in rows)
+    print(f"{'cell':{width}s} {'model-us/op':>12s} {'pwb/op':>8s} "
+          f"{'psync/op':>9s} {'rounds':>7s} {'engine':>7s}")
+    for r in rows:
+        print(f"{r['name']:{width}s} {r['modeled_us_per_op']:12.3f} "
+              f"{r['modeled_pwbs_per_op']:8.3f} "
+              f"{r['modeled_psyncs_per_op']:9.3f} {r['rounds']:7d} "
+              f"{r['replay_engine']:>7s}")
+    if args.json:
+        doc = {"schema": "bench.v2", "tag": args.tag, "quick": args.quick,
+               "profile": args.profile or DEFAULT_PROFILE, "audit": False,
+               "rows": rows}
+        atomic_write_json(args.json, doc)
+        print(f"\n(wrote {len(rows)} rows to {args.json})")
+
+
+if __name__ == "__main__":
+    main()

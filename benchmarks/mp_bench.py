@@ -62,6 +62,8 @@ JSON schema (``bench.mp.v2``, superset of v1)::
 matrix cell's modeled replay (deterministic; serving/checkpoint rows
 carry null) — ``--check`` additionally asserts the pbcomb/pwfcomb rows
 report 0, the paper's minimality claim machine-checked.
+
+Full column contract: docs/BENCH_SCHEMAS.md.
 """
 
 from __future__ import annotations

@@ -25,6 +25,8 @@ byte-exactly in both directions — CI runs the quick suite twice and
 uses this to prove determinism on every PR.
 
 Pure stdlib: the gate job needs no numpy/jax install.
+
+Gate rules + the schemas they act on: docs/BENCH_SCHEMAS.md.
 """
 
 from __future__ import annotations

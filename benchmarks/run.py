@@ -45,6 +45,9 @@ the same as a full run's, which is what makes the gate valid in CI.
 The smoke test (tests/test_bench_json.py) pins the schema plus the
 paper's core claim: pbcomb/pwfcomb rows spend at most ~one psync per
 op — one psync per combining ROUND.
+
+Column-by-column contract for this and every other emitted schema
+(bench.mp.v2, bench.fleet.v1, analysis.sweep.v1): docs/BENCH_SCHEMAS.md.
 """
 
 from __future__ import annotations
@@ -70,12 +73,14 @@ def collect(quick: bool = False):
         nt, ops = 3, 120
         heap_sizes = (64, 128)
         matrix_kw = dict(n_threads=3, ops_per_thread=40, runs=2)
+        vector_kw = dict(degrees=(16, 256), iters=10, runs=2)
         ckpt_kw = dict(n_hosts=2, rounds=3, shard_kb=16)
         serve_kw = dict(n_clients=2, reqs_per_client=2, gen_len=4)
     else:
         nt, ops = paper_figures.N_THREADS, paper_figures.OPS
         heap_sizes = (64, 128, 256, 512, 1024)
         matrix_kw = {}
+        vector_kw = {}
         ckpt_kw = {}
         serve_kw = {}
 
@@ -103,6 +108,10 @@ def collect(quick: bool = False):
                  None if "degree_mean" not in r
                  else round(r["degree_mean"], 3),
              "degree_max": r.get("degree_max"),
+             # VectorApply seam rows (vector_rounds table): which side
+             # of the jitted-kernel/per-op pair this row timed (null
+             # everywhere else; wall-only, never gated)
+             "vector_apply": r.get("vector_apply"),
              # ring-overflow early write-back completions, surfaced as
              # their own column instead of folded into pwb counts (shm
              # rows only; the thread NVM's epoch queue cannot spill)
@@ -144,6 +153,10 @@ def collect(quick: bool = False):
 
     add("matrix", "Framework — protocol matrix via the unified runtime API",
         framework_benches.structure_matrix_bench(**matrix_kw))
+    add("vector_rounds",
+        "Framework — combining-round body: jitted VectorApply kernel vs "
+        "per-op loop (degree sweep; wall-only)",
+        framework_benches.vector_round_bench(**vector_kw))
     add("checkpoint",
         "Framework — sharded checkpoint commit (combining vs naive)",
         framework_benches.checkpoint_bench(**ckpt_kw))

@@ -188,7 +188,8 @@ def render_summary(result: Dict[str, Any]) -> str:
         out += [f"| {c['kind']}/{c['protocol']} | {c['backend']} "
                 f"| driver-error | — | — | — | {c['error']} |"
                 for c in errs]
-        out.append("")
+        out += ["", "Triage guide — reproduce, read the rule, decide "
+                "bug/allowlist/detector-gap: docs/ANALYSIS.md", ""]
     else:
         out += ["No non-allowlisted violations.", ""]
     allowed = [(c, f) for c in result["cells"] for f in c["allowed"]]

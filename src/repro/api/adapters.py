@@ -259,8 +259,10 @@ class PWFStackAdapter(PBStackAdapter):
 class PBHeapAdapter(_CombiningAdapter):
     kind, protocol, OPS = "heap", "pbcomb", HEAP_OPS
 
-    def create(self, nvm, n_threads, counters=None, capacity=256, **kw):
-        return PBHeap(nvm, n_threads, capacity=capacity, counters=counters)
+    def create(self, nvm, n_threads, counters=None, capacity=256,
+               vector_apply=False, **kw):
+        return PBHeap(nvm, n_threads, capacity=capacity, counters=counters,
+                      vector_apply=vector_apply)
 
     def snapshot(self, core):
         base = _pb_st(core)
@@ -308,10 +310,11 @@ class PBLogAdapter(_ObjSnapshotMixin, _CombiningAdapter):
 
     kind, protocol, OPS = "log", "pbcomb", LOG_OPS
 
-    def create(self, nvm, n_threads, counters=None, n_clients=None, **kw):
+    def create(self, nvm, n_threads, counters=None, n_clients=None,
+               vector_apply=False, **kw):
         return PBComb(nvm, n_threads,
                       ResponseLogObject(n_clients or n_threads),
-                      counters=counters)
+                      counters=counters, vector_apply=vector_apply)
 
     def recover(self, core, p, op, args, seq):
         spec = self._spec(op)
@@ -357,9 +360,9 @@ class PBCkptAdapter(_ObjSnapshotMixin, _CombiningAdapter):
 
     kind, protocol, OPS = "ckpt", "pbcomb", CKPT_OPS
 
-    def create(self, nvm, n_threads, counters=None, **kw):
+    def create(self, nvm, n_threads, counters=None, vector_apply=False, **kw):
         return PBComb(nvm, n_threads, CheckpointObject(),
-                      counters=counters)
+                      counters=counters, vector_apply=vector_apply)
 
     def recover(self, core, p, op, args, seq):
         spec = self._spec(op)
@@ -379,8 +382,9 @@ class PWFCkptAdapter(PBCkptAdapter):
 class PBCounterAdapter(_CombiningAdapter):
     kind, protocol, OPS = "counter", "pbcomb", COUNTER_OPS
 
-    def create(self, nvm, n_threads, counters=None, **kw):
-        return PBComb(nvm, n_threads, FetchAddObject(), counters=counters)
+    def create(self, nvm, n_threads, counters=None, vector_apply=False, **kw):
+        return PBComb(nvm, n_threads, FetchAddObject(), counters=counters,
+                      vector_apply=vector_apply)
 
     def snapshot(self, core):
         return core.nvm.read(_pb_st(core))

@@ -138,7 +138,7 @@ class VClock:
     """
 
     __slots__ = ("profile", "_times", "_tls", "_device_free",
-                 "_device_lock")
+                 "_device_lock", "_tape")
 
     def __init__(self, profile: CostProfile) -> None:
         self.profile = profile
@@ -146,6 +146,10 @@ class VClock:
         self._tls = threading.local()
         self._device_free = 0.0
         self._device_lock = threading.Lock()
+        # Optional event recorder (kernels.scan_replay.ClockTape) for the
+        # periodic modeled-replay engine.  Single-threaded drivers only —
+        # attach/detach via that module, never while workers run.
+        self._tape = None
 
     def _key(self) -> Any:
         lid = getattr(self._tls, "lid", None)
@@ -163,16 +167,24 @@ class VClock:
             tls.lid = prev
 
     def now(self) -> float:
-        return self._times.get(self._key(), 0.0)
+        t = self._times.get(self._key(), 0.0)
+        if self._tape is not None:
+            return self._tape.record_now(self._key(), t)
+        return t
 
     def advance(self, ns: float) -> None:
         key = self._key()
         self._times[key] = self._times.get(key, 0.0) + ns
+        if self._tape is not None:
+            self._tape.record_adv(key, ns)
 
     def merge(self, t_ns: float) -> None:
         key = self._key()
-        if t_ns > self._times.get(key, 0.0):
+        cur = self._times.get(key, 0.0)
+        if t_ns > cur:
             self._times[key] = t_ns
+        if self._tape is not None:
+            self._tape.record_mrg(key, t_ns, cur)
 
     def sync_device(self, cost_ns: float) -> float:
         """Advance through the (serialized) write-back device: the drain
@@ -185,6 +197,8 @@ class VClock:
             t += cost_ns
             self._device_free = t
         self._times[key] = t
+        if self._tape is not None:
+            self._tape.record_dev(key, cost_ns)
         return t
 
     def max_time_ns(self) -> float:

@@ -13,6 +13,24 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from .nvm import NVM
 
+# Lazily-probed vectorized round bodies (repro.kernels.vector_rounds).
+# The probe is deferred so environments without jax (the numpy-only CI
+# legs) never pay — or fail — the kernels import; every ``vector_apply``
+# then simply reports "no vector path" and combiners run the per-op
+# loop.
+_VR: Any = None
+
+
+def _vector():
+    global _VR
+    if _VR is None:
+        try:
+            from ..kernels import vector_rounds
+            _VR = vector_rounds if vector_rounds.available() else False
+        except Exception:
+            _VR = False
+    return _VR or None
+
 
 class SeqObject:
     """A sequential object whose state lives in ``state_words`` NVM words."""
@@ -38,6 +56,27 @@ class SeqObject:
         (PBQueue's ``toPersist``)."""
         raise NotImplementedError
 
+    def vector_apply(self, nvm: NVM, st_base: int, func: str,
+                     args_list: List[Any],
+                     ctx: Optional[Any] = None) -> Optional[List[Any]]:
+        """VectorApply seam: apply a HOMOGENEOUS batch of ``func``
+        announcements (one per combined request, in announcement order)
+        as a single jitted kernel over the packed argument array, and
+        return the per-request responses — or None to make the combiner
+        fall back to d per-op ``apply`` calls.
+
+        The contract is exactness-or-decline: an implementation may only
+        return a response list if the resulting state words and
+        responses are identical to what the per-op loop would produce
+        (repro.kernels.vector_rounds documents the packing guards that
+        enforce this).  State is read and written through the volatile
+        ``read_range``/``write_range`` accessors, which cost zero NVM
+        persistence instructions — the enclosing round's commit sentence
+        persists the StateRec exactly as before, so modeled counters are
+        untouched by the vector path.  The base object declines always:
+        vectorization is opt-in per structure."""
+        return None
+
 
 class AtomicFloatObject(SeqObject):
     """The paper's synthetic benchmark object (Section 6, Figures 1-3):
@@ -53,6 +92,17 @@ class AtomicFloatObject(SeqObject):
         nvm.write(st_base, v * args)
         return v
 
+    def vector_apply(self, nvm, st_base, func, args_list, ctx=None):
+        vr = _vector()
+        if vr is None or func != "MUL":
+            return None
+        out = vr.mul_round(nvm.read(st_base), args_list)
+        if out is None:
+            return None
+        v, resps = out
+        nvm.write(st_base, v)
+        return resps
+
 
 class FetchAddObject(SeqObject):
     """Fetch&Add counter — handy for linearizability checking (the multiset
@@ -67,6 +117,17 @@ class FetchAddObject(SeqObject):
         v = nvm.read(st_base)
         nvm.write(st_base, v + args)
         return v
+
+    def vector_apply(self, nvm, st_base, func, args_list, ctx=None):
+        vr = _vector()
+        if vr is None or func != "FAA":
+            return None
+        out = vr.faa_round(nvm.read(st_base), args_list)
+        if out is None:
+            return None
+        v, resps = out
+        nvm.write(st_base, v)
+        return resps
 
 
 class SeqQueueObject(SeqObject):
@@ -101,6 +162,23 @@ class SeqQueueObject(SeqObject):
             nvm.write(st_base, head + 1)
             return v
         raise ValueError(f"unknown queue op {func}")
+
+    def vector_apply(self, nvm, st_base, func, args_list, ctx=None):
+        vr = _vector()
+        if vr is None or func not in ("ENQ", "DEQ"):
+            return None
+        head, tail = nvm.read(st_base), nvm.read(st_base + 1)
+        if type(head) is not int or type(tail) is not int:
+            return None
+        ring = nvm.read_range(st_base + 2, self.capacity)
+        out = vr.queue_round(ring, head, tail, func, args_list)
+        if out is None:
+            return None
+        ring2, h2, t2, resps = out
+        nvm.write(st_base, h2)
+        nvm.write(st_base + 1, t2)
+        nvm.write_range(st_base + 2, ring2)
+        return resps
 
     def touch_plan(self, nvm: NVM, st_base: int, func: str,
                    args: Any) -> List[Tuple[int, int]]:
@@ -151,6 +229,22 @@ class SeqStackObject(SeqObject):
             nvm.write(st_base, size - 1)
             return v
         raise ValueError(f"unknown stack op {func}")
+
+    def vector_apply(self, nvm, st_base, func, args_list, ctx=None):
+        vr = _vector()
+        if vr is None or func not in ("PUSH", "POP"):
+            return None
+        size = nvm.read(st_base)
+        if type(size) is not int:
+            return None
+        arr = nvm.read_range(st_base + 1, self.capacity)
+        out = vr.stack_round(arr, size, func, args_list)
+        if out is None:
+            return None
+        arr2, s2, resps = out
+        nvm.write(st_base, s2)
+        nvm.write_range(st_base + 1, arr2)
+        return resps
 
     def touch_plan(self, nvm: NVM, st_base: int, func: str,
                    args: Any) -> List[Tuple[int, int]]:
@@ -225,6 +319,26 @@ class ResponseLogObject(SeqObject):
                     nvm.read(st_base + 2 * c + 1))
         raise ValueError(f"unknown log op {func}")
 
+    def vector_apply(self, nvm, st_base, func, args_list, ctx=None):
+        # KV/log record batches: d RECORDs scatter-scanned in one kernel
+        # (RECORD_MANY batches are tuples-of-tuples — eager path).
+        vr = _vector()
+        if vr is None or func != "RECORD":
+            return None
+        if not all(isinstance(t, (tuple, list)) and len(t) == 3
+                   for t in args_list):
+            return None
+        out = vr.log_round(self.n_clients, args_list)
+        if out is None:
+            return None
+        writes, resps = out
+        for client, seq, resp in writes:
+            # response before seq — same torn-StateRec discipline as
+            # the eager ``_record``
+            nvm.write(st_base + 2 * client + 1, resp)
+            nvm.write(st_base + 2 * client, seq)
+        return resps
+
     def touch_plan(self, nvm: NVM, st_base: int, func: str,
                    args: Any) -> List[Tuple[int, int]]:
         if func == "RECORD":
@@ -273,6 +387,23 @@ class CheckpointObject(SeqObject):
         if func == "CKPTGET":
             return (nvm.read(st_base), nvm.read(st_base + 1))
         raise ValueError(f"unknown checkpoint op {func}")
+
+    def vector_apply(self, nvm, st_base, func, args_list, ctx=None):
+        vr = _vector()
+        if vr is None or func != "CKPT":
+            return None
+        if not all(isinstance(t, (tuple, list)) and len(t) == 2
+                   for t in args_list):
+            return None
+        out = vr.ckpt_round(nvm.read(st_base), args_list)
+        if out is None:
+            return None
+        st, pl, resps = out
+        if pl is not None:       # some element advanced the step
+            # payload before step — same torn-StateRec discipline
+            nvm.write(st_base + 1, pl)
+            nvm.write(st_base, st)
+        return resps
 
     def touch_plan(self, nvm: NVM, st_base: int, func: str,
                    args: Any) -> List[Tuple[int, int]]:
@@ -354,3 +485,22 @@ class HeapObject(SeqObject):
                     i = smallest
             return top
         raise ValueError(f"unknown heap op {func}")
+
+    def vector_apply(self, nvm, st_base, func, args_list, ctx=None):
+        # heap key-array ops: a homogeneous HINSERT/HDELETEMIN round is
+        # one lax.scan over the announcements, each step sifting via a
+        # lax.while_loop on the packed key array
+        vr = _vector()
+        if vr is None or func not in ("HINSERT", "HDELETEMIN"):
+            return None
+        size = nvm.read(st_base)
+        if type(size) is not int:
+            return None
+        arr = nvm.read_range(st_base + 1, self.capacity)
+        out = vr.heap_round(arr, size, func, args_list)
+        if out is None:
+            return None
+        arr2, size2, resps = out
+        nvm.write(st_base, size2)
+        nvm.write_range(st_base + 1, arr2)
+        return resps

@@ -74,11 +74,19 @@ class PBComb:
 
     def __init__(self, nvm: NVM, n_threads: int, obj: SeqObject,
                  counters: Optional[Counters] = None,
-                 park: bool = True) -> None:
+                 park: bool = True, vector_apply: bool = False) -> None:
         self.nvm = nvm
         self.n = n_threads
         self.obj = obj
         self._counters = counters
+        # VectorApply (DESIGN.md §11): when enabled, a combining pass
+        # collects its adoptable announcements first and a homogeneous
+        # batch executes as ONE jitted kernel (obj.vector_apply); any
+        # decline — mixed funcs, rich payloads, no jax — falls back to
+        # the identical per-op loop.  Off by default: the gated modeled
+        # trajectory is produced with the eager path, and the
+        # equivalence property tests are what license turning this on.
+        self._vector_enabled = bool(vector_apply)
         sw = obj.state_words
         self.state_words = sw
         self.rec_words = sw + 2 * n_threads
@@ -324,8 +332,10 @@ class PBComb:
         # Bounded: a served thread blocks until the round commits, so
         # each thread contributes at most one request per round (at
         # most n passes, typically 2).
+        vector = self._vector_enabled
         while True:
             pass_served = 0
+            batch = [] if vector else None
             deacts = nvm.read_range(deact_base, self.n)  # one slice, n reads
             for q in range(self.n):                          # line 16
                 req = request[q]
@@ -343,10 +353,21 @@ class PBComb:
                     continue
                 if clk is not None:
                     clk.merge(vt)         # Lamport receive of announce
+                if batch is not None:
+                    # VectorApply: adopt now, apply the whole pass below
+                    # (merging first is clock-identical — merge is a max)
+                    batch.append((q, func, args, act))
+                    continue
                 ret = self._apply(q, func, args, ind, p)       # lines 18-19
                 wr(retval_base + q, ret)                           # line 20
                 wr(deact_base + q, act)                            # line 21
                 pass_served += 1
+            if batch:
+                rets = self._apply_batch(batch, ind, p)
+                for (q, _f, _a, act), ret in zip(batch, rets):
+                    wr(retval_base + q, ret)                       # line 20
+                    wr(deact_base + q, act)                        # line 21
+                pass_served = len(batch)
             served += pass_served
             if pass_served == 0:
                 break
@@ -373,6 +394,22 @@ class PBComb:
                combiner: int) -> Any:
         return self.obj.apply(self.nvm, self.mem_base[ind], func, args,
                               ctx=self)
+
+    def _apply_batch(self, batch, ind: int, combiner: int) -> list:
+        """One collected combining pass: ``batch`` is the adoptable
+        announcements ``[(q, func, args, act), ...]`` in scan order.  A
+        homogeneous batch goes through the object's VectorApply seam
+        (one jitted kernel — DESIGN.md §11); a heterogeneous batch or a
+        seam decline runs the identical per-op loop."""
+        func = batch[0][1]
+        if all(b[1] == func for b in batch):
+            rets = self.obj.vector_apply(
+                self.nvm, self.mem_base[ind], func,
+                [b[2] for b in batch], ctx=self)
+            if rets is not None:
+                return rets
+        return [self._apply(q, f, a, ind, combiner)
+                for q, f, a, _act in batch]
 
     def _begin_round(self, ind: int, combiner: int) -> None:
         """Called after the state copy, before the simulation loop.

@@ -99,12 +99,16 @@ class PWFComb:
 
     def __init__(self, nvm: NVM, n_threads: int, obj: SeqObject,
                  counters: Optional[Counters] = None,
-                 backoff: bool = True) -> None:
+                 backoff: bool = True, vector_apply: bool = False) -> None:
         self.nvm = nvm
         self.n = n_threads
         self.obj = obj
         self._counters = counters
         self.backoff_enabled = backoff
+        # VectorApply (DESIGN.md §11): homogeneous simulation passes run
+        # as one jitted kernel over the announcement batch; declines
+        # fall back to the identical per-op loop.  See PBComb.
+        self._vector_enabled = bool(vector_apply)
         sw = obj.state_words
         self.state_words = sw
         # StateRec: st | ReturnVal[n] | Deactivate[n] | Index[n] | pid
@@ -290,6 +294,7 @@ class PWFComb:
             request = self.request
             comb_round = self.comb_round[p]
             served = 0
+            batch = [] if self._vector_enabled else None
             deacts = nvm.read_range(deact_base, n)    # one slice, n reads
             for q in range(n):                                   # line 19
                 req = request[q]
@@ -305,11 +310,23 @@ class PWFComb:
                     continue
                 if clk is not None:
                     clk.merge(vt)          # Lamport receive (announce)
+                if batch is not None:
+                    # VectorApply: adopt now, apply the pass as one
+                    # batch below (merge-first is clock-identical)
+                    batch.append((q, func, args, act))
+                    continue
                 ret = self._apply(q, func, args, dst, p)        # lines 21-22
                 wr(retval_base + q, ret)                            # line 23
                 wr(deact_base + q, act)                             # line 24
                 comb_round[q] = lval                                # line 25
                 served += 1
+            if batch:
+                rets = self._apply_batch(batch, dst, p)
+                for (q, _f, _a, act), ret in zip(batch, rets):
+                    wr(retval_base + q, ret)                        # line 23
+                    wr(deact_base + q, act)                         # line 24
+                    comb_round[q] = lval                            # line 25
+                served = len(batch)
             if self.S.vl(ver):                                   # line 26
                 index_addr = deact_base + n + p
                 wr(index_addr, 1 - rd(index_addr))               # line 27
@@ -356,6 +373,22 @@ class PWFComb:
     def _apply(self, q: int, func: str, args: Any, slot: int,
                combiner: int) -> Any:
         return self.obj.apply(self.nvm, self._base(slot), func, args, ctx=self)
+
+    def _apply_batch(self, batch, slot: int, combiner: int) -> list:
+        """One collected simulation pass: ``batch`` is the adoptable
+        announcements ``[(q, func, args, act), ...]`` in scan order.  A
+        homogeneous batch goes through the object's VectorApply seam
+        (one jitted kernel — DESIGN.md §11); a heterogeneous batch or a
+        seam decline runs the identical per-op loop."""
+        func = batch[0][1]
+        if all(b[1] == func for b in batch):
+            rets = self.obj.vector_apply(
+                self.nvm, self._base(slot), func,
+                [b[2] for b in batch], ctx=self)
+            if rets is not None:
+                return rets
+        return [self._apply(q, f, a, slot, combiner)
+                for q, f, a, _act in batch]
 
     # ---------------- structure hooks ---------------------------------- #
     def _begin_attempt(self, slot: int, p: int) -> None:

@@ -1,0 +1,487 @@
+"""Jitted combiner-round bodies: the VectorApply seam's compute side.
+
+The paper's combiner holds d announced requests when it commits a
+round; the repo's thesis (ROADMAP "Combining-as-vectorization") is that
+this batch should execute as ONE compiled kernel instead of d
+interpreted Python calls.  This module holds those kernels: for each
+array-valued sequential object (counter, heap, bounded queue/stack,
+response log, checkpoint cell) the round body is a pure function over a
+packed announcement array, compiled once per (kind, op) signature with
+``jax.jit`` and driven by ``lax.scan`` in announcement order — the
+haliax ``Stacked``/``hax.scan`` pattern (SNIPPETS.md §§2-3): compile
+once, scan over homogeneous elements instead of unrolling.
+
+Contract with ``SeqObject.vector_apply`` (core/objects.py):
+
+  * Exactness: a kernel must produce byte-identical state words and
+    responses to the per-op Python loop, or the caller must fall back.
+    Kernels therefore run in 64-bit (``jax.experimental.enable_x64``
+    scoped to this module's calls — the model substrate stays f32) and
+    the packing guards reject anything that is not a plain Python int
+    (or float, for the AtomicFloat kernel): rich payloads, huge ints,
+    None — all take the eager path.  One documented wrinkle: ``bool``
+    payloads pack as ints (bool subclasses int), so a ``True`` stored
+    through the eager path decodes as ``1`` through the vector path;
+    int-keyed workloads (every bench and property test) are unaffected.
+  * NVM counters: kernels never touch NVM.  The caller gathers state
+    with ``read_range`` and scatters with ``write_range`` — volatile
+    accessors that cost zero persistence instructions and zero modeled
+    time, so the round's persistence sentence (and the gated modeled
+    trajectory) is untouched by vectorization.
+  * Availability is gated: no jax in the environment means
+    ``available()`` is False and every entry returns None (callers
+    fall back to the per-op loop).
+
+Kernels are cached in ``_KERNELS`` keyed by kind+op name; ``jax.jit``'s
+own cache handles shape/dtype retraces (batch size d and state width
+vary per instance).
+"""
+
+from __future__ import annotations
+
+from typing import Any, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+_JAX = None          # None = not probed, False = unavailable, tuple = ok
+_KERNELS: dict = {}
+
+
+def _jx():
+    global _JAX
+    if _JAX is None:
+        try:
+            import jax
+            import jax.numpy as jnp
+            from jax import lax
+            from jax.experimental import enable_x64
+            _JAX = (jax, jnp, lax, enable_x64)
+        except Exception:            # pragma: no cover - env without jax
+            _JAX = False
+    return _JAX
+
+
+def available() -> bool:
+    """True when the jitted round bodies can run (jax importable)."""
+    return bool(_jx())
+
+
+def kernel_calls() -> int:
+    """Total jitted-round invocations so far (tests assert the vector
+    path actually engaged rather than silently falling back)."""
+    return _CALLS[0]
+
+
+_CALLS = [0]
+
+
+# ------------------------------------------------------------------ #
+# packing guards                                                     #
+# ------------------------------------------------------------------ #
+def pack_ints(values: Sequence[Any]) -> Optional[np.ndarray]:
+    """Batch args as int64, or None if any element is not a plain int
+    (a bignum outside int64 range must decline, not raise)."""
+    if not all(type(v) is int or type(v) is bool for v in values):
+        return None
+    try:
+        return np.asarray(values, dtype=np.int64)
+    except OverflowError:
+        return None
+
+
+def pack_floats(values: Sequence[Any]) -> Optional[np.ndarray]:
+    if not all(type(v) is float for v in values):
+        return None
+    return np.asarray(values, dtype=np.float64)
+
+
+def pack_state(words: Sequence[Any]) -> Optional[np.ndarray]:
+    """State words as int64 — relies on numpy's inference: a list with
+    any float/None/str/bignum element does not infer to int64."""
+    try:
+        arr = np.asarray(words)
+    except (TypeError, ValueError, OverflowError):  # pragma: no cover
+        return None
+    return arr if arr.dtype == np.int64 else None
+
+
+def pack_state_f64(words: Sequence[Any]) -> Optional[np.ndarray]:
+    if not all(type(v) is float for v in words):
+        return None
+    return np.asarray(words, dtype=np.float64)
+
+
+# ------------------------------------------------------------------ #
+# kernel builders (pure functions of packed arrays)                  #
+# ------------------------------------------------------------------ #
+def _build(name: str, builder):
+    fn = _KERNELS.get(name)
+    if fn is None:
+        jax, jnp, lax, x64 = _jx()
+        with x64():
+            fn = jax.jit(builder(jnp, lax))
+        _KERNELS[name] = fn
+    return fn
+
+
+def _run(name: str, builder, *args):
+    """Invoke a cached kernel under the x64 scope (dispatch must see the
+    same dtypes tracing saw) and return numpy results."""
+    jx = _jx()
+    if not jx:
+        return None
+    _jax, _jnp, _lax, x64 = jx
+    fn = _build(name, builder)
+    with x64():
+        out = fn(*args)
+    _CALLS[0] += 1
+    return tuple(np.asarray(o) for o in out)
+
+
+def _faa_builder(jnp, lax):
+    # int64 addition is associative and exact, so the sequential scan
+    # collapses to a cumulative sum — each op's response is the value
+    # before its own delta.  (MUL below must stay a true scan: float
+    # products are order-sensitive and the contract is byte-exactness.)
+    def k(v, xs):
+        tot = jnp.cumsum(xs)
+        return v + tot[-1], v + (tot - xs)
+    return k
+
+
+def _mul_builder(jnp, lax):
+    def k(v, xs):
+        def step(c, x):
+            return c * x, c
+        c, outs = lax.scan(step, v, xs)
+        return c, outs
+    return k
+
+
+def _heap_insert_builder(jnp, lax):
+    def k(arr, size, xs):
+        cap = arr.shape[0]
+
+        def sift_up(arr, i):
+            def cond(c):
+                a, j = c
+                p = (j - 1) // 2
+                return (j > 0) & (a[p] > a[j])
+
+            def body(c):
+                a, j = c
+                p = (j - 1) // 2
+                hi, lo = a[p], a[j]
+                return a.at[p].set(lo).at[j].set(hi), p
+
+            arr, _ = lax.while_loop(cond, body, (arr, i))
+            return arr
+
+        def step(carry, x):
+            arr, size = carry
+            full = size >= cap
+            inserted = sift_up(arr.at[size].set(x), size)
+            arr2 = jnp.where(full, arr, inserted)
+            size2 = jnp.where(full, size, size + 1)
+            return (arr2, size2), jnp.where(full, 0, 1)
+
+        (arr, size), ok = lax.scan(step, (arr, size), xs)
+        return arr, size, ok
+    return k
+
+
+def _heap_delete_builder(jnp, lax):
+    def k(arr, size, xs):
+        def step(carry, _x):
+            arr, size = carry
+            empty = size == 0
+            top = arr[0]
+            last = arr[jnp.maximum(size - 1, 0)]
+            size2 = jnp.maximum(size - 1, 0)
+
+            def smallest(a, i):
+                l, r = 2 * i + 1, 2 * i + 2
+                s = jnp.where((l < size2) & (a[l] < a[i]), l, i)
+                s = jnp.where((r < size2) & (a[r] < a[s]), r, s)
+                return s
+
+            def cond(c):
+                a, i = c
+                return smallest(a, i) != i
+
+            def body(c):
+                a, i = c
+                s = smallest(a, i)
+                hi, lo = a[i], a[s]
+                return a.at[i].set(lo).at[s].set(hi), s
+
+            # the eager loop only moves `last` down when the heap stays
+            # non-empty; size2 == 0 leaves the array words untouched
+            sifted, _ = lax.while_loop(
+                cond, body, (arr.at[0].set(last), jnp.int64(0)))
+            arr2 = jnp.where(empty | (size2 == 0), arr, sifted)
+            return (arr2, size2), (top, jnp.where(empty, 0, 1))
+
+        (arr, size), (tops, ok) = lax.scan(step, (arr, size), xs)
+        return arr, size, tops, ok
+    return k
+
+
+def _queue_builder(enq: bool):
+    def builder(jnp, lax):
+        if enq:
+            def step_factory(cap):
+                def step(carry, x):
+                    arr, head, tail = carry
+                    full = tail - head >= cap
+                    arr2 = jnp.where(full, arr, arr.at[tail % cap].set(x))
+                    tail2 = jnp.where(full, tail, tail + 1)
+                    return (arr2, head, tail2), jnp.where(full, 0, 1)
+                return step
+
+            def k(arr, head, tail, xs):
+                (arr, head, tail), ok = lax.scan(
+                    step_factory(arr.shape[0]), (arr, head, tail), xs)
+                return arr, head, tail, ok
+        else:
+            def k(arr, head, tail, xs):
+                cap = arr.shape[0]
+
+                def step(carry, _x):
+                    arr, head, tail = carry
+                    empty = head == tail
+                    v = arr[head % cap]
+                    head2 = jnp.where(empty, head, head + 1)
+                    return (arr, head2, tail), (v, jnp.where(empty, 0, 1))
+
+                (arr, head, tail), (vals, ok) = lax.scan(
+                    step, (arr, head, tail), xs)
+                return arr, head, tail, vals, ok
+        return k
+    return builder
+
+
+def _stack_builder(push: bool):
+    def builder(jnp, lax):
+        if push:
+            def k(arr, size, xs):
+                cap = arr.shape[0]
+
+                def step(carry, x):
+                    arr, size = carry
+                    full = size >= cap
+                    arr2 = jnp.where(full, arr, arr.at[size].set(x))
+                    size2 = jnp.where(full, size, size + 1)
+                    return (arr2, size2), jnp.where(full, 0, 1)
+
+                (arr, size), ok = lax.scan(step, (arr, size), xs)
+                return arr, size, ok
+        else:
+            def k(arr, size, xs):
+                def step(carry, _x):
+                    arr, size = carry
+                    empty = size == 0
+                    v = arr[jnp.maximum(size - 1, 0)]
+                    size2 = jnp.maximum(size - 1, 0)
+                    return (arr, size2), (v, jnp.where(empty, 0, 1))
+
+                (arr, size), (vals, ok) = lax.scan(step, (arr, size), xs)
+                return arr, size, vals, ok
+        return k
+    return builder
+
+
+def _log_builder(jnp, lax):
+    # The log's resp words can hold rich (non-packable) payloads from
+    # earlier eager RECORDs, so this kernel never reads existing state:
+    # it scans the batch into dense last-write-wins (seq, resp, touched)
+    # arrays and the caller scatters only the touched client words.
+    def k(seqs, resps, touched, cs, ss, rs):
+        def step(carry, x):
+            seqs, resps, touched = carry
+            c, s, r = x
+            return (seqs.at[c].set(s), resps.at[c].set(r),
+                    touched.at[c].set(1)), r
+
+        (seqs, resps, touched), outs = lax.scan(
+            step, (seqs, resps, touched), (cs, ss, rs))
+        return seqs, resps, touched, outs
+    return k
+
+
+def _ckpt_builder(jnp, lax):
+    # The existing payload word may be a rich (or None) object, so the
+    # kernel never reads it: the caller only overwrites the pair when
+    # some batch element advanced the step, and then the winning
+    # payload comes from the batch itself.
+    def k(step0, steps, payloads):
+        def step(carry, x):
+            st, pl, advanced = carry
+            s, p = x
+            adv = s > st
+            st2 = jnp.where(adv, s, st)
+            return (st2, jnp.where(adv, p, pl), advanced | adv), st2
+
+        (st, pl, advanced), outs = lax.scan(
+            step, (step0, jnp.int64(0), False), (steps, payloads))
+        return st, pl, advanced, outs
+    return k
+
+
+# ------------------------------------------------------------------ #
+# per-structure entry points (numpy in, numpy out, None = fall back) #
+# ------------------------------------------------------------------ #
+def faa_round(value: Any, deltas: Sequence[Any]):
+    if type(value) is not int:
+        return None
+    xs = pack_ints(deltas)
+    if xs is None:
+        return None
+    out = _run("counter.FAA", _faa_builder, np.int64(value), xs)
+    if out is None:
+        return None
+    v, outs = out
+    return int(v), outs.tolist()
+
+
+def mul_round(value: Any, factors: Sequence[Any]):
+    if type(value) is not float:
+        return None
+    xs = pack_floats(factors)
+    if xs is None:
+        return None
+    out = _run("float.MUL", _mul_builder, np.float64(value), xs)
+    if out is None:
+        return None
+    v, outs = out
+    return float(v), outs.tolist()
+
+
+def heap_round(arr_words: Sequence[Any], size: Any, func: str,
+               args: Sequence[Any]):
+    """One homogeneous heap round (HINSERT or HDELETEMIN) over the full
+    key array.  Returns (new_words, new_size, responses) or None."""
+    if type(size) is not int:
+        return None
+    arr = pack_state(arr_words)
+    if arr is None:
+        return None
+    if func == "HINSERT":
+        xs = pack_ints(args)
+        if xs is None:
+            return None
+        out = _run("heap.HINSERT", _heap_insert_builder,
+                   arr, np.int64(size), xs)
+        if out is None:
+            return None
+        arr2, size2, ok = out
+        return arr2.tolist(), int(size2), [bool(o) for o in ok]
+    if func == "HDELETEMIN":
+        xs = np.zeros(len(args), dtype=np.int64)
+        out = _run("heap.HDELETEMIN", _heap_delete_builder,
+                   arr, np.int64(size), xs)
+        if out is None:
+            return None
+        arr2, size2, tops, ok = out
+        resps = [int(t) if o else None for t, o in zip(tops, ok)]
+        return arr2.tolist(), int(size2), resps
+    return None
+
+
+def queue_round(ring_words: Sequence[Any], head: Any, tail: Any,
+                func: str, args: Sequence[Any]):
+    if type(head) is not int or type(tail) is not int:
+        return None
+    arr = pack_state(ring_words)
+    if arr is None:
+        return None
+    if func == "ENQ":
+        xs = pack_ints(args)
+        if xs is None:
+            return None
+        out = _run("queue.ENQ", _queue_builder(True),
+                   arr, np.int64(head), np.int64(tail), xs)
+        if out is None:
+            return None
+        arr2, h2, t2, ok = out
+        resps: List[Any] = ["ACK" if o else False for o in ok]
+        return arr2.tolist(), int(h2), int(t2), resps
+    if func == "DEQ":
+        xs = np.zeros(len(args), dtype=np.int64)
+        out = _run("queue.DEQ", _queue_builder(False),
+                   arr, np.int64(head), np.int64(tail), xs)
+        if out is None:
+            return None
+        arr2, h2, t2, vals, ok = out
+        resps = [int(v) if o else None for v, o in zip(vals, ok)]
+        return arr2.tolist(), int(h2), int(t2), resps
+    return None
+
+
+def stack_round(arr_words: Sequence[Any], size: Any, func: str,
+                args: Sequence[Any]):
+    if type(size) is not int:
+        return None
+    arr = pack_state(arr_words)
+    if arr is None:
+        return None
+    if func == "PUSH":
+        xs = pack_ints(args)
+        if xs is None:
+            return None
+        out = _run("stack.PUSH", _stack_builder(True),
+                   arr, np.int64(size), xs)
+        if out is None:
+            return None
+        arr2, s2, ok = out
+        resps: List[Any] = ["ACK" if o else False for o in ok]
+        return arr2.tolist(), int(s2), resps
+    if func == "POP":
+        xs = np.zeros(len(args), dtype=np.int64)
+        out = _run("stack.POP", _stack_builder(False),
+                   arr, np.int64(size), xs)
+        if out is None:
+            return None
+        arr2, s2, vals, ok = out
+        resps = [int(v) if o else None for v, o in zip(vals, ok)]
+        return arr2.tolist(), int(s2), resps
+    return None
+
+
+def log_round(n_clients: int, triples: Sequence[Tuple[Any, Any, Any]]):
+    """A batch of RECORD announcements as one last-write-wins scan.
+    Returns ``(writes, responses)`` where writes is a list of
+    ``(client, seq, resp)`` — one per client the batch touched — or
+    None."""
+    cs = pack_ints([t[0] for t in triples])
+    ss = pack_ints([t[1] for t in triples])
+    rs = pack_ints([t[2] for t in triples])
+    if cs is None or ss is None or rs is None:
+        return None
+    if len(cs) and (cs.min() < 0 or cs.max() >= n_clients):
+        return None                      # eager path raises — keep it
+    zero = np.zeros(n_clients, dtype=np.int64)
+    out = _run("log.RECORD", _log_builder, zero, zero, zero, cs, ss, rs)
+    if out is None:
+        return None
+    seqs, resps, touched, outs = out
+    writes = [(c, int(seqs[c]), int(resps[c]))
+              for c in range(n_clients) if touched[c]]
+    return writes, outs.tolist()
+
+
+def ckpt_round(step: Any, pairs: Sequence[Tuple[Any, Any]]):
+    """A batch of CKPT announcements (newest step wins).  Returns
+    ``(new_step, new_payload_or_None_if_unchanged, responses)``."""
+    if type(step) is not int:
+        return None
+    ss = pack_ints([p[0] for p in pairs])
+    ps = pack_ints([p[1] for p in pairs])
+    if ss is None or ps is None:
+        return None
+    out = _run("ckpt.CKPT", _ckpt_builder, np.int64(step), ss, ps)
+    if out is None:
+        return None
+    st, pl, advanced, outs = out
+    return int(st), (int(pl) if advanced else None), \
+        [int(o) for o in outs]

@@ -18,9 +18,9 @@ from ..core.pbcomb import PBComb
 
 class PBHeap(PBComb):
     def __init__(self, nvm: NVM, n_threads: int, capacity: int = 256,
-                 counters=None) -> None:
+                 counters=None, vector_apply: bool = False) -> None:
         super().__init__(nvm, n_threads, HeapObject(capacity),
-                         counters=counters)
+                         counters=counters, vector_apply=vector_apply)
         self.capacity = capacity
 
     def size(self) -> int:

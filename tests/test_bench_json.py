@@ -26,8 +26,8 @@ EPS = 0.05
 V1_KEYS = {"name", "us_per_op", "pwbs_per_op", "psyncs_per_op"}
 V2_KEYS = V1_KEYS | {"modeled_us_per_op", "modeled_pwbs_per_op",
                      "modeled_psyncs_per_op", "profile",
-                     "degree_mean", "degree_max", "ring_spills",
-                     "redundant_pwbs_per_op"}
+                     "degree_mean", "degree_max", "vector_apply",
+                     "ring_spills", "redundant_pwbs_per_op"}
 
 
 @pytest.fixture(scope="module")
@@ -108,6 +108,30 @@ def test_matrix_degree_columns(bench_doc):
             assert r["degree_mean"] is None, r
 
 
+def test_vector_rounds_rows(bench_doc):
+    """VectorApply seam rows: paired vector/per-op cells per (kind,
+    degree), wall-only (the round body is pure volatile compute — the
+    persistence columns are exactly zero and nothing is gated)."""
+    for r in bench_doc["rows"]:
+        if not r["name"].startswith("vector_rounds/"):
+            assert r["vector_apply"] is None, r
+    rows = [r for r in bench_doc["rows"]
+            if r["name"].startswith("vector_rounds/")]
+    if not rows:
+        pytest.skip("jax unavailable: vector_rounds emitted no rows")
+    names = {r["name"] for r in rows}
+    for r in rows:
+        _table, kind, d, side = r["name"].split("/")
+        assert side in ("vector", "per-op")
+        assert r["vector_apply"] is (side == "vector")
+        other = "per-op" if side == "vector" else "vector"
+        assert f"vector_rounds/{kind}/{d}/{other}" in names
+        assert r["us_per_op"] > 0
+        assert r["pwbs_per_op"] == 0.0
+        assert r["psyncs_per_op"] == 0.0
+        assert r["profile"] is None          # wall-only: never gated
+
+
 def test_combining_rows_one_psync_per_round(bench_doc):
     """The paper's core claim, pinned as a machine check: a combining
     round costs one psync regardless of how many ops it serves."""
@@ -166,7 +190,7 @@ def test_mp_serving_checkpoint_cells_emit_v2_rows():
         # at the main() level, not by the cell functions
         assert set(r) | {"modeled_us_per_op", "modeled_pwbs_per_op",
                          "modeled_psyncs_per_op", "profile",
-                         "redundant_pwbs_per_op"} \
+                         "vector_apply", "redundant_pwbs_per_op"} \
             >= MP_ROW_KEYS - {"profile"}
         assert r["workers"] == 2
         assert r["segments"] == 2
