@@ -123,6 +123,20 @@ class PoolResult:
     def results_by_tid(self) -> Dict[int, List[Tuple[str, Any, Any]]]:
         return {r.tid: (r.results or []) for r in self.reports}
 
+    def partition_inflight(self, killed_tids
+                           ) -> Tuple[List[Tuple[str, int, str, Any, int]],
+                                      List[Tuple[str, int, str, Any, int]]]:
+        """Split the in-flight records into (survivors, lost) by worker
+        tid — the worker-kill partial-failure scenario recovers with the
+        survivors' records only and registers the killed workers' as
+        lost (their clients died with them, so their outcome is
+        UNKNOWN rather than replayable)."""
+        killed = set(killed_tids)
+        survivors, lost = [], []
+        for rec in self.inflight:
+            (lost if rec[1] in killed else survivors).append(rec)
+        return survivors, lost
+
 
 def _collect_inflight(runtime) -> List[Tuple[str, int, str, Any, int]]:
     recs = [(name, tid, op, args, seq)

@@ -273,10 +273,13 @@ class CombiningRuntime:
         self.close()
 
     # ------------------ crash simulation ------------------------------- #
-    def arm_crash(self, after_persist_ops: int, rng=None) -> None:
+    def arm_crash(self, after_persist_ops: int, rng=None,
+                  **policy) -> None:
         """Arm a SimulatedCrash inside protocol code (crash-point
-        enumeration); pair with ``recover``."""
-        self._ensure_nvm().arm_crash(after_persist_ops, rng)
+        enumeration); pair with ``recover``.  Extra keywords (e.g. the
+        multi-segment ShmNVM's ``lose_segment`` partial-failure policy)
+        pass through to the NVM."""
+        self._ensure_nvm().arm_crash(after_persist_ops, rng, **policy)
 
     def crash(self, rng=None) -> None:
         """Full-machine crash: adversarial write-back drain, volatile

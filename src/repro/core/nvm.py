@@ -288,6 +288,13 @@ class NVM:
         # Crash-point injection: countdown on persistence "events".
         self._crash_countdown: Optional[int] = None
         self._crash_rng: Optional[random.Random] = None
+        # Instruction-kind crash-point injector (repro.fuzz): consulted
+        # at every pwb/pfence/psync tick with the instruction kind, so a
+        # fuzzer can land a crash at "the 3rd psync" rather than the
+        # aggregate countdown's "the Nth persistence event".  None when
+        # disarmed — zero cost on the default path, same contract as the
+        # audit seam.
+        self._injector: Optional[Any] = None
         self._audit = None
         if audit and not (pwb_nop or psync_nop):
             from ..analysis.audit import PersistAudit   # lazy: no cycle
@@ -381,13 +388,32 @@ class NVM:
     # ------------------------------------------------------------------ #
     # Persistence instructions                                           #
     # ------------------------------------------------------------------ #
-    def _tick_crash_point(self) -> None:
+    def _tick_crash_point(self, kind: str = "") -> None:
+        inj = self._injector
+        if inj is not None and inj.tick(kind):
+            self._injector = None     # one shot: fire, then disarm
+            self.crash(inj.rng)
+            raise SimulatedCrash()
         if self._crash_countdown is not None:
             self._crash_countdown -= 1
             if self._crash_countdown < 0:
                 self._crash_countdown = None
                 self.crash(self._crash_rng)
                 raise SimulatedCrash()
+
+    def arm_injector(self, injector: Any) -> None:
+        """Attach an instruction-kind crash-point injector: an object
+        whose ``tick(kind) -> bool`` is called at every pwb/pfence/psync
+        (True = crash NOW, adversarial drain by ``injector.rng``).
+        Unlike the ``arm_crash`` countdown, the injector survives
+        ``disarm_crash`` — which is what lets a fuzzer crash INSIDE
+        ``recover`` (recover's first act is ``disarm_crash``).  Arming
+        pins the fused persistence sentences onto their discrete
+        fallbacks so ticks land between individual instructions."""
+        self._injector = injector
+
+    def disarm_injector(self) -> None:
+        self._injector = None
 
     def pwb(self, addr: int, n_words: int = 1) -> None:
         """Queue write-back of every line covering [addr, addr+n_words).
@@ -407,7 +433,7 @@ class NVM:
             self.clock.advance(n_lines * self.clock.profile.pwb_ns)
         if self._audit is not None:
             self._audit.on_pwb(((first, n_lines),))
-        self._tick_crash_point()
+        self._tick_crash_point("pwb")
 
     # Explicit alias: round persistence paths call this so the intent —
     # one coalesced range, not a per-word loop — reads at the call site.
@@ -442,7 +468,7 @@ class NVM:
             self.clock.advance(n_total * self.clock.profile.pwb_ns)
         if self._audit is not None:
             self._audit.on_pwb(runs)
-        self._tick_crash_point()
+        self._tick_crash_point("pwb")
 
     def pfence(self) -> None:
         had_pending = False
@@ -455,7 +481,7 @@ class NVM:
             self.clock.advance(self.clock.profile.pfence_ns)
         if self._audit is not None:
             self._audit.on_pfence(had_pending)
-        self._tick_crash_point()
+        self._tick_crash_point("pfence")
 
     # ---------------- fused round-commit paths ------------------------ #
     # A combining round ends with a fixed persistence sentence — e.g.
@@ -469,7 +495,8 @@ class NVM:
     # they fall back to the separate instructions.
 
     def _fast_ok(self) -> bool:
-        return (self._crash_countdown is None and not self.pwb_nop
+        return (self._crash_countdown is None and self._injector is None
+                and not self.pwb_nop
                 and not self.psync_nop and not self.persist_latency
                 and not self.force_discrete and self._audit is None)
 
@@ -691,16 +718,26 @@ class NVM:
                     + total_lines * self.STREAM_COST)
             with NVM._device_lock:
                 time.sleep(cost)
-        self._tick_crash_point()
+        self._tick_crash_point("psync")
 
     # ------------------------------------------------------------------ #
     # Crash / recovery                                                   #
     # ------------------------------------------------------------------ #
     def arm_crash(self, after_persist_ops: int,
-                  rng: Optional[random.Random] = None) -> None:
+                  rng: Optional[random.Random] = None, *,
+                  lose_segment: Optional[int] = None) -> None:
         """Raise SimulatedCrash after ``after_persist_ops`` more pwb/pfence/
         psync calls (the crash resolves the write-back queue adversarially
-        with ``rng``, or deterministically drains nothing if rng is None)."""
+        with ``rng``, or deterministically drains nothing if rng is None).
+
+        ``lose_segment`` is the multi-segment ShmNVM's partial-failure
+        knob (one DIMM loses all pending write-backs while the others
+        drain fully); the in-thread NVM models a single DIMM, so only
+        None is accepted here."""
+        if lose_segment is not None:
+            raise ValueError("the in-thread NVM models a single DIMM "
+                             "(lose_segment requires the multi-segment "
+                             "ShmNVM)")
         self._crash_countdown = after_persist_ops
         self._crash_rng = rng
 

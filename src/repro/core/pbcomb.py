@@ -72,6 +72,13 @@ class PBComb:
     ANNOUNCE_PARK_PROB = 0.03
     ANNOUNCE_PARK_SECONDS = 1e-6   # OS floor applies; "as short as possible"
 
+    # Test-only seeded-bug fixture (repro.fuzz.bugs): when True, the
+    # combiner's scan emulates the PR 5 torn-announcement read — args
+    # adopted from a STALE generation of the request record, the very
+    # mix the seqlock stamp re-check exists to prevent.  Never set
+    # directly; tests toggle it via ``seeded_bug("torn-announce")``.
+    torn_announce_bug = False
+
     def __init__(self, nvm: NVM, n_threads: int, obj: SeqObject,
                  counters: Optional[Counters] = None,
                  park: bool = True, vector_apply: bool = False) -> None:
@@ -351,6 +358,8 @@ class PBComb:
                 func, args, vt = req.func, req.args, req.vtime
                 if req.stamp != s1:
                     continue
+                if PBComb.torn_announce_bug:
+                    args = self._bug_torn_args(q, args)
                 if clk is not None:
                     clk.merge(vt)         # Lamport receive of announce
                 if batch is not None:
@@ -388,6 +397,25 @@ class PBComb:
         # line 29 reads ReturnVal[MIndex][p]; MIndex == ind until the
         # next combiner (which needs the lock we just released) flips it
         return nvm.read(retval_base + p)
+
+    def _bug_torn_args(self, q: int, args: Any) -> Any:
+        """Seeded-bug fixture body (``torn_announce_bug``): every third
+        adoption of a thread whose PREVIOUS announce carried different
+        args gets the stale args — the mixed-generation record a torn
+        seqlock read would produce.  The combiner then applies (and
+        acks) an op the announcer never asked for, which the history
+        checker reports as a conjured/lost value pair."""
+        prev = getattr(self, "_bug_prev", None)
+        if prev is None:
+            prev = self._bug_prev = {}
+            self._bug_ctr = 0
+        stale = prev.get(q)
+        prev[q] = args
+        if stale is not None and stale != args and args is not None:
+            self._bug_ctr += 1
+            if self._bug_ctr % 3 == 0:
+                return stale
+        return args
 
     # ---------------- structure hooks --------------------------------- #
     def _apply(self, q: int, func: str, args: Any, ind: int,

@@ -757,6 +757,10 @@ _M_PWB, _M_PFENCE, _M_PSYNC, _M_CRASHES = 4, 5, 6, 7
 _M_SPILLS = 8       # ring-overflow early drains (machine-wide)
 _M_BLOBBED = 9      # 1 iff the blob heap ever allocated (fast-path skip)
 _M_BLOB_BUMP = 10   # blob-area bump pointer (bytes, relative)
+_M_LOSESEG = 11     # segment to LOSE at the next crash (-1 = none):
+                    # that DIMM drops every pending write-back while the
+                    # surviving segments drain fully (repro.fuzz's
+                    # partial-failure class)
 _M_CLASS0 = 16      # blob class free-list heads (byte offset + 1; 0=nil)
 _META_I64 = _M_CLASS0 + _BLOB_CLASSES
 
@@ -862,9 +866,10 @@ class ShmBackend(ThreadBackend):
         self._shm = shared_memory.SharedMemory(create=True, size=total * 8)
         self.mv = self._shm.buf.cast("q")
         self.raw = self._shm.buf
-        # fresh /dev/shm pages are zero-filled; meta needs two non-zeros
+        # fresh /dev/shm pages are zero-filled; meta needs non-zeros
         self.mv[_M_COUNT] = -1
         self.mv[_M_SEED] = -1
+        self.mv[_M_LOSESEG] = -1
         self.seg_meta = _META_I64
         self.vol_base = self.seg_meta + segments * _SEG_I64
         self.dur_base = self.vol_base + data_words * WORD_I64
@@ -1051,6 +1056,7 @@ class ShmNVM(NVM):
         self.force_discrete = False
         self.counters = _ShmCounters(backend.mv)
         self._crash_rng = None
+        self._injector = None       # process-local, see _tick_crash_point
         self._default_seg = 0
         # Persist-ordering audit (DESIGN.md §10): per-PROCESS state —
         # sound and complete for in-process drivers (the deterministic
@@ -1303,9 +1309,18 @@ class ShmNVM(NVM):
         return drained
 
     # ---------------- persistence instructions --------------------------- #
-    def _tick_crash_point(self) -> None:
+    def _tick_crash_point(self, kind: str = "") -> None:
         mv = self._mv
         if mv[_M_HALT]:
+            raise SimulatedCrash()
+        inj = self._injector
+        if inj is not None and inj.tick(kind):
+            # process-LOCAL injector (same seam as the thread NVM): the
+            # arming process's own instruction stream trips it — the
+            # deterministic in-parent fuzz drivers; the shared countdown
+            # below stays the cross-process crash mechanism
+            self._injector = None
+            self.crash(inj.rng)
             raise SimulatedCrash()
         if mv[_M_COUNT] >= 0:
             with self._lock:
@@ -1380,7 +1395,7 @@ class ShmNVM(NVM):
             if spilled:
                 aud.on_spill(spilled)
             aud.on_pwb([(first, n) for _s, first, n in split])
-        self._tick_crash_point()
+        self._tick_crash_point("pwb")
 
     def pwb(self, addr: int, n_words: int = 1) -> None:
         first = addr // LINE
@@ -1412,7 +1427,7 @@ class ShmNVM(NVM):
                     mv[self._seg_slot(s, _S_EFLAG)] = 0
         if self._audit is not None:
             self._audit.on_pfence(had_pending)
-        self._tick_crash_point()
+        self._tick_crash_point("pfence")
 
     def psync(self) -> None:
         drained_by_seg: Dict[int, List[Tuple[int, int]]] = {}
@@ -1440,21 +1455,34 @@ class ShmNVM(NVM):
                         + total_lines * self.STREAM_COST)
                 with self.backend.device_locks[s]:
                     time.sleep(cost)
-        self._tick_crash_point()
+        self._tick_crash_point("psync")
 
     # ---------------- crash / recovery ----------------------------------- #
-    def arm_crash(self, after_persist_ops: int, rng=None) -> None:
+    def arm_crash(self, after_persist_ops: int, rng=None, *,
+                  lose_segment: Optional[int] = None) -> None:
         """Shared countdown: WHICHEVER process issues the
         ``after_persist_ops``-th next persistence instruction crashes
         the machine.  ``rng`` governs the adversarial drain when the
         arming process itself trips the countdown; a different process
         falls back to a seed captured here (same distribution, not the
         same draw) — pass ``rng=None`` for the deterministic
-        drain-nothing cut either way."""
+        drain-nothing cut either way.
+
+        ``lose_segment``: partial-failure policy for the crash this arms
+        — that segment's DIMM loses every pending write-back while all
+        other segments drain fully (the maximally skewed per-device
+        power-loss cut, repro.fuzz's segment-loss class).  Overrides the
+        rng drain policy; shared, so whichever process trips the
+        countdown applies it."""
         mv = self._mv
+        if lose_segment is not None and \
+                not 0 <= lose_segment < self.segments:
+            raise ValueError(f"lose_segment {lose_segment} out of range "
+                             f"(0..{self.segments - 1})")
         self._crash_rng = rng
         mv[_M_SEED] = (-1 if rng is None
                        else hash(rng.getstate()) & 0x7FFFFFFF)
+        mv[_M_LOSESEG] = -1 if lose_segment is None else lose_segment
         mv[_M_COUNT] = after_persist_ops
 
     def disarm_crash(self) -> None:
@@ -1475,6 +1503,7 @@ class ShmNVM(NVM):
         mv = self._mv
         with self._lock:
             mv[_M_COUNT] = -1
+            mv[_M_LOSESEG] = -1
             if mv[_M_HALT]:
                 self._restore_volatile_locked()
                 mv[_M_HALT] = 0
@@ -1518,10 +1547,23 @@ class ShmNVM(NVM):
         with self._lock:
             mv[_M_CRASHES] += 1
             blobbed = bool(mv[_M_BLOBBED])
+            lose_seg = mv[_M_LOSESEG]
+            mv[_M_LOSESEG] = -1
             for s in range(self.segments):
                 entries = self._ring_entries_locked(s)
                 drained_snaps: set = set()      # payload line offsets
-                if rng is not None and entries:
+                if lose_seg >= 0:
+                    # segment-loss cut: the lost DIMM drains NOTHING;
+                    # every surviving segment drains its whole ring —
+                    # the most skewed per-device power-loss outcome
+                    if s != lose_seg:
+                        for _e, first, n_lines, _bl, payload in entries:
+                            self._drain_entry_locked(first, n_lines,
+                                                     payload)
+                            for j in range(n_lines):
+                                drained_snaps.add(
+                                    payload + j * LINE * WORD_I64)
+                elif rng is not None and entries:
                     # mirror NVM.crash per segment: epochs = distinct
                     # ids in order plus a trailing empty epoch when the
                     # current one is empty

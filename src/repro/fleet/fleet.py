@@ -297,10 +297,17 @@ class Fleet:
         return replies
 
     def arm_crash(self, shard: int, after_persist_ops: int,
-                  rng=None) -> None:
+                  rng=None, *, lose_segment=None) -> None:
         """Arm a crash countdown on ONE shard's NVM — the next wave
-        halts that shard mid-traffic while the rest keep serving."""
-        self.shards[shard].rt.nvm.arm_crash(after_persist_ops, rng)
+        halts that shard mid-traffic while the rest keep serving.
+        ``lose_segment`` selects the shm partial-failure policy: that
+        segment of the shard's NVM loses its pending write-backs at
+        the crash (a failed DIMM) while the others drain fully."""
+        if lose_segment is not None:
+            self.shards[shard].rt.nvm.arm_crash(
+                after_persist_ops, rng, lose_segment=lose_segment)
+        else:
+            self.shards[shard].rt.nvm.arm_crash(after_persist_ops, rng)
 
     def crash_shard(self, shard: int, rng=None) -> None:
         """Full power-off of one shard (adversarial write-back drain)."""

@@ -1,0 +1,34 @@
+"""Seeded crash-schedule fuzzer (DESIGN.md §12, docs/FUZZING.md).
+
+Turns the durable-linearizability checker into a scenario fuzzer: every
+scenario is a PURE FUNCTION of a 64-bit seed plus a scenario-class tag,
+so any discovery replays byte-for-byte from its seed.  The classes
+compose three ingredients the fixed sweeps cannot reach:
+
+  * randomized logical-thread schedules — a deterministic scheduler
+    drives the staged announce/perform seam, choosing announcer
+    subsets, op mixes and the performing thread from the seed;
+  * crash points between INDIVIDUAL persistence instructions — a
+    kind-aware injector on the pwb/pfence/psync tick seam (the same
+    accessor seam the persist audit uses), so a crash can land at "the
+    3rd psync" instead of the aggregate countdown's Nth event;
+  * partial failures — losing one segment of a multi-segment ShmNVM,
+    killing a worker subset mid-round, crash DURING recover, and
+    cross-version recovery across an elastic reshape.
+
+Failures shrink to a minimal seed (``repro.fuzz.shrink``) and land as
+one JSON line each in ``tests/fuzz_corpus/`` which CI replays
+deterministically on every PR (``python -m repro.fuzz replay``).
+"""
+
+from .crashpoints import CrashPointInjector
+from .scenarios import (SCENARIO_CLASSES, ScenarioResult, run_scenario)
+from .shrink import shrink_seed
+from .corpus import (load_corpus, dump_entry, append_entries,
+                     replay_corpus, class_table)
+
+__all__ = [
+    "CrashPointInjector", "SCENARIO_CLASSES", "ScenarioResult",
+    "run_scenario", "shrink_seed", "load_corpus", "dump_entry",
+    "append_entries", "replay_corpus", "class_table",
+]

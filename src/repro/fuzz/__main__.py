@@ -1,0 +1,179 @@
+"""CLI: ``python -m repro.fuzz <replay|explore|run|selftest>``.
+
+* ``replay``   — deterministic corpus replay (the PR smoke gate):
+                 re-runs every ``tests/fuzz_corpus/`` entry with its
+                 recorded cell pinned, prints the per-class table, and
+                 exits 1 on any verdict change.
+* ``explore``  — wall-clock-budgeted fresh-seed search (the nightly /
+                 workflow_dispatch job): time-derived base seed, every
+                 failure shrunk to a minimal seed and printed as a
+                 ready-to-commit corpus line.
+* ``run``      — one scenario from its replay tuple (the command every
+                 checker failure prints).
+* ``selftest`` — seeded-bug calibration: asserts the fuzzer rediscovers
+                 the torn-announce and mirror-race fixtures within a
+                 bounded seed budget.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from .bugs import BUG_HUNTS, SEEDED_BUGS, seeded_bug
+from .corpus import (append_entries, class_table, default_corpus_path,
+                     dump_entry, load_corpus, replay_corpus)
+from .scenarios import MASK64, SCENARIO_CLASSES, run_scenario
+from .shrink import shrink_seed
+
+
+def _parse_seed(s: str) -> int:
+    return int(s, 16 if s.lower().startswith("0x") else 10) & MASK64
+
+
+def cmd_replay(args) -> int:
+    results, mismatches = replay_corpus(args.corpus)
+    table = class_table(results, mismatches)
+    if args.summary:
+        print(table)
+    for m in mismatches:
+        print(f"MISMATCH: {m}", file=sys.stderr)
+    unexpected = [r for r in results if r.verdict.startswith("error:")]
+    for r in unexpected:
+        print(f"ERROR: (class={r.cls} seed={r.seed:#018x}) "
+              f"{r.verdict}", file=sys.stderr)
+    if not results:
+        print("corpus is empty — nothing replayed", file=sys.stderr)
+    print(f"replayed {len(results)} corpus entries: "
+          f"{len(mismatches)} mismatches")
+    return 1 if (mismatches or unexpected) else 0
+
+
+def cmd_explore(args) -> int:
+    # the ONE place wall-clock derives a seed: explore hunts fresh
+    # schedules by design, and prints every find as a replayable line
+    base = args.base_seed if args.base_seed is not None \
+        else (time.time_ns() & MASK64)
+    deadline = time.monotonic() + args.budget_s
+    classes = args.cls or sorted(SCENARIO_CLASSES)
+    ran = 0
+    found = []
+    i = 0
+    while time.monotonic() < deadline:
+        cls = classes[i % len(classes)]
+        seed = (base + 0x9E3779B97F4A7C15 * i) & MASK64
+        i += 1
+        res = run_scenario(cls, seed)
+        ran += 1
+        if not res.failed:
+            continue
+
+        def fails(cand, _cls=cls, _v=res.verdict):
+            return run_scenario(_cls, cand).verdict == _v
+
+        small = shrink_seed(fails, seed, budget=args.shrink_budget)
+        found.append(run_scenario(cls, small))
+        print(f"FOUND ({cls}): seed {seed:#018x} -> shrunk "
+              f"{small:#018x}: {found[-1].verdict}")
+    print(f"explored {ran} scenarios across {len(classes)} classes "
+          f"in {args.budget_s:.0f}s: {len(found)} failures")
+    if found:
+        print("ready-to-commit corpus lines "
+              f"(append to {default_corpus_path()}):")
+        for res in found:
+            print(dump_entry(res))
+        if args.out:
+            with open(args.out, "w", encoding="utf-8") as fh:
+                for res in found:
+                    fh.write(dump_entry(res) + "\n")
+            print(f"wrote {len(found)} entries to {args.out}")
+    return 1 if found else 0
+
+
+def cmd_run(args) -> int:
+    res = run_scenario(args.cls, _parse_seed(args.seed),
+                       cell=args.cell, backend=args.backend)
+    print(f"class    {res.cls}")
+    print(f"seed     {res.seed:#018x}")
+    print(f"cell     {res.cell}")
+    print(f"backend  {res.backend}")
+    print(f"verdict  {res.verdict}")
+    if res.stats:
+        print(f"stats    {res.stats}")
+    if res.detail and res.failed:
+        print(res.detail)
+    return 1 if res.failed else 0
+
+
+def cmd_selftest(args) -> int:
+    ok = True
+    for bug in SEEDED_BUGS:
+        cls, cell = BUG_HUNTS[bug]
+        hit = None
+        with seeded_bug(bug):
+            for i in range(args.budget):
+                seed = (args.base_seed + i) & MASK64
+                res = run_scenario(cls, seed, cell=cell)
+                if res.failed:
+                    hit = res
+                    break
+        if hit is None:
+            ok = False
+            print(f"MISSED: seeded bug {bug!r} not found by class "
+                  f"{cls} on {cell} within {args.budget} seeds")
+        else:
+            print(f"found {bug!r} at seed {hit.seed:#018x} "
+                  f"({cls}/{cell}): {hit.verdict}")
+            clean = run_scenario(cls, hit.seed, cell=cell)
+            if clean.failed:
+                ok = False
+                print(f"  but the same seed fails with the bug OFF "
+                      f"({clean.verdict}) — not the seeded bug")
+    print("selftest:", "ok" if ok else "FAILED")
+    return 0 if ok else 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.fuzz")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("replay", help="deterministic corpus replay")
+    p.add_argument("--corpus", default=None)
+    p.add_argument("--summary", action="store_true",
+                   help="print the per-class markdown table")
+    p.set_defaults(fn=cmd_replay)
+
+    p = sub.add_parser("explore", help="budgeted fresh-seed search")
+    p.add_argument("--budget-s", type=float, default=60.0)
+    p.add_argument("--base-seed", type=_parse_seed, default=None,
+                   help="override the time-derived base seed")
+    p.add_argument("--cls", action="append",
+                   choices=sorted(SCENARIO_CLASSES),
+                   help="restrict to these classes (repeatable)")
+    p.add_argument("--shrink-budget", type=int, default=48)
+    p.add_argument("--out", default=None,
+                   help="also write found entries to this file")
+    p.set_defaults(fn=cmd_explore)
+
+    p = sub.add_parser("run", help="replay one scenario by its tuple")
+    p.add_argument("--cls", required=True,
+                   choices=sorted(SCENARIO_CLASSES))
+    p.add_argument("--seed", required=True)
+    p.add_argument("--cell", default=None)
+    p.add_argument("--backend", default=None)
+    p.set_defaults(fn=cmd_run)
+
+    p = sub.add_parser("selftest",
+                       help="seeded-bug rediscovery calibration")
+    p.add_argument("--budget", type=int, default=64,
+                   help="seeds to try per bug")
+    p.add_argument("--base-seed", type=_parse_seed, default=0)
+    p.set_defaults(fn=cmd_selftest)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,58 @@
+"""Seeded-bug fixtures: re-introduce two REAL historical bugs on demand.
+
+Fuzzer calibration: a fuzzer that has never found a bug proves nothing
+about the bugs it fails to find.  These context managers flip test-only
+class flags that re-enable, behind emulation, two defects this codebase
+actually shipped and fixed:
+
+* ``torn-announce`` — the PR 5 torn announcement read: PBComb's scan
+  adopting a request record mixed across two announce generations
+  (fixed by the seqlock stamp re-check).  The flag makes the combiner
+  apply stale args on a schedule, which only a fuzz schedule that
+  reuses a thread's slot across rounds and then crashes/drains can
+  observe.
+
+* ``mirror-race`` — the PR 4 durable-MS head-mirror race: the durable
+  head word persisted from a pre-swing snapshot, regressing the
+  recovered head to an already-dequeued node (fixed by mirroring
+  inside the SC).  Only a post-crash drain sees the duplicate.
+
+``tests/test_fuzz.py`` asserts the fuzzer rediscovers BOTH within a
+bounded seed budget — the acceptance bar for the whole subsystem.
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+from ..core.pbcomb import PBComb
+from ..structures.baselines import DurableMSQueue
+
+SEEDED_BUGS = ("torn-announce", "mirror-race")
+
+#: bug name -> (class, flag attribute); cell where each bug is visible
+BUG_FLAGS = {
+    "torn-announce": (PBComb, "torn_announce_bug"),
+    "mirror-race": (DurableMSQueue, "mirror_race_bug"),
+}
+
+#: the scenario class + pinned cell the selftest hunts each bug with
+BUG_HUNTS = {
+    "torn-announce": ("schedule", "queue/pbcomb"),
+    "mirror-race": ("instr-crash", "queue/durable-ms"),
+}
+
+
+@contextmanager
+def seeded_bug(name: str):
+    """Enable one seeded bug for the duration of the block."""
+    if name not in BUG_FLAGS:
+        raise ValueError(f"unknown seeded bug {name!r} "
+                         f"(have: {SEEDED_BUGS})")
+    cls, attr = BUG_FLAGS[name]
+    prev = getattr(cls, attr)
+    setattr(cls, attr, True)
+    try:
+        yield
+    finally:
+        setattr(cls, attr, prev)

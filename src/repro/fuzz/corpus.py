@@ -1,0 +1,121 @@
+"""Replayable seed corpus: one JSON line per scenario.
+
+``tests/fuzz_corpus/corpus.jsonl`` is the regression ledger: every
+entry is ``{"class", "seed", "cell", "backend", "verdict"}`` with the
+seed as a zero-padded hex string.  ``replay_corpus`` re-runs every
+entry with the recorded cell PINNED (so a registry reshuffle cannot
+silently retarget an entry) and reports any verdict or resolution
+mismatch — the CI smoke gate fails on the first one.  Entries are
+written in canonical key order so two consecutive replays (and two
+checkouts) are byte-identical.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+from .scenarios import ScenarioResult, run_scenario
+
+ENTRY_KEYS = ("class", "seed", "cell", "backend", "verdict")
+
+
+def default_corpus_path() -> str:
+    """tests/fuzz_corpus/corpus.jsonl relative to the repo root (three
+    levels above this package)."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    root = os.path.dirname(os.path.dirname(os.path.dirname(here)))
+    return os.path.join(root, "tests", "fuzz_corpus", "corpus.jsonl")
+
+
+def dump_entry(res: ScenarioResult) -> str:
+    """Canonical one-line JSON for one scenario result."""
+    entry = {"class": res.cls, "seed": f"{res.seed:#018x}",
+             "cell": res.cell, "backend": res.backend,
+             "verdict": res.verdict}
+    return json.dumps(entry, separators=(", ", ": "))
+
+
+def load_corpus(path: Optional[str] = None) -> List[Dict[str, Any]]:
+    path = path or default_corpus_path()
+    entries: List[Dict[str, Any]] = []
+    if not os.path.exists(path):
+        return entries
+    with open(path, "r", encoding="utf-8") as fh:
+        for lineno, line in enumerate(fh, 1):
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            entry = json.loads(line)
+            missing = [k for k in ENTRY_KEYS if k not in entry]
+            if missing:
+                raise ValueError(
+                    f"{path}:{lineno}: corpus entry missing {missing}")
+            entries.append(entry)
+    return entries
+
+
+def append_entries(results: Iterable[ScenarioResult],
+                   path: Optional[str] = None) -> int:
+    """Append results not already present (keyed by class+seed)."""
+    path = path or default_corpus_path()
+    have = {(e["class"], int(e["seed"], 16))
+            for e in load_corpus(path)}
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    wrote = 0
+    with open(path, "a", encoding="utf-8") as fh:
+        for res in results:
+            if res.key() in have:
+                continue
+            fh.write(dump_entry(res) + "\n")
+            have.add(res.key())
+            wrote += 1
+    return wrote
+
+
+def replay_corpus(path: Optional[str] = None
+                  ) -> Tuple[List[ScenarioResult], List[str]]:
+    """Re-run every corpus entry; returns (results, mismatches).
+
+    A mismatch is any divergence from the recorded entry — verdict,
+    resolved cell, or backend — each described as one line carrying the
+    replay tuple."""
+    results: List[ScenarioResult] = []
+    mismatches: List[str] = []
+    for e in load_corpus(path):
+        seed = int(e["seed"], 16)
+        res = run_scenario(e["class"], seed, cell=e["cell"])
+        results.append(res)
+        for field_name, want, got in (
+                ("verdict", e["verdict"], res.verdict),
+                ("cell", e["cell"], res.cell),
+                ("backend", e["backend"], res.backend)):
+            if want != got:
+                mismatches.append(
+                    f"{field_name} changed for (class={e['class']} "
+                    f"seed={e['seed']} cell={e['cell']} "
+                    f"backend={e['backend']}): recorded {want!r}, "
+                    f"replay got {got!r}")
+    return results, mismatches
+
+
+def class_table(results: Iterable[ScenarioResult],
+                mismatches: Iterable[str] = ()) -> str:
+    """Per-class markdown table for the CI job summary."""
+    by_cls: Dict[str, Dict[str, int]] = {}
+    for r in results:
+        row = by_cls.setdefault(r.cls, {"entries": 0, "ok": 0,
+                                        "fail": 0})
+        row["entries"] += 1
+        row["ok" if r.verdict == "ok" else "fail"] += 1
+    lines = ["| scenario class | entries | ok | fail |",
+             "|---|---|---|---|"]
+    for cls in sorted(by_cls):
+        row = by_cls[cls]
+        lines.append(f"| {cls} | {row['entries']} | {row['ok']} "
+                     f"| {row['fail']} |")
+    n_mis = len(list(mismatches))
+    lines.append("")
+    lines.append(f"verdict mismatches: **{n_mis}**")
+    return "\n".join(lines)

@@ -1,0 +1,61 @@
+"""Instruction-kind crash-point injector.
+
+The countdown the sweeps use (``nvm.arm_crash(n)``) counts pwb, pfence
+and psync ticks in aggregate; related work (the detectability machinery
+in Rusanovsky et al.'s flat-combining persistence and MOD's
+per-instruction persist-cost accounting) shows bugs that only surface
+when the crash lands between two SPECIFIC instructions.  The injector
+rides the same ``_tick_crash_point`` seam but filters by instruction
+kind, so a scenario can say "crash at the 3rd psync from now".
+
+Armed via ``nvm.arm_injector(...)``; the NVM consults it at every tick
+and disarms it the moment it fires.  Unlike the countdown it survives
+``disarm_crash`` — which is what lets a scenario crash INSIDE
+``recover`` (recover's first act is disarming the countdown).
+"""
+
+from __future__ import annotations
+
+import random
+from typing import Optional
+
+KINDS = ("pwb", "pfence", "psync", "any")
+
+
+class CrashPointInjector:
+    """Crash at the ``nth`` next persistence instruction of ``kind``.
+
+    ``rng`` governs the adversarial write-back drain at the crash
+    (None = drain nothing, the most adversarial loss).  ``fired`` and
+    ``seen`` expose what happened for scenario bookkeeping.
+    """
+
+    __slots__ = ("kind", "remaining", "rng", "fired", "seen")
+
+    def __init__(self, kind: str, nth: int,
+                 rng: Optional[random.Random] = None) -> None:
+        if kind not in KINDS:
+            raise ValueError(f"kind must be one of {KINDS}, got {kind!r}")
+        if nth < 1:
+            raise ValueError(f"nth is 1-based, got {nth}")
+        self.kind = kind
+        self.remaining = nth
+        self.rng = rng
+        self.fired = False
+        self.seen = 0
+
+    def tick(self, kind: str) -> bool:
+        """Called by the NVM at each persistence instruction; True means
+        crash NOW (the NVM then disarms this injector)."""
+        if self.fired or (self.kind != "any" and kind != self.kind):
+            return False
+        self.seen += 1
+        self.remaining -= 1
+        if self.remaining <= 0:
+            self.fired = True
+            return True
+        return False
+
+    def __repr__(self) -> str:
+        return (f"CrashPointInjector(kind={self.kind!r}, "
+                f"remaining={self.remaining}, fired={self.fired})")

@@ -1,0 +1,491 @@
+"""Scenario classes: each is a pure function of (class tag, 64-bit seed).
+
+Every class derives ALL its parameters — registry cell, thread count,
+round count, crash countdowns, injector kinds, kill subsets — from
+``random.Random(seed ^ class_salt)`` in a fixed draw order, runs the
+scenario under the history checker, and returns a ``ScenarioResult``
+whose ``verdict`` is ``"ok"`` or ``"fail: <first violated invariant>"``
+(or ``"error: ..."`` for harness-level exceptions).  Replaying the same
+(class, seed) therefore reproduces the same verdict byte-for-byte —
+the property the corpus gate relies on.
+
+``cell`` may be pinned (corpus replay passes the recorded cell; the
+seeded-bug selftest pins the cell the bug lives in).  Pinning happens
+AFTER the derivation draw so the RNG stream — and with it every other
+decision — is identical whether or not the pin matches the derivation.
+"""
+
+from __future__ import annotations
+
+import random
+import sys
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from ..api import CombiningRuntime
+from ..core import SimulatedCrash
+from ..runtime.elastic import ElasticCoordinator
+from .crashpoints import CrashPointInjector
+from .scheduler import StagedScheduler, drain_all, PAD, STAGE_OPS
+
+MASK64 = (1 << 64) - 1
+
+#: per-class RNG salts: two classes never see the same stream for one seed
+_SALTS = {"schedule": 0x5C4ED0_01,
+          "instr-crash": 0x1457C2_A5,
+          "segment-loss": 0x5E97_055,
+          "worker-kill": 0x3072415,
+          "crash-during-recover": 0xC4A54EC0,
+          "reshape-recovery": 0x4E54A9E}
+
+#: detectable announce/perform cells (staged classes)
+ANNOUNCE_CELLS = [(k, p) for k in ("queue", "stack", "heap")
+                  for p in ("pbcomb", "pwfcomb")]
+#: invoke-path cells incl. the non-detectable baselines (at-least-once)
+INVOKE_CELLS = ANNOUNCE_CELLS + [("queue", "durable-ms"),
+                                 ("queue", "lock-direct"),
+                                 ("stack", "dfc"),
+                                 ("stack", "lock-undo"),
+                                 ("heap", "lock-direct")]
+
+
+def _checker_mod():
+    """tests/checker.py is the single source of truth for history
+    verdicts; it lives beside the tests, not in the package, so resolve
+    it the way the test-suite does (tests/ on sys.path) with a
+    repo-root fallback for CLI runs."""
+    try:
+        import checker
+        return checker
+    except ImportError:
+        import os
+        here = os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__)))))
+        tests = os.path.join(here, "tests")
+        if os.path.isdir(tests) and tests not in sys.path:
+            sys.path.insert(0, tests)
+        import checker
+        return checker
+
+
+@dataclass
+class ScenarioResult:
+    cls: str
+    seed: int
+    cell: str                 # "kind/protocol"
+    backend: str              # "threads" | "shm"
+    verdict: str              # "ok" | "fail: ..." | "error: ..."
+    detail: str = ""
+    stats: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def failed(self) -> bool:
+        return self.verdict != "ok"
+
+    def key(self) -> Tuple[str, int]:
+        return (self.cls, self.seed)
+
+
+def _pick_cell(rng: random.Random, cells, pin: Optional[str]
+               ) -> Tuple[str, str]:
+    drawn = cells[rng.randrange(len(cells))]
+    if pin is None:
+        return drawn
+    kind, _, proto = pin.partition("/")
+    if (kind, proto) not in cells:
+        raise ValueError(f"cell {pin!r} not valid for this class "
+                         f"(choices: {cells})")
+    return kind, proto
+
+
+def _first_failure(exc: AssertionError) -> str:
+    for ln in str(exc).splitlines():
+        ln = ln.strip()
+        if ln.startswith("- "):
+            return ln[2:]
+    return str(exc).splitlines()[0]
+
+
+def _result(cls: str, seed: int, cell: str, backend: str,
+            body: Callable[[], Dict[str, Any]]) -> ScenarioResult:
+    """Run ``body`` (which ends in a checker call) to a verdict."""
+    try:
+        stats = body() or {}
+    except AssertionError as e:
+        return ScenarioResult(cls, seed, cell, backend,
+                              f"fail: {_first_failure(e)}",
+                              detail=str(e))
+    except Exception as e:                      # noqa: BLE001
+        return ScenarioResult(cls, seed, cell, backend,
+                              f"error: {type(e).__name__}: {e}")
+    return ScenarioResult(cls, seed, cell, backend, "ok", stats=stats)
+
+
+# --------------------------------------------------------------------- #
+# schedule: randomized staged rounds + countdown crashes (threads)      #
+# --------------------------------------------------------------------- #
+def _sc_schedule(seed: int, cell: Optional[str] = None) -> ScenarioResult:
+    chk_mod = _checker_mod()
+    rng = random.Random(seed ^ _SALTS["schedule"])
+    kind, proto = _pick_cell(rng, ANNOUNCE_CELLS, cell)
+    cellstr = f"{kind}/{proto}"
+    n = rng.randint(2, 4)
+    rounds = rng.randint(3, 7)
+    banner = chk_mod.replay_banner("schedule", seed, cellstr, "threads")
+
+    def body():
+        rt = CombiningRuntime(n_threads=n)
+        try:
+            chk = chk_mod.HistoryChecker(kind, replay=banner)
+            obj = rt.make(kind, proto)
+            sched = StagedScheduler(rt, obj, chk, rng, n)
+            for _ in range(rounds):
+                arm = (rng.randint(1, 20) if rng.random() < 0.7
+                       else None)
+                arng = random.Random(rng.randrange(1 << 30))
+                sched.round(arm_cd=arm, arm_rng=arng)
+            sched.finish()
+            return {"rounds": rounds, "crashes": sched.crashes}
+        finally:
+            rt.close()
+
+    return _result("schedule", seed, cellstr, "threads", body)
+
+
+# --------------------------------------------------------------------- #
+# instr-crash: kind-aware injector on the invoke path (threads)         #
+# --------------------------------------------------------------------- #
+def _sc_instr_crash(seed: int, cell: Optional[str] = None
+                    ) -> ScenarioResult:
+    chk_mod = _checker_mod()
+    rng = random.Random(seed ^ _SALTS["instr-crash"])
+    kind, proto = _pick_cell(rng, INVOKE_CELLS, cell)
+    cellstr = f"{kind}/{proto}"
+    n = rng.randint(2, 3)
+    rounds = rng.randint(3, 6)
+    banner = chk_mod.replay_banner("instr-crash", seed, cellstr,
+                                   "threads")
+
+    def body():
+        rt = CombiningRuntime(n_threads=n)
+        try:
+            chk = chk_mod.HistoryChecker(kind, replay=banner)
+            obj = rt.make(kind, proto)
+            detectable = obj.adapter.detectable
+            handles = [rt.attach(p) for p in range(n)]
+            add_op, rem_op = STAGE_OPS[kind]
+            idx = [0] * n
+            crashes = 0
+            for _ in range(rounds):
+                order = rng.sample(range(n), n)
+                arm_at = (rng.choice(order)
+                          if rng.random() < 0.8 else None)
+                for p in order:
+                    if p == arm_at:
+                        rt.nvm.arm_injector(CrashPointInjector(
+                            rng.choice(("pwb", "pfence", "psync")),
+                            rng.randint(1, 6),
+                            random.Random(rng.randrange(1 << 30))))
+                    if rng.random() < 0.6:
+                        op, a = add_op, (p, idx[p], PAD)
+                        idx[p] += 1
+                    else:
+                        op, a = rem_op, None
+                    try:
+                        if a is None:
+                            ret = handles[p].invoke(obj, op)
+                        else:
+                            ret = handles[p].invoke(obj, op, a)
+                        chk.extend(p, [(op, a, ret)])
+                    except SimulatedCrash:
+                        crashes += 1
+                        records = [
+                            (nm, t, op_, a_, s_)
+                            for (nm, t), (op_, a_, s_)
+                            in rt._inflight.items()]
+                        rt.nvm.disarm_injector()
+                        replies = rt.recover()
+                        chk.apply_replay(records, replies)
+                        if not detectable:
+                            chk.note_at_least_once(records)
+            rt.nvm.disarm_injector()
+            rt.crash(random.Random(rng.randrange(1 << 30)))
+            rt.recover()
+            chk.check(drain_all(rt, obj))
+            return {"rounds": rounds, "crashes": crashes,
+                    "detectable": detectable}
+        finally:
+            rt.close()
+
+    return _result("instr-crash", seed, cellstr, "threads", body)
+
+
+# --------------------------------------------------------------------- #
+# segment-loss: one DIMM loses its pending write-backs (shm, in-parent) #
+# --------------------------------------------------------------------- #
+def _sc_segment_loss(seed: int, cell: Optional[str] = None
+                     ) -> ScenarioResult:
+    chk_mod = _checker_mod()
+    rng = random.Random(seed ^ _SALTS["segment-loss"])
+    kind, proto = _pick_cell(rng, ANNOUNCE_CELLS, cell)
+    cellstr = f"{kind}/{proto}"
+    segments = rng.randint(2, 3)
+    n = rng.randint(2, 3)
+    rounds = rng.randint(2, 5)
+    banner = chk_mod.replay_banner("segment-loss", seed, cellstr, "shm")
+
+    def body():
+        rt = CombiningRuntime(n_threads=n, backend="shm",
+                              segments=segments)
+        try:
+            chk = chk_mod.HistoryChecker(kind, replay=banner)
+            obj = rt.make(kind, proto,
+                          segment=rng.randrange(segments))
+            sched = StagedScheduler(rt, obj, chk, rng, n)
+            for _ in range(rounds):
+                arm = (rng.randint(1, 16) if rng.random() < 0.8
+                       else None)
+                lose = rng.randrange(segments)
+                sched.round(arm_cd=arm, arm_rng=None,
+                            lose_segment=lose if arm else None)
+            sched.finish()
+            return {"rounds": rounds, "crashes": sched.crashes,
+                    "segments": segments}
+        finally:
+            rt.close()
+
+    return _result("segment-loss", seed, cellstr, "shm", body)
+
+
+# --------------------------------------------------------------------- #
+# worker-kill: a worker subset dies with its journal (shm, real procs)  #
+# --------------------------------------------------------------------- #
+def _sc_worker_kill(seed: int, cell: Optional[str] = None
+                    ) -> ScenarioResult:
+    chk_mod = _checker_mod()
+    rng = random.Random(seed ^ _SALTS["worker-kill"])
+    kind, proto = _pick_cell(rng, ANNOUNCE_CELLS, cell)
+    cellstr = f"{kind}/{proto}"
+    workers = rng.randint(3, 4)
+    pairs = rng.randint(4, 8)
+    waves = rng.randint(1, 2)
+    banner = chk_mod.replay_banner("worker-kill", seed, cellstr, "shm")
+
+    def body():
+        rt = CombiningRuntime(n_threads=workers, backend="shm",
+                              segments=2)
+        try:
+            chk = chk_mod.HistoryChecker(kind, replay=banner)
+            obj = rt.make(kind, proto)
+            pool = rt.spawn_workers(workers)
+            kills = 0
+            for wave in range(waves):
+                rt.nvm.arm_crash(rng.randint(8, 40),
+                                 random.Random(rng.randrange(1 << 30)))
+                res = pool.run_pairs(obj, pairs, collect=True,
+                                     rich=True,
+                                     index_base=wave * pairs)
+                if not res.crashed:
+                    chk.extend_pool(res)
+                    rt.nvm.disarm_crash()
+                    continue
+                # the kill: a seeded worker subset dies WITH its
+                # journal — every response it acked (or would have
+                # received from the replay) is lost with its clients.
+                # The SYSTEM still replays every in-flight record
+                # (Section 2's system-support assumption: dropping a
+                # record would desync that thread's seq/announce
+                # parity and corrupt LATER recoveries for its tid) —
+                # the partial failure is losing the ACKS, not the
+                # replay.
+                tids = sorted(r.tid for r in res.reports)
+                killed = set(rng.sample(tids,
+                                        rng.randint(1, len(tids) - 1)))
+                kills += len(killed)
+                survivors, lost = res.partition_inflight(killed)
+                for rep in res.reports:
+                    if rep.tid in killed:
+                        chk.note_lost(rep.results or [])
+                    else:
+                        chk.extend(rep.tid, rep.results)
+                chk.note_lost(
+                    [(op, a, None) for _n, _t, op, a, _s in lost])
+                replies = rt.recover(inflight=survivors + lost)
+                chk.apply_replay(survivors, replies)
+            rt.crash(random.Random(rng.randrange(1 << 30)))
+            rt.recover()
+            chk.check(drain_all(rt, obj))
+            return {"waves": waves, "killed": kills}
+        finally:
+            rt.close()
+
+    return _result("worker-kill", seed, cellstr, "shm", body)
+
+
+# --------------------------------------------------------------------- #
+# crash-during-recover: a second crash lands inside the replay          #
+# --------------------------------------------------------------------- #
+def _sc_crash_during_recover(seed: int, cell: Optional[str] = None
+                             ) -> ScenarioResult:
+    chk_mod = _checker_mod()
+    rng = random.Random(seed ^ _SALTS["crash-during-recover"])
+    kind, proto = _pick_cell(rng, ANNOUNCE_CELLS, cell)
+    cellstr = f"{kind}/{proto}"
+    n = rng.randint(2, 4)
+    rounds = rng.randint(2, 5)
+    banner = chk_mod.replay_banner("crash-during-recover", seed,
+                                   cellstr, "threads")
+
+    def body():
+        rt = CombiningRuntime(n_threads=n)
+        try:
+            chk = chk_mod.HistoryChecker(kind, replay=banner)
+            obj = rt.make(kind, proto)
+            sched = StagedScheduler(rt, obj, chk, rng, n)
+            for _ in range(rounds):
+                # small countdown: the first crash is near-certain, so
+                # most rounds exercise the recover-crash path
+                arm = rng.randint(1, 10)
+                arng = random.Random(rng.randrange(1 << 30))
+                ik = rng.choice(("pwb", "pfence", "psync", "any"))
+                nth = rng.randint(1, 4)
+                irng = random.Random(rng.randrange(1 << 30))
+                sched.round(
+                    arm_cd=arm, arm_rng=arng,
+                    recover_injector=lambda k=ik, t=nth, r=irng:
+                        CrashPointInjector(k, t, r))
+            sched.finish()
+            return {"rounds": rounds, "crashes": sched.crashes,
+                    "recover_crashes": sched.recover_crashes}
+        finally:
+            rt.close()
+
+    return _result("crash-during-recover", seed, cellstr, "threads",
+                   body)
+
+
+# --------------------------------------------------------------------- #
+# reshape-recovery: checkpoint at step N, recovered after join/leave    #
+# --------------------------------------------------------------------- #
+def _sc_reshape_recovery(seed: int, cell: Optional[str] = None
+                         ) -> ScenarioResult:
+    chk_mod = _checker_mod()
+    rng = random.Random(seed ^ _SALTS["reshape-recovery"])
+    proto = ("pbcomb", "pwfcomb")[rng.randrange(2)]
+    if cell is not None:
+        kind, _, proto = cell.partition("/")
+        if kind != "ckpt":
+            raise ValueError("reshape-recovery runs on the ckpt cell")
+    cellstr = f"ckpt/{proto}"
+    n = rng.randint(2, 4)
+    steps = rng.randint(3, 6)
+    words = 4
+    banner = chk_mod.replay_banner("reshape-recovery", seed, cellstr,
+                                   "threads")
+
+    def body():
+        from ..api.mp import checkpoint_payload
+        rt = CombiningRuntime(n_threads=n)
+        try:
+            chk = chk_mod.HistoryChecker("ckpt", replay=banner)
+            ck = rt.make("ckpt", proto)
+            # wall-clock-free coordinator: failures only via explicit
+            # leave(), so the plan is a pure function of the seed
+            coord = ElasticCoordinator(n, heartbeat_timeout=1e9)
+            step = 0
+            for _ in range(steps):
+                step += 1
+                writer = rng.randrange(n)
+                payload = checkpoint_payload(writer, step, words)
+                if rng.random() < 0.5:
+                    rt.arm_crash(rng.randint(1, 12),
+                                 random.Random(rng.randrange(1 << 30)))
+                h = rt.attach(writer)
+                try:
+                    ret = h.invoke(ck, "persist", (step, payload))
+                    chk.extend(writer,
+                               [("persist", (step, payload), ret)])
+                except SimulatedCrash:
+                    records = [(nm, t, op_, a_, s_)
+                               for (nm, t), (op_, a_, s_)
+                               in rt._inflight.items()]
+                    replies = rt.recover()
+                    chk.apply_replay(records, replies)
+                rt.nvm.disarm_crash()
+                coord.heartbeat(writer, step)
+            committed = ck.snapshot()["step"]
+
+            # elastic reshape: one host leaves, maybe a new one joins
+            leaver = rng.randrange(n)
+            coord.leave(leaver)
+            joiner = None
+            if rng.random() < 0.7:
+                joiner = n + rng.randrange(2)
+                coord.join(joiner)
+            plan = coord.rescale(committed)
+
+            # cross-version recovery: full power loss, then the NEW
+            # host set resumes from the plan's restore point
+            rt.crash(random.Random(rng.randrange(1 << 30)))
+            rt.recover()
+            snap = ck.snapshot()
+            assert plan.restore_step == committed, (
+                f"  - plan restore_step {plan.restore_step} != "
+                f"committed durable step {committed}\n"
+                + banner)
+            assert leaver not in plan.hosts, (
+                f"  - departed host {leaver} still in plan "
+                f"{plan.hosts}\n" + banner)
+            if joiner is not None:
+                assert joiner in plan.hosts, (
+                    f"  - joined host {joiner} missing from plan "
+                    f"{plan.hosts}\n" + banner)
+            assert snap["step"] >= committed, (
+                f"  - durable step {snap['step']} regressed below "
+                f"committed {committed} across the reshape\n" + banner)
+
+            # the reshaped fleet continues from restore_step + 1
+            step = max(snap["step"], plan.restore_step)
+            for host in plan.hosts[:2]:
+                step += 1
+                tid = host % n
+                payload = checkpoint_payload(tid, step, words)
+                ret = rt.attach(tid).invoke(ck, "persist",
+                                            (step, payload))
+                chk.extend(tid, [("persist", (step, payload), ret)])
+                coord.heartbeat(host, step)
+            chk_mod.check_ckpt(chk.events, ck.snapshot(), words,
+                               replay=banner)
+            return {"steps": steps, "committed": committed,
+                    "dp_size": plan.dp_size}
+        finally:
+            rt.close()
+
+    return _result("reshape-recovery", seed, cellstr, "threads", body)
+
+
+# --------------------------------------------------------------------- #
+SCENARIO_CLASSES: Dict[str, Callable[..., ScenarioResult]] = {
+    "schedule": _sc_schedule,
+    "instr-crash": _sc_instr_crash,
+    "segment-loss": _sc_segment_loss,
+    "worker-kill": _sc_worker_kill,
+    "crash-during-recover": _sc_crash_during_recover,
+    "reshape-recovery": _sc_reshape_recovery,
+}
+
+
+def run_scenario(cls: str, seed: int, cell: Optional[str] = None,
+                 backend: Optional[str] = None) -> ScenarioResult:
+    """Run one scenario; pure function of (cls, seed [, cell pin]).
+
+    ``backend`` is informational/validated — each class determines its
+    backend; passing a mismatching one is an error, not a knob."""
+    if cls not in SCENARIO_CLASSES:
+        raise ValueError(f"unknown scenario class {cls!r} "
+                         f"(have: {sorted(SCENARIO_CLASSES)})")
+    res = SCENARIO_CLASSES[cls](seed & MASK64, cell)
+    if backend is not None and backend != res.backend:
+        raise ValueError(f"class {cls} runs on backend "
+                         f"{res.backend!r}, not {backend!r}")
+    return res

@@ -1,0 +1,157 @@
+"""Deterministic logical-thread scheduler for staged fuzz rounds.
+
+One OS thread drives n logical threads through the staged
+announce/perform seam (the only way to enumerate in-round crash points
+deterministically in one process): every scheduling decision — which
+threads announce this round, in what order, with which op, who
+performs, whether and when the machine crashes — is drawn from the
+scenario's seeded RNG, so the whole interleaving replays from the seed.
+
+The round protocol mirrors the fixed staged sweeps
+(tests/test_linearizability.py): announce a subset, one announcer
+performs (combining the others), a crash may land anywhere inside the
+round, and ``recover`` replays every announced request.  On top of
+that, rounds can crash AGAIN inside recover (a kind-aware injector
+fires during the replay — the countdown can't, recover disarms it
+first) and re-recover from the retained in-flight records, which is
+exactly the crash-during-recover coverage the fixed sweeps never had.
+"""
+
+from __future__ import annotations
+
+import random
+from typing import Any, Callable, List, Optional, Tuple
+
+from ..core import SimulatedCrash
+
+#: add/remove op names per structure kind (pair-workload shape)
+STAGE_OPS = {"queue": ("enqueue", "dequeue"),
+             "stack": ("push", "pop"),
+             "heap": ("insert", "delete_min")}
+
+DRAIN_OP = {"queue": "dequeue", "stack": "pop", "heap": "delete_min"}
+
+#: payload pad: long enough that rich values exercise the blob path on
+#: the shm backend, short enough to keep corpus replay fast
+PAD = "fuzz-blob-pad-" * 2
+
+
+def drain_all(rt, obj) -> List[Any]:
+    """Quiescent post-recovery drain (the structure's own remove op
+    until empty) — the final-state input the checker wants."""
+    fn = rt.attach(0).invoker(obj, DRAIN_OP[obj.kind], arity=0)
+    out = []
+    while True:
+        v = fn()
+        if v is None:
+            break
+        out.append(v)
+    return out
+
+
+class StagedScheduler:
+    """Drives seeded announce/perform rounds against one structure.
+
+    ``chk`` is the scenario's ``HistoryChecker``; every completed or
+    replayed response is journaled here.  ``rng`` is the scenario RNG —
+    the scheduler consumes draws in a fixed order so runs are pure
+    functions of the seed.
+    """
+
+    def __init__(self, rt, obj, chk, rng: random.Random, n: int) -> None:
+        self.rt = rt
+        self.obj = obj
+        self.chk = chk
+        self.rng = rng
+        self.n = n
+        self.handles = [rt.attach(p) for p in range(n)]
+        self.add_op, self.rem_op = STAGE_OPS[obj.kind]
+        self._idx = [0] * n              # per-producer value index
+        self.crashes = 0
+        self.recover_crashes = 0
+
+    # ------------------------------------------------------------------ #
+    def round(self, *, arm_cd: Optional[int] = None,
+              arm_rng: Optional[random.Random] = None,
+              lose_segment: Optional[int] = None,
+              recover_injector: Optional[Callable[[], Any]] = None
+              ) -> bool:
+        """One staged round; returns True iff a crash landed in it.
+
+        ``arm_cd``/``arm_rng``: crash countdown + drain adversary.
+        ``lose_segment``: shm partial-failure policy for that crash.
+        ``recover_injector``: factory for a ``CrashPointInjector`` armed
+        over the FIRST recover when the round crashed — a second crash
+        then lands inside the replay and a second recover finishes from
+        the retained in-flight records.
+        """
+        rng = self.rng
+        k = rng.randint(1, self.n)
+        announcers = rng.sample(range(self.n), k)
+        staged: List[Tuple[int, str, Any, int]] = []
+        for p in announcers:
+            if rng.random() < 0.65:
+                op, args = self.add_op, (p, self._idx[p], PAD)
+                self._idx[p] += 1
+            else:
+                op, args = self.rem_op, None
+            if args is None:
+                seq = self.handles[p].announce(self.obj, op)
+            else:
+                seq = self.handles[p].announce(self.obj, op, args)
+            staged.append((p, op, args, seq))
+
+        if arm_cd is not None:
+            if lose_segment is not None:
+                self.rt.nvm.arm_crash(arm_cd, arm_rng,
+                                      lose_segment=lose_segment)
+            else:
+                self.rt.nvm.arm_crash(arm_cd, arm_rng)
+
+        performer = rng.choice(announcers)
+        crashed = False
+        performed = False
+        try:
+            ret = self.handles[performer].perform(self.obj)
+            performed = True
+            p_op, p_args = next((op, a) for q, op, a, _s in staged
+                                if q == performer)
+            self.chk.extend(performer, [(p_op, p_args, ret)])
+        except SimulatedCrash:
+            crashed = True
+            self.crashes += 1
+
+        records = [(self.obj.name, p, op, a, seq)
+                   for p, op, a, seq in staged]
+        nvm = self.rt.nvm
+        nvm.disarm_crash()
+        if crashed and recover_injector is not None:
+            inj = recover_injector()
+            nvm.arm_injector(inj)
+            try:
+                replies = self.rt.recover(inflight=records)
+                nvm.disarm_injector()
+            except SimulatedCrash:
+                # crash DURING recover: the caller retains the records,
+                # so a second recover replays everything idempotently
+                self.recover_crashes += 1
+                nvm.disarm_injector()
+                nvm.disarm_crash()
+                replies = self.rt.recover(inflight=records)
+        else:
+            replies = self.rt.recover(inflight=records)
+
+        for p, op, a, _seq in staged:
+            if p == performer and performed:
+                continue        # journaled at perform time
+            key = (self.obj.name, p)
+            if key in replies:
+                self.chk.extend(p, [(op, a, replies[key])])
+        return crashed
+
+    # ------------------------------------------------------------------ #
+    def finish(self) -> None:
+        """Final full crash + recovery, then drain and check."""
+        self.rt.crash(random.Random(self.rng.randrange(1 << 30)))
+        self.rt.recover()
+        self.chk.check(drain_all(self.rt, self.obj))

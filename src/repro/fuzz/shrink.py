@@ -1,0 +1,53 @@
+"""Seed shrinking: reduce a failing 64-bit seed to a minimal one.
+
+There is no structured input to delta-debug — the scenario IS the seed —
+so shrinking means searching nearby seeds that still fail and preferring
+"simpler" ones.  Simplicity is (popcount, value): fewer set bits first
+(sparse seeds are easier to eyeball and diff), then numerically smaller.
+The search is greedy over single-bit clears plus a few shift/mask jumps,
+re-running the scenario for each candidate, bounded by ``budget``
+evaluations so a slow scenario class cannot stall CI's explore job.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+MASK64 = (1 << 64) - 1
+
+
+def _cost(seed: int) -> Tuple[int, int]:
+    return (bin(seed).count("1"), seed)
+
+
+def shrink_seed(fails: Callable[[int], bool], seed: int,
+                budget: int = 64) -> int:
+    """Greedy seed minimization.
+
+    ``fails(candidate)`` must re-run the scenario and return True iff it
+    still reproduces the failure.  ``seed`` must itself fail (the caller
+    just observed it); it is returned unchanged if nothing simpler
+    reproduces within ``budget`` evaluations."""
+    best = seed & MASK64
+    tried = {best}
+    evals = 0
+    improved = True
+    while improved and evals < budget:
+        improved = False
+        candidates = [best & ~(1 << b) for b in range(64)
+                      if best & (1 << b)]
+        candidates += [best >> 1, best >> 8,
+                       best & 0xFFFFFFFF, best & 0xFFFF]
+        for cand in candidates:
+            cand &= MASK64
+            if cand in tried or _cost(cand) >= _cost(best):
+                continue
+            tried.add(cand)
+            evals += 1
+            if fails(cand):
+                best = cand
+                improved = True
+                break               # restart the scan from the new best
+            if evals >= budget:
+                break
+    return best

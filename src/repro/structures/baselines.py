@@ -224,6 +224,14 @@ class DurableMSQueue:
     baselines under the multiprocess harness.
     """
 
+    # Test-only seeded-bug fixture (repro.fuzz.bugs): when True,
+    # dequeue re-introduces exactly the mirror race described above —
+    # every second successful swing overwrites the durable head mirror
+    # with the PRE-swing pointer before persisting it, so a later crash
+    # recovers a regressed head and drains an already-returned value
+    # again.  Never set directly; toggle via ``seeded_bug`` in tests.
+    mirror_race_bug = False
+
     def __init__(self, nvm: NVM, n_threads: int, chunk_nodes: int = 256) -> None:
         self.nvm = nvm
         self.pool = NodePool(nvm, n_threads, None, chunk_nodes)
@@ -297,6 +305,10 @@ class DurableMSQueue:
                 # head_addr mirrored inside the SC: mirror order always
                 # matches swing order, so the pwb snapshot can never
                 # regress the durable head (see class docstring)
+                if DurableMSQueue.mirror_race_bug:
+                    self._bug_deq = getattr(self, "_bug_deq", 0) + 1
+                    if self._bug_deq % 2 == 0:
+                        nvm.write(self.head_addr, first)
                 nvm.pwb(self.head_addr, 1)
                 nvm.psync()
                 return nvm.read(nxt)

@@ -1,0 +1,363 @@
+"""Crash-schedule fuzzer (repro.fuzz, DESIGN.md §12, docs/FUZZING.md).
+
+Covers the whole subsystem: the kind-aware crash-point injector on the
+pwb/pfence/psync tick seam, the multi-segment partial-failure crash
+policy, scenario determinism (same class+seed → byte-identical result),
+the checked-in corpus replaying green, seed shrinking, the checker's
+partial-failure verdicts with replayable failure banners, explicit
+crash-during-recover coverage on the threads backend, and the
+acceptance bar: the fuzzer REDISCOVERS both seeded historical bugs
+(PR 5 torn announcement, PR 4 durable-MS mirror race) within a bounded
+seed budget.
+"""
+
+import dataclasses
+import json
+import random
+
+import pytest
+
+from checker import HistoryChecker, replay_banner
+from repro.api import CombiningRuntime
+from repro.core import NVM, SimulatedCrash
+from repro.core.pbcomb import PBComb
+from repro.core.shm import ShmNVM
+from repro.fuzz import (CrashPointInjector, SCENARIO_CLASSES,
+                        dump_entry, load_corpus, replay_corpus,
+                        run_scenario, shrink_seed)
+from repro.fuzz.bugs import BUG_HUNTS, SEEDED_BUGS, seeded_bug
+from repro.fuzz.corpus import default_corpus_path
+from repro.structures.baselines import DurableMSQueue
+
+
+# --------------------------------------------------------------------- #
+# crash-point injector seam                                             #
+# --------------------------------------------------------------------- #
+def test_injector_kind_filtering_and_one_shot():
+    inj = CrashPointInjector("psync", 2)
+    assert not inj.tick("pwb")          # wrong kind: not counted
+    assert not inj.tick("psync")        # 1st psync of 2
+    assert not inj.tick("pfence")
+    assert inj.tick("psync")            # 2nd psync: fire
+    assert inj.fired
+    assert not inj.tick("psync")        # one-shot: never fires again
+
+
+def test_injector_any_kind_counts_everything():
+    inj = CrashPointInjector("any", 3)
+    assert not inj.tick("pwb")
+    assert not inj.tick("pfence")
+    assert inj.tick("psync")
+
+
+def test_injector_rejects_bad_args():
+    with pytest.raises(ValueError):
+        CrashPointInjector("flush", 1)
+    with pytest.raises(ValueError):
+        CrashPointInjector("pwb", 0)
+
+
+def test_nvm_injector_fires_at_nth_kind_and_self_clears():
+    nvm = NVM(256)
+    a = nvm.alloc(4)
+    nvm.arm_injector(CrashPointInjector("pwb", 2))
+    nvm.write(a, 1)
+    nvm.pwb(a, 1)                       # 1st pwb: survives
+    nvm.write(a + 1, 2)
+    with pytest.raises(SimulatedCrash):
+        nvm.pwb(a + 1, 1)               # 2nd pwb: crash
+    assert nvm._injector is None        # self-cleared on fire
+    nvm.disarm_crash()
+    nvm.write(a + 2, 3)
+    nvm.pwb(a + 2, 1)                   # no residual crash point
+    nvm.psync()
+
+
+def test_injector_survives_disarm_crash():
+    """disarm_crash clears the countdown but NOT the injector — the
+    property that lets a scenario crash inside ``recover`` (whose
+    first act is disarm_crash)."""
+    nvm = NVM(256)
+    a = nvm.alloc(2)
+    nvm.arm_injector(CrashPointInjector("pwb", 1))
+    nvm.disarm_crash()
+    nvm.write(a, 1)
+    with pytest.raises(SimulatedCrash):
+        nvm.pwb(a, 1)
+    nvm.disarm_crash()
+
+
+def test_injector_disables_fused_fast_path():
+    """With an injector armed the fused sentences must fall back to
+    discrete instructions, else per-kind ticks are never consulted."""
+    nvm = NVM(256)
+    assert nvm._fast_ok()
+    nvm.arm_injector(CrashPointInjector("psync", 1))
+    assert not nvm._fast_ok()
+    nvm.disarm_injector()
+    assert nvm._fast_ok()
+
+
+# --------------------------------------------------------------------- #
+# multi-segment partial failure (segment loss)                          #
+# --------------------------------------------------------------------- #
+def test_shm_segment_loss_drops_only_lost_segment():
+    """Crash with lose_segment=1: segment 0's pending write-backs all
+    drain (survivor DIMMs flush), segment 1's are lost entirely."""
+    nvm = ShmNVM(4096, segments=2)
+    try:
+        with nvm.placement(0):
+            a0 = nvm.alloc(1)
+        with nvm.placement(1):
+            a1 = nvm.alloc(1)
+        nvm.write(a0, 11)
+        nvm.write(a1, 22)
+        nvm.pwb(a0, 1)
+        nvm.arm_crash(0, lose_segment=1)
+        with pytest.raises(SimulatedCrash):
+            nvm.pwb(a1, 1)              # pwb tick: both entries pending
+        nvm.disarm_crash()
+        assert nvm.read(a0) == 11       # survivor segment drained
+        assert nvm.read(a1) == 0        # lost segment dropped (shm
+        #                                 words zero-init, never 22)
+    finally:
+        nvm.close()
+
+
+def test_shm_lose_segment_validated():
+    nvm = ShmNVM(1024, segments=2)
+    try:
+        with pytest.raises(ValueError):
+            nvm.arm_crash(1, lose_segment=2)
+    finally:
+        nvm.close()
+    single = NVM(256)
+    with pytest.raises(ValueError):
+        single.arm_crash(1, lose_segment=0)
+
+
+# --------------------------------------------------------------------- #
+# scenario determinism + corpus                                         #
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("cls", sorted(SCENARIO_CLASSES))
+def test_scenario_deterministic(cls):
+    a = run_scenario(cls, 7)
+    b = run_scenario(cls, 7)
+    assert dataclasses.asdict(a) == dataclasses.asdict(b)
+    assert a.verdict == "ok", a.detail
+
+
+@pytest.mark.parametrize("cls", sorted(SCENARIO_CLASSES))
+def test_scenario_cell_pin_matches_derived(cls):
+    """Pinning the derived cell must not disturb the RNG stream — the
+    property corpus replay relies on."""
+    a = run_scenario(cls, 11)
+    b = run_scenario(cls, 11, cell=a.cell)
+    assert dataclasses.asdict(a) == dataclasses.asdict(b)
+
+
+def test_corpus_replays_green():
+    """The checked-in corpus is the PR regression gate: every entry's
+    verdict must reproduce exactly."""
+    entries = load_corpus()
+    assert entries, "tests/fuzz_corpus/corpus.jsonl is missing/empty"
+    assert {e["class"] for e in entries} == set(SCENARIO_CLASSES), \
+        "corpus must cover every scenario class"
+    results, mismatches = replay_corpus()
+    assert not mismatches, mismatches
+
+
+def test_corpus_roundtrip_format():
+    for e in load_corpus():
+        seed = int(e["seed"], 16)
+        res = run_scenario(e["class"], seed, cell=e["cell"])
+        line = dump_entry(res)
+        assert json.loads(line) == e
+    assert default_corpus_path().endswith("corpus.jsonl")
+
+
+def test_unknown_class_rejected():
+    with pytest.raises(ValueError):
+        run_scenario("no-such-class", 1)
+    with pytest.raises(ValueError):
+        run_scenario("schedule", 1, backend="shm")  # wrong backend
+
+
+# --------------------------------------------------------------------- #
+# shrinking                                                             #
+# --------------------------------------------------------------------- #
+def test_shrink_converges_to_simpler_seed():
+    # synthetic oracle: fails iff bit 3 is set — minimal seed is 0x8
+    evals = []
+
+    def fails(s):
+        evals.append(s)
+        return bool(s & 0x8)
+
+    out = shrink_seed(fails, 0xDEAD_BEEF_CAFE_0008, budget=200)
+    assert out == 0x8
+    assert len(evals) <= 200
+
+
+def test_shrink_keeps_original_when_nothing_simpler():
+    assert shrink_seed(lambda s: s == 0x1, 0x1, budget=32) == 0x1
+
+
+# --------------------------------------------------------------------- #
+# crash-during-recover (threads backend, explicit coverage)             #
+# --------------------------------------------------------------------- #
+def test_crash_during_recover_threads_explicit():
+    """A crash landing INSIDE recover, then a second recover from the
+    caller-retained records: exactly-once for a detectable protocol."""
+    rt = CombiningRuntime(n_threads=2)
+    try:
+        obj = rt.make("queue", "pbcomb")
+        h = [rt.attach(p) for p in range(2)]
+        s0 = h[0].announce(obj, "enqueue", "a")
+        s1 = h[1].announce(obj, "enqueue", "b")
+        rt.arm_crash(2)
+        with pytest.raises(SimulatedCrash):
+            h[0].perform(obj)
+        records = [(obj.name, 0, "enqueue", "a", s0),
+                   (obj.name, 1, "enqueue", "b", s1)]
+        rt.nvm.disarm_crash()
+        rt.nvm.arm_injector(CrashPointInjector("any", 1))
+        with pytest.raises(SimulatedCrash):
+            rt.recover(inflight=records)
+        rt.nvm.disarm_injector()
+        rt.nvm.disarm_crash()
+        replies = rt.recover(inflight=records)
+        assert replies[(obj.name, 0)] in ("ACK", True)
+        assert replies[(obj.name, 1)] in ("ACK", True)
+        drained = obj.snapshot()
+        assert sorted(drained) == ["a", "b"]    # exactly once each
+    finally:
+        rt.close()
+
+
+def test_crash_during_recover_scenarios_exercise_the_path():
+    hits = 0
+    for seed in range(6):
+        r = run_scenario("crash-during-recover", seed)
+        assert r.verdict == "ok", r.detail
+        hits += r.stats.get("recover_crashes", 0)
+    assert hits > 0, "no scenario crashed inside recover in 6 seeds"
+
+
+# --------------------------------------------------------------------- #
+# checker partial-failure verdicts + replay banner                      #
+# --------------------------------------------------------------------- #
+def test_checker_lost_add_excused_once():
+    x, y = (0, 0, "p"), (1, 0, "p")     # (producer, index, pad) values
+    chk = HistoryChecker("queue")
+    chk.extend(0, [("enqueue", x, "ACK")])
+    chk.note_lost([("enqueue", y, "ACK")])      # killed worker's add
+    chk.check([x, y])                           # y surfaces once: ok
+    chk2 = HistoryChecker("queue")
+    chk2.note_lost([("enqueue", y, "ACK")])
+    with pytest.raises(AssertionError):
+        chk2.check([y, y])                      # twice: beyond allowance
+
+
+def test_checker_lost_remove_excuses_missing_value():
+    chk = HistoryChecker("queue")
+    chk.extend(0, [("enqueue", "x", "ACK")])
+    chk.note_lost([("dequeue", None, None)])
+    chk.check([])                               # x consumed, ack lost
+    chk2 = HistoryChecker("queue")
+    chk2.extend(0, [("enqueue", "x", "ACK"),
+                    ("enqueue", "y", "ACK")])
+    chk2.note_lost([("dequeue", None, None)])
+    with pytest.raises(AssertionError):
+        chk2.check([])                          # two missing, one excuse
+
+
+def test_checker_failure_prints_replay_tuple():
+    banner = replay_banner("schedule", 0xAB, "queue/pbcomb", "threads")
+    chk = HistoryChecker("queue", replay=banner)
+    chk.extend(0, [("enqueue", "x", "ACK")])
+    with pytest.raises(AssertionError) as ei:
+        chk.check([])
+    msg = str(ei.value)
+    assert "replay: (class=schedule seed=0x00000000000000ab "\
+           "cell=queue/pbcomb backend=threads)" in msg
+    assert "python -m repro.fuzz run --cls schedule "\
+           "--seed 0x00000000000000ab" in msg
+
+
+def test_partition_inflight_splits_by_tid():
+    from repro.api.mp import PoolResult, WorkerReport
+    res = PoolResult(wall_s=0.0, reports=[
+        WorkerReport(tid=0, status="crashed",
+                     inflight=[("q", 0, "enqueue", "a", 1)]),
+        WorkerReport(tid=1, status="crashed",
+                     inflight=[("q", 1, "dequeue", None, 4)]),
+    ])
+    surv, lost = res.partition_inflight({1})
+    assert surv == [("q", 0, "enqueue", "a", 1)]
+    assert lost == [("q", 1, "dequeue", None, 4)]
+
+
+# --------------------------------------------------------------------- #
+# seeded-bug rediscovery (the acceptance bar)                           #
+# --------------------------------------------------------------------- #
+def test_seeded_bug_flags_off_by_default():
+    assert PBComb.torn_announce_bug is False
+    assert DurableMSQueue.mirror_race_bug is False
+
+
+def test_seeded_bug_context_restores_flag():
+    with seeded_bug("torn-announce"):
+        assert PBComb.torn_announce_bug is True
+    assert PBComb.torn_announce_bug is False
+    with pytest.raises(ValueError):
+        with seeded_bug("no-such-bug"):
+            pass
+
+
+@pytest.mark.parametrize("bug", SEEDED_BUGS)
+def test_fuzzer_rediscovers_seeded_bug(bug):
+    """The calibration bar: each re-introduced historical bug must be
+    found within a bounded seed budget, and the finding seed must pass
+    with the bug off (it is the bug, not the harness)."""
+    cls, cell = BUG_HUNTS[bug]
+    budget = 32
+    hit = None
+    with seeded_bug(bug):
+        for seed in range(budget):
+            res = run_scenario(cls, seed, cell=cell)
+            if res.failed:
+                hit = res
+                break
+    assert hit is not None, \
+        f"{bug} not found in {budget} seeds on {cls}/{cell}"
+    clean = run_scenario(cls, hit.seed, cell=cell)
+    assert clean.verdict == "ok", \
+        f"seed {hit.seed:#x} fails even with {bug} off: {clean.verdict}"
+
+
+def test_seeded_bugs_dont_leak_into_history():
+    """Belt and braces for the fixture flags: a quick clean run of each
+    hunting cell after the rediscovery tests stays green."""
+    for cls, cell in BUG_HUNTS.values():
+        r = run_scenario(cls, 5, cell=cell)
+        assert r.verdict == "ok", r.detail
+
+
+# --------------------------------------------------------------------- #
+# scheduler round protocol sanity                                       #
+# --------------------------------------------------------------------- #
+def test_staged_scheduler_round_journal_consistent():
+    from repro.fuzz.scheduler import StagedScheduler, drain_all
+    rt = CombiningRuntime(n_threads=3)
+    try:
+        chk = HistoryChecker("queue")
+        obj = rt.make("queue", "pbcomb")
+        rng = random.Random(42)
+        sched = StagedScheduler(rt, obj, chk, rng, 3)
+        for i in range(4):
+            sched.round(arm_cd=3 if i % 2 else None,
+                        arm_rng=random.Random(i))
+        sched.finish()      # raises on any history violation
+    finally:
+        rt.close()
