@@ -35,7 +35,10 @@ CI gate): with 4 workers the queue/stack/heap pbcomb cells plus
 serving/pbcomb and checkpoint/pbcomb must combine at degree_mean >= 2
 and every combining row's wall psync/op must be strictly below its
 per-op-persist floor (lock-direct / lock-undo / durable-ms rows of the
-same table).
+same table).  Every combining row must also end below the
+``live_chunks`` ceiling (``live_chunks_ceiling``) — blob chunks held
+beyond what structure state can legitimately reference mean response
+refcounts are leaking.
 
 ``--thread-probe`` instead runs the same workload on the THREAD backend
 and prints its measured degree — the 3.13t CI scout uses it to detect
@@ -51,7 +54,7 @@ JSON schema (``bench.mp.v2``, superset of v1)::
                "psyncs_per_op": float, "rounds": int|null,
                "degree_mean": float|null, "degree_max": int|null,
                "segments": int, "seg_psyncs_per_op": [float, ...],
-               "ring_spills": int,
+               "ring_spills": int, "live_chunks": int,
                "modeled_us_per_op": float|null,
                "modeled_pwbs_per_op": float|null,
                "modeled_psyncs_per_op": float|null,
@@ -105,7 +108,8 @@ def _finish_row(rt, name: str, workers: int, res, degree) -> dict:
            "rounds": None, "degree_mean": None, "degree_max": None,
            "segments": len(segs),
            "seg_psyncs_per_op": [s["psync"] / ops for s in segs],
-           "ring_spills": c["ring_spills"]}
+           "ring_spills": c["ring_spills"],
+           "live_chunks": rt.nvm.occupancy()["live_chunks"]}
     if degree is not None and degree["rounds"]:
         row["rounds"] = degree["rounds"]
         row["degree_mean"] = degree["ops_combined"] / degree["rounds"]
@@ -246,6 +250,13 @@ def thread_probe(workers: int = 4, pairs: int = 200) -> dict:
             / (2 * workers * pairs)}
 
 
+def live_chunks_ceiling(workers: int) -> int:
+    """Upper bound on blob chunks legitimately held by structure state
+    at the end of a row (per-thread StateRec copies each holding one
+    response ref per client slot, plus board/ring transients)."""
+    return 4 * workers * workers + 8 * workers + 16
+
+
 def check_rows(rows, workers: int = 4) -> list:
     """The mp-smoke acceptance gate; returns failure strings."""
     failures = []
@@ -298,6 +309,19 @@ def check_rows(rows, workers: int = 4) -> list:
             failures.append(
                 f"{n}@{workers}w reports {red} redundant pwbs/op — "
                 "the minimality claim (P2) is violated")
+
+    # blob-heap leak ceiling: structure-HELD chunks scale with the
+    # state-copy count (O(workers) copies x O(workers) client slots for
+    # the pwf cells), while a refcount leak scales with the REQUEST
+    # count — far past this ceiling by the end of any row
+    for n, r in at_w.items():
+        lc = r.get("live_chunks")
+        if (n.split("/")[1] in COMBINING and lc is not None
+                and lc > live_chunks_ceiling(workers)):
+            failures.append(
+                f"{n}@{workers}w ends with {lc} live blob chunks "
+                f"(ceiling {live_chunks_ceiling(workers)}) — response "
+                "refcounts are leaking")
     return failures
 
 

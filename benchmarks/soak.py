@@ -1,0 +1,556 @@
+"""Leak-gated soak harness: sustained traffic through the recoverable
+structures (and the sharded fleet) with periodic crash()/recover()
+cycles, quiesce-driven reclamation, and memory-occupancy sampling
+(DESIGN.md §13; ROADMAP "Memory reclamation for long-haul traffic").
+
+Two legs:
+
+  * ``soak/structures/<backend>`` — one runtime per backend (threads
+    AND shm) holding a PWFQueue and a PWFStack, both in epoch-reclaim
+    mode, driven through balanced churn rounds with an occupancy wave
+    (a fill/drain cycle, so limbo rings and free windows both see
+    traffic).  Every op's response is checked against an in-process
+    mirror (deque/list), the queue/stack contents are compared to the
+    mirror after EVERY crash/recover cycle, and ``quiesce()`` runs
+    between churn phases (the only persisting reclamation path).
+  * ``soak/fleet/shm`` — an open-loop ``repro.fleet`` run
+    (protocol="pwfcomb", so every shard ingress queue reclaims), waves
+    of Poisson traffic with a rotating shard crashed mid-wave and
+    recovered, ``Fleet.quiesce()`` at wave boundaries, and the durable
+    linearizability checker (tests/checker.py) sampled at quiescent
+    points.
+
+Each leg samples ``rss_bytes`` (VmRSS), ``occupancy_bytes``
+(``NVM.occupancy`` — allocated word footprint + live blob bytes),
+``live_chunks`` and the reclaimer's fresh-allocation counters, then
+fits a least-squares occupancy/RSS slope over the post-warmup samples.
+With reclamation working, steady-state churn is served from the free
+window: the slope is ~0 and ``allocs_per_op`` collapses toward 0 (the
+bounded exceptions are the per-crash window leak and ring-full drops —
+both counted in the row's ``reclaim`` stats).
+
+Run:  PYTHONPATH=src python -m benchmarks.soak
+          [--quick] [--budget-s 600] [--json BENCH_soak.json] [--check]
+          [--legs structures,fleet] [--seed 0]
+
+``--check`` enforces (the soak CI gates):
+  * every leg completed >= 3 crash/recover cycles with the checker
+    green (mirror equality / durable linearizability);
+  * post-warmup occupancy slope below OCC_SLOPE_LIMIT bytes/op and RSS
+    slope below RSS_SLOPE_LIMIT bytes/op on every row;
+  * structures rows: steady-state queue+stack ``allocs_per_op`` below
+    ALLOCS_PER_OP_LIMIT (0.05);
+  * shm rows: ring-full drops did not exceed DROPS_LIMIT.
+
+JSON schema (``bench.soak.v1``)::
+
+    {"schema": "bench.soak.v1", "tag": str, "quick": bool, "seed": int,
+     "budget_s": float,
+     "rows": [{"name": "soak/<leg>/<backend>", "ops": int,
+               "duration_s": float, "crash_cycles": int,
+               "quiesces": int, "checks": int, "checker_ok": bool,
+               "rss_bytes": int, "rss_slope_bytes_per_op": float,
+               "occupancy_bytes": int,
+               "occupancy_slope_bytes_per_op": float,
+               "live_chunks": int, "allocs_per_op": float,
+               "reclaim": {"epoch": int, "retired": int, "limbo": int,
+                           "free_window": int, "fresh": int,
+                           "reused": int, "drops": int},
+               "samples": [{"ops": int, "t_s": float, "rss_bytes": int,
+                            "occupancy_bytes": int,
+                            "live_chunks": int}, ...]}, ...]}
+
+Full column contract: docs/BENCH_SCHEMAS.md; runbook: docs/SOAK.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import random
+import sys
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional
+
+sys.path.insert(0, "src")                      # repo-root invocation
+
+from repro.api import CombiningRuntime
+
+from benchmarks.common import atomic_write_json
+
+#: --check gates.  Occupancy growth comes only from fresh chunk/blob
+#: allocation; after warmup the free window serves churn, so the slope
+#: budget is a fraction of one node (16 bytes) per op.  RSS is noisy
+#: (allocator arenas, interpreter churn) — its budget is looser.
+OCC_SLOPE_LIMIT = 4.0        # bytes per op, post-warmup fit
+RSS_SLOPE_LIMIT = 64.0       # bytes per op, post-warmup fit
+ALLOCS_PER_OP_LIMIT = 0.05   # steady-state fresh node allocs per op
+DROPS_LIMIT = 0              # ring-full retirement drops
+MIN_CRASH_CYCLES = 3
+#: leading fraction of samples excluded from the slope fits (chunk
+#: pre-allocation, free-window buildup, interpreter warmup)
+WARMUP_FRACTION = 0.25
+
+
+def rss_bytes() -> int:
+    """Resident set size: /proc/self/status VmRSS, with a getrusage
+    fallback (ru_maxrss is a high-water mark — only used where /proc
+    is unavailable)."""
+    try:
+        with open("/proc/self/status") as f:
+            for ln in f:
+                if ln.startswith("VmRSS:"):
+                    return int(ln.split()[1]) * 1024
+    except OSError:
+        pass
+    import resource
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * 1024
+
+
+def fit_slope(xs: List[float], ys: List[float]) -> float:
+    """Least-squares slope of ys over xs (0 for degenerate inputs)."""
+    n = len(xs)
+    if n < 2:
+        return 0.0
+    mx, my = sum(xs) / n, sum(ys) / n
+    den = sum((x - mx) ** 2 for x in xs)
+    if den == 0:
+        return 0.0
+    return sum((x - mx) * (y - my) for x, y in zip(xs, ys)) / den
+
+
+def _post_warmup(samples: List[dict]) -> List[dict]:
+    return samples[int(len(samples) * WARMUP_FRACTION):]
+
+
+def _slopes(samples: List[dict]) -> Dict[str, float]:
+    tail = _post_warmup(samples)
+    xs = [s["ops"] for s in tail]
+    return {
+        "occupancy_slope_bytes_per_op":
+            fit_slope(xs, [s["occupancy_bytes"] for s in tail]),
+        "rss_slope_bytes_per_op":
+            fit_slope(xs, [s["rss_bytes"] for s in tail]),
+    }
+
+
+class _ReclaimMeter:
+    """Crash-robust accumulator over volatile reclaimer stats.
+
+    The fresh/reused/drops words live in the volatile NVM image only
+    (persisted incidentally at quiesce), so a crash rolls them back to
+    their last-quiesce values.  The soak driver controls every crash,
+    so it resyncs the meter right before each one and accumulates the
+    deltas Python-side."""
+
+    def __init__(self, reclaimers) -> None:
+        self.reclaimers = [r for r in reclaimers if r is not None]
+        self.totals = {"fresh": 0, "reused": 0, "drops": 0}
+        self._last = self._raw()
+
+    def _raw(self) -> Dict[str, int]:
+        out = {"fresh": 0, "reused": 0, "drops": 0}
+        for r in self.reclaimers:
+            st = r.stats()
+            for k in out:
+                out[k] += st[k]
+        return out
+
+    def sample(self) -> None:
+        """Fold deltas since the last sample into the totals; call at
+        least once before every crash (and any time)."""
+        now = self._raw()
+        for k, v in now.items():
+            d = v - self._last[k]
+            if d > 0:
+                self.totals[k] += d
+        self._last = now
+
+    def resync(self) -> None:
+        """Call right after recover(): the volatile stats rolled back,
+        so the new raw values become the delta base."""
+        self._last = self._raw()
+
+
+# --------------------------------------------------------------------- #
+# structures leg                                                        #
+# --------------------------------------------------------------------- #
+def soak_structures(backend: str, *, budget_s: float, seed: int,
+                    n_threads: int = 4, crash_cycles: int = 3,
+                    rounds_per_phase: int = 25,
+                    log=print) -> dict:
+    """Balanced churn with an occupancy wave through one PWFQueue and
+    one PWFStack (epoch reclaim), ``crash_cycles`` crash/recover cycles
+    with mirror validation, quiesce between phases."""
+    rng = random.Random(seed)
+    kw: Dict[str, Any] = {"backend": backend}
+    if backend == "shm":
+        kw["segments"] = 2
+    rt = CombiningRuntime(n_threads=n_threads, **kw)
+    try:
+        q = rt.make("queue", "pwfcomb")                 # reclaims by default
+        s = rt.make("stack", "pwfcomb", reclaim="epoch")
+        handles = [rt.attach(p) for p in range(n_threads)]
+        qm: deque = deque()
+        sm: List[int] = []
+        meter = _ReclaimMeter([q.core.reclaim, s.core.reclaim])
+
+        ops = quiesces = checks = crashes = 0
+        samples: List[dict] = []
+        t0 = time.perf_counter()
+
+        def now_s() -> float:
+            return time.perf_counter() - t0
+
+        def sample() -> None:
+            occ = rt.occupancy()
+            samples.append({"ops": ops, "t_s": round(now_s(), 3),
+                            "rss_bytes": rss_bytes(),
+                            "occupancy_bytes": occ["occupancy_bytes"],
+                            "live_chunks": occ["live_chunks"]})
+
+        def op_round(r: int) -> None:
+            """One churn round: every thread enqueues+pushes, every
+            thread dequeues+pops — with a wave phase that lets the
+            structures grow for half the phase and shrink for the
+            other half (limbo sees both fill and drain traffic)."""
+            nonlocal ops
+            grow = (r % rounds_per_phase) < rounds_per_phase // 2
+            for p in range(n_threads):
+                h = handles[p]
+                v = rng.randrange(1 << 30)
+                assert h.invoke(q, "enqueue", v) == "ACK"
+                qm.append(v)
+                v = rng.randrange(1 << 30)
+                assert h.invoke(s, "push", v) == "ACK"
+                sm.append(v)
+                ops += 2
+                if not grow or len(qm) > 4 * n_threads:
+                    got = h.invoke(q, "dequeue", None)
+                    want = qm.popleft() if qm else None
+                    assert got == want, (got, want)
+                    got = h.invoke(s, "pop", None)
+                    want = sm.pop() if sm else None
+                    assert got == want, (got, want)
+                    ops += 2
+
+        def verify() -> None:
+            nonlocal checks
+            assert q.adapter.snapshot(q.core) == list(qm)
+            # stack drain is top-first; the mirror appends at the top
+            assert s.adapter.snapshot(s.core) == sm[::-1]
+            checks += 1
+
+        phase = 0
+        while True:
+            for r in range(rounds_per_phase):
+                op_round(r)
+            meter.sample()
+            rt.quiesce()
+            quiesces += 1
+            sample()
+            phase += 1
+            # spread the crash cycles across the budget: crash after
+            # every few phases until the quota is met, then churn on
+            if crashes < crash_cycles and phase % 3 == 0:
+                meter.sample()              # volatile stats roll back
+                rt.crash(random.Random(rng.randrange(1 << 30)))
+                rt.recover()
+                meter.resync()
+                crashes += 1
+                verify()
+                log(f"  [{backend}] crash cycle {crashes}: "
+                    f"{ops} ops, mirror ok")
+            if now_s() >= budget_s and crashes >= crash_cycles:
+                break
+        verify()
+        meter.sample()
+        rec = {k: q.core.reclaim.stats()[k] + s.core.reclaim.stats()[k]
+               for k in ("retired", "limbo", "free_window")}
+        rec["epoch"] = q.core.reclaim.stats()["epoch"]
+        rec.update(meter.totals)
+        occ = rt.occupancy()
+        row = {"name": f"soak/structures/{backend}", "ops": ops,
+               "duration_s": round(now_s(), 3),
+               "crash_cycles": crashes, "quiesces": quiesces,
+               "checks": checks, "checker_ok": True,
+               "rss_bytes": samples[-1]["rss_bytes"],
+               "occupancy_bytes": occ["occupancy_bytes"],
+               "live_chunks": occ["live_chunks"],
+               "allocs_per_op": meter.totals["fresh"] / max(1, ops),
+               "reclaim": rec, "samples": samples}
+        row.update(_slopes(samples))
+        return row
+    finally:
+        rt.close()
+
+
+# --------------------------------------------------------------------- #
+# fleet leg                                                             #
+# --------------------------------------------------------------------- #
+def _checker_mod():
+    """tests/checker.py is the single source of truth for history
+    verdicts (same resolution as repro.fuzz.scenarios)."""
+    try:
+        import checker
+        return checker
+    except ImportError:
+        here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        tests = os.path.join(here, "tests")
+        if os.path.isdir(tests) and tests not in sys.path:
+            sys.path.insert(0, tests)
+        import checker
+        return checker
+
+
+def soak_fleet(*, budget_s: float, seed: int, n_shards: int = 2,
+               workers: int = 2, n_clients: int = 8,
+               wave_requests: int = 40, crash_cycles: int = 3,
+               log=print) -> dict:
+    """Open-loop pwfcomb fleet under wave traffic: a rotating shard is
+    crashed mid-wave and recovered (in-flight replay through the
+    checker), ``Fleet.quiesce()`` between waves, checker sampled at
+    quiescent points."""
+    from repro.fleet import Fleet, FleetConfig
+    chk = _checker_mod()
+    cfg = FleetConfig(n_shards=n_shards, workers_per_shard=workers,
+                      n_clients=n_clients, protocol="pwfcomb",
+                      seed=seed)
+    ops = waves = quiesces = checks = crashes = 0
+    samples: List[dict] = []
+    rng = random.Random(seed * 7919 + 1)
+    with Fleet(cfg) as fleet:
+        def fresh_checkers():
+            """New (windowed) checkers, their log-content history
+            seeded from the durable log snapshot — a soak-length
+            journal would otherwise grow the PARENT's RSS linearly and
+            drown the leak signal the harness exists to measure.
+            Sound because windows only rotate at boundaries where
+            every ingress is empty (nothing spans the cut) and the
+            seed records were content-checked by the previous
+            window."""
+            out = {}
+            for s in fleet.shards:
+                c = chk.HistoryChecker("queue")
+                for client, (seq, resp) in enumerate(s.log.snapshot()):
+                    if seq:
+                        c.extend(-1, [("record", (client, seq), resp)])
+                out[s.index] = c
+            return out
+
+        checkers = fresh_checkers()
+        t0 = time.perf_counter()
+
+        def now_s() -> float:
+            return time.perf_counter() - t0
+
+        def occupancy() -> Dict[str, int]:
+            per = fleet.occupancy()
+            return {
+                "occupancy_bytes": sum(o["occupancy_bytes"]
+                                       for o in per.values()),
+                "live_chunks": sum(o["live_chunks"]
+                                   for o in per.values()),
+            }
+
+        def sample() -> None:
+            occ = occupancy()
+            samples.append({"ops": ops, "t_s": round(now_s(), 3),
+                            "rss_bytes": rss_bytes(), **occ})
+
+        def reclaimers():
+            return [s.ingress.core.reclaim for s in fleet.shards]
+
+        meter = _ReclaimMeter(reclaimers())
+
+        def run_checks() -> None:
+            nonlocal checks, checkers
+            drained = True
+            for s in fleet.shards:
+                ingress = s.ingress.snapshot()
+                drained = drained and not ingress
+                checkers[s.index].check(ingress)
+                chk.check_fleet_log(checkers[s.index].events,
+                                    s.log.snapshot(), cfg.gen_len)
+            checks += 1
+            if drained:                 # rotate the checker window
+                checkers = fresh_checkers()
+
+        # warmup wave: fork + chunk/blob pre-allocation off the fit
+        fleet.run_wave(fleet.make_wave(wave_requests, burst=True))
+        while True:
+            crash_this_wave = (crashes < crash_cycles and waves % 3 == 2)
+            victim = None
+            if crash_this_wave:
+                victim = waves // 3 % n_shards
+                meter.sample()          # volatile stats roll back
+                fleet.arm_crash(victim, 25 + rng.randrange(50),
+                                random.Random(rng.randrange(1 << 30)))
+            res = fleet.run_wave(
+                fleet.make_wave(wave_requests, rate_rps=4000.0),
+                collect=True)
+            waves += 1
+            ops += sum(r.ops_done for r in res.values())
+            for i, r in res.items():
+                checkers[i].extend_pool(r)
+            crashed = {i for i, r in res.items() if r.crashed}
+            if crashed:
+                replies = fleet.recover_shards(res)
+                for i in crashed:
+                    checkers[i].apply_replay(res[i].inflight, replies[i])
+                meter.resync()
+                crashes += 1
+                run_checks()
+                log(f"  [fleet] crash cycle {crashes} "
+                    f"(shard {sorted(crashed)}): {ops} ops, checker ok")
+            elif crash_this_wave:
+                # countdown outlived the wave: disarm via recover so the
+                # crash cannot fire inside quiesce/checkpoint plumbing
+                fleet.recover_shard(victim)
+            meter.sample()
+            fleet.quiesce()
+            quiesces += 1
+            sample()
+            if waves % 6 == 0:          # keep the checker window bounded
+                run_checks()
+            if now_s() >= budget_s and crashes >= crash_cycles:
+                break
+        run_checks()
+        meter.sample()
+        stats = [r.stats() for r in reclaimers()]
+        rec = {k: sum(st[k] for st in stats)
+               for k in ("retired", "limbo", "free_window")}
+        rec["epoch"] = max(st["epoch"] for st in stats)
+        rec.update(meter.totals)
+        occ = occupancy()
+        row = {"name": "soak/fleet/shm", "ops": ops,
+               "duration_s": round(now_s(), 3),
+               "crash_cycles": crashes, "quiesces": quiesces,
+               "checks": checks, "checker_ok": True,
+               "rss_bytes": samples[-1]["rss_bytes"],
+               "occupancy_bytes": occ["occupancy_bytes"],
+               "live_chunks": occ["live_chunks"],
+               "allocs_per_op": meter.totals["fresh"] / max(1, ops),
+               "reclaim": rec, "samples": samples}
+        row.update(_slopes(samples))
+        return row
+
+
+# --------------------------------------------------------------------- #
+# gates / CLI                                                           #
+# --------------------------------------------------------------------- #
+def check_rows(rows: List[dict]) -> List[str]:
+    """The soak acceptance gate; returns failure strings."""
+    failures = []
+    for r in rows:
+        name = r["name"]
+        if not r["checker_ok"]:
+            failures.append(f"{name}: checker failed")
+        if r["crash_cycles"] < MIN_CRASH_CYCLES:
+            failures.append(
+                f"{name}: only {r['crash_cycles']} crash cycles "
+                f"(need >= {MIN_CRASH_CYCLES})")
+        occ = r["occupancy_slope_bytes_per_op"]
+        if abs(occ) > OCC_SLOPE_LIMIT:
+            failures.append(
+                f"{name}: occupancy slope {occ:.3f} bytes/op beyond "
+                f"+-{OCC_SLOPE_LIMIT} — the backend footprint is "
+                "growing per op (reclamation not holding)")
+        rs = r["rss_slope_bytes_per_op"]
+        if abs(rs) > RSS_SLOPE_LIMIT:
+            failures.append(
+                f"{name}: RSS slope {rs:.3f} bytes/op beyond "
+                f"+-{RSS_SLOPE_LIMIT}")
+        if (name.startswith("soak/structures/")
+                and r["allocs_per_op"] >= ALLOCS_PER_OP_LIMIT):
+            failures.append(
+                f"{name}: steady-state allocs_per_op "
+                f"{r['allocs_per_op']:.4f} >= {ALLOCS_PER_OP_LIMIT} — "
+                "churn is not being served from the free window")
+        if r["reclaim"]["drops"] > DROPS_LIMIT:
+            failures.append(
+                f"{name}: {r['reclaim']['drops']} ring-full retirement "
+                "drops (limbo ring undersized for this workload)")
+    return failures
+
+
+def show(row: dict) -> None:
+    print(f"{row['name']:26s} ops={row['ops']:<8d} "
+          f"crashes={row['crash_cycles']} q={row['quiesces']:<4d} "
+          f"occ={row['occupancy_bytes']:>10d}B "
+          f"slope={row['occupancy_slope_bytes_per_op']:+.3f}B/op "
+          f"rss_slope={row['rss_slope_bytes_per_op']:+.1f}B/op "
+          f"allocs/op={row['allocs_per_op']:.4f} "
+          f"drops={row['reclaim']['drops']}")
+
+
+def _round(rows: List[dict]) -> None:
+    for r in rows:
+        r["allocs_per_op"] = round(r["allocs_per_op"], 5)
+        r["occupancy_slope_bytes_per_op"] = \
+            round(r["occupancy_slope_bytes_per_op"], 4)
+        r["rss_slope_bytes_per_op"] = \
+            round(r["rss_slope_bytes_per_op"], 4)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Leak-gated soak: churn + crash/recover cycles "
+                    "with occupancy-slope sampling")
+    ap.add_argument("--quick", action="store_true",
+                    help="~60s total: short budgets, both backends + "
+                         "fleet (the tier-1-adjacent smoke)")
+    ap.add_argument("--budget-s", type=float, default=None,
+                    help="per-leg soak budget in seconds "
+                         "(default: 15 quick, 240 full)")
+    ap.add_argument("--legs", default="structures,fleet",
+                    help="comma subset of structures,fleet")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", metavar="PATH",
+                    help="write bench.soak.v1 results here")
+    ap.add_argument("--tag", default="soak")
+    ap.add_argument("--check", action="store_true",
+                    help="fail on occupancy/RSS slope, allocs_per_op, "
+                         "drops or checker violations (see module doc)")
+    args = ap.parse_args(argv)
+
+    budget = args.budget_s if args.budget_s is not None \
+        else (15.0 if args.quick else 240.0)
+    legs = [l.strip() for l in args.legs.split(",") if l.strip()]
+    bad = set(legs) - {"structures", "fleet"}
+    if bad:
+        ap.error(f"unknown legs: {sorted(bad)}")
+
+    print(f"## soak (budget {budget:.0f}s/leg, seed={args.seed}, "
+          f"legs={','.join(legs)})")
+    rows = []
+    if "structures" in legs:
+        for backend in ("threads", "shm"):
+            rows.append(soak_structures(backend, budget_s=budget,
+                                        seed=args.seed))
+            show(rows[-1])
+    if "fleet" in legs:
+        rows.append(soak_fleet(budget_s=budget, seed=args.seed))
+        show(rows[-1])
+
+    _round(rows)
+    if args.json:
+        doc = {"schema": "bench.soak.v1", "tag": args.tag,
+               "quick": args.quick, "seed": args.seed,
+               "budget_s": budget, "rows": rows}
+        atomic_write_json(args.json, doc)
+        print(f"(wrote {len(rows)} rows to {args.json})")
+
+    if args.check:
+        failures = check_rows(rows)
+        for msg in failures:
+            print(f"FAIL: {msg}")
+        if failures:
+            return 1
+        print("soak occupancy/reclaim/checker gates passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -135,6 +135,13 @@ class StructureAdapter:
     def reset_volatile(self, core: Any) -> None:
         core.reset_volatile()
 
+    # ---------------- reclamation -------------------------------------- #
+    def quiesce(self, core: Any) -> Optional[dict]:
+        """Advance the structure's durable reclamation boundaries at a
+        quiescent point (no requests in flight).  Structures without a
+        reclaimer return None."""
+        return None
+
     def snapshot(self, core: Any) -> Any:
         raise NotImplementedError
 
@@ -238,6 +245,9 @@ class PWFQueueAdapter(PBQueueAdapter):
     def create(self, nvm, n_threads, counters=None, **kw):
         return PWFQueue(nvm, n_threads, counters=counters, **kw)
 
+    def quiesce(self, core):
+        return core.quiesce()
+
 
 class PBStackAdapter(_CombiningAdapter):
     kind, protocol, OPS = "stack", "pbcomb", STACK_OPS
@@ -254,6 +264,9 @@ class PWFStackAdapter(PBStackAdapter):
 
     def create(self, nvm, n_threads, counters=None, **kw):
         return PWFStack(nvm, n_threads, counters=counters, **kw)
+
+    def quiesce(self, core):
+        return core.quiesce()
 
 
 class PBHeapAdapter(_CombiningAdapter):

@@ -241,6 +241,29 @@ class CombiningRuntime:
         return {name: obj.adapter.degree_stats(obj.core)
                 for name, obj in self.objects.items()}
 
+    def quiesce(self, gc_blobs: bool = True) -> Dict[str, Any]:
+        """Advance every registered structure's durable reclamation
+        boundaries, then (shm backend, ``gc_blobs=True``) coalesce and
+        compact the blob heap.  Call only at a quiescent point — no
+        requests in flight anywhere (a fleet wave boundary, a drained
+        bench phase).  Returns per-object reclaim summaries plus the
+        blob-GC summary when it ran."""
+        nvm = self._ensure_nvm()
+        out: Dict[str, Any] = {}
+        for name, obj in self.objects.items():
+            res = obj.adapter.quiesce(obj.core)
+            if res is not None:
+                out[name] = res
+        gc = getattr(nvm, "gc_blobs", None)
+        if gc_blobs and gc is not None:
+            nvm.psync()            # drain every write-back ring first
+            out["blob_gc"] = gc()
+        return out
+
+    def occupancy(self) -> Dict[str, Any]:
+        """Backend memory accounting (see ``NVM.occupancy``)."""
+        return self._ensure_nvm().occupancy()
+
     def segment_stats(self) -> Dict[str, Any]:
         """Per-segment device accounting + the structure placement map
         (which object allocates on which modeled DIMM)."""
@@ -300,6 +323,12 @@ class CombiningRuntime:
         surviving worker."""
         if self.nvm is not None:
             self.nvm.disarm_crash()
+        if self._backend_kind == "shm":
+            # a crashed worker process leaves its own psc-* segments
+            # behind (its atexit never ran) — recovery is the natural
+            # point to sweep segments whose owner pid is dead
+            from ..core.shm import reap_orphan_segments
+            reap_orphan_segments()
         for b in self.boards.values():
             b.reset()
         for obj in self.objects.values():

@@ -813,6 +813,16 @@ class NVM:
                  "psync": self.counters["psync"], "ring_spills": 0,
                  "words_used": self._alloc_ptr - LINE}]
 
+    def occupancy(self) -> Dict[str, int]:
+        """Memory gauge (mirrors ``ShmNVM.occupancy``): this backend
+        has no blob heap, so the footprint is the allocated words at a
+        nominal 8 bytes each."""
+        words = self._alloc_ptr - LINE
+        return {"backend": "threads", "words_used": words,
+                "word_bytes": words * 8, "live_chunks": 0,
+                "blob_live_bytes": 0, "blob_bump_bytes": 0,
+                "occupancy_bytes": words * 8}
+
     def modeled_time_us(self) -> float:
         """Virtual-clock makespan in microseconds (0.0 when no profile
         is engaged): max over per-thread logical clocks."""

@@ -65,7 +65,10 @@ fork, so everything shared must exist before ``spawn_workers``.
 
 from __future__ import annotations
 
+import atexit
+import itertools
 import multiprocessing
+import os
 import pickle
 import struct
 import time
@@ -301,6 +304,180 @@ class BlobHeap:
             out.append((off, cls_b, mv[self._rc + g], mv[self._gen + g]))
             off += cls_b
         return out
+
+    def occupancy(self) -> Dict[str, int]:
+        """Live/free chunk accounting (the soak harness's leak gauge)."""
+        with self.lock:
+            out = {"live_chunks": 0, "live_bytes": 0,
+                   "free_chunks": 0, "free_bytes": 0,
+                   "bump_bytes": self.mv[_M_BLOB_BUMP],
+                   "cap_bytes": self.cap_b}
+            for _off, cls_b, rc, _gen in self.chunks():
+                if rc > 0:
+                    out["live_chunks"] += 1
+                    out["live_bytes"] += cls_b
+                else:
+                    out["free_chunks"] += 1
+                    out["free_bytes"] += cls_b
+            return out
+
+    # ------------- GC / compaction ------------------------------------- #
+    def gc(self) -> Dict[str, int]:
+        """Free-space maintenance at a quiescent point: coalesce runs
+        of adjacent free chunks into the largest classes that fit,
+        retreat the bump pointer over a trailing free run, and rebuild
+        the class free lists.  Chunk identity safety: a coalesced-away
+        chunk keeps rc == 0 at its old granule, so any stale
+        ``try_pin(off, gen)`` fails; (off, gen) pairs still never
+        recur because ``alloc`` bumps the generation on every reuse."""
+        mv = self.mv
+        with self.lock:
+            coalesced = retreated = 0
+            runs: List[Tuple[int, int, int]] = []   # (start, span, n_chunks)
+            start = span = count = 0
+            for off, cls_b, rc, _gen in self.chunks():
+                if rc == 0:
+                    if count == 0:
+                        start = off
+                    span += cls_b
+                    count += 1
+                else:
+                    if count:
+                        runs.append((start, span, count))
+                    span = count = 0
+            if count:
+                # trailing free run: give it back to the bump region
+                retreated = span
+                for j in range(span // _BLOB_GRANULE):
+                    mv[self._cls + start // _BLOB_GRANULE + j] = 0
+                mv[_M_BLOB_BUMP] = start
+            for rstart, rspan, rcount in runs:
+                if rcount < 2:
+                    continue
+                coalesced += rcount
+                for j in range(rspan // _BLOB_GRANULE):
+                    mv[self._cls + rstart // _BLOB_GRANULE + j] = 0
+                off = rstart
+                left = rspan
+                max_cls = _BLOB_GRANULE << (_BLOB_CLASSES - 1)
+                while left:
+                    cls_b = min(1 << left.bit_length() - 1, max_cls)
+                    g = off // _BLOB_GRANULE
+                    mv[self._cls + g] = cls_b
+                    mv[self._rc + g] = 0
+                    off += cls_b
+                    left -= cls_b
+            # rebuild every class free list from the surviving layout
+            for ci in range(_BLOB_CLASSES):
+                mv[self._meta_heads + ci] = 0
+            for off, cls_b, rc, _gen in self.chunks():
+                if rc == 0:
+                    g = off // _BLOB_GRANULE
+                    ci = (cls_b // _BLOB_GRANULE).bit_length() - 1
+                    mv[self._nxt + g] = mv[self._meta_heads + ci]
+                    mv[self._meta_heads + ci] = off + 1
+            return {"coalesced_chunks": coalesced,
+                    "bump_retreat_bytes": retreated}
+
+    def _lowest_free_below(self, cls_b: int, below: int) -> Optional[int]:
+        """Pop the lowest-offset free chunk of class ``cls_b`` strictly
+        below byte offset ``below`` from its free list (caller holds
+        the lock)."""
+        mv = self.mv
+        ci = (cls_b // _BLOB_GRANULE).bit_length() - 1
+        best = best_prev = None
+        prev = None
+        head = mv[self._meta_heads + ci]
+        while head:
+            off = head - 1
+            if off < below and (best is None or off < best):
+                best, best_prev = off, prev
+            prev = off
+            head = mv[self._nxt + off // _BLOB_GRANULE]
+        if best is None:
+            return None
+        nxt = mv[self._nxt + best // _BLOB_GRANULE]
+        if best_prev is None:
+            mv[self._meta_heads + ci] = nxt
+        else:
+            mv[self._nxt + best_prev // _BLOB_GRANULE] = nxt
+        return best
+
+    def compact(self, word_spans) -> Dict[str, int]:
+        """Generation-safe chunk movement: slide live chunks into lower
+        free slots of the same class so ``gc()`` can retreat the bump
+        pointer.  ``word_spans`` is the [(base_i64, n_words)] list of
+        every TAGGED-WORD region that may hold blob refs (the NVM's
+        allocated vol+dur spans); a chunk moves only when the refs
+        found there account for its ENTIRE refcount — anything also
+        referenced from a board slot, a ring snapshot, or a Python-side
+        pin stays put.  Movement follows the existing publication
+        discipline: fresh generation, header+payload written at the
+        destination BEFORE any referring word is switched (gen word
+        first, then offset), and the source bytes are left intact, so
+        a concurrent reader sees old-or-new, never torn."""
+        mv = self.mv
+        moved = 0
+        with self.lock:
+            ref_map: Dict[int, List[int]] = {}
+            for base, n in word_spans:
+                end = base + WORD_I64 * n
+                for o in range(base, end, WORD_I64):
+                    if mv[o] == _T_BLOB:
+                        ref_map.setdefault(mv[o + 1], []).append(o)
+            for off, cls_b, rc, gen in reversed(self.chunks()):
+                if rc <= 0:
+                    continue
+                refs = [o for o in ref_map.get(off, ())
+                        if mv[o + 1] == off and mv[o + 2] == gen]
+                if len(refs) != rc:
+                    continue
+                dest = self._lowest_free_below(cls_b, off)
+                if dest is None:
+                    continue
+                gsrc = off // _BLOB_GRANULE
+                gd = dest // _BLOB_GRANULE
+                gen_d = mv[self._gen + gd] + 1
+                mv[self._gen + gd] = gen_d
+                nbytes = mv[(self.base_b + off) // 8 + 1]
+                qd = (self.base_b + dest) // 8
+                mv[qd] = gen_d
+                mv[qd + 1] = nbytes
+                b_src = self.base_b + off + _BLOB_HDR
+                b_dst = self.base_b + dest + _BLOB_HDR
+                self.raw[b_dst:b_dst + nbytes] = \
+                    self.raw[b_src:b_src + nbytes]
+                for o in refs:
+                    mv[o + 2] = gen_d
+                    mv[o + 1] = dest
+                mv[self._rc + gd] = rc
+                mv[self._rc + gsrc] = 0
+                ci = (cls_b // _BLOB_GRANULE).bit_length() - 1
+                mv[self._nxt + gsrc] = mv[self._meta_heads + ci]
+                mv[self._meta_heads + ci] = off + 1
+                ref_map[dest] = refs
+                moved += 1
+        return {"moved_chunks": moved}
+
+    def leak_check(self, word_spans) -> Dict[str, int]:
+        """Refcount audit: compare each live chunk's rc against the
+        refs found in ``word_spans``.  ``excess_rc`` > 0 over EMPTY
+        rings and quiesced boards indicates a pin without a matching
+        unpin (the class of bug the ring-snapshot re-copy path had)."""
+        mv = self.mv
+        with self.lock:
+            found: Dict[int, int] = {}
+            for base, n in word_spans:
+                end = base + WORD_I64 * n
+                for o in range(base, end, WORD_I64):
+                    if mv[o] == _T_BLOB:
+                        found[mv[o + 1]] = found.get(mv[o + 1], 0) + 1
+            excess = live = 0
+            for off, _cls_b, rc, _gen in self.chunks():
+                if rc > 0:
+                    live += 1
+                    excess += max(0, rc - found.get(off, 0))
+            return {"live_chunks": live, "excess_rc": excess}
 
 
 class _Words:
@@ -816,6 +993,85 @@ class _ShmCounters:
         return f"_ShmCounters({self.snapshot()})"
 
 
+# ------------------------------------------------------------------ #
+# Segment lifecycle (leak-robust unlink)                             #
+# ------------------------------------------------------------------ #
+# Segments get recognizable names ("psc-<owner pid>-<seq>") so a
+# crashed run's leftovers in /dev/shm are attributable and reapable.
+# Three layers of cleanup:
+#   * ``close()`` unlinks, but only in the owning process — a forked
+#     worker (or its atexit) must never unlink a segment the parent is
+#     still using;
+#   * an atexit hook in the owner unlinks anything close() never
+#     reached (exceptions, SIGTERM-with-handlers);
+#   * ``reap_orphan_segments()`` removes segments whose owner pid is
+#     dead — the kill -9 case nothing in-process can cover.  The
+#     runtime calls it on ``recover()``.
+_SEG_PREFIX = "psc-"
+_SEG_SEQ = itertools.count()
+#: name -> (owner pid, SharedMemory): segments created by this process
+#: and not yet unlinked
+_LIVE_SEGMENTS: Dict[str, Tuple[int, Any]] = {}
+
+
+def _register_segment(name: str, shm) -> None:
+    if not _LIVE_SEGMENTS:
+        atexit.register(_reap_at_exit)
+    _LIVE_SEGMENTS[name] = (os.getpid(), shm)
+
+
+def _reap_at_exit() -> None:
+    for name in list(_LIVE_SEGMENTS):
+        pid, shm = _LIVE_SEGMENTS[name]
+        if pid != os.getpid():      # inherited entry in a forked child
+            continue
+        del _LIVE_SEGMENTS[name]
+        try:
+            shm.close()
+        except (OSError, BufferError):
+            pass
+        try:
+            shm.unlink()
+        except (FileNotFoundError, OSError):
+            pass
+
+
+def _pid_alive(pid: int) -> bool:
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except PermissionError:
+        return True
+    return True
+
+
+def reap_orphan_segments(shm_dir: str = "/dev/shm") -> List[str]:
+    """Unlink ``psc-<pid>-*`` segments whose owner process is dead
+    (killed before teardown).  Never touches live owners' segments or
+    this process's own.  Returns the reaped names."""
+    reaped: List[str] = []
+    try:
+        names = os.listdir(shm_dir)
+    except OSError:
+        return reaped
+    for name in names:
+        if not name.startswith(_SEG_PREFIX):
+            continue
+        try:
+            pid = int(name.split("-")[1])
+        except (IndexError, ValueError):
+            continue
+        if pid == os.getpid() or _pid_alive(pid):
+            continue
+        try:
+            os.unlink(os.path.join(shm_dir, name))
+            reaped.append(name)
+        except OSError:
+            pass
+    return reaped
+
+
 class ShmBackend(ThreadBackend):
     """``core.backend`` seam over one shared-memory segment.
 
@@ -863,7 +1119,20 @@ class ShmBackend(ThreadBackend):
                  + 2 * data_words * WORD_I64
                  + segments * self.ring_seg + aux_i64
                  + 4 * n_gran + blob_bytes // 8)
-        self._shm = shared_memory.SharedMemory(create=True, size=total * 8)
+        # recognizable, owner-stamped segment name (see the lifecycle
+        # note above ``reap_orphan_segments``); collisions with a stale
+        # same-pid leftover are resolved by advancing the sequence
+        self._owner_pid = os.getpid()
+        while True:
+            name = f"{_SEG_PREFIX}{self._owner_pid}-{next(_SEG_SEQ)}"
+            try:
+                self._shm = shared_memory.SharedMemory(
+                    create=True, name=name, size=total * 8)
+                break
+            except FileExistsError:
+                continue
+        self.name = name
+        _register_segment(name, self._shm)
         self.mv = self._shm.buf.cast("q")
         self.raw = self._shm.buf
         # fresh /dev/shm pages are zero-filled; meta needs non-zeros
@@ -908,8 +1177,9 @@ class ShmBackend(ThreadBackend):
         return self._stripes[off % self.N_STRIPES]
 
     def close(self) -> None:
-        """Release the segment (call from the creating process, after
-        worker pools are joined).  Safe to call twice."""
+        """Release the segment.  Safe to call twice, and safe to call
+        from a forked worker: only the creating process unlinks (a
+        non-owner close releases its own mapping and nothing else)."""
         if self._closed:
             return
         self._closed = True
@@ -918,6 +1188,9 @@ class ShmBackend(ThreadBackend):
         mv, self.mv = self.mv, None
         mv.release()
         self._shm.close()
+        if os.getpid() != self._owner_pid:
+            return
+        _LIVE_SEGMENTS.pop(self.name, None)
         try:
             self._shm.unlink()
         except FileNotFoundError:
@@ -1252,6 +1525,11 @@ class ShmNVM(NVM):
                     vo = src + WORD_I64 * w
                     mv[so:so + WORD_I64] = mv[vo:vo + WORD_I64]
                 else:
+                    # the entry is abandoned (ring cursor never
+                    # advances past it) — release the pins this loop
+                    # already took or their chunks leak forever
+                    for poff in pinned:
+                        heap.dec(poff)
                     raise RuntimeError("shm blob word kept changing "
                                        "under pwb snapshot")
             if pinned:
@@ -1650,6 +1928,58 @@ class ShmNVM(NVM):
                 mv[self._seg_slot(s, f)] = 0
         if self._audit is not None:
             self._audit.reset_metrics()
+
+    def occupancy(self) -> Dict[str, int]:
+        """Machine-wide memory gauge for the soak harness: allocated
+        word footprint plus live blob bytes."""
+        words = sum(sc["words_used"] for sc in self.segment_counters())
+        heap = self.backend.heap.occupancy()
+        word_bytes = words * WORD_I64 * 8
+        return {"backend": "shm", "words_used": words,
+                "word_bytes": word_bytes,
+                "live_chunks": heap["live_chunks"],
+                "blob_live_bytes": heap["live_bytes"],
+                "blob_bump_bytes": heap["bump_bytes"],
+                "occupancy_bytes": word_bytes + heap["live_bytes"]}
+
+    def _blob_word_spans(self) -> List[Tuple[int, int]]:
+        """Tagged-word (base_i64, n_words) regions that may hold blob
+        refs: the allocated vol+dur span of every segment."""
+        spans = []
+        for s in range(self.segments):
+            start, end = self._seg_word_span(s)
+            if end > start:
+                spans.append((self.backend.vol_base + WORD_I64 * start,
+                              end - start))
+                spans.append((self.backend.dur_base + WORD_I64 * start,
+                              end - start))
+        return spans
+
+    def gc_blobs(self, compact: bool = True) -> Dict[str, int]:
+        """Blob-heap GC pass (quiescent-point maintenance, e.g. from
+        ``CombiningRuntime.quiesce``): optionally compact live chunks
+        downward, then coalesce free space and retreat the bump
+        pointer.  Requires empty write-back rings — ring snapshots pin
+        chunks by ref, and a moved chunk must not leave a stale ref in
+        an entry that drains later; callers psync first."""
+        mv = self._mv
+        with self._lock:
+            for s in range(self.segments):
+                if mv[self._seg_slot(s, _S_RING)]:
+                    raise RuntimeError("gc_blobs needs empty write-back "
+                                       "rings; psync before collecting")
+            heap = self.backend.heap
+            out = {"moved_chunks": 0}
+            if compact and mv[_M_BLOBBED]:
+                out = heap.compact(self._blob_word_spans())
+            out.update(heap.gc())
+            return out
+
+    def blob_leak_check(self) -> Dict[str, int]:
+        """Refcount audit over the word images (see
+        ``BlobHeap.leak_check``); call with empty rings and quiesced
+        boards for an exact answer."""
+        return self.backend.heap.leak_check(self._blob_word_spans())
 
     def close(self) -> None:
         self._vol = self._dur = self._mv = None

@@ -317,6 +317,18 @@ class Fleet:
                       ) -> Dict[Tuple[str, int], Any]:
         return self.shards[shard].rt.recover(inflight=inflight)
 
+    # ------------------ reclamation ------------------------------------ #
+    def quiesce(self) -> Dict[int, Dict[str, Any]]:
+        """Advance every shard's durable reclamation boundaries.  Wave
+        boundaries are quiescent by construction (``run_wave`` joins all
+        drivers), so this is safe between waves.  Returns the per-shard
+        reclaim/blob-GC summaries."""
+        return {s.index: s.rt.quiesce() for s in self.shards}
+
+    def occupancy(self) -> Dict[int, Dict[str, Any]]:
+        """Per-shard backend memory accounting (``NVM.occupancy``)."""
+        return {s.index: s.rt.occupancy() for s in self.shards}
+
     # ------------------ consistent-cut checkpoint ---------------------- #
     def checkpoint(self) -> int:
         """Fleet-wide consistent cut: one PERSIST per shard ``ckpt`` at

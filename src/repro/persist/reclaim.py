@@ -1,0 +1,272 @@
+"""Epoch-based node reclamation for the combining structures
+(DESIGN.md §13; ROADMAP "Memory reclamation for long-haul traffic").
+
+The paper leaves PWFQueue node recycling open ("a solution would be
+more complicated, due to the two parts"); the blocker is that helped
+link writes and slow pretend-combiners may touch a node long after the
+round that logically removed it.  MOD (PAPERS.md) shows the shape of a
+fix: detach reclamation from the operation commit path so it adds
+(almost) no persist ordering.  This module is that layer:
+
+  * a global *epoch* word advances every successfully published
+    combining round;
+  * a removed node is *retired* into the retiring thread's limbo ring,
+    stamped with the current epoch — retirement happens only after the
+    round's S value is durable, so the node is unreachable from the
+    durable state forever;
+  * threads *pin* the epoch for the duration of one `_perform_request`
+    (announce/help/combine/publish), so a slow helper that still holds
+    a node address blocks its reuse;
+  * a retired node re-enters the allocation path only once it is at
+    least ``GRACE`` epochs old, no active pin predates its retirement,
+    AND its limbo record is durable (see below) — the *free window*.
+
+Persistence plan.  Every hot-path word here is VOLATILE-image only
+(plain ``nvm.read``/``nvm.write`` — no pwb, no clock, no counters), so
+the gated modeled trajectory is byte-identical with reclamation wired
+in: a workload that never quiesces allocates exactly like the
+unreclaimed baseline.  Durability happens only at explicit
+``quiesce()`` calls (coordinator-side, workers idle — the fleet's wave
+boundaries), in two persist stages:
+
+  1. persist the new limbo records (ring spans) and the epoch, psync —
+     records are durable BEFORE any boundary names them;
+  2. advance ``dur_tail`` (durable-record boundary) and ``freed_head``
+     (durable free boundary) and persist the per-thread header line,
+     psync.  Both live on one line, so a crash cut sees either boundary
+     move or neither — never a boundary past garbage records.
+
+Recovery rule: the consumption cursor is volatile, so after a crash we
+set ``alloc_cursor := freed_head`` — entries handed out before the
+crash are never re-issued (no double allocation), at the cost of
+leaking the unconsumed tail of the free window plus anything retired
+since the last quiesce.  Both leaks are bounded by the ring capacity
+per crash and are recorded in ``stats()``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from ..core.nvm import LINE
+
+# per-thread header word offsets (one cache line, persisted as a unit)
+_H_TAIL = 0          # monotone retire count (volatile; persisted @quiesce)
+_H_DUR_TAIL = 1      # durable-record boundary (entries < this are durable)
+_H_FREED = 2         # durable free boundary (entries < this may be reused)
+_H_CURSOR = 3        # volatile consumption cursor inside the free window
+_H_FRESH = 4         # stat: fresh chunk allocations (volatile)
+_H_REUSED = 5        # stat: allocations served from the free window
+_H_DROPS = 6         # stat: retirements dropped because the ring was full
+_H_WORDS = 8         # header words (padded to a line boundary below)
+
+_ENTRY_WORDS = 2     # limbo record: [node address, retire epoch]
+
+
+def _as_int(v) -> int:
+    """Coerce a possibly-never-persisted NVM word to an int: a fresh
+    durable word decodes as None on the shm backend (tag 0) and as 0 on
+    the thread backend."""
+    return v if type(v) is int else 0
+
+
+def _round_line(n: int) -> int:
+    return (n + LINE - 1) // LINE * LINE
+
+
+class EpochReclaimer:
+    """Per-structure epoch-based limbo/free-window allocator seam.
+
+    All state lives in NVM words allocated from the owning structure's
+    segment; only thread ``p`` ever writes thread ``p``'s header and
+    ring (no cross-thread retire coordination), and the coordinator
+    reads everything at quiesce/recover time through the shared image.
+    """
+
+    #: a retired node must age at least this many epoch advances before
+    #: the free window may hand it back out
+    GRACE = 2
+
+    def __init__(self, nvm, n_threads: int, cap: int = 512) -> None:
+        self.nvm = nvm
+        self.n = n_threads
+        self.cap = cap
+        self._block = _round_line(_H_WORDS + cap * _ENTRY_WORDS)
+        # [E | pins (one line) | per-thread blocks]
+        self._hdr = _round_line(1) + _round_line(n_threads)
+        total = self._hdr + n_threads * self._block
+        self.base = nvm.alloc(total, segment=nvm.current_segment())
+        self._pins = self.base + _round_line(1)
+        nvm.write(self.base, 0)                       # E
+        for p in range(n_threads):
+            nvm.write(self._pins + p, 0)
+            h = self._thread_base(p)
+            for f in range(_H_WORDS):
+                nvm.write(h + f, 0)
+
+    # ---------------- layout ------------------------------------------- #
+    def _thread_base(self, p: int) -> int:
+        return self.base + self._hdr + p * self._block
+
+    def _ring_base(self, p: int) -> int:
+        return self._thread_base(p) + _H_WORDS
+
+    def _slot(self, p: int, idx: int) -> int:
+        return self._ring_base(p) + (idx % self.cap) * _ENTRY_WORDS
+
+    # ---------------- hot path (volatile-image only) ------------------- #
+    def pin(self, p: int) -> None:
+        """Enter a reclamation-protected section: any node reachable
+        now stays allocated until after ``unpin``.  Stored as epoch+1 so
+        0 means inactive."""
+        nvm = self.nvm
+        nvm.write(self._pins + p, _as_int(nvm.read(self.base)) + 1)
+
+    def unpin(self, p: int) -> None:
+        self.nvm.write(self._pins + p, 0)
+
+    def advance(self) -> None:
+        """One successfully published combining round = one epoch tick.
+        The read-modify-write is racy across threads; lost increments
+        only slow ageing down, never violate the grace period."""
+        nvm = self.nvm
+        nvm.write(self.base, _as_int(nvm.read(self.base)) + 1)
+
+    def retire(self, p: int, addr: int) -> None:
+        """Move ``addr`` into thread ``p``'s limbo ring, stamped with
+        the current epoch.  If the ring is full the node is LEAKED (and
+        counted) rather than overwritten — an overwrite could clobber a
+        not-yet-durable record the next quiesce is about to persist."""
+        nvm = self.nvm
+        h = self._thread_base(p)
+        tail = _as_int(nvm.read(h + _H_TAIL))
+        cursor = _as_int(nvm.read(h + _H_CURSOR))
+        if tail - cursor >= self.cap:
+            nvm.write(h + _H_DROPS, _as_int(nvm.read(h + _H_DROPS)) + 1)
+            return
+        slot = self._slot(p, tail)
+        nvm.write(slot, addr)
+        nvm.write(slot + 1, _as_int(nvm.read(self.base)))
+        nvm.write(h + _H_TAIL, tail + 1)
+
+    def take(self, p: int) -> Optional[int]:
+        """Pop one node address from the durable free window, or None.
+        Only entries below ``freed_head`` (durable, aged, unpinned at
+        the quiesce that freed them) are ever handed out."""
+        nvm = self.nvm
+        h = self._thread_base(p)
+        cursor = _as_int(nvm.read(h + _H_CURSOR))
+        if cursor >= _as_int(nvm.read(h + _H_FREED)):
+            return None
+        addr = _as_int(nvm.read(self._slot(p, cursor)))
+        nvm.write(h + _H_CURSOR, cursor + 1)
+        nvm.write(h + _H_REUSED, _as_int(nvm.read(h + _H_REUSED)) + 1)
+        return addr if addr else None
+
+    def count_fresh(self, p: int) -> None:
+        nvm = self.nvm
+        h = self._thread_base(p)
+        nvm.write(h + _H_FRESH, _as_int(nvm.read(h + _H_FRESH)) + 1)
+
+    # ---------------- quiesce (the only persisting path) --------------- #
+    def _min_pinned_epoch(self) -> Optional[int]:
+        nvm = self.nvm
+        low = None
+        for q in range(self.n):
+            v = _as_int(nvm.read(self._pins + q))
+            if v and (low is None or v - 1 < low):
+                low = v - 1
+        return low
+
+    def quiesce(self) -> Dict[str, int]:
+        """Persist new limbo records, then advance the durable
+        boundaries (see the module doc for the two-stage crash-safety
+        argument).  Call from the coordinator at a quiescent point —
+        concurrent retire/take on OTHER threads is tolerated (their
+        records simply wait for the next quiesce), but nodes freed here
+        honor any still-active pin.  Costs two psyncs; never called on
+        the gated bench paths."""
+        nvm = self.nvm
+        spans: List[Tuple[int, int]] = []
+        tails = []
+        for p in range(self.n):
+            h = self._thread_base(p)
+            tail = _as_int(nvm.read(h + _H_TAIL))
+            dur = _as_int(nvm.read(h + _H_DUR_TAIL))
+            tails.append(tail)
+            for first, count in self._ring_runs(dur, tail):
+                spans.append((self._slot(p, first),
+                              count * _ENTRY_WORDS))
+        spans.append((self.base, 1))                       # the epoch
+        nvm.persist_lines(spans)
+        nvm.psync()                       # stage 1: records durable
+        epoch = _as_int(nvm.read(self.base))
+        min_pin = self._min_pinned_epoch()
+        hdr_spans = []
+        freed_total = 0
+        for p in range(self.n):
+            h = self._thread_base(p)
+            tail = tails[p]
+            nvm.write(h + _H_DUR_TAIL, tail)
+            freed = _as_int(nvm.read(h + _H_FREED))
+            while freed < tail:
+                e = _as_int(nvm.read(self._slot(p, freed) + 1))
+                if e + self.GRACE > epoch:
+                    break
+                if min_pin is not None and min_pin <= e + 1:
+                    break
+                freed += 1
+                freed_total += 1
+            nvm.write(h + _H_FREED, freed)
+            hdr_spans.append((h, _H_WORDS))
+        nvm.persist_lines(hdr_spans)
+        nvm.psync()                       # stage 2: boundaries durable
+        return {"freed": freed_total, "epoch": epoch}
+
+    def _ring_runs(self, lo: int, hi: int):
+        """Contiguous slot runs covering entry indices [lo, hi) —
+        at most two because the ring wraps once."""
+        if hi - lo >= self.cap:           # full ring: one flat span
+            yield 0, self.cap
+            return
+        while lo < hi:
+            s = lo % self.cap
+            count = min(hi - lo, self.cap - s)
+            yield s, count
+            lo += count
+
+    # ---------------- recovery ----------------------------------------- #
+    def recover(self) -> None:
+        """Normalize after the backend restored vol := dur.  Entries
+        consumed before the crash must never be re-issued, so the
+        volatile cursor restarts at the durable free boundary — the
+        unconsumed window plus anything retired since the last quiesce
+        leaks (bounded by cap per thread per crash)."""
+        nvm = self.nvm
+        for p in range(self.n):
+            h = self._thread_base(p)
+            dur = _as_int(nvm.read(h + _H_DUR_TAIL))
+            freed = min(_as_int(nvm.read(h + _H_FREED)), dur)
+            nvm.write(h + _H_TAIL, dur)
+            nvm.write(h + _H_FREED, freed)
+            nvm.write(h + _H_CURSOR, freed)
+            nvm.write(self._pins + p, 0)
+
+    # ---------------- introspection ------------------------------------ #
+    def stats(self) -> Dict[str, int]:
+        nvm = self.nvm
+        out = {"epoch": _as_int(nvm.read(self.base)), "retired": 0,
+               "limbo": 0, "free_window": 0, "fresh": 0, "reused": 0,
+               "drops": 0}
+        for p in range(self.n):
+            h = self._thread_base(p)
+            tail = _as_int(nvm.read(h + _H_TAIL))
+            freed = _as_int(nvm.read(h + _H_FREED))
+            cursor = _as_int(nvm.read(h + _H_CURSOR))
+            out["retired"] += tail
+            out["limbo"] += tail - freed
+            out["free_window"] += max(0, freed - cursor)
+            out["fresh"] += _as_int(nvm.read(h + _H_FRESH))
+            out["reused"] += _as_int(nvm.read(h + _H_REUSED))
+            out["drops"] += _as_int(nvm.read(h + _H_DROPS))
+        return out

@@ -78,17 +78,33 @@ class RecyclingStack:
 
 
 class PerThreadFreeList:
-    """Per-thread volatile free lists (PBQueue GC scheme)."""
+    """Per-thread volatile free lists (PBQueue GC scheme), with a
+    bounded overflow into a shared ``RecyclingStack``.
 
-    def __init__(self, n_threads: int) -> None:
+    The pure per-thread scheme recycles a node only to the thread that
+    freed it — under asymmetric produce/consume (A only pushes, B only
+    pops) B's list grows without bound while A allocates fresh chunks
+    forever.  Above ``cap`` entries a freeing thread overflows into the
+    shared stack, and an allocating thread whose own list is empty
+    steals from it, so steady-state ``allocs_per_op`` reaches 0 for any
+    role split.  ``cap`` is sized so balanced workloads (the gated
+    benches) never overflow: their allocation order is unchanged."""
+
+    def __init__(self, n_threads: int, cap: int = 4096) -> None:
         self._free: Dict[int, List[int]] = {p: [] for p in range(n_threads)}
+        self.cap = cap
+        self.shared = RecyclingStack()
 
     def push(self, p: int, addr: int) -> None:
-        self._free[p].append(addr)
+        lst = self._free[p]
+        if len(lst) >= self.cap:
+            self.shared.push(addr)
+        else:
+            lst.append(addr)
 
     def pop(self, p: int) -> Optional[int]:
         lst = self._free[p]
-        return lst.pop() if lst else None
+        return lst.pop() if lst else self.shared.pop()
 
 
 class NodePool:
@@ -98,12 +114,18 @@ class NodePool:
 
     def __init__(self, nvm: NVM, n_threads: int, recycler=None,
                  chunk_nodes: int = 256) -> None:
+        from ..persist.reclaim import EpochReclaimer
         self.nvm = nvm
         self.chunks = ChunkAllocator(nvm, n_threads, chunk_nodes)
         self.recycler = recycler
         if recycler is None:
             self.alloc = self.chunks.alloc
             self.free = self._free_noop
+        elif isinstance(recycler, EpochReclaimer):
+            # epoch-based limbo path (DESIGN.md §13): free = retire into
+            # the limbo ring; alloc prefers the durable free window
+            self.alloc = self._alloc_epoch
+            self.free = recycler.retire
         elif isinstance(recycler, PerThreadFreeList):
             self.alloc = self._alloc_per_thread
             self.free = recycler.push
@@ -114,6 +136,13 @@ class NodePool:
     def _alloc_per_thread(self, p: int) -> int:
         addr = self.recycler.pop(p)
         return addr if addr is not None else self.chunks.alloc(p)
+
+    def _alloc_epoch(self, p: int) -> int:
+        addr = self.recycler.take(p)
+        if addr is not None:
+            return addr
+        self.recycler.count_fresh(p)
+        return self.chunks.alloc(p)
 
     def _alloc_shared(self, p: int) -> int:
         addr = self.recycler.pop()

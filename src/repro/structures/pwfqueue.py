@@ -23,19 +23,30 @@ PBQueue's ``oldTail`` guard: no value is handed out whose enqueue could
 fail to survive a crash.  Dequeued values are read through the durable
 boundary ``tail_e`` captured at that point.
 
-GC: none — the paper explicitly leaves PWFQueue node recycling for future
-work ("a solution would be more complicated, due to the two parts"), and
-recycling here would expose helped-link writes to reused nodes.  Nodes
-come from per-thread contiguous chunks and are never reused.
+GC: the paper explicitly leaves PWFQueue node recycling for future work
+("a solution would be more complicated, due to the two parts") — the
+hazard being that helped-link writes and slow pretend-combiners may
+touch a node long after the round that removed it.  This reproduction
+closes the gap with the epoch-based limbo layer of
+``repro.persist.reclaim`` (DESIGN.md §13): each successful dequeue
+round retires the sentinel it buried (only after S_D is durable, so the
+node is unreachable from any durable state), every ``_perform_request``
+runs pinned (a stale helper that read link_from before the node was
+retired blocks its reuse), and nodes re-enter allocation only from the
+durable free window that ``quiesce()`` advances.  Workloads that never
+quiesce allocate exactly like the unreclaimed original — the hot path
+adds volatile-image bookkeeping only.  Pass ``reclaim=None`` for the
+paper's never-reuse behavior.
 """
 
 from __future__ import annotations
 
-from typing import Any, List
+from typing import Any, List, Optional
 
 from ..core.nvm import NVM
 from ..core.objects import SeqObject
 from ..core.pwfcomb import PWFComb
+from ..persist.reclaim import EpochReclaimer
 from .nodes import NODE_WORDS, NULL, NodePool
 
 
@@ -85,10 +96,11 @@ class _EnqState(SeqObject):
 
 
 class _DeqCtx:
-    __slots__ = ("boundary",)
+    __slots__ = ("boundary", "retired")
 
     def __init__(self, boundary: int) -> None:
         self.boundary = boundary
+        self.retired: List[int] = []
 
 
 class _DeqState(SeqObject):
@@ -110,6 +122,10 @@ class _DeqState(SeqObject):
         if nxt == NULL:
             return None
         nvm.write(st_base, nxt)
+        # the dequeued node becomes the NEW sentinel; the node this
+        # round buries is the PREVIOUS sentinel ``head`` — recorded now,
+        # retired only if this attempt publishes (S_D durable)
+        ctx.retired.append(head)
         return nvm.read(nxt)
 
 
@@ -124,6 +140,16 @@ class _EnqInstance(PWFComb):
         return self.obj.apply(self.nvm, self._base(slot), func, args,
                               ctx=self._ctx[combiner])
 
+    def _perform_request(self, p: int):
+        rec = self.queue.reclaim
+        if rec is None:
+            return super()._perform_request(p)
+        rec.pin(p)
+        try:
+            return super()._perform_request(p)
+        finally:
+            rec.unpin(p)
+
     def _begin_attempt(self, slot: int, p: int) -> None:
         ctx = self._ctx[p]
         ctx.alloc = []
@@ -137,9 +163,20 @@ class _EnqInstance(PWFComb):
             return [(node, NODE_WORDS) for node in alloc]
         return None
 
+    def _on_publish_success(self, slot: int, p: int) -> None:
+        rec = self.queue.reclaim
+        if rec is not None:
+            rec.advance()
+
     def _attempt_failed(self, slot: int, p: int) -> None:
-        # No recycling (see module doc); just drop the bookkeeping.
         ctx = self._ctx[p]
+        rec = self.queue.reclaim
+        if rec is not None:
+            # losing attempt: the fresh nodes were never published
+            # (not reachable from any state), so they go straight into
+            # limbo instead of leaking like the paper's original
+            for node in ctx.alloc:
+                rec.retire(p, node)
         ctx.alloc = []
         ctx.first = NULL
         ctx.last = NULL
@@ -155,16 +192,47 @@ class _DeqInstance(PWFComb):
         return self.obj.apply(self.nvm, self._base(slot), func, args,
                               ctx=self._ctx[combiner])
 
+    def _perform_request(self, p: int):
+        rec = self.queue.reclaim
+        if rec is None:
+            return super()._perform_request(p)
+        rec.pin(p)
+        try:
+            return super()._perform_request(p)
+        finally:
+            rec.unpin(p)
+
     def _begin_attempt(self, slot: int, p: int) -> None:
         # Help the pending link, then make the current enqueue publication
         # durable before adopting its tail as the dequeue frontier.
         self.queue.help_link()
-        self._ctx[p].boundary = self.queue.durable_tail()
+        ctx = self._ctx[p]
+        ctx.boundary = self.queue.durable_tail()
+        ctx.retired = []
+
+    def _on_publish_success(self, slot: int, p: int) -> None:
+        ctx = self._ctx[p]
+        rec = self.queue.reclaim
+        if rec is not None:
+            # S_D is durable past these sentinels: no durable state can
+            # ever reach them again — safe to enter limbo
+            for node in ctx.retired:
+                rec.retire(p, node)
+            rec.advance()
+        ctx.retired = []
+
+    def _attempt_failed(self, slot: int, p: int) -> None:
+        # losing attempt: the buried-sentinel list was speculative
+        self._ctx[p].retired = []
 
 
 class PWFQueue:
     def __init__(self, nvm: NVM, n_threads: int, *, chunk_nodes: int = 256,
+                 reclaim: Optional[str] = "epoch", reclaim_cap: int = 512,
                  counters=None, backoff: bool = True) -> None:
+        if reclaim not in (None, "epoch"):
+            raise ValueError(f"reclaim must be None or 'epoch', "
+                             f"got {reclaim!r}")
         self.nvm = nvm
         self.n = n_threads
         self.dummy = nvm.alloc(NODE_WORDS)
@@ -172,12 +240,25 @@ class PWFQueue:
         nvm.write(self.dummy + 1, NULL)
         nvm.pwb(self.dummy, NODE_WORDS)
         nvm.psync()
-        self.pool = NodePool(nvm, n_threads, None, chunk_nodes)
+        # the reclaimer allocates its epoch/limbo words here, before the
+        # trailing reset_counters — construction costs never reach the
+        # gated modeled trajectory
+        self.reclaim = (EpochReclaimer(nvm, n_threads, reclaim_cap)
+                        if reclaim == "epoch" else None)
+        self.pool = NodePool(nvm, n_threads, self.reclaim, chunk_nodes)
         self.enq = _EnqInstance(nvm, n_threads, _EnqState(self.dummy), self,
                                 counters=counters, backoff=backoff)
         self.deq = _DeqInstance(nvm, n_threads, _DeqState(self.dummy), self,
                                 counters=counters, backoff=backoff)
         nvm.reset_counters()
+
+    # ------------------ reclamation -------------------------------------- #
+    def quiesce(self):
+        """Advance the durable limbo/free boundaries (coordinator-side,
+        at a quiescent point).  No-op without a reclaimer."""
+        if self.reclaim is None:
+            return None
+        return self.reclaim.quiesce()
 
     # ------------------ linking helpers --------------------------------- #
     def help_link(self) -> None:
@@ -211,6 +292,8 @@ class PWFQueue:
         self.deq.reset_volatile()
         self.enq._ctx = [_EnqCtx(self.pool, p) for p in range(self.n)]
         self.deq._ctx = [_DeqCtx(self.dummy) for _ in range(self.n)]
+        if self.reclaim is not None:
+            self.reclaim.recover()
         # Redo the pending link from the durable EState record, then
         # persist it (paper: links must be redoable after a crash).
         self.help_link()

@@ -17,10 +17,11 @@ management differs because losing pretend-combiners must roll back:
 
 from __future__ import annotations
 
-from typing import Any, List
+from typing import Any, List, Optional
 
 from ..core.nvm import NVM
 from ..core.pwfcomb import PWFComb
+from ..persist.reclaim import EpochReclaimer
 from .nodes import NODE_WORDS, NULL, NodePool, PerThreadFreeList
 from .pbstack import _StackState
 
@@ -41,13 +42,25 @@ class _AttemptCtx:
 
 class PWFStack(PWFComb):
     def __init__(self, nvm: NVM, n_threads: int, *, elimination: bool = True,
-                 recycle: bool = True, chunk_nodes: int = 256,
+                 recycle: bool = True, reclaim: Optional[str] = None,
+                 reclaim_cap: int = 512, chunk_nodes: int = 256,
                  counters=None, backoff: bool = True) -> None:
+        if reclaim not in (None, "epoch"):
+            raise ValueError(f"reclaim must be None or 'epoch', "
+                             f"got {reclaim!r}")
         super().__init__(nvm, n_threads, _StackState(), counters=counters,
                          backoff=backoff)
-        self.pool = NodePool(nvm, n_threads,
-                             PerThreadFreeList(n_threads) if recycle else None,
-                             chunk_nodes)
+        # default: the paper's immediate per-thread recycling (the gated
+        # baselines reflect its allocation order); ``reclaim="epoch"``
+        # opts into the crash-safe limbo layer (DESIGN.md §13) used by
+        # long-haul workloads
+        if reclaim == "epoch":
+            self.reclaim = EpochReclaimer(nvm, n_threads, reclaim_cap)
+            recycler = self.reclaim
+        else:
+            self.reclaim = None
+            recycler = PerThreadFreeList(n_threads) if recycle else None
+        self.pool = NodePool(nvm, n_threads, recycler, chunk_nodes)
         self.elimination = elimination
         # attempt-local bookkeeping, one context per thread id
         self._ctx = [_AttemptCtx(self.pool, p) for p in range(n_threads)]
@@ -56,6 +69,16 @@ class PWFStack(PWFComb):
     def _apply(self, q, func, args, slot, combiner):
         return self.obj.apply(self.nvm, self._base(slot), func, args,
                               ctx=self._ctx[combiner])
+
+    def _perform_request(self, p: int):
+        rec = self.reclaim
+        if rec is None:
+            return super()._perform_request(p)
+        rec.pin(p)
+        try:
+            return super()._perform_request(p)
+        finally:
+            rec.unpin(p)
 
     def _begin_attempt(self, slot: int, p: int) -> None:
         ctx = self._ctx[p]
@@ -92,6 +115,8 @@ class PWFStack(PWFComb):
         ctx = self._ctx[p]
         for node in ctx.popped:
             self.pool.free(p, node)
+        if self.reclaim is not None:
+            self.reclaim.advance()
         ctx.to_persist = []
         ctx.popped = []
 
@@ -101,6 +126,18 @@ class PWFStack(PWFComb):
             self.pool.free(p, node)
         ctx.to_persist = []
         ctx.popped = []
+
+    # -------------------- reclamation ------------------------------------ #
+    def quiesce(self):
+        """Advance the durable limbo/free boundaries (epoch mode only)."""
+        if self.reclaim is None:
+            return None
+        return self.reclaim.quiesce()
+
+    def reset_volatile(self) -> None:
+        super().reset_volatile()
+        if self.reclaim is not None:
+            self.reclaim.recover()
 
     # -------------------- introspection --------------------------------- #
     def drain(self) -> List[Any]:

@@ -244,6 +244,16 @@ def test_mp_check_rows_gate():
     ok = [dict(r) for r in healthy]
     ok[1] = dict(ok[1], redundant_pwbs_per_op=0.5)
     assert check_rows(ok, workers=4) == []
+    # a combining row holding blob chunks past the structure-state
+    # ceiling means response refcounts leaked
+    from benchmarks.mp_bench import live_chunks_ceiling
+    bad = [dict(r) for r in healthy]
+    bad[4] = dict(bad[4], live_chunks=live_chunks_ceiling(4) + 1)
+    assert any("serving/pbcomb" in f and "live blob chunks" in f
+               for f in check_rows(bad, workers=4))
+    ok = [dict(r) for r in healthy]
+    ok[4] = dict(ok[4], live_chunks=live_chunks_ceiling(4))
+    assert check_rows(ok, workers=4) == []
 
 
 def test_fig8_reproduces_paper_ordering(bench_doc):

@@ -1,0 +1,455 @@
+"""Epoch-based memory reclamation (DESIGN.md §13).
+
+Covers the ``EpochReclaimer`` primitive on both backends (retire →
+grace → quiesce → take flow, pins, ring-overflow drops, the
+never-reissue recovery rule), the PWFQueue/PWFStack integration (node
+reuse under churn, reachability safety, crash-at-every-persist-point
+sweeps of the quiesce protocol), the PerThreadFreeList shared-overflow
+regression, the crash-robust shm segment lifecycle, and blob-heap GC
+correctness under overwrite churn.
+"""
+
+import multiprocessing
+import os
+import random
+import signal
+import time
+from collections import deque
+
+import pytest
+
+from repro.api import CombiningRuntime
+from repro.core import SimulatedCrash
+from repro.core.nvm import NVM
+from repro.core.shm import ShmNVM
+from repro.core import shm as shm_mod
+from repro.fuzz.crashpoints import CrashPointInjector
+from repro.persist.reclaim import EpochReclaimer
+from repro.structures.nodes import NodePool, PerThreadFreeList
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # pragma: no cover - optional dependency
+    given = settings = st = None
+
+BACKENDS = ["threads", "shm"]
+
+
+@pytest.fixture(params=BACKENDS)
+def nvm(request):
+    n = NVM(1 << 14) if request.param == "threads" else ShmNVM(1 << 14)
+    yield n
+    if request.param == "shm":
+        n.close()
+
+
+def _rt(backend, n_threads=2):
+    kw = {"backend": backend}
+    if backend == "shm":
+        kw["segments"] = 2
+    return CombiningRuntime(n_threads=n_threads, nvm_words=1 << 16, **kw)
+
+
+# --------------------------------------------------------------------- #
+# EpochReclaimer primitive                                              #
+# --------------------------------------------------------------------- #
+def test_retire_grace_quiesce_take_flow(nvm):
+    rec = EpochReclaimer(nvm, n_threads=2, cap=8)
+    addrs = [nvm.alloc(2) for _ in range(3)]
+    for a in addrs:
+        rec.retire(0, a)
+    # same-epoch quiesce: nothing has aged past the grace period
+    assert rec.quiesce()["freed"] == 0
+    assert rec.take(0) is None
+    for _ in range(EpochReclaimer.GRACE):
+        rec.advance()
+    out = rec.quiesce()
+    assert out["freed"] == 3
+    # FIFO: the free window hands nodes back in retirement order
+    assert [rec.take(0) for _ in range(3)] == addrs
+    assert rec.take(0) is None
+    s = rec.stats()
+    assert s["retired"] == 3 and s["limbo"] == 0
+    assert s["free_window"] == 0 and s["reused"] == 3
+
+
+def test_pin_blocks_freeing(nvm):
+    rec = EpochReclaimer(nvm, n_threads=2, cap=8)
+    rec.retire(0, nvm.alloc(2))
+    rec.pin(1)                       # thread 1 may still hold a reference
+    for _ in range(3):
+        rec.advance()
+    assert rec.quiesce()["freed"] == 0
+    assert rec.take(0) is None
+    rec.unpin(1)
+    assert rec.quiesce()["freed"] == 1
+    assert rec.take(0) is not None
+
+
+def test_ring_overflow_drops_instead_of_clobbering(nvm):
+    rec = EpochReclaimer(nvm, n_threads=1, cap=4)
+    addrs = [nvm.alloc(2) for _ in range(6)]
+    for a in addrs:
+        rec.retire(0, a)
+    s = rec.stats()
+    assert s["retired"] == 4 and s["drops"] == 2
+    for _ in range(EpochReclaimer.GRACE):
+        rec.advance()
+    rec.quiesce()
+    # only the first cap entries survive; the overflow leaked, not
+    # overwrote
+    assert [rec.take(0) for _ in range(5)] == addrs[:4] + [None]
+
+
+def test_crash_never_reissues_consumed_nodes(nvm):
+    rec = EpochReclaimer(nvm, n_threads=1, cap=8)
+    first = [nvm.alloc(2) for _ in range(4)]
+    for a in first:
+        rec.retire(0, a)
+    for _ in range(EpochReclaimer.GRACE):
+        rec.advance()
+    rec.quiesce()
+    assert rec.take(0) in first and rec.take(0) in first
+    nvm.crash(random.Random(0))
+    nvm.disarm_crash()
+    rec.recover()
+    # recovery empties the free window: entries consumed before the
+    # crash (their consumption was volatile) must never come back
+    assert rec.take(0) is None
+    second = [nvm.alloc(2) for _ in range(3)]
+    for a in second:
+        rec.retire(0, a)
+    for _ in range(EpochReclaimer.GRACE):
+        rec.advance()
+    rec.quiesce()
+    reissued = [rec.take(0) for _ in range(4)]
+    assert reissued == second + [None]
+    assert not (set(reissued) & set(first))
+
+
+# --------------------------------------------------------------------- #
+# structure integration                                                 #
+# --------------------------------------------------------------------- #
+def _churn_queue(rt, q, handles, qm, rng, rounds):
+    for _ in range(rounds):
+        for p, h in enumerate(handles):
+            v = rng.randrange(1 << 30)
+            assert h.invoke(q, "enqueue", v) == "ACK"
+            qm.append(v)
+            if len(qm) > 4:
+                assert h.invoke(q, "dequeue", None) == qm.popleft()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_queue_reuses_nodes_under_churn(backend):
+    rt = _rt(backend)
+    try:
+        q = rt.make("queue", "pwfcomb")          # reclaim="epoch" default
+        handles = [rt.attach(p) for p in range(2)]
+        qm = deque()
+        rng = random.Random(11)
+        for _ in range(6):
+            _churn_queue(rt, q, handles, qm, rng, 10)
+            rt.quiesce()
+        st_ = q.core.reclaim.stats()
+        assert st_["reused"] > 0, st_
+        assert st_["drops"] == 0
+        assert q.adapter.snapshot(q.core) == list(qm)
+    finally:
+        rt.close()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_stack_epoch_reclaim_opt_in(backend):
+    rt = _rt(backend)
+    try:
+        assert rt.make("stack", "pwfcomb").core.reclaim is None
+        s = rt.make("stack", "pwfcomb", name="stack-rec", reclaim="epoch")
+        handles = [rt.attach(p) for p in range(2)]
+        sm = []
+        rng = random.Random(13)
+        for _ in range(6):
+            for _ in range(10):
+                for h in handles:
+                    v = rng.randrange(1 << 30)
+                    assert h.invoke(s, "push", v) == "ACK"
+                    sm.append(v)
+                    if len(sm) > 4:
+                        assert h.invoke(s, "pop", None) == sm.pop()
+            rt.quiesce()
+        assert s.core.reclaim.stats()["reused"] > 0
+        # drain is top-first; the mirror appends at the top
+        assert s.adapter.snapshot(s.core) == sm[::-1]
+    finally:
+        rt.close()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_take_never_returns_reachable_node(backend):
+    rt = _rt(backend)
+    try:
+        q = rt.make("queue", "pwfcomb")
+        core, rec, nvm = q.core, q.core.reclaim, rt.nvm
+        reuses = 0
+        orig_take = rec.take
+
+        def checked_take(p):
+            nonlocal reuses
+            addr = orig_take(p)
+            if addr is not None:
+                reuses += 1
+                node = nvm.read(core.deq._base(core.deq.S.load()))
+                while node:
+                    assert node != addr, \
+                        f"free window reissued reachable node {addr}"
+                    nxt = nvm.read(node + 1)
+                    node = nxt if type(nxt) is int else 0
+            return addr
+
+        rec.take = checked_take
+        handles = [rt.attach(p) for p in range(2)]
+        qm = deque()
+        rng = random.Random(17)
+        for _ in range(8):
+            _churn_queue(rt, q, handles, qm, rng, 10)
+            rt.quiesce()
+        assert reuses > 0                 # the guard actually exercised
+        assert q.adapter.snapshot(q.core) == list(qm)
+    finally:
+        rt.close()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_quiesce_crash_sweep(backend):
+    """Crash at every persist point inside the two-stage quiesce
+    protocol (injector sweep, like the fuzz crashpoint scenarios): the
+    queue contents must survive, and churn + quiesce must keep working
+    afterwards."""
+    fired_points = 0
+    nth = 1
+    while True:
+        rt = _rt(backend)
+        try:
+            q = rt.make("queue", "pwfcomb")
+            handles = [rt.attach(p) for p in range(2)]
+            qm = deque()
+            rng = random.Random(1000 + nth)
+            _churn_queue(rt, q, handles, qm, rng, 12)   # pending limbo
+            rt.nvm.arm_injector(CrashPointInjector("any", nth))
+            fired = False
+            try:
+                q.core.quiesce()
+            except SimulatedCrash:
+                fired = True
+            if not fired:
+                rt.nvm.disarm_injector()
+                break
+            fired_points += 1
+            rt.recover()
+            assert q.adapter.snapshot(q.core) == list(qm)
+            _churn_queue(rt, q, handles, qm, rng, 12)
+            q.core.quiesce()
+            assert q.adapter.snapshot(q.core) == list(qm)
+        finally:
+            rt.close()
+        nth += 1
+    # two persist_lines + two psyncs: the sweep must have found at
+    # least the stage-1 and stage-2 boundaries
+    assert fired_points >= 2
+
+
+# --------------------------------------------------------------------- #
+# PerThreadFreeList shared-overflow regression                          #
+# --------------------------------------------------------------------- #
+def test_free_list_overflow_recycles_across_threads():
+    """Asymmetric roles (thread 0 allocates, thread 1 frees): the pure
+    per-thread scheme would allocate fresh chunks forever; the shared
+    overflow bounds fresh allocation to the freeing thread's private
+    cap."""
+    fl = PerThreadFreeList(2, cap=8)
+    nvm = NVM(1 << 14)
+    pool = NodePool(nvm, 2, fl, chunk_nodes=4)
+    chunk_allocs = 0
+    orig = pool.chunks.alloc
+
+    def counting(p):
+        nonlocal chunk_allocs
+        chunk_allocs += 1
+        return orig(p)
+
+    pool.chunks.alloc = counting
+    addrs = [pool.alloc(0) for _ in range(100)]
+    for a in addrs:
+        pool.free(1, a)
+    before = chunk_allocs
+    again = [pool.alloc(0) for _ in range(100)]
+    # fresh node allocations are bounded by the cap nodes stranded in
+    # thread 1's private list — the pure per-thread scheme would need
+    # 100 here
+    assert chunk_allocs - before <= 8, chunk_allocs - before
+    assert len(set(again) & set(addrs)) >= 92
+
+
+# --------------------------------------------------------------------- #
+# shm segment lifecycle                                                 #
+# --------------------------------------------------------------------- #
+def _dead_pid():
+    p = multiprocessing.get_context("fork").Process(target=lambda: None)
+    p.start()
+    p.join()
+    return p.pid
+
+
+def _fake_orphan():
+    """A /dev/shm psc-* file stamped with a dead owner pid."""
+    path = f"/dev/shm/{shm_mod._SEG_PREFIX}{_dead_pid()}-0"
+    with open(path, "wb") as f:
+        f.write(b"\0" * 64)
+    return path
+
+
+def _orphan_child(q):
+    be = shm_mod.ShmBackend(data_words=1 << 8, aux_i64=1 << 8,
+                            ring_i64=1 << 10)
+    q.put(be.name)
+    time.sleep(60)       # parent SIGKILLs us long before this returns
+
+
+@pytest.mark.skipif(not os.path.isdir("/dev/shm"), reason="no /dev/shm")
+def test_reap_orphan_segments_after_sigkill():
+    ctx = multiprocessing.get_context("fork")
+    mq = ctx.Queue()
+    p = ctx.Process(target=_orphan_child, args=(mq,))
+    p.start()
+    try:
+        name = mq.get(timeout=30)
+        assert os.path.exists(f"/dev/shm/{name}")
+    finally:
+        os.kill(p.pid, signal.SIGKILL)
+        p.join()
+    reaped = shm_mod.reap_orphan_segments()
+    assert name in reaped
+    assert not os.path.exists(f"/dev/shm/{name}")
+
+
+@pytest.mark.skipif(not os.path.isdir("/dev/shm"), reason="no /dev/shm")
+def test_reap_never_touches_live_or_foreign_segments():
+    be = shm_mod.ShmBackend(data_words=1 << 8, aux_i64=1 << 8,
+                            ring_i64=1 << 10)
+    try:
+        assert shm_mod.reap_orphan_segments() == []   # owner (us) alive
+        assert os.path.exists(f"/dev/shm/{be.name}")
+        # atexit sweep in a forked child must skip inherited entries
+        saved = dict(shm_mod._LIVE_SEGMENTS)
+        shm_mod._LIVE_SEGMENTS.clear()
+        shm_mod._LIVE_SEGMENTS[be.name] = (os.getpid() + 1, be._shm)
+        try:
+            shm_mod._reap_at_exit()
+            assert os.path.exists(f"/dev/shm/{be.name}")
+        finally:
+            shm_mod._LIVE_SEGMENTS.clear()
+            shm_mod._LIVE_SEGMENTS.update(saved)
+    finally:
+        be.close()
+    assert not os.path.exists(f"/dev/shm/{be.name}")
+
+
+@pytest.mark.skipif(not os.path.isdir("/dev/shm"), reason="no /dev/shm")
+def test_forked_child_close_keeps_parent_segment():
+    be = shm_mod.ShmBackend(data_words=1 << 8, aux_i64=1 << 8,
+                            ring_i64=1 << 10)
+    try:
+        p = multiprocessing.get_context("fork").Process(target=be.close)
+        p.start()
+        p.join()
+        assert p.exitcode == 0
+        assert os.path.exists(f"/dev/shm/{be.name}")
+    finally:
+        be.close()
+    assert not os.path.exists(f"/dev/shm/{be.name}")
+
+
+@pytest.mark.skipif(not os.path.isdir("/dev/shm"), reason="no /dev/shm")
+def test_runtime_recover_reaps_orphans():
+    path = _fake_orphan()
+    rt = _rt("shm")
+    try:
+        q = rt.make("queue", "pwfcomb")
+        h = rt.attach(0)
+        assert h.invoke(q, "enqueue", 1) == "ACK"
+        rt.crash(random.Random(0))
+        rt.recover()
+        assert not os.path.exists(path)
+        assert q.adapter.snapshot(q.core) == [1]
+    finally:
+        rt.close()
+
+
+# --------------------------------------------------------------------- #
+# blob-heap GC under churn                                              #
+# --------------------------------------------------------------------- #
+def test_blob_gc_preserves_values_under_overwrite_churn():
+    nvm = ShmNVM(1 << 12)
+    try:
+        rng = random.Random(7)
+        n_slots = 12
+        base = nvm.alloc(n_slots)
+        mirror = {}
+        for _ in range(5):
+            for i in range(n_slots):
+                if rng.random() < 0.7:
+                    payload = bytes(rng.randrange(256)
+                                    for _ in range(rng.randrange(64, 512)))
+                    nvm.write(base + i, payload)
+                    nvm.pwb(base + i, 1)
+                    mirror[i] = payload
+            nvm.psync()
+            out = nvm.gc_blobs()
+            assert out["moved_chunks"] >= 0
+            for i, v in mirror.items():
+                assert nvm.read(base + i) == v
+                assert nvm.durable_read(base + i) == v
+            assert nvm.blob_leak_check()["excess_rc"] == 0
+    finally:
+        nvm.close()
+
+
+def test_gc_blobs_requires_drained_rings():
+    nvm = ShmNVM(1 << 12)
+    try:
+        a = nvm.alloc(1)
+        nvm.write(a, b"x" * 256)
+        nvm.pwb(a, 1)                 # ring entry pending, no psync
+        with pytest.raises(RuntimeError):
+            nvm.gc_blobs()
+        nvm.psync()
+        nvm.gc_blobs()                # fine once drained
+    finally:
+        nvm.close()
+
+
+if st is not None:
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.lists(st.binary(min_size=0, max_size=256),
+                    min_size=1, max_size=16))
+    def test_blob_gc_roundtrip_property(payloads):
+        nvm = ShmNVM(1 << 10)
+        try:
+            base = nvm.alloc(len(payloads))
+            for i, v in enumerate(payloads):
+                nvm.write(base + i, v)
+                nvm.pwb(base + i, 1)
+            nvm.psync()
+            nvm.gc_blobs()
+            for i, v in enumerate(payloads):
+                assert nvm.read(base + i) == v
+                assert nvm.durable_read(base + i) == v
+            assert nvm.blob_leak_check()["excess_rc"] == 0
+        finally:
+            nvm.close()
+
+else:  # pragma: no cover - hypothesis not installed
+
+    def test_blob_gc_roundtrip_property():
+        pytest.importorskip("hypothesis")
